@@ -1,0 +1,78 @@
+//! End-to-end driver (the harness's required E2E example): exercises every
+//! layer of the stack on a real workload mix —
+//!
+//!   L1: Pallas kernels (vecadd / tiled GEMM / FIR) AOT-lowered to HLO,
+//!   L2: JAX models composing them,
+//!   L3: the Rust MGPU-SM simulator running the same math through the
+//!       HALCONE-coherent memory hierarchy,
+//!   runtime: the PJRT client executing the artifacts as golden models.
+//!
+//! For each workload the simulated 4-GPU system's final memory image is
+//! checked against the XLA artifact's output (plus a Rust reference), and
+//! throughput/latency-style metrics are reported.
+//!
+//!     make artifacts && cargo run --release --example end_to_end
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_workload;
+use halcone::metrics::bench::Table;
+use halcone::runtime::Runtime;
+
+fn main() {
+    let mut rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("end_to_end requires the AOT artifacts: {e:#}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT runtime up; {} artifacts available\n", rt.artifacts().len());
+
+    let cfg = SystemConfig::preset("SM-WT-C-HALCONE");
+    println!("{}\n", cfg.describe());
+
+    // The workload mix: one elementwise DNN kernel, the GEMM, the FIR
+    // filter, the PolyBench solvers and the full Xtreme sharing stress.
+    let mix = ["rl", "mm", "fir", "atax", "bicg", "mp", "conv", "xtreme1"];
+
+    let t = Table::new(
+        &["workload", "cycles", "sim-ops", "ops/cycle", "checks", "artifact"],
+        &[9, 12, 10, 10, 7, 10],
+    );
+    let mut all_ok = true;
+    let mut artifact_checks = 0;
+    for wl in mix {
+        let res = run_workload(&cfg, wl, Some(&mut rt));
+        let ops = res.metrics.l1.reqs_in;
+        let art = res
+            .checks
+            .iter()
+            .find(|c| c.kind == "artifact")
+            .map(|c| if c.passed { "ok" } else { "FAIL" })
+            .unwrap_or("-");
+        if art == "ok" {
+            artifact_checks += 1;
+        }
+        t.row(&[
+            wl.into(),
+            res.metrics.cycles.to_string(),
+            ops.to_string(),
+            format!("{:.3}", ops as f64 / res.metrics.cycles as f64),
+            if res.all_passed() { "pass".into() } else { "FAIL".into() },
+            art.into(),
+        ]);
+        all_ok &= res.all_passed();
+    }
+
+    println!();
+    assert!(all_ok, "some checks failed");
+    assert!(
+        artifact_checks >= 6,
+        "expected >= 6 XLA-artifact-verified workloads, got {artifact_checks}"
+    );
+    println!(
+        "end_to_end OK: {artifact_checks} workloads verified bit-for-bit (elementwise) or \
+         within FP-reduction tolerance (dot products) against the AOT Pallas/XLA golden models"
+    );
+}

@@ -1,0 +1,45 @@
+//! Quickstart: simulate one benchmark on the paper's default MGPU-SM
+//! system with HALCONE coherence, and verify the result functionally.
+//!
+//!     cargo run --release --example quickstart
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_workload;
+use halcone::runtime::Runtime;
+
+fn main() {
+    // Table 2 defaults: 4 GPUs x 32 CUs, 16 KB L1s, 8 x 256 KB L2 banks,
+    // shared HBM, HALCONE with (RdLease, WrLease) = (10, 5).
+    let cfg = SystemConfig::preset("SM-WT-C-HALCONE");
+    println!("{}\n", cfg.describe());
+
+    // The AOT-compiled JAX/Pallas artifacts are the golden model; the
+    // example still works without them (Rust reference checks only).
+    let mut rt = Runtime::open("artifacts").ok();
+    if rt.is_none() {
+        println!("(artifacts missing — run `make artifacts` for the XLA golden model)\n");
+    }
+
+    let res = run_workload(&cfg, "fir", rt.as_mut());
+    println!("workload   : {} (Hetero-Mark FIR, memory-bound)", res.workload);
+    println!("runtime    : {} simulated cycles", res.metrics.cycles);
+    println!("L1$ <-> L2$: {} transactions", res.metrics.l1_l2_transactions());
+    println!("L2$ <-> MM : {} transactions", res.metrics.l2_mm_transactions());
+    println!("TSU lookups: {}", res.metrics.tsu_lookups);
+    println!(
+        "host       : {:.2}s, {:.1}M events/s",
+        res.metrics.host_seconds,
+        res.metrics.events as f64 / res.metrics.host_seconds.max(1e-9) / 1e6
+    );
+    for c in &res.checks {
+        println!(
+            "check      : [{}] {} (max rel err {:.2e}) — {}",
+            c.kind,
+            if c.passed { "PASSED" } else { "FAILED" },
+            c.max_err,
+            c.desc
+        );
+    }
+    assert!(res.all_passed(), "verification failed");
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,92 @@
+//! The paper's motivation experiment (Fig. 2, recast): how expensive is it
+//! to run a kernel whose data lives in *another* GPU's memory?
+//!
+//! We pin all matrices in GPU0's partition, then run SGEMM either on GPU0
+//! (local) or on GPU1 via P2P-direct-access RDMA (remote), exactly like
+//! the paper's DGX-1 experiment — then show MGPU-SM making the question
+//! moot.
+//!
+//!     cargo run --release --example rdma_vs_sm
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_built;
+use halcone::coordinator::topology::copy_delay;
+use halcone::metrics::bench::Table;
+use halcone::workloads::{self, Workload};
+
+/// Rebuild `mm`'s work so every op runs on `target_gpu`'s CUs (the data
+/// allocation — GPU0's partition — is untouched).
+fn pin_to_gpu(mut wl: Workload, target_gpu: usize, n_gpus: usize) -> Workload {
+    for ph in &mut wl.phases {
+        let per_cu: Vec<Vec<Vec<_>>> = std::mem::take(&mut ph.work);
+        let cus = per_cu[0].len();
+        let mut merged = vec![vec![Vec::new(); 0]; 0];
+        merged.resize_with(n_gpus, || {
+            let mut v = Vec::new();
+            v.resize_with(cus, Vec::new);
+            v
+        });
+        for gpu_work in per_cu {
+            for (cu, wfs) in gpu_work.into_iter().enumerate() {
+                for wf in wfs {
+                    if !wf.is_empty() {
+                        merged[target_gpu][cu].push(wf);
+                    }
+                }
+            }
+        }
+        // Pad idle CUs/wavefronts so the grid stays rectangular enough.
+        for gw in merged.iter_mut() {
+            for cw in gw.iter_mut() {
+                if cw.is_empty() {
+                    cw.push(Vec::new());
+                }
+            }
+        }
+        ph.work = merged;
+    }
+    wl
+}
+
+fn main() {
+    let t = Table::new(
+        &["size", "placement", "config", "cycles", "vs local"],
+        &[6, 10, 16, 12, 9],
+    );
+    println!("(matrices allocated in GPU0's partition; kernel runs on GPU0 or GPU1)");
+
+    for scale in [0.125f64, 0.25, 0.5] {
+        let mut local = None;
+        for (label, gpu, preset) in [
+            ("local", 0usize, "RDMA-WB-NC"),
+            ("remote", 1usize, "RDMA-WB-NC"),
+            ("shared", 0usize, "SM-WT-C-HALCONE"),
+        ] {
+            let mut cfg = SystemConfig::preset(preset);
+            cfg.n_gpus = 2;
+            cfg.scale = scale;
+            let params = cfg.workload_params();
+            let wl = workloads::build("mm", &params);
+            let n = (256.0 * scale) as usize;
+            let wl = pin_to_gpu(wl, gpu, 2);
+            // Exclude the host-copy phase: the paper measures kernel time.
+            let delay = copy_delay(&cfg, &wl);
+            let res = run_built(&cfg, wl, None);
+            assert!(res.all_passed(), "{label} checks failed: {:?}", res.checks);
+            let kernel_cycles = res.metrics.cycles - delay;
+            let base = *local.get_or_insert(kernel_cycles);
+            t.row(&[
+                format!("{n}^2"),
+                label.into(),
+                preset.into(),
+                kernel_cycles.to_string(),
+                format!("{:.2}x", kernel_cycles as f64 / base as f64),
+            ]);
+        }
+    }
+    println!(
+        "\npaper Fig. 2 reference: remote SGEMM 12.4x (32768^2) to 2895x (512^2) slower than \
+         local on a DGX-1; the gap shrinks with size as compute amortizes the NUMA cost.\n\
+         MGPU-SM ('shared') removes the placement question entirely."
+    );
+}

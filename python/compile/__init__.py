@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at runtime; ``compile.aot`` runs once
+(``make artifacts``) and writes HLO text the Rust PJRT runtime loads.
+"""

@@ -1,0 +1,95 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects with
+``proto.id() <= INT_MAX``. The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Besides one ``<name>.hlo.txt`` per entry in ``model.AOT_ENTRIES``, this
+writes ``manifest.txt`` describing each artifact's signature::
+
+    name;in=f32[16384],f32[16384];out=f32[16384]
+
+which the Rust loader (`rust/src/runtime/manifest.rs`) parses to build and
+check input literals.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import AOT_ENTRIES
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(s) -> str:
+    shape = "x".join(str(d) for d in s.shape)
+    return f"{s.dtype}[{shape}]"
+
+
+def lower_entry(name: str, fn, args) -> tuple[str, str]:
+    """Lower one registry entry; returns (hlo_text, manifest_line)."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    outs = jax.eval_shape(fn, *args)
+    # fn returns a tuple by construction
+    in_sig = ";".join(_spec_str(a) for a in args)
+    out_sig = ";".join(_spec_str(o) for o in outs)
+    line = f"{name};in={in_sig};out={out_sig}"
+    return text, line
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="AOT-lower JAX/Pallas models to HLO text")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    # Back-compat with the scaffold Makefile invocation (--out FILE): treat
+    # the file's directory as out-dir.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    opts = ap.parse_args(argv)
+
+    out_dir = opts.out_dir
+    if opts.out is not None:
+        out_dir = os.path.dirname(opts.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = list(AOT_ENTRIES)
+    if opts.only:
+        names = [n for n in names if n in set(opts.only.split(","))]
+
+    manifest = []
+    for name in names:
+        fn, args = AOT_ENTRIES[name]
+        text, line = lower_entry(name, fn, args)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(line)
+        print(f"  wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(names)} artifacts to {out_dir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

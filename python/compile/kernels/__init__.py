@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by compile.aot).
+
+Each kernel has a pure-jnp oracle of the same name in :mod:`.ref`.
+"""
+
+from . import ref  # noqa: F401
+from .elementwise import relu, saxpy, vecadd  # noqa: F401
+from .fir import fir  # noqa: F401
+from .gemm import gemm, matvec  # noqa: F401
+from .pool import maxpool2x2  # noqa: F401

@@ -1,0 +1,96 @@
+"""Pallas elementwise kernels: vecadd, saxpy, relu.
+
+These are the compute bodies of the Xtreme suite (C = A + B and the
+read-modify-write A = C + B step) and the DNNMark ``rl`` workload.
+
+TPU mapping (§Hardware-Adaptation in DESIGN.md): the paper's workloads are
+SIMT vector loops over HBM-resident arrays. On TPU the same insight —
+stream cache-block-sized chunks through fast local memory — maps to a 1-D
+``BlockSpec`` grid where each grid step stages one VMEM-resident block and
+applies a fully-vectorized VPU op. ``interpret=True`` always: the CPU PJRT
+client cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM block: 2048 f32 = 8 KB per operand; three operands stay well
+# under a 16 MB VMEM budget and the block is a multiple of the 8x128 VPU
+# tile.
+DEFAULT_BLOCK = 2048
+
+
+def _vecadd_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _saxpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    # alpha is a (1,) VMEM-resident scalar block shared by every grid step.
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+
+
+def _grid_1d(n: int, block: int) -> int:
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    return n // block
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vecadd(x: jnp.ndarray, y: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Blocked elementwise add ``x + y`` over 1-D f32 arrays."""
+    n = x.shape[0]
+    block = min(block, n)
+    grid = _grid_1d(n, block)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _vecadd_kernel,
+        grid=(grid,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def saxpy(alpha: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Blocked ``alpha * x + y``; ``alpha`` is a shape-(1,) array."""
+    n = x.shape[0]
+    block = min(block, n)
+    grid = _grid_1d(n, block)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    alpha_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _saxpy_kernel,
+        grid=(grid,),
+        in_specs=[alpha_spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(alpha, x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def relu(x: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Blocked ReLU over a 1-D f32 array."""
+    n = x.shape[0]
+    block = min(block, n)
+    grid = _grid_1d(n, block)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _relu_kernel,
+        grid=(grid,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,54 @@
+"""Pallas FIR filter kernel (Hetero-Mark ``fir`` workload compute body).
+
+``y[i] = sum_t h[t] * x[i + t]`` over an already-padded input of length
+``n + taps - 1``.
+
+TPU mapping (§Hardware-Adaptation): the GPU version assigns one output
+element per thread with the sliding window read from shared memory. Output
+tiles are blocked on a 1-D grid; the padded input stays VMEM-resident
+(our simulated signals are <= a few MB) and each grid step reads its
+overlapping window with a dynamic slice — overlap is not expressible as a
+non-overlapping ``BlockSpec``, so the window select happens inside the
+kernel. The ``taps``-step loop unrolls into ``taps`` VPU saxpy ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 2048
+
+
+def _fir_kernel(x_ref, h_ref, o_ref, *, block: int, taps: int):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    h = h_ref[...]
+    window = jax.lax.dynamic_slice(x, (i * block,), (block + taps - 1,))
+    acc = jnp.zeros((block,), dtype=jnp.float32)
+    for t in range(taps):
+        acc = acc + h[t] * jax.lax.dynamic_slice(window, (t,), (block,))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fir(x: jnp.ndarray, h: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """FIR over padded input ``x`` (length n + taps - 1) with taps ``h``."""
+    taps = h.shape[0]
+    n = x.shape[0] - taps + 1
+    block = min(block, n)
+    if n % block != 0:
+        raise ValueError(f"output length {n} must be a multiple of block {block}")
+    full_x = pl.BlockSpec(x.shape, lambda i: tuple(0 for _ in x.shape))
+    full_h = pl.BlockSpec(h.shape, lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_fir_kernel, block=block, taps=taps),
+        grid=(n // block,),
+        in_specs=[full_x, full_h],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, h)

@@ -1,0 +1,100 @@
+"""Pallas tiled GEMM / matvec kernels.
+
+The paper's Fig. 2 motivation experiment is cuBLAS SGEMM on a DGX-1; the
+``mm`` workload and the conv (im2col) path also reduce to GEMM. This is the
+MXU-shaped hot spot of the compute layer.
+
+TPU mapping (§Hardware-Adaptation): instead of CUDA threadblock tiles +
+shared-memory staging, we express the HBM->VMEM schedule with a 3-D
+``BlockSpec`` grid (i, j, k): each (i, j) output tile stays resident in
+VMEM across the k loop while (bm x bk) and (bk x bn) operand tiles stream
+through. Tile sizes default to 128 — the MXU systolic-array edge — so a
+real-TPU lowering would hit full MXU occupancy; here we run interpret=True
+(CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128x128 MXU tile edge.
+DEFAULT_TILE = 128
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref):
+    # k is the innermost (sequential) grid axis; the output tile is revisited
+    # on every k step, so initialize it on the first and accumulate after.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_tile(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``want`` (tiles must divide)."""
+    t = min(want, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bm: int = DEFAULT_TILE,
+    bn: int = DEFAULT_TILE,
+    bk: int = DEFAULT_TILE,
+) -> jnp.ndarray:
+    """Tiled ``a @ b`` for f32 (M, K) x (K, N) with VMEM-resident accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = _pick_tile(m, bm), _pick_tile(n, bn), _pick_tile(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def matvec(a: jnp.ndarray, x: jnp.ndarray, bm: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Blocked ``a @ x`` for f32 (M, N) x (N,).
+
+    Rows are tiled (bm per grid step); the vector is VMEM-resident for the
+    whole sweep (N f32 <= a few hundred KB at our scales).
+    """
+    m, n = a.shape
+    bm = _pick_tile(m, bm)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(a, x)

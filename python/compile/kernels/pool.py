@@ -1,0 +1,50 @@
+"""Pallas 2x2 max-pooling kernel (DNNMark ``mp`` workload compute body).
+
+TPU mapping (§Hardware-Adaptation): pooling windows are non-overlapping, so
+the HBM->VMEM schedule is a clean 2-D ``BlockSpec`` grid — each output tile
+of (bm, bn) pulls exactly the (2*bm, 2*bn) input tile, reshapes inside VMEM
+and reduces on the VPU. No shared-memory halo exchange needed, unlike the
+CUDA formulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 64
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    bm2, bn2 = x.shape
+    r = x.reshape(bm2 // 2, 2, bn2 // 2, 2)
+    o_ref[...] = r.max(axis=(1, 3))
+
+
+def _pick_tile(dim: int, want: int) -> int:
+    t = min(want, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def maxpool2x2(x: jnp.ndarray, bm: int = DEFAULT_TILE, bn: int = DEFAULT_TILE) -> jnp.ndarray:
+    """2x2/stride-2 max-pool of an (H, W) f32 array with even H, W."""
+    h, w = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2x2 needs even dims, got {x.shape}")
+    oh, ow = h // 2, w // 2
+    bm, bn = _pick_tile(oh, bm), _pick_tile(ow, bn)
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(oh // bm, ow // bn),
+        in_specs=[pl.BlockSpec((2 * bm, 2 * bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), jnp.float32),
+        interpret=True,
+    )(x)

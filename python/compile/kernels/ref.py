@@ -1,0 +1,98 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth for the L1 kernels: pytest (and the
+hypothesis sweeps in ``python/tests``) compare each Pallas kernel against
+the function of the same name here via ``assert_allclose``.
+
+Everything here is written with plain ``jax.numpy`` ops only — no Pallas,
+no custom calls — so the oracle lowers to straightforward HLO on any
+backend.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def vecadd(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise float add: the Xtreme benchmarks' C = A + B step."""
+    return x + y
+
+
+def saxpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """alpha * x + y (used by the Xtreme read-modify-write chains)."""
+    return alpha * x + y
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Dense matmul with f32 accumulation (SGEMM; Fig. 2 and the mm workload)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matvec(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense matrix-vector product (atax / bicg building block)."""
+    return jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+def fir(x: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """FIR filter: y[i] = sum_t h[t] * x[i + t].
+
+    ``x`` is the already-padded signal of length ``n + taps - 1``; the
+    output has length ``n``.
+    """
+    taps = h.shape[0]
+    n = x.shape[0] - taps + 1
+    acc = jnp.zeros((n,), dtype=jnp.float32)
+    for t in range(taps):
+        acc = acc + h[t] * x[t : t + n]
+    return acc
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    """Rectified linear unit (DNNMark rl workload)."""
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max-pooling with stride 2 (DNNMark mp workload).
+
+    ``x`` is (H, W) with even H and W; output is (H/2, W/2).
+    """
+    h, w = x.shape
+    r = x.reshape(h // 2, 2, w // 2, 2)
+    return r.max(axis=(1, 3))
+
+
+def atax(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """PolyBench ATAX: A^T (A x)."""
+    return matvec(a.T, matvec(a, x))
+
+
+def bicg(a: jnp.ndarray, r: jnp.ndarray, p: jnp.ndarray):
+    """PolyBench BICG: (s, q) = (A^T r, A p)."""
+    return matvec(a.T, r), matvec(a, p)
+
+
+def im2col3x3(img: jnp.ndarray) -> jnp.ndarray:
+    """Unfold a (H, W) image into (H*W, 9) patches for a 3x3 'same' conv.
+
+    Zero padding of 1 on each border. Row-major patch order matches
+    ``conv3x3``'s kernel flattening.
+    """
+    h, w = img.shape
+    p = jnp.pad(img, 1)
+    cols = []
+    for di in range(3):
+        for dj in range(3):
+            cols.append(p[di : di + h, dj : dj + w].reshape(-1))
+    return jnp.stack(cols, axis=1)
+
+
+def conv3x3(img: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """3x3 'same' convolution (AMDAPPSDK simple-convolution workload).
+
+    Implemented as im2col + matvec so the Pallas GEMM path and this oracle
+    share reduction semantics.
+    """
+    h, w = img.shape
+    return matvec(im2col3x3(img), k.reshape(9)).reshape(h, w)

@@ -1,0 +1,110 @@
+"""L2: JAX compute graphs for each benchmark's kernel, calling the L1
+Pallas kernels.
+
+Each public function is the *functional golden model* of one simulated GPU
+kernel: the Rust coordinator replays the same math through the simulated
+coherent memory hierarchy and then checks the final memory image against
+the output of the AOT-compiled artifact of the function (executed via the
+PJRT runtime — Python never runs on the simulation path).
+
+All functions return tuples: the HLO-text interchange lowers with
+``return_tuple=True`` and the Rust side unwraps with ``to_tupleN()``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import fir as _fir
+from .kernels import gemm as _gemm
+from .kernels import matvec as _matvec
+from .kernels import maxpool2x2 as _maxpool2x2
+from .kernels import relu as _relu
+from .kernels import vecadd as _vecadd
+from .kernels.ref import im2col3x3
+
+
+def xtreme_step(a: jnp.ndarray, b: jnp.ndarray):
+    """One Xtreme step: C = A + B (Pallas vecadd)."""
+    return (_vecadd(a, b),)
+
+
+def xtreme_round(a: jnp.ndarray, b: jnp.ndarray):
+    """One full Xtreme1 round per slice: C = A + B ten times, then
+    A = C + B ten times. Repeating an add with unchanged inputs is a
+    fixed point, so the round's final state is (A', C') with C' = A + B
+    and A' = C' + B."""
+    c2 = _vecadd(a, b)
+    a2 = _vecadd(c2, b)
+    return (a2, c2)
+
+
+def sgemm(a: jnp.ndarray, b: jnp.ndarray):
+    """SGEMM C = A @ B (Fig. 2 motivation + mm workload) via Pallas GEMM."""
+    return (_gemm(a, b),)
+
+
+def fir(x: jnp.ndarray, h: jnp.ndarray):
+    """FIR filter over padded input (Hetero-Mark fir) via Pallas kernel."""
+    return (_fir(x, h),)
+
+
+def atax(a: jnp.ndarray, x: jnp.ndarray):
+    """PolyBench ATAX y = A^T (A x) via two Pallas matvecs."""
+    t = _matvec(a, x)
+    return (_matvec(a.T, t),)
+
+
+def bicg(a: jnp.ndarray, r: jnp.ndarray, p: jnp.ndarray):
+    """PolyBench BICG (s, q) = (A^T r, A p) via Pallas matvecs."""
+    return (_matvec(a.T, r), _matvec(a, p))
+
+
+def relu(x: jnp.ndarray):
+    """DNNMark rl: ReLU via Pallas elementwise kernel."""
+    return (_relu(x),)
+
+
+def maxpool(x: jnp.ndarray):
+    """DNNMark mp: 2x2 max-pool via Pallas kernel."""
+    return (_maxpool2x2(x),)
+
+
+def conv3x3(img: jnp.ndarray, k: jnp.ndarray):
+    """AMDAPPSDK simple convolution: 3x3 'same' conv as im2col (jnp — XLA
+    fuses the gather) + Pallas matvec (the MXU hot spot)."""
+    h, w = img.shape
+    cols = im2col3x3(img)
+    return (_matvec(cols, k.reshape(9)).reshape(h, w),)
+
+
+def _f32(*shape: int) -> jnp.ndarray:
+    import jax
+
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+#: AOT registry: artifact name -> (function, example args). ``compile.aot``
+#: lowers each entry to ``artifacts/<name>.hlo.txt`` and records its
+#: signature in ``artifacts/manifest.txt`` for the Rust loader.
+AOT_ENTRIES = {
+    "xtreme_step_16384": (xtreme_step, (_f32(16384), _f32(16384))),
+    "xtreme_round_16384": (xtreme_round, (_f32(16384), _f32(16384))),
+    "xtreme_round_65536": (xtreme_round, (_f32(65536), _f32(65536))),
+    "vecadd_4096": (xtreme_step, (_f32(4096), _f32(4096))),
+    "sgemm_64": (sgemm, (_f32(64, 64), _f32(64, 64))),
+    "sgemm_128": (sgemm, (_f32(128, 128), _f32(128, 128))),
+    "sgemm_256": (sgemm, (_f32(256, 256), _f32(256, 256))),
+    "fir_16384": (fir, (_f32(16384 + 15), _f32(16))),
+    "fir_65536": (fir, (_f32(65536 + 15), _f32(16))),
+    "atax_256": (atax, (_f32(256, 256), _f32(256))),
+    "atax_512": (atax, (_f32(512, 512), _f32(512))),
+    "bicg_256": (bicg, (_f32(256, 256), _f32(256), _f32(256))),
+    "bicg_512": (bicg, (_f32(512, 512), _f32(512), _f32(512))),
+    "relu_16384": (relu, (_f32(16384),)),
+    "relu_65536": (relu, (_f32(65536),)),
+    "maxpool_128": (maxpool, (_f32(128, 128),)),
+    "maxpool_256": (maxpool, (_f32(256, 256),)),
+    "conv3x3_128": (conv3x3, (_f32(128, 128), _f32(3, 3))),
+    "conv3x3_256": (conv3x3, (_f32(256, 256), _f32(3, 3))),
+}

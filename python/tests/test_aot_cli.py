@@ -1,0 +1,49 @@
+"""compile.aot command-line behaviour: artifact selection, manifest
+completeness, and idempotence of the build-time entry point."""
+
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from compile import model
+from compile.aot import main as aot_main
+
+
+def test_only_flag_writes_subset(tmp_path):
+    rc = aot_main(["--out-dir", str(tmp_path), "--only", "vecadd_4096,sgemm_64"])
+    assert rc == 0
+    files = sorted(os.listdir(tmp_path))
+    assert files == ["manifest.txt", "sgemm_64.hlo.txt", "vecadd_4096.hlo.txt"]
+    manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    assert len(manifest) == 2
+    assert all(";in=" in line and ";out=" in line for line in manifest)
+
+
+def test_full_run_covers_registry(tmp_path):
+    rc = aot_main(["--out-dir", str(tmp_path)])
+    assert rc == 0
+    manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    names = {line.split(";")[0] for line in manifest}
+    assert names == set(model.AOT_ENTRIES)
+    for n in names:
+        path = tmp_path / f"{n}.hlo.txt"
+        assert path.exists()
+        head = path.read_text()[:64]
+        assert head.startswith("HloModule"), f"{n}: {head!r}"
+
+
+def test_back_compat_out_flag(tmp_path):
+    # The scaffold Makefile used `--out FILE`; its directory is honoured.
+    out = tmp_path / "sub" / "model.hlo.txt"
+    os.makedirs(out.parent)
+    rc = aot_main(["--out", str(out), "--only", "relu_16384"])
+    assert rc == 0
+    assert (out.parent / "relu_16384.hlo.txt").exists()
+
+
+@pytest.mark.parametrize("name", ["fir_65536", "xtreme_round_65536", "sgemm_256"])
+def test_simulation_scale_artifacts_registered(name):
+    """The Rust workloads' default sizes must have matching artifacts."""
+    assert name in model.AOT_ENTRIES

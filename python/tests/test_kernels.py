@@ -1,0 +1,185 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes and values; fixed-size smoke tests pin the exact
+artifact shapes used by the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+f32s = st.floats(
+    min_value=-1e3, max_value=1e3, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+def arr(n, seed, lo=-100.0, hi=100.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=n).astype(np.float32))
+
+
+# ---------------------------------------------------------------- vecadd
+
+@settings(max_examples=25, deadline=None)
+@given(
+    logn=st.integers(min_value=0, max_value=14),
+    seed=st.integers(min_value=0, max_value=2**31),
+    block=st.sampled_from([1, 16, 256, 2048]),
+)
+def test_vecadd_matches_ref(logn, seed, block):
+    n = 2**logn
+    block = min(block, n)
+    x, y = arr(n, seed), arr(n, seed + 1)
+    got = kernels.vecadd(x, y, block=block)
+    assert_allclose(np.asarray(got), np.asarray(ref.vecadd(x, y)), rtol=0, atol=0)
+
+
+def test_vecadd_rejects_nondivisible_block():
+    with pytest.raises(ValueError):
+        kernels.vecadd(arr(10, 0), arr(10, 1), block=3)
+
+
+# ---------------------------------------------------------------- saxpy
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(min_value=0, max_value=12),
+    alpha=f32s,
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_saxpy_matches_ref(logn, alpha, seed):
+    n = 2**logn
+    x, y = arr(n, seed), arr(n, seed + 1)
+    a = jnp.asarray([alpha], dtype=jnp.float32)
+    got = kernels.saxpy(a, x, y, block=min(256, n))
+    assert_allclose(np.asarray(got), np.asarray(ref.saxpy(a[0], x, y)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- relu
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(min_value=0, max_value=13),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_relu_matches_ref(logn, seed):
+    n = 2**logn
+    x = arr(n, seed)
+    got = kernels.relu(x, block=min(512, n))
+    expect = np.asarray(ref.relu(x))
+    assert_allclose(np.asarray(got), expect, rtol=0, atol=0)
+    assert (np.asarray(got) >= 0).all()
+
+
+# ---------------------------------------------------------------- gemm
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 8, 32, 64, 96]),
+    k=st.sampled_from([1, 4, 16, 64, 128]),
+    n=st.sampled_from([1, 2, 8, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gemm_matches_ref(m, k, n, seed):
+    a = arr((m, k), seed, -2.0, 2.0)
+    b = arr((k, n), seed + 7, -2.0, 2.0)
+    got = kernels.gemm(a, b, bm=32, bn=32, bk=32)
+    assert_allclose(
+        np.asarray(got), np.asarray(ref.gemm(a, b)), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_gemm_exact_mxu_tiles():
+    # 256x256 with 128-tiles: the artifact configuration.
+    a, b = arr((256, 256), 3, -1.0, 1.0), arr((256, 256), 4, -1.0, 1.0)
+    got = kernels.gemm(a, b)
+    assert_allclose(np.asarray(got), np.asarray(ref.gemm(a, b)), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 4, 32, 128, 192]),
+    n=st.sampled_from([1, 8, 64, 256]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matvec_matches_ref(m, n, seed):
+    a = arr((m, n), seed, -2.0, 2.0)
+    x = arr(n, seed + 13, -2.0, 2.0)
+    got = kernels.matvec(a, x, bm=64)
+    assert_allclose(
+        np.asarray(got), np.asarray(ref.matvec(a, x)), rtol=1e-5, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------- fir
+
+@settings(max_examples=15, deadline=None)
+@given(
+    logn=st.sampled_from([6, 8, 10, 12]),
+    taps=st.sampled_from([1, 2, 4, 16]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_fir_matches_ref(logn, taps, seed):
+    n = 2**logn
+    x = arr(n + taps - 1, seed)
+    h = arr(taps, seed + 3, -1.0, 1.0)
+    got = kernels.fir(x, h, block=min(256, n))
+    assert_allclose(np.asarray(got), np.asarray(ref.fir(x, h)), rtol=1e-5, atol=1e-4)
+
+
+def test_fir_identity_tap():
+    # One tap with value 1 is the identity filter.
+    x = arr(128, 11)
+    h = jnp.asarray([1.0], dtype=jnp.float32)
+    assert_allclose(np.asarray(kernels.fir(x, h, block=64)), np.asarray(x))
+
+
+# ---------------------------------------------------------------- maxpool
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([2, 4, 16, 64, 128]),
+    w=st.sampled_from([2, 8, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_maxpool_matches_ref(h, w, seed):
+    x = arr((h, w), seed)
+    got = kernels.maxpool2x2(x, bm=32, bn=32)
+    assert_allclose(np.asarray(got), np.asarray(ref.maxpool2x2(x)), rtol=0, atol=0)
+
+
+def test_maxpool_rejects_odd():
+    with pytest.raises(ValueError):
+        kernels.maxpool2x2(arr((3, 4), 0))
+
+
+# ------------------------------------------------------- composite oracles
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([16, 64, 256]), seed=st.integers(min_value=0, max_value=2**31))
+def test_atax_composition(n, seed):
+    """atax == matvec(A.T, matvec(A, x)) built from the Pallas matvec."""
+    a = arr((n, n), seed, -1.0, 1.0)
+    x = arr(n, seed + 1, -1.0, 1.0)
+    got = kernels.matvec(a.T, kernels.matvec(a, x))
+    assert_allclose(np.asarray(got), np.asarray(ref.atax(a, x)), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([4, 32, 128]), seed=st.integers(min_value=0, max_value=2**31))
+def test_conv3x3_composition(n, seed):
+    img = arr((n, n), seed, -1.0, 1.0)
+    k = arr((3, 3), seed + 5, -1.0, 1.0)
+    cols = ref.im2col3x3(img)
+    got = kernels.matvec(cols, k.reshape(9)).reshape(n, n)
+    assert_allclose(np.asarray(got), np.asarray(ref.conv3x3(img, k)), rtol=1e-5, atol=1e-4)

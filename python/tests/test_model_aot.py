@@ -1,0 +1,115 @@
+"""L2 model + AOT lowering tests.
+
+Checks every AOT registry entry: output shapes, numerics of the jitted
+model against the composed oracles, HLO text generation (structure only —
+execution is tested end-to-end from Rust), and manifest formatting.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.aot import lower_entry, to_hlo_text
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(spec, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1, 1, size=spec.shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", sorted(model.AOT_ENTRIES))
+def test_entry_shapes(name):
+    fn, args_spec = model.AOT_ENTRIES[name]
+    args = [_rand(s, i) for i, s in enumerate(args_spec)]
+    outs = fn(*args)
+    assert isinstance(outs, tuple), "models must return tuples for AOT"
+    shaped = jax.eval_shape(fn, *args_spec)
+    for got, spec in zip(outs, shaped):
+        assert got.shape == spec.shape
+        assert got.dtype == spec.dtype
+
+
+@pytest.mark.parametrize("name", sorted(model.AOT_ENTRIES))
+def test_entry_lowers_to_hlo_text(name):
+    fn, args_spec = model.AOT_ENTRIES[name]
+    text, line = lower_entry(name, fn, args_spec)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    assert line.startswith(f"{name};in=")
+    assert ";out=" in line
+
+
+def test_manifest_line_format():
+    fn, args_spec = model.AOT_ENTRIES["sgemm_64"]
+    _, line = lower_entry("sgemm_64", fn, args_spec)
+    assert line == "sgemm_64;in=float32[64x64];float32[64x64];out=float32[64x64]"
+
+
+def test_xtreme_step_numerics():
+    a, b = _rand(jax.ShapeDtypeStruct((4096,), jnp.float32), 0), _rand(
+        jax.ShapeDtypeStruct((4096,), jnp.float32), 1
+    )
+    (c,) = model.xtreme_step(a, b)
+    assert_allclose(np.asarray(c), np.asarray(a) + np.asarray(b))
+
+
+def test_xtreme_round_fixed_point():
+    spec = jax.ShapeDtypeStruct((2048,), jnp.float32)
+    a, b = _rand(spec, 0), _rand(spec, 1)
+    a2, c2 = model.xtreme_round(a, b)
+    assert_allclose(np.asarray(c2), np.asarray(a + b))
+    assert_allclose(np.asarray(a2), np.asarray((a + b) + b))
+
+
+def test_sgemm_vs_ref():
+    spec = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    a, b = _rand(spec, 3), _rand(spec, 4)
+    (c,) = model.sgemm(a, b)
+    assert_allclose(np.asarray(c), np.asarray(ref.gemm(a, b)), rtol=1e-5, atol=1e-4)
+
+
+def test_atax_vs_ref():
+    a = _rand(jax.ShapeDtypeStruct((256, 256), jnp.float32), 5)
+    x = _rand(jax.ShapeDtypeStruct((256,), jnp.float32), 6)
+    (y,) = model.atax(a, x)
+    assert_allclose(np.asarray(y), np.asarray(ref.atax(a, x)), rtol=1e-4, atol=1e-3)
+
+
+def test_bicg_vs_ref():
+    a = _rand(jax.ShapeDtypeStruct((256, 256), jnp.float32), 7)
+    r = _rand(jax.ShapeDtypeStruct((256,), jnp.float32), 8)
+    p = _rand(jax.ShapeDtypeStruct((256,), jnp.float32), 9)
+    s, q = model.bicg(a, r, p)
+    es, eq = ref.bicg(a, r, p)
+    assert_allclose(np.asarray(s), np.asarray(es), rtol=1e-4, atol=1e-3)
+    assert_allclose(np.asarray(q), np.asarray(eq), rtol=1e-4, atol=1e-3)
+
+
+def test_conv3x3_vs_ref():
+    img = _rand(jax.ShapeDtypeStruct((64, 64), jnp.float32), 10)
+    k = _rand(jax.ShapeDtypeStruct((3, 3), jnp.float32), 11)
+    (out,) = model.conv3x3(img, k)
+    assert_allclose(np.asarray(out), np.asarray(ref.conv3x3(img, k)), rtol=1e-5, atol=1e-4)
+
+
+def test_fir_vs_ref():
+    x = _rand(jax.ShapeDtypeStruct((1024 + 15,), jnp.float32), 12)
+    h = _rand(jax.ShapeDtypeStruct((16,), jnp.float32), 13)
+    (y,) = model.fir(x, h)
+    assert_allclose(np.asarray(y), np.asarray(ref.fir(x, h)), rtol=1e-5, atol=1e-4)
+
+
+def test_hlo_text_roundtrip_stability():
+    """Same entry lowered twice produces identical text (deterministic AOT)."""
+    fn, args_spec = model.AOT_ENTRIES["vecadd_4096"]
+    t1 = to_hlo_text(jax.jit(fn).lower(*args_spec))
+    t2 = to_hlo_text(jax.jit(fn).lower(*args_spec))
+    assert t1 == t2

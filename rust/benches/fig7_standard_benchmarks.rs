@@ -1,0 +1,101 @@
+//! E3/E4/E5/E11 — Fig. 7: the paper's main result.
+//!
+//! (a) speed-up of the five §4.1 configurations over RDMA-WB-NC for the 11
+//!     standard benchmarks (paper means: HMG 1.5x, SM-WB 3.9x, SM-WT 4.6x,
+//!     HALCONE 4.6x — i.e. <=1% coherence overhead);
+//! (b) L2$<->MM transactions normalized to SM-WB-NC (paper: WT ~ +22.7%);
+//! (c) L1$<->L2$ transactions normalized to SM-WB-NC (HALCONE ~ +1%).
+//!
+//!     cargo bench --bench fig7_standard_benchmarks
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::{run_workload, RunResult};
+use halcone::metrics::bench::Table;
+use halcone::metrics::geomean;
+use halcone::workloads::STANDARD;
+
+fn main() {
+    let presets = SystemConfig::PRESETS;
+    let mut results: Vec<Vec<RunResult>> = Vec::new();
+
+    for wl in STANDARD {
+        let row: Vec<RunResult> = presets
+            .iter()
+            .map(|p| {
+                let res = run_workload(&SystemConfig::preset(p), wl, None);
+                assert!(res.all_passed(), "{p}/{wl} checks failed: {:?}", res.checks);
+                res
+            })
+            .collect();
+        results.push(row);
+    }
+
+    // ---- Fig. 7(a): speed-up vs RDMA-WB-NC.
+    println!("== Fig. 7(a): speed-up vs RDMA-WB-NC ==\n");
+    let mut headers = vec!["bench"];
+    headers.extend(presets.iter().copied());
+    let widths = [8usize, 11, 15, 9, 9, 16];
+    let t = Table::new(&headers, &widths);
+    let mut per_cfg: Vec<Vec<f64>> = vec![Vec::new(); presets.len()];
+    for (wl, row) in STANDARD.iter().zip(&results) {
+        let base = row[0].metrics.cycles as f64;
+        let mut cells = vec![wl.to_string()];
+        for (c, res) in row.iter().enumerate() {
+            let s = base / res.metrics.cycles as f64;
+            per_cfg[c].push(s);
+            cells.push(format!("{s:.2}x"));
+        }
+        t.row(&cells);
+    }
+    let mut cells = vec!["mean".to_string()];
+    for s in &per_cfg {
+        cells.push(format!("{:.2}x", geomean(s)));
+    }
+    t.row(&cells);
+    println!("\npaper Fig. 7(a) means: 1.00x / 1.5x / 3.9x / 4.6x / 4.6x\n");
+
+    // ---- Fig. 7(b): L2<->MM transactions normalized to SM-WB-NC (idx 2).
+    println!("== Fig. 7(b): L2$<->MM transactions (normalized to SM-WB-NC) ==\n");
+    let t = Table::new(&["bench", "SM-WB-NC", "SM-WT-NC", "SM-WT-C-HALCONE"], &[8, 12, 12, 16]);
+    let mut wt_ratio = Vec::new();
+    let mut hc_ratio = Vec::new();
+    for (wl, row) in STANDARD.iter().zip(&results) {
+        let wb = row[2].metrics.l2_mm_transactions() as f64;
+        let wt = row[3].metrics.l2_mm_transactions() as f64 / wb;
+        let hc = row[4].metrics.l2_mm_transactions() as f64 / wb;
+        wt_ratio.push(wt);
+        hc_ratio.push(hc);
+        t.row(&[wl.to_string(), "1.00".into(), format!("{wt:.2}"), format!("{hc:.2}")]);
+    }
+    t.row(&[
+        "mean".into(),
+        "1.00".into(),
+        format!("{:.2}", geomean(&wt_ratio)),
+        format!("{:.2}", geomean(&hc_ratio)),
+    ]);
+    println!("\npaper: WT issues ~22.7% more L2<->MM transactions than WB; HALCONE ~ +1% over WT\n");
+
+    // ---- Fig. 7(c): L1<->L2 transactions normalized to SM-WB-NC.
+    println!("== Fig. 7(c): L1$<->L2$ transactions (normalized to SM-WB-NC) ==\n");
+    let t = Table::new(&["bench", "SM-WB-NC", "SM-WT-NC", "SM-WT-C-HALCONE"], &[8, 12, 12, 16]);
+    let mut hc1 = Vec::new();
+    for (wl, row) in STANDARD.iter().zip(&results) {
+        let wb = row[2].metrics.l1_l2_transactions() as f64;
+        let wt = row[3].metrics.l1_l2_transactions() as f64 / wb;
+        let hc = row[4].metrics.l1_l2_transactions() as f64 / wb;
+        hc1.push(hc);
+        t.row(&[wl.to_string(), "1.00".into(), format!("{wt:.2}"), format!("{hc:.2}")]);
+    }
+    t.row(&["mean".into(), "1.00".into(), "-".into(), format!("{:.2}", geomean(&hc1))]);
+    println!("\npaper: L1<->L2 transactions identical for WB/WT; HALCONE adds ~1% (coherency re-fetches)");
+
+    // ---- E11 headline claims.
+    let hc_mean = geomean(&per_cfg[4]);
+    let hmg_mean = geomean(&per_cfg[1]);
+    println!("\nclaims: HALCONE/RDMA = {hc_mean:.2}x (paper 4.6x);");
+    println!("        HALCONE/HMG  = {:.2}x (paper 3.0x);", hc_mean / hmg_mean);
+    println!(
+        "        HALCONE overhead vs SM-WT-NC = {:+.2}% (paper ~1%)",
+        100.0 * (geomean(&per_cfg[3]) / hc_mean - 1.0)
+    );
+}

@@ -1,0 +1,84 @@
+//! E6/E7 — Fig. 8: strong-scaling studies of SM-WT-C-HALCONE.
+//!
+//! (a) GPU count 1/2/4/8/16 at 32 CUs each, runtimes normalized to 1 GPU
+//!     (paper means: 1.76x / 2.74x / 4.05x / 5.43x);
+//! (b) CU count 32/48/64 at 4 GPUs (paper means: 1.12x / 1.24x);
+//! (c) L2$<->MM transactions across CU counts (flat for the L2-bottlenecked
+//!     benchmarks bfs/bs — the reason they do not scale).
+//!
+//!     cargo bench --bench fig8_scalability
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_workload;
+use halcone::metrics::bench::Table;
+use halcone::metrics::geomean;
+use halcone::workloads::STANDARD;
+
+fn main() {
+    // ---- (a) GPU-count scaling.
+    println!("== Fig. 8(a): speed-up vs 1 coherent GPU (32 CUs/GPU) ==\n");
+    let gpu_counts = [1u32, 2, 4, 8, 16];
+    let t = Table::new(&["bench", "1", "2", "4", "8", "16"], &[8, 7, 7, 7, 7, 7]);
+    let mut per_count: Vec<Vec<f64>> = vec![Vec::new(); gpu_counts.len()];
+    for wl in STANDARD {
+        let mut base = None;
+        let mut cells = vec![wl.to_string()];
+        for (i, &g) in gpu_counts.iter().enumerate() {
+            let mut cfg = SystemConfig::preset("SM-WT-C-HALCONE");
+            cfg.n_gpus = g;
+            let res = run_workload(&cfg, wl, None);
+            assert!(res.all_passed(), "{wl}@{g}gpus failed");
+            let b = *base.get_or_insert(res.metrics.cycles as f64);
+            let s = b / res.metrics.cycles as f64;
+            per_count[i].push(s);
+            cells.push(format!("{s:.2}x"));
+        }
+        t.row(&cells);
+    }
+    let mut cells = vec!["mean".to_string()];
+    for s in &per_count {
+        cells.push(format!("{:.2}x", geomean(s)));
+    }
+    t.row(&cells);
+    println!("\npaper Fig. 8(a) means: 1.00x / 1.76x / 2.74x / 4.05x / 5.43x\n");
+
+    // ---- (b) + (c) CU-count scaling at 4 GPUs.
+    println!("== Fig. 8(b): speed-up vs 32 CUs/GPU (4 GPUs) ==");
+    println!("== Fig. 8(c): L2$<->MM transactions, normalized to 32 CUs ==\n");
+    let cu_counts = [32u32, 48, 64];
+    let t = Table::new(
+        &["bench", "s@32", "s@48", "s@64", "tx@32", "tx@48", "tx@64"],
+        &[8, 7, 7, 7, 8, 8, 8],
+    );
+    let mut per_cu: Vec<Vec<f64>> = vec![Vec::new(); cu_counts.len()];
+    for wl in STANDARD {
+        let mut base_cy = None;
+        let mut base_tx = None;
+        let mut speed = vec![];
+        let mut tx = vec![];
+        for (i, &c) in cu_counts.iter().enumerate() {
+            let mut cfg = SystemConfig::preset("SM-WT-C-HALCONE");
+            cfg.cus_per_gpu = c;
+            let res = run_workload(&cfg, wl, None);
+            assert!(res.all_passed(), "{wl}@{c}cus failed");
+            let bc = *base_cy.get_or_insert(res.metrics.cycles as f64);
+            let bt = *base_tx.get_or_insert(res.metrics.l2_mm_transactions() as f64);
+            let s = bc / res.metrics.cycles as f64;
+            per_cu[i].push(s);
+            speed.push(format!("{s:.2}x"));
+            tx.push(format!("{:.2}", res.metrics.l2_mm_transactions() as f64 / bt));
+        }
+        let mut cells = vec![wl.to_string()];
+        cells.extend(speed);
+        cells.extend(tx);
+        t.row(&cells);
+    }
+    let mut cells = vec!["mean".to_string()];
+    for s in &per_cu {
+        cells.push(format!("{:.2}x", geomean(s)));
+    }
+    cells.extend(["-".into(), "-".into(), "-".into()]);
+    t.row(&cells);
+    println!("\npaper Fig. 8(b) means: 1.00x / 1.12x / 1.24x;");
+    println!("paper Fig. 8(c): bfs/bs transactions flat across CU counts (L2 bottleneck)");
+}

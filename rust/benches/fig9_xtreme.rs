@@ -1,0 +1,53 @@
+//! E8 — Fig. 9: Xtreme stress tests across vector sizes.
+//!
+//! SM-WT-C-HALCONE vs SM-WT-NC for Xtreme1/2/3 while the per-vector
+//! footprint sweeps from cache-resident to far-beyond-L2 (the paper sweeps
+//! 192 KB ... 96 MB; we sweep 192 KB ... 3 MB, covering the same three
+//! miss regimes — see DESIGN.md scaling note). Paper: worst-case slowdowns
+//! 14.3% (X1) / 12.1% (X2) / 16.8% (X3) at the smallest size, decaying as
+//! capacity/conflict misses displace coherency misses.
+//!
+//!     cargo bench --bench fig9_xtreme
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_workload;
+use halcone::metrics::bench::Table;
+
+fn main() {
+    // scale -> per-vector footprint: 65536 * scale * 4 bytes.
+    let sweeps = [(0.75f64, "192KB"), (3.0, "768KB"), (12.0, "3MB")];
+    for (idx, wl) in ["xtreme1", "xtreme2", "xtreme3"].iter().enumerate() {
+        println!("== Fig. 9({}): {wl} ==\n", ["a", "b", "c"][idx]);
+        let t = Table::new(
+            &["vector", "SM-WT-NC cy", "HALCONE cy", "slowdown", "coh-misses"],
+            &[8, 13, 13, 9, 11],
+        );
+        for &(scale, label) in &sweeps {
+            let mut nc_cfg = SystemConfig::preset("SM-WT-NC");
+            nc_cfg.scale = scale;
+            let nc = run_workload(&nc_cfg, wl, None);
+            assert!(nc.all_passed(), "{wl}@{label} NC failed");
+
+            let mut hc_cfg = SystemConfig::preset("SM-WT-C-HALCONE");
+            hc_cfg.scale = scale;
+            let hc = run_workload(&hc_cfg, wl, None);
+            assert!(hc.all_passed(), "{wl}@{label} HALCONE failed");
+
+            t.row(&[
+                label.into(),
+                nc.metrics.cycles.to_string(),
+                hc.metrics.cycles.to_string(),
+                format!(
+                    "{:+.1}%",
+                    100.0 * (hc.metrics.cycles as f64 / nc.metrics.cycles as f64 - 1.0)
+                ),
+                hc.metrics.l1.coherency_misses.to_string(),
+            ]);
+        }
+        println!();
+    }
+    println!(
+        "paper Fig. 9: degradation peaks at the smallest vectors (coherency misses dominate)\n\
+         and decays toward ~0.6% once capacity/conflict misses take over."
+    );
+}

@@ -1,0 +1,920 @@
+//! The HALCONE protocol controllers (paper §3.2, Algorithms 1–5).
+//!
+//! Key mechanics, as implemented:
+//!
+//! * Each L1\$ and each L2\$ bank owns a logical clock `cts`. A resident
+//!   block is *valid* iff `cts <= rts(block)` (Alg. 1/2 hit condition); a
+//!   tag match with an expired lease is a **coherency miss** and re-fetches
+//!   from the level below with fresh timestamps — unlike G-TSC there is no
+//!   wts-match lease-extension shortcut, which is what removes the CU-level
+//!   timestamp (`warpts`) from every request.
+//! * Writes are write-through at both levels; L1 is no-write-allocate
+//!   (§2.2), L2 allocates on write (Alg. 5 `WriteBlockToCache`). A written
+//!   block is **locked** (MSHR `WriteLock`) from the local write until the
+//!   level below returns timestamps (Alg. 4/5); accesses arriving in the
+//!   window queue behind the lock and replay in order.
+//! * On a fill/write response carrying `(Mrts, Mwts)`:
+//!   `Bwts = max(cts, Mwts)`, `Brts = max(Mwts + 1, Mrts)`; **writes**
+//!   additionally advance the clock, `cts = max(cts, Bwts)`. Reads do not
+//!   advance `cts` (Alg. 1/2).
+//! * Timestamps originate at the per-stack TSU (`tsu::Tsu`), which advances
+//!   the block's `memts` by RdLease/WrLease per access (Alg. 3).
+//! * Kernel-boundary fences advance `cts` to `logical_max + 1` computed by
+//!   the driver over all caches' clocks (DESIGN.md §6): every stale copy's
+//!   lease provably expires, while untouched data at worst re-fetches.
+//!
+//! The `carry_warpts` flag reproduces G-TSC-style CU-level-timestamp
+//! traffic for the E10 ablation (affects wire bytes only).
+
+use crate::coherence::{L1Routes, L2Routes, TsMeta};
+use crate::mem::cache::{CacheArray, CacheParams};
+use crate::mem::mshr::{Mshr, MshrKind};
+use crate::metrics::CacheCtrlStats;
+use crate::sim::msg::{MemReq, MemRsp, TsPair};
+use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
+
+/// Alg. 1/2/4/5 timestamp merge for a response from the level below.
+fn merge_ts(cts: u64, rsp: TsPair) -> TsMeta {
+    TsMeta { wts: cts.max(rsp.wts), rts: (rsp.wts + 1).max(rsp.rts) }
+}
+
+/// Per-CU private L1 vector cache controller.
+pub struct HalconeL1 {
+    name: String,
+    routes: L1Routes,
+    cache: CacheArray<TsMeta>,
+    mshr: Mshr,
+    /// The cache's logical clock (replaces G-TSC's per-CU warpts).
+    pub cts: u64,
+    /// Hit/lookup latency in cycles.
+    lat: Cycle,
+    /// G-TSC ablation: carry a CU-level timestamp in every request.
+    carry_warpts: bool,
+    /// Write-combining buffer: same-line writes arriving while the line is
+    /// write-locked coalesce here and flush as one combined write at
+    /// unlock. Their CU acks are withheld until the flush lands (so phase
+    /// completion implies durability at the level below).
+    coalesce: std::collections::HashMap<u64, Vec<(u64, Vec<u8>)>>,
+    /// Coalesced requests awaiting their flush's completion.
+    pending_acks: std::collections::HashMap<u64, Vec<MemReq>>,
+    pub stats: CacheCtrlStats,
+    line: u64,
+}
+
+/// Merge buffered (addr, bytes) writes into maximal contiguous runs.
+pub(crate) fn coalesce_runs(mut buf: Vec<(u64, Vec<u8>)>) -> Vec<(u64, Vec<u8>)> {
+    buf.sort_by_key(|(a, _)| *a);
+    let mut runs: Vec<(u64, Vec<u8>)> = Vec::new();
+    for (addr, bytes) in buf {
+        match runs.last_mut() {
+            Some((ra, rb)) if *ra + rb.len() as u64 == addr => rb.extend(bytes),
+            Some((ra, rb)) if addr < *ra + rb.len() as u64 => {
+                // Overwrite within the run (later write wins).
+                let off = (addr - *ra) as usize;
+                let end = off + bytes.len();
+                if end > rb.len() {
+                    rb.resize(end, 0);
+                }
+                rb[off..end].copy_from_slice(&bytes);
+            }
+            _ => runs.push((addr, bytes)),
+        }
+    }
+    runs
+}
+
+impl HalconeL1 {
+    pub fn new(
+        name: impl Into<String>,
+        routes: L1Routes,
+        params: CacheParams,
+        mshr_entries: usize,
+        lat: Cycle,
+        carry_warpts: bool,
+    ) -> Self {
+        let line = params.line;
+        HalconeL1 {
+            name: name.into(),
+            routes,
+            cache: CacheArray::new(params),
+            mshr: Mshr::new(mshr_entries),
+            cts: 0,
+            lat,
+            carry_warpts,
+            coalesce: std::collections::HashMap::new(),
+            pending_acks: std::collections::HashMap::new(),
+            stats: CacheCtrlStats::default(),
+            line,
+        }
+    }
+
+    fn line_base(&self, addr: u64) -> u64 {
+        addr & !(self.line - 1)
+    }
+
+    fn respond_word(&mut self, req: &MemReq, line_data: &[u8], ctx: &mut Ctx) {
+        let off = (req.addr - self.line_base(req.addr)) as usize;
+        let data = line_data[off..off + req.size as usize].to_vec();
+        self.respond_sliced(req, data, ctx);
+    }
+
+    /// Respond with already-sliced payload bytes.
+    fn respond_sliced(&mut self, req: &MemReq, data: Vec<u8>, ctx: &mut Ctx) {
+        let rsp = MemRsp {
+            id: req.id,
+            kind: ReqKind::Read,
+            addr: req.addr,
+            dst: req.src,
+            data,
+            ts: None,
+        };
+        self.stats.rsps_out += 1;
+        ctx.schedule(self.lat, req.src, Msg::Rsp(Box::new(rsp)));
+    }
+
+    fn respond_write_ack(&mut self, req: &MemReq, ctx: &mut Ctx) {
+        let rsp = MemRsp {
+            id: req.id,
+            kind: ReqKind::Write,
+            addr: req.addr,
+            dst: req.src,
+            data: vec![],
+            ts: None,
+        };
+        self.stats.rsps_out += 1;
+        ctx.schedule(self.lat, req.src, Msg::Rsp(Box::new(rsp)));
+    }
+
+    fn send_down(&mut self, down: MemReq, ctx: &mut Ctx) {
+        let (link, next, _) = self.routes.route(down.addr);
+        self.stats.reqs_down += 1;
+        self.stats.bytes_down += down.wire_bytes();
+        let bytes = down.wire_bytes();
+        ctx.send(link, next, bytes, Msg::Req(Box::new(down)));
+    }
+
+    fn on_cu_req(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
+        let la = self.line_base(req.addr);
+        if let Some(entry) = self.mshr.get(la) {
+            // Write arriving while the line is write-locked: coalesce into
+            // the combining buffer; ack once the combined flush lands.
+            if entry.kind == MshrKind::WriteLock && req.kind == ReqKind::Write {
+                if let Some(line) = self.cache.lookup(req.addr) {
+                    let off = (req.addr - la) as usize;
+                    line.data[off..off + req.data.len()].copy_from_slice(&req.data);
+                }
+                self.coalesce.entry(la).or_default().push((req.addr, req.data.clone()));
+                self.pending_acks.entry(la).or_default().push(req);
+                return;
+            }
+            // Otherwise queue behind the in-flight entry.
+            self.stats.mshr_merges += 1;
+            self.mshr.merge(la, req);
+            return;
+        }
+        match req.kind {
+            ReqKind::Read => {
+                let cts = self.cts;
+                let off = (req.addr - la) as usize;
+                let mut hit_data = None;
+                if let Some(line) = self.cache.lookup(req.addr) {
+                    if cts <= line.meta.rts {
+                        // Copy only the requested bytes (hits are the
+                        // hottest path; cloning whole lines showed in perf).
+                        hit_data =
+                            Some(line.data[off..off + req.size as usize].to_vec());
+                    } else {
+                        // Tag hit, lease expired: coherency miss (Alg. 1).
+                        self.stats.coherency_misses += 1;
+                    }
+                } else {
+                    self.stats.misses += 1;
+                }
+                if let Some(data) = hit_data {
+                    self.cache.record(true);
+                    self.stats.hits += 1;
+                    self.respond_sliced(&req, data, ctx);
+                    return;
+                }
+                self.cache.record(false);
+                let fill = MemReq {
+                    id: req.id,
+                    kind: ReqKind::Read,
+                    addr: la,
+                    size: self.line as u32,
+                    src: ctx.self_id,
+                    dst: self.routes.route(la).2,
+                    data: vec![],
+                    warpts: self.carry_warpts.then_some(self.cts),
+                };
+                self.mshr.allocate(la, MshrKind::Fill, req);
+                self.send_down(fill, ctx);
+            }
+            ReqKind::Write => {
+                // WT + no-write-allocate: forward the word regardless;
+                // update the local copy only on a lease-valid hit (Alg. 4).
+                let cts = self.cts;
+                let mut hit = false;
+                let mut expired = false;
+                if let Some(line) = self.cache.lookup(req.addr) {
+                    if cts <= line.meta.rts {
+                        hit = true;
+                        let off = (req.addr - la) as usize;
+                        line.data[off..off + req.data.len()].copy_from_slice(&req.data);
+                    } else {
+                        expired = true;
+                    }
+                }
+                if expired {
+                    // Tag match with an expired lease: the resident data is
+                    // stale and no-write-allocate will not refresh it — drop
+                    // it so the retire path cannot revalidate stale bytes.
+                    self.cache.invalidate(la);
+                    self.stats.coherency_misses += 1;
+                }
+                self.cache.record(hit);
+                if hit {
+                    self.stats.hits += 1;
+                } else {
+                    self.stats.misses += 1;
+                }
+                let down = MemReq {
+                    id: req.id,
+                    kind: ReqKind::Write,
+                    addr: req.addr,
+                    size: req.size,
+                    src: ctx.self_id,
+                    dst: self.routes.route(req.addr).2,
+                    data: req.data.clone(),
+                    warpts: self.carry_warpts.then_some(self.cts),
+                };
+                // Lock the block until timestamps return (Alg. 4).
+                self.mshr.allocate(la, MshrKind::WriteLock, req);
+                self.send_down(down, ctx);
+            }
+        }
+        let _ = now;
+    }
+
+    fn on_down_rsp(&mut self, now: Cycle, rsp: MemRsp, ctx: &mut Ctx) {
+        self.stats.rsps_down += 1;
+        let la = self.line_base(rsp.addr);
+        let entry = self.mshr.retire(la);
+        let ts = rsp.ts.expect("HALCONE response must carry timestamps");
+        let meta = merge_ts(self.cts, ts);
+        match entry.kind {
+            MshrKind::Fill => {
+                debug_assert_eq!(rsp.data.len() as u64, self.line);
+                // Clean insert (WT lines are never dirty); evictions drop.
+                let data: Box<[u8]> = rsp.data.clone().into_boxed_slice();
+                self.cache.insert(la, data.clone(), false, meta);
+                self.respond_word(&entry.primary.clone(), &data, ctx);
+            }
+            MshrKind::WriteLock => {
+                if let Some(line) = self.cache.lookup(la) {
+                    line.meta = meta;
+                }
+                // Writes advance the cache's clock (Alg. 4).
+                self.cts = self.cts.max(meta.wts);
+                let primary = entry.primary.clone();
+                if primary.src != CompId::NONE {
+                    self.respond_write_ack(&primary, ctx);
+                }
+                // Flush one coalesced run, re-locking the line; queued
+                // waiters re-merge behind it so ordering is preserved.
+                if let Some(buf) = self.coalesce.remove(&la) {
+                    let mut runs = coalesce_runs(buf);
+                    let (addr, data) = runs.remove(0);
+                    if !runs.is_empty() {
+                        // Fragmented runs flush back-to-back.
+                        self.coalesce.insert(la, runs);
+                    }
+                    let down = MemReq {
+                        id: crate::coherence::FLUSH_REQ_ID,
+                        kind: ReqKind::Write,
+                        addr,
+                        size: data.len() as u32,
+                        src: ctx.self_id,
+                        dst: self.routes.route(addr).2,
+                        data: data.clone(),
+                        warpts: self.carry_warpts.then_some(self.cts),
+                    };
+                    let synthetic = MemReq { src: CompId::NONE, ..down.clone() };
+                    self.mshr.allocate(la, MshrKind::WriteLock, synthetic);
+                    for w in entry.waiters {
+                        self.mshr.merge(la, w);
+                    }
+                    self.send_down(down, ctx);
+                    return;
+                }
+                // No further flushes: release the held coalesced acks.
+                if let Some(acks) = self.pending_acks.remove(&la) {
+                    for r in acks {
+                        self.respond_write_ack(&r, ctx);
+                    }
+                }
+            }
+        }
+        for w in entry.waiters {
+            self.on_cu_req(now, w, ctx);
+        }
+    }
+}
+
+impl Component for HalconeL1 {
+    crate::impl_component_any!();
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            Msg::Req(req) => {
+                self.stats.reqs_in += 1;
+                self.on_cu_req(now, *req, ctx);
+            }
+            Msg::Rsp(rsp) => self.on_down_rsp(now, *rsp, ctx),
+            Msg::FenceQuery { reply_to } => {
+                let cts = self.cts;
+                ctx.schedule(0, reply_to, Msg::FenceInfo { from: ctx.self_id, cts });
+            }
+            Msg::FenceApply { reply_to, logical_max } => {
+                debug_assert!(self.mshr.is_empty(), "fence with in-flight requests");
+                self.cts = self.cts.max(logical_max);
+                ctx.schedule(0, reply_to, Msg::FenceDone { from: ctx.self_id });
+            }
+            other => panic!("{}: unexpected {:?}", self.name, other),
+        }
+    }
+}
+
+/// One distributed shared L2 bank controller.
+pub struct HalconeL2 {
+    name: String,
+    routes: L2Routes,
+    cache: CacheArray<TsMeta>,
+    mshr: Mshr,
+    pub cts: u64,
+    lat: Cycle,
+    carry_warpts: bool,
+    pub stats: CacheCtrlStats,
+    line: u64,
+}
+
+impl HalconeL2 {
+    pub fn new(
+        name: impl Into<String>,
+        routes: L2Routes,
+        params: CacheParams,
+        mshr_entries: usize,
+        lat: Cycle,
+        carry_warpts: bool,
+    ) -> Self {
+        let line = params.line;
+        HalconeL2 {
+            name: name.into(),
+            routes,
+            cache: CacheArray::new(params),
+            mshr: Mshr::new(mshr_entries),
+            cts: 0,
+            lat,
+            carry_warpts,
+            stats: CacheCtrlStats::default(),
+            line,
+        }
+    }
+
+    fn line_base(&self, addr: u64) -> u64 {
+        addr & !(self.line - 1)
+    }
+
+    fn respond_up(&mut self, req: &MemReq, data: Vec<u8>, meta: TsMeta, ctx: &mut Ctx) {
+        let rsp = MemRsp {
+            id: req.id,
+            kind: req.kind,
+            addr: req.addr,
+            dst: req.src,
+            data,
+            ts: Some(TsPair { rts: meta.rts, wts: meta.wts }),
+        };
+        self.stats.rsps_out += 1;
+        self.stats.bytes_up += rsp.wire_bytes();
+        let (link, next) = self.routes.route_up(req.src);
+        let bytes = rsp.wire_bytes();
+        ctx.send_delayed(self.lat, link, next, bytes, Msg::Rsp(Box::new(rsp)));
+    }
+
+    fn send_mm(&mut self, down: MemReq, ctx: &mut Ctx) {
+        let (link, next, _) = self.routes.route_mm(down.addr);
+        self.stats.reqs_down += 1;
+        self.stats.bytes_down += down.wire_bytes();
+        let bytes = down.wire_bytes();
+        ctx.send(link, next, bytes, Msg::Req(Box::new(down)));
+    }
+
+    fn on_l1_req(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
+        let la = self.line_base(req.addr);
+        if self.mshr.get(la).is_some() {
+            self.stats.mshr_merges += 1;
+            self.mshr.merge(la, req);
+            return;
+        }
+        match req.kind {
+            ReqKind::Read => {
+                let cts = self.cts;
+                let mut hit = None;
+                if let Some(line) = self.cache.lookup(req.addr) {
+                    if cts <= line.meta.rts {
+                        hit = Some((line.data.to_vec(), line.meta));
+                    } else {
+                        self.stats.coherency_misses += 1;
+                    }
+                } else {
+                    self.stats.misses += 1;
+                }
+                if let Some((data, meta)) = hit {
+                    self.cache.record(true);
+                    self.stats.hits += 1;
+                    self.respond_up(&req, data, meta, ctx);
+                    return;
+                }
+                self.cache.record(false);
+                let fill = MemReq {
+                    id: req.id,
+                    kind: ReqKind::Read,
+                    addr: la,
+                    size: self.line as u32,
+                    src: ctx.self_id,
+                    dst: self.routes.route_mm(la).2,
+                    data: vec![],
+                    warpts: self.carry_warpts.then_some(self.cts),
+                };
+                self.mshr.allocate(la, MshrKind::Fill, req);
+                self.send_mm(fill, ctx);
+            }
+            ReqKind::Write => {
+                let cts = self.cts;
+                let mut hit = false;
+                if let Some(line) = self.cache.lookup(req.addr) {
+                    if cts <= line.meta.rts {
+                        hit = true;
+                        let off = (req.addr - la) as usize;
+                        line.data[off..off + req.data.len()].copy_from_slice(&req.data);
+                    }
+                }
+                self.cache.record(hit);
+                if hit {
+                    self.stats.hits += 1;
+                } else {
+                    self.stats.misses += 1;
+                }
+                let down = MemReq {
+                    id: req.id,
+                    kind: ReqKind::Write,
+                    addr: req.addr,
+                    size: req.size,
+                    src: ctx.self_id,
+                    dst: self.routes.route_mm(req.addr).2,
+                    data: req.data.clone(),
+                    warpts: self.carry_warpts.then_some(self.cts),
+                };
+                self.mshr.allocate(la, MshrKind::WriteLock, req);
+                self.send_mm(down, ctx);
+            }
+        }
+        let _ = now;
+    }
+
+    fn on_mm_rsp(&mut self, now: Cycle, rsp: MemRsp, ctx: &mut Ctx) {
+        self.stats.rsps_down += 1;
+        let la = self.line_base(rsp.addr);
+        let entry = self.mshr.retire(la);
+        let ts = rsp.ts.expect("HALCONE MM response must carry timestamps");
+        let meta = merge_ts(self.cts, ts);
+        match entry.kind {
+            MshrKind::Fill => {
+                let data: Box<[u8]> = rsp.data.clone().into_boxed_slice();
+                self.cache.insert(la, data.clone(), false, meta);
+                let primary = entry.primary.clone();
+                self.respond_up(&primary, data.to_vec(), meta, ctx);
+            }
+            MshrKind::WriteLock => {
+                // Write-allocate with the MM's merged line (Alg. 5
+                // `WriteBlockToCache`): a same-tag insert also *replaces*
+                // any tag-matched-but-expired stale copy with fresh bytes.
+                debug_assert_eq!(rsp.data.len() as u64, self.line);
+                self.cache.insert(la, rsp.data.clone().into_boxed_slice(), false, meta);
+                self.cts = self.cts.max(meta.wts);
+                let primary = entry.primary.clone();
+                self.respond_up(&primary, vec![], meta, ctx);
+            }
+        }
+        for w in entry.waiters {
+            self.on_l1_req(now, w, ctx);
+        }
+    }
+}
+
+impl Component for HalconeL2 {
+    crate::impl_component_any!();
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            Msg::Req(req) => {
+                self.stats.reqs_in += 1;
+                self.on_l1_req(now, *req, ctx);
+            }
+            Msg::Rsp(rsp) => self.on_mm_rsp(now, *rsp, ctx),
+            Msg::FenceQuery { reply_to } => {
+                let cts = self.cts;
+                ctx.schedule(0, reply_to, Msg::FenceInfo { from: ctx.self_id, cts });
+            }
+            Msg::FenceApply { reply_to, logical_max } => {
+                debug_assert!(self.mshr.is_empty(), "fence with in-flight requests");
+                self.cts = self.cts.max(logical_max);
+                ctx.schedule(0, reply_to, Msg::FenceDone { from: ctx.self_id });
+            }
+            other => panic!("{}: unexpected {:?}", self.name, other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::{GlobalMemory, MemCtrl, SharedMemory};
+    use crate::interconnect::Switch;
+    use crate::mem::addr::Topology;
+    use crate::mem::AddrMap;
+    use crate::sim::{Engine, Link};
+    use crate::tsu::{Leases, Tsu};
+    use std::collections::HashMap;
+
+    /// Scripted CU stand-in: issues requests at fixed times, records
+    /// responses.
+    struct Prober {
+        name: String,
+        l1: CompId,
+        script: Vec<(Cycle, MemReq)>,
+        pub responses: Vec<(Cycle, MemRsp)>,
+    }
+
+    impl Component for Prober {
+    crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            match msg {
+                Msg::Tick => {
+                    for (t, req) in std::mem::take(&mut self.script) {
+                        let mut r = req;
+                        r.src = ctx.self_id;
+                        ctx.schedule(t - now, self.l1, Msg::Req(Box::new(r)));
+                    }
+                }
+                Msg::Rsp(rsp) => self.responses.push((now, *rsp)),
+                _ => {}
+            }
+        }
+    }
+
+    /// Test rig: `n_gpus` x (Prober + L1 + single L2 bank), one MC+TSU
+    /// behind a switch.
+    struct Rig {
+        engine: Engine,
+        mem: SharedMemory,
+        probers: Vec<CompId>,
+        l1s: Vec<CompId>,
+        l2s: Vec<CompId>,
+        #[allow(dead_code)]
+        mc: CompId,
+    }
+
+    fn rd(id: u64, addr: u64) -> MemReq {
+        MemReq {
+            id,
+            kind: ReqKind::Read,
+            addr,
+            size: 4,
+            src: CompId::NONE,
+            dst: CompId::NONE,
+            data: vec![],
+            warpts: None,
+        }
+    }
+
+    fn wr(id: u64, addr: u64, v: f32) -> MemReq {
+        MemReq {
+            id,
+            kind: ReqKind::Write,
+            addr,
+            size: 4,
+            src: CompId::NONE,
+            dst: CompId::NONE,
+            data: v.to_le_bytes().to_vec(),
+            warpts: None,
+        }
+    }
+
+    fn f32_of(rsp: &MemRsp) -> f32 {
+        f32::from_le_bytes([rsp.data[0], rsp.data[1], rsp.data[2], rsp.data[3]])
+    }
+
+    fn build(n_gpus: u32, leases: Leases, carry_warpts: bool, scripts: Vec<Vec<(Cycle, MemReq)>>) -> Rig {
+        let mut e = Engine::new();
+        let mem = GlobalMemory::new_shared();
+        let map = AddrMap::new(Topology::SharedMem, n_gpus, 1, 1, 1 << 20);
+
+        // Component ids (assigned in insertion order):
+        // per gpu g: prober = 3g, l1 = 3g+1, l2 = 3g+2; then switch, mc.
+        let n = n_gpus as usize;
+        let prober_ids: Vec<CompId> = (0..n).map(|g| CompId(3 * g as u32)).collect();
+        let l1_ids: Vec<CompId> = (0..n).map(|g| CompId(3 * g as u32 + 1)).collect();
+        let l2_ids: Vec<CompId> = (0..n).map(|g| CompId(3 * g as u32 + 2)).collect();
+        let sw_id = CompId(3 * n_gpus);
+        // One MC per HBM stack (total_stacks = n_gpus * 1 in this rig).
+        let mc_ids: Vec<CompId> =
+            (0..map.total_stacks()).map(|s| CompId(3 * n_gpus + 1 + s)).collect();
+
+        let mut sw = Switch::new("sw");
+        for g in 0..n {
+            // Links per gpu: l1->l2, l2->l1, l2->sw, sw->l2.
+            let l1_l2 = e.add_link(Link::wire(format!("g{g}.l1->l2"), 5));
+            let l2_l1 = e.add_link(Link::wire(format!("g{g}.l2->l1"), 5));
+            let l2_sw = e.add_link(Link::new(format!("g{g}.l2->sw"), 20, 256));
+            let sw_l2 = e.add_link(Link::new(format!("sw->g{g}.l2"), 20, 256));
+            sw.add_route(l2_ids[g], (sw_l2, l2_ids[g]));
+
+            let routes1 = L1Routes {
+                map: map.clone(),
+                gpu: g as u32,
+                local_links: vec![l1_l2],
+                local_banks: vec![l2_ids[g]],
+                remote_hop: None,
+                all_banks: vec![],
+            };
+            let mut up = HashMap::new();
+            up.insert(l1_ids[g], l2_l1);
+            let routes2 = L2Routes {
+                map: map.clone(),
+                gpu: g as u32,
+                mm_hop: (l2_sw, sw_id),
+                mcs: mc_ids.clone(),
+                up_routes: up,
+                up_default: None,
+                peer_hop: None,
+                all_banks: vec![],
+            };
+            e.add(Box::new(Prober {
+                name: format!("cu{g}"),
+                l1: l1_ids[g],
+                script: scripts[g].clone(),
+                responses: vec![],
+            }));
+            e.add(Box::new(HalconeL1::new(
+                format!("g{g}.l1"),
+                routes1,
+                CacheParams::new(16 << 10, 4),
+                64,
+                1,
+                carry_warpts,
+            )));
+            e.add(Box::new(HalconeL2::new(
+                format!("g{g}.l2"),
+                routes2,
+                CacheParams::new(256 << 10, 16),
+                256,
+                10,
+                carry_warpts,
+            )));
+        }
+        let mut mc_links = Vec::new();
+        for (s, &mc_id) in mc_ids.iter().enumerate() {
+            let mc_sw = e.add_link(Link::new(format!("mc{s}->sw"), 20, 341));
+            let sw_mc = e.add_link(Link::new(format!("sw->mc{s}"), 20, 341));
+            sw.add_route(mc_id, (sw_mc, mc_id));
+            mc_links.push(mc_sw);
+        }
+        e.add(Box::new(sw));
+        for (s, &_mc_id) in mc_ids.iter().enumerate() {
+            e.add(Box::new(MemCtrl::new(
+                format!("mm{s}"),
+                mem.clone(),
+                (mc_links[s], sw_id),
+                100,
+                Some(Tsu::new(1 << 16, leases)),
+            )));
+        }
+        for &p in &prober_ids {
+            e.post(0, p, Msg::Tick);
+        }
+        Rig { engine: e, mem, probers: prober_ids, l1s: l1_ids, l2s: l2_ids, mc: mc_ids[0] }
+    }
+
+    fn responses(rig: &Rig, gpu: usize) -> &Vec<(Cycle, MemRsp)> {
+        &rig.engine.downcast::<Prober>(rig.probers[gpu]).responses
+    }
+
+    fn l1_stats(rig: &Rig, gpu: usize) -> CacheCtrlStats {
+        rig.engine.downcast::<HalconeL1>(rig.l1s[gpu]).stats
+    }
+
+    fn l2_stats(rig: &Rig, gpu: usize) -> CacheCtrlStats {
+        rig.engine.downcast::<HalconeL2>(rig.l2s[gpu]).stats
+    }
+
+    #[test]
+    fn read_miss_fills_then_hits() {
+        let mut rig = build(
+            1,
+            Leases::default(),
+            false,
+            vec![vec![(0, rd(1, 0x100)), (2000, rd(2, 0x104))]],
+        );
+        rig.mem.borrow_mut().write_f32(0x104, 42.0);
+        rig.engine.run_to_completion();
+        let rsps = responses(&rig, 0);
+        assert_eq!(rsps.len(), 2);
+        assert_eq!(f32_of(&rsps[1].1), 42.0);
+        let s = l1_stats(&rig, 0);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.reqs_down, 1); // second read hit locally
+        // First response took the full path; second only the L1 latency.
+        assert!(rsps[0].0 > 100);
+        assert!(rsps[1].0 - 2000 < 10);
+    }
+
+    #[test]
+    fn write_through_reaches_memory_and_advances_cts() {
+        let mut rig = build(1, Leases::default(), false, vec![vec![(0, wr(1, 0x200, 7.5))]]);
+        rig.engine.run_to_completion();
+        assert_eq!(rig.mem.borrow_mut().read_f32(0x200), 7.5);
+        let rsps = responses(&rig, 0);
+        assert_eq!(rsps.len(), 1);
+        assert_eq!(rsps[0].1.kind, ReqKind::Write);
+        // First write to a fresh block: Mwts = 0, so cts stays 0 at L1;
+        // but the L2 allocated the line (write-allocate).
+        let s2 = l2_stats(&rig, 0);
+        assert_eq!(s2.reqs_down, 1);
+        assert_eq!(s2.rsps_down, 1);
+    }
+
+    #[test]
+    fn repeated_writes_self_invalidate_reads() {
+        // Xtreme1's mechanism: writes advance cts; a block read earlier
+        // (lease rts=10) expires once cts passes its rts.
+        let script = vec![
+            (0, rd(1, 0x100)),     // lease [0,10] on block 0x100
+            (3000, wr(2, 0x200, 1.0)), // memts(0x200): 0->5
+            (6000, wr(3, 0x200, 2.0)), // 5->10, Mwts=5  => cts=5
+            (9000, wr(4, 0x200, 3.0)), // 10->15, Mwts=10 => cts=10
+            (12000, wr(5, 0x200, 4.0)), // 15->20, Mwts=15 => cts=15
+            (15000, rd(6, 0x100)),  // cts=15 > rts=10: coherency miss
+        ];
+        let mut rig = build(1, Leases::default(), false, vec![script]);
+        rig.mem.borrow_mut().write_f32(0x100, 9.0);
+        rig.engine.run_to_completion();
+        let s1 = l1_stats(&rig, 0);
+        assert!(
+            s1.coherency_misses >= 1,
+            "expected a coherency miss, got {s1:?}"
+        );
+        // Data still correct after refetch.
+        let rsps = responses(&rig, 0);
+        let last = rsps.iter().find(|(_, r)| r.id == 6).unwrap();
+        assert_eq!(f32_of(&last.1), 9.0);
+    }
+
+    #[test]
+    fn litmus_fig5_inter_gpu_write_becomes_visible() {
+        // CU0@GPU0: R X, W Y, R X       (I0-1, I0-2, I0-3)
+        // CU0@GPU1: R Y, W X, W X, R Y  (I1-1, I1-2, +extra write, I1-3)
+        // The extra write pushes GPU1's cts beyond Y's read lease, so I1-3
+        // must coherency-miss and observe CU0's write of Y (paper Fig. 5b).
+        let x = 0x1000u64;
+        let y = 0x2000u64;
+        let s0 = vec![(0, rd(10, x)), (3000, wr(11, y, 5.0)), (9000, rd(12, x))];
+        let s1 = vec![
+            (0, rd(20, y)),
+            (4000, wr(21, x, 7.0)),
+            (6000, wr(22, x, 8.0)),
+            (12000, rd(23, y)),
+        ];
+        let mut rig = build(2, Leases::default(), false, vec![s0, s1]);
+        {
+            let mut m = rig.mem.borrow_mut();
+            m.write_f32(x, 1.0);
+            m.write_f32(y, 2.0);
+        }
+        rig.engine.run_to_completion();
+
+        // I0-3: GPU0's cts after W Y is Mwts(Y)=10 (read lease) -> within
+        // X's lease [.,10] at its L1: hit, old value (logically ordered
+        // before GPU1's writes of X).
+        let r0 = responses(&rig, 0);
+        let i0_3 = r0.iter().find(|(_, r)| r.id == 12).unwrap();
+        assert_eq!(f32_of(&i0_3.1), 1.0, "I0-3 must see the pre-write X");
+
+        // I1-3: GPU1's cts after two W X is 15 > rts(Y)=10: refetch; MM has
+        // CU0's write (WT), so the new value must be visible.
+        let r1 = responses(&rig, 1);
+        let i1_3 = r1.iter().find(|(_, r)| r.id == 23).unwrap();
+        assert_eq!(f32_of(&i1_3.1), 5.0, "I1-3 must observe CU0's write of Y");
+
+        let s1stats = l1_stats(&rig, 1);
+        assert!(s1stats.coherency_misses >= 1);
+    }
+
+    #[test]
+    fn fence_expires_stale_copies_across_gpus() {
+        // GPU1 reads X; GPU0 writes X; after a fence with logical_max+1,
+        // GPU1's re-read must miss and see the new value — even though
+        // GPU1 itself never wrote (its cts would otherwise stay 0).
+        let x = 0x3000u64;
+        let s0 = vec![(0, wr(1, x, 3.25))];
+        let s1 = vec![(0, rd(2, x))];
+        let mut rig = build(2, Leases::default(), false, vec![s0, s1]);
+        rig.mem.borrow_mut().write_f32(x, 1.0);
+        rig.engine.run_to_completion();
+
+        // Manual two-phase fence (the driver does this in production code).
+        // Writer cts: Mwts(X) after read+write order depends on event
+        // interleave; query then apply max+1.
+        let cts_vals: Vec<u64> = (0..2)
+            .flat_map(|g| {
+                let l1 = rig.engine.downcast::<HalconeL1>(rig.l1s[g]).cts;
+                let l2 = rig.engine.downcast::<HalconeL2>(rig.l2s[g]).cts;
+                [l1, l2]
+            })
+            .collect();
+        let logical_max = cts_vals.iter().max().unwrap() + 1;
+        for g in 0..2 {
+            rig.engine.post(
+                1_000_000,
+                rig.l1s[g],
+                Msg::FenceApply { reply_to: rig.probers[g], logical_max },
+            );
+            rig.engine.post(
+                1_000_000,
+                rig.l2s[g],
+                Msg::FenceApply { reply_to: rig.probers[g], logical_max },
+            );
+        }
+        // Re-read on GPU1 after the fence.
+        rig.engine.post(1_100_000, rig.probers[1], Msg::Tick);
+        rig.engine.downcast_mut::<Prober>(rig.probers[1]).script = vec![(1_200_000, rd(9, x))];
+        rig.engine.run_to_completion();
+        let r1 = responses(&rig, 1);
+        let reread = r1.iter().find(|(_, r)| r.id == 9).unwrap();
+        assert_eq!(f32_of(&reread.1), 3.25, "post-fence read must see the write");
+    }
+
+    #[test]
+    fn mshr_merges_concurrent_same_line_reads() {
+        let script = vec![(0, rd(1, 0x500)), (1, rd(2, 0x504)), (2, rd(3, 0x508))];
+        let mut rig = build(1, Leases::default(), false, vec![script]);
+        rig.engine.run_to_completion();
+        let s = l1_stats(&rig, 0);
+        assert_eq!(s.reqs_down, 1, "same-line reads must merge");
+        assert_eq!(s.mshr_merges, 2);
+        assert_eq!(responses(&rig, 0).len(), 3);
+    }
+
+    #[test]
+    fn warpts_ablation_increases_request_bytes() {
+        let script = || vec![(0, rd(1, 0x100)), (3000, wr(2, 0x200, 1.0))];
+        let mut a = build(1, Leases::default(), false, vec![script()]);
+        a.engine.run_to_completion();
+        let mut b = build(1, Leases::default(), true, vec![script()]);
+        b.engine.run_to_completion();
+        let (sa, sb) = (l1_stats(&a, 0), l1_stats(&b, 0));
+        assert_eq!(sa.reqs_down, sb.reqs_down, "same protocol behaviour");
+        assert!(
+            sb.bytes_down > sa.bytes_down,
+            "warpts must add request bytes: {} vs {}",
+            sb.bytes_down,
+            sa.bytes_down
+        );
+    }
+
+    #[test]
+    fn write_lock_queues_subsequent_reads() {
+        // A read issued 1 cycle after a write to the same line must wait
+        // for the lock and then return the written value.
+        let script = vec![(0, wr(1, 0x700, 6.5)), (1, rd(2, 0x700))];
+        let mut rig = build(1, Leases::default(), false, vec![script]);
+        rig.engine.run_to_completion();
+        let rsps = responses(&rig, 0);
+        let read = rsps.iter().find(|(_, r)| r.id == 2).unwrap();
+        assert_eq!(f32_of(&read.1), 6.5);
+        // The read was replayed after the lock: it must not have produced
+        // a *second* L2 fill before the write completed.
+        let s = l1_stats(&rig, 0);
+        assert_eq!(s.mshr_merges, 1);
+    }
+}

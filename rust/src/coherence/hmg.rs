@@ -1,0 +1,764 @@
+//! HMG-style hierarchical VI coherence for RDMA MGPU systems
+//! (the paper's strongest comparator, RDMA-WB-C-HMG; Ren et al., HPCA'20,
+//! as described by HALCONE §1/§4.1/§6).
+//!
+//! Model implemented here (simplifications documented in DESIGN.md):
+//!
+//! * Every line has a **home** L2 bank: the bank of the GPU owning the
+//!   address partition. The home bank is the ordering point and keeps a
+//!   **directory** of remote sharer banks.
+//! * Remote banks may cache **clean** copies (state V) filled from the
+//!   home over the PCIe fabric; L2 hits on remote data are HMG's headline
+//!   win over plain RDMA (the paper: "brings the cache blocks from a
+//!   remote GPU in its L2\$ instead of its L1\$").
+//! * Writes are performed at the home: a remote writer invalidates its own
+//!   copy and forwards the word; the home first invalidates every other
+//!   sharer (Inv/InvAck over PCIe) and only then performs the write
+//!   (write-back, dirty-at-home).
+//! * L1s are software-coherent (dropped at kernel-boundary fences), as in
+//!   HMG's scoped-consistency model.
+//!
+//! Invalidation latency and traffic ride the same bandwidth-modelled PCIe
+//! links as data, so sharing-heavy workloads pay HMG's coherence cost in
+//! both time and bytes — the effect HALCONE's evaluation exploits.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::coherence::L2Routes;
+use crate::mem::cache::{CacheArray, CacheParams};
+use crate::mem::mshr::{Mshr, MshrKind};
+use crate::metrics::CacheCtrlStats;
+use crate::sim::msg::{MemReq, MemRsp};
+use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
+
+const WB_ID_BASE: u64 = 1 << 62;
+
+/// A home-side write waiting for sharer invalidation acks.
+#[derive(Debug)]
+struct PendingInv {
+    remaining: usize,
+    req: MemReq,
+    waiters: Vec<MemReq>,
+}
+
+/// A fill stalled behind its victim's write-back (home side, WB).
+#[derive(Debug)]
+struct StalledFill {
+    line_addr: u64,
+}
+
+/// HMG L2 bank: home directory + remote V-cache in one controller.
+pub struct HmgL2 {
+    name: String,
+    routes: L2Routes,
+    gpu: u32,
+    bank: u32,
+    cache: CacheArray<()>,
+    mshr: Mshr,
+    lat: Cycle,
+    /// Home only: line -> remote sharer banks.
+    directory: HashMap<u64, Vec<CompId>>,
+    /// Home only: writes blocked on invalidation acks.
+    pending_inv: HashMap<u64, PendingInv>,
+    /// Peer bank component ids (to distinguish peer requests from L1s).
+    peer_banks: HashSet<CompId>,
+    evict_wait: HashMap<u64, StalledFill>,
+    fire_and_forget: HashSet<u64>,
+    next_wb_id: u64,
+    fence_pending: u64,
+    fence_reply: Option<CompId>,
+    pub stats: CacheCtrlStats,
+    line: u64,
+}
+
+impl HmgL2 {
+    pub fn new(
+        name: impl Into<String>,
+        routes: L2Routes,
+        gpu: u32,
+        bank: u32,
+        params: CacheParams,
+        mshr_entries: usize,
+        lat: Cycle,
+    ) -> Self {
+        let line = params.line;
+        let peer_banks: HashSet<CompId> = routes
+            .all_banks
+            .iter()
+            .enumerate()
+            .filter(|(g, _)| *g as u32 != gpu)
+            .flat_map(|(_, banks)| banks.iter().copied())
+            .collect();
+        HmgL2 {
+            name: name.into(),
+            routes,
+            gpu,
+            bank,
+            cache: CacheArray::new(params),
+            mshr: Mshr::new(mshr_entries),
+            lat,
+            directory: HashMap::new(),
+            pending_inv: HashMap::new(),
+            peer_banks,
+            evict_wait: HashMap::new(),
+            fire_and_forget: HashSet::new(),
+            next_wb_id: WB_ID_BASE,
+            fence_pending: 0,
+            fence_reply: None,
+            stats: CacheCtrlStats::default(),
+            line,
+        }
+    }
+
+    fn line_base(&self, addr: u64) -> u64 {
+        addr & !(self.line - 1)
+    }
+
+    fn is_home(&self, addr: u64) -> bool {
+        self.routes.map.home_gpu(addr) == self.gpu
+    }
+
+    fn home_bank_of(&self, addr: u64) -> CompId {
+        let g = self.routes.map.home_gpu(addr) as usize;
+        let b = self.routes.map.l2_bank_of(addr) as usize;
+        self.routes.all_banks[g][b]
+    }
+
+    fn respond_up(&mut self, req: &MemReq, data: Vec<u8>, ctx: &mut Ctx) {
+        let rsp = MemRsp {
+            id: req.id,
+            kind: req.kind,
+            addr: req.addr,
+            dst: req.src,
+            data,
+            ts: None,
+        };
+        self.stats.rsps_out += 1;
+        self.stats.bytes_up += rsp.wire_bytes();
+        let (link, next) = self.routes.route_up(req.src);
+        let bytes = rsp.wire_bytes();
+        ctx.send_delayed(self.lat, link, next, bytes, Msg::Rsp(Box::new(rsp)));
+    }
+
+    fn send_mm(&mut self, down: MemReq, ctx: &mut Ctx) {
+        let (link, next, _) = self.routes.route_mm(down.addr);
+        self.stats.reqs_down += 1;
+        self.stats.bytes_down += down.wire_bytes();
+        let bytes = down.wire_bytes();
+        ctx.send(link, next, bytes, Msg::Req(Box::new(down)));
+    }
+
+    fn send_home(&mut self, mut req: MemReq, ctx: &mut Ctx) {
+        let home = self.home_bank_of(req.addr);
+        req.dst = home;
+        let (link, sw) = self.routes.peer_hop.expect("HMG needs peer routing");
+        self.stats.reqs_down += 1;
+        self.stats.bytes_down += req.wire_bytes();
+        let bytes = req.wire_bytes();
+        ctx.send(link, sw, bytes, Msg::Req(Box::new(req)));
+    }
+
+    fn writeback(&mut self, addr: u64, data: Vec<u8>, ctx: &mut Ctx) -> u64 {
+        let id = self.next_wb_id;
+        self.next_wb_id += 1;
+        self.stats.writebacks += 1;
+        let wb = MemReq {
+            id,
+            kind: ReqKind::Write,
+            addr,
+            size: data.len() as u32,
+            src: ctx.self_id,
+            dst: self.routes.route_mm(addr).2,
+            data,
+            warpts: None,
+        };
+        self.send_mm(wb, ctx);
+        id
+    }
+
+    fn send_fill(&mut self, la: u64, id: u64, ctx: &mut Ctx) {
+        let fill = MemReq {
+            id,
+            kind: ReqKind::Read,
+            addr: la,
+            size: self.line as u32,
+            src: ctx.self_id,
+            dst: self.routes.route_mm(la).2,
+            data: vec![],
+            warpts: None,
+        };
+        self.send_mm(fill, ctx);
+    }
+
+    fn insert_wb_safe(&mut self, la: u64, data: Box<[u8]>, dirty: bool, ctx: &mut Ctx) {
+        if let Some(ev) = self.cache.insert(la, data, dirty, ()) {
+            if ev.dirty {
+                let id = self.writeback(ev.addr, ev.data.to_vec(), ctx);
+                self.fire_and_forget.insert(id);
+            }
+        }
+    }
+
+    fn start_fill(&mut self, la: u64, id: u64, ctx: &mut Ctx) {
+        if let Some((vaddr, true)) = self.cache.would_evict(la) {
+            let ev = self.cache.invalidate(vaddr).expect("victim resident");
+            let wb_id = self.writeback(vaddr, ev.data.to_vec(), ctx);
+            self.evict_wait.insert(wb_id, StalledFill { line_addr: la });
+            return;
+        }
+        self.send_fill(la, id, ctx);
+    }
+
+    fn record_sharer(&mut self, la: u64, requester: CompId) {
+        if self.peer_banks.contains(&requester) {
+            let sharers = self.directory.entry(la).or_default();
+            if !sharers.contains(&requester) {
+                sharers.push(requester);
+            }
+        }
+    }
+
+    /// Perform a write at the home bank (sharers already invalidated).
+    fn perform_home_write(&mut self, req: MemReq, ctx: &mut Ctx) {
+        let la = self.line_base(req.addr);
+        let mut hit = false;
+        if let Some(line) = self.cache.lookup(req.addr) {
+            hit = true;
+            line.dirty = true;
+            let off = (req.addr - la) as usize;
+            line.data[off..off + req.data.len()].copy_from_slice(&req.data);
+        }
+        self.cache.record(hit);
+        if hit {
+            self.stats.hits += 1;
+            self.respond_up(&req, vec![], ctx);
+            return;
+        }
+        self.stats.misses += 1;
+        // Write-allocate at home: fill, then merge (handled at retire).
+        if self.mshr.get(la).is_some() {
+            self.stats.mshr_merges += 1;
+            self.mshr.merge(la, req);
+            return;
+        }
+        let id = req.id;
+        self.mshr.allocate(la, MshrKind::Fill, req);
+        self.start_fill(la, id, ctx);
+    }
+
+    fn home_handle(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
+        let la = self.line_base(req.addr);
+        if let Some(p) = self.pending_inv.get_mut(&la) {
+            p.waiters.push(req);
+            return;
+        }
+        match req.kind {
+            ReqKind::Read => {
+                if self.mshr.get(la).is_some() {
+                    self.stats.mshr_merges += 1;
+                    self.mshr.merge(la, req);
+                    return;
+                }
+                let mut hit_data = None;
+                if let Some(line) = self.cache.lookup(req.addr) {
+                    hit_data = Some(line.data.to_vec());
+                }
+                if let Some(data) = hit_data {
+                    self.cache.record(true);
+                    self.stats.hits += 1;
+                    self.record_sharer(la, req.src);
+                    let full = req.size as u64 == self.line;
+                    let payload = if full {
+                        data
+                    } else {
+                        let off = (req.addr - la) as usize;
+                        data[off..off + req.size as usize].to_vec()
+                    };
+                    self.respond_up(&req, payload, ctx);
+                    return;
+                }
+                self.cache.record(false);
+                self.stats.misses += 1;
+                let id = req.id;
+                self.mshr.allocate(la, MshrKind::Fill, req);
+                self.start_fill(la, id, ctx);
+            }
+            ReqKind::Write => {
+                // Invalidate every sharer except the writer itself.
+                let sharers: Vec<CompId> = self
+                    .directory
+                    .remove(&la)
+                    .unwrap_or_default()
+                    .into_iter()
+                    .filter(|&s| s != req.src)
+                    .collect();
+                if sharers.is_empty() {
+                    self.perform_home_write(req, ctx);
+                    return;
+                }
+                let (link, sw) = self.routes.peer_hop.expect("HMG needs peer routing");
+                self.stats.invalidations += sharers.len() as u64;
+                let n = sharers.len();
+                for sharer in sharers {
+                    ctx.send(
+                        link,
+                        sw,
+                        16,
+                        Msg::Inv { addr: la, dir: ctx.self_id, dst: sharer },
+                    );
+                }
+                self.pending_inv
+                    .insert(la, PendingInv { remaining: n, req, waiters: Vec::new() });
+            }
+        }
+        let _ = now;
+    }
+
+    fn remote_handle(&mut self, _now: Cycle, req: MemReq, ctx: &mut Ctx) {
+        let la = self.line_base(req.addr);
+        if self.mshr.get(la).is_some() {
+            self.stats.mshr_merges += 1;
+            self.mshr.merge(la, req);
+            return;
+        }
+        match req.kind {
+            ReqKind::Read => {
+                let mut hit_data = None;
+                if let Some(line) = self.cache.lookup(req.addr) {
+                    hit_data = Some(line.data.to_vec());
+                }
+                if let Some(data) = hit_data {
+                    self.cache.record(true);
+                    self.stats.hits += 1;
+                    let off = (req.addr - la) as usize;
+                    self.respond_up(&req, data[off..off + req.size as usize].to_vec(), ctx);
+                    return;
+                }
+                self.cache.record(false);
+                self.stats.misses += 1;
+                // Fetch the full line from the home bank.
+                let fill = MemReq {
+                    id: req.id,
+                    kind: ReqKind::Read,
+                    addr: la,
+                    size: self.line as u32,
+                    src: ctx.self_id,
+                    dst: CompId::NONE, // set by send_home
+                    data: vec![],
+                    warpts: None,
+                };
+                self.mshr.allocate(la, MshrKind::Fill, req);
+                self.send_home(fill, ctx);
+            }
+            ReqKind::Write => {
+                // VI: drop the local copy, write through to the home.
+                self.cache.invalidate(la);
+                let down = MemReq {
+                    id: req.id,
+                    kind: ReqKind::Write,
+                    addr: req.addr,
+                    size: req.size,
+                    src: ctx.self_id,
+                    dst: CompId::NONE,
+                    data: req.data.clone(),
+                    warpts: None,
+                };
+                self.mshr.allocate(la, MshrKind::WriteLock, req);
+                self.send_home(down, ctx);
+            }
+        }
+    }
+
+    fn on_rsp(&mut self, now: Cycle, rsp: MemRsp, ctx: &mut Ctx) {
+        if self.fire_and_forget.remove(&rsp.id) {
+            return;
+        }
+        if let Some(stalled) = self.evict_wait.remove(&rsp.id) {
+            let id = self
+                .mshr
+                .get(stalled.line_addr)
+                .expect("stalled fill lost its MSHR entry")
+                .primary
+                .id;
+            self.send_fill(stalled.line_addr, id, ctx);
+            return;
+        }
+        if rsp.id >= WB_ID_BASE {
+            if self.fence_pending > 0 {
+                self.fence_pending -= 1;
+                if self.fence_pending == 0 {
+                    if let Some(reply) = self.fence_reply.take() {
+                        ctx.schedule(0, reply, Msg::FenceDone { from: ctx.self_id });
+                    }
+                }
+            }
+            return;
+        }
+
+        self.stats.rsps_down += 1;
+        let la = self.line_base(rsp.addr);
+        let entry = self.mshr.retire(la);
+        match entry.kind {
+            MshrKind::Fill => {
+                debug_assert_eq!(rsp.data.len() as u64, self.line);
+                let mut data = rsp.data.clone().into_boxed_slice();
+                let primary = entry.primary.clone();
+                match primary.kind {
+                    ReqKind::Read => {
+                        // Home fill from MM, or remote fill from home:
+                        // cache a clean copy and respond.
+                        self.insert_wb_safe(la, data.clone(), false, ctx);
+                        if self.is_home(la) {
+                            self.record_sharer(la, primary.src);
+                        }
+                        let payload = if primary.size as u64 == self.line {
+                            data.to_vec()
+                        } else {
+                            let off = (primary.addr - la) as usize;
+                            data[off..off + primary.size as usize].to_vec()
+                        };
+                        self.respond_up(&primary, payload, ctx);
+                    }
+                    ReqKind::Write => {
+                        // Home write-allocate: merge + dirty.
+                        let off = (primary.addr - la) as usize;
+                        data[off..off + primary.data.len()].copy_from_slice(&primary.data);
+                        self.insert_wb_safe(la, data, true, ctx);
+                        self.respond_up(&primary, vec![], ctx);
+                    }
+                }
+            }
+            MshrKind::WriteLock => {
+                // Remote write acknowledged by the home.
+                let primary = entry.primary.clone();
+                self.respond_up(&primary, vec![], ctx);
+            }
+        }
+        for w in entry.waiters {
+            self.on_req(now, w, ctx);
+        }
+    }
+
+    fn on_req(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
+        if self.is_home(req.addr) {
+            self.home_handle(now, req, ctx);
+        } else {
+            self.remote_handle(now, req, ctx);
+        }
+    }
+
+    fn on_inv_ack(&mut self, now: Cycle, addr: u64, ctx: &mut Ctx) {
+        let la = self.line_base(addr);
+        let done = {
+            let p = self
+                .pending_inv
+                .get_mut(&la)
+                .unwrap_or_else(|| panic!("{}: stray InvAck for {la:#x}", self.name));
+            p.remaining -= 1;
+            p.remaining == 0
+        };
+        if done {
+            let p = self.pending_inv.remove(&la).unwrap();
+            self.perform_home_write(p.req, ctx);
+            for w in p.waiters {
+                self.on_req(now, w, ctx);
+            }
+        }
+    }
+
+    fn on_fence(&mut self, reply_to: CompId, ctx: &mut Ctx) {
+        debug_assert!(self.mshr.is_empty(), "fence with in-flight requests");
+        debug_assert!(self.pending_inv.is_empty(), "fence with pending invals");
+        self.directory.clear();
+        let drained = self.cache.drain();
+        let mut pending = 0;
+        for ev in drained {
+            if ev.dirty {
+                self.writeback(ev.addr, ev.data.to_vec(), ctx);
+                pending += 1;
+            }
+        }
+        if pending == 0 {
+            ctx.schedule(0, reply_to, Msg::FenceDone { from: ctx.self_id });
+        } else {
+            self.fence_pending = pending;
+            self.fence_reply = Some(reply_to);
+        }
+    }
+
+    /// Bank index (used by topology builders; also silences dead-code).
+    pub fn bank(&self) -> u32 {
+        self.bank
+    }
+}
+
+impl Component for HmgL2 {
+    crate::impl_component_any!();
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            Msg::Req(req) => {
+                self.stats.reqs_in += 1;
+                self.on_req(now, *req, ctx);
+            }
+            Msg::Rsp(rsp) => self.on_rsp(now, *rsp, ctx),
+            Msg::Inv { addr, dir, .. } => {
+                // This bank is a sharer: drop the (clean) copy and ack.
+                self.cache.invalidate(addr);
+                self.stats.invalidations += 1;
+                let (link, sw) = self.routes.peer_hop.expect("HMG needs peer routing");
+                ctx.send(link, sw, 8, Msg::InvAck { addr, from: ctx.self_id, dst: dir });
+            }
+            Msg::InvAck { addr, .. } => self.on_inv_ack(now, addr, ctx),
+            Msg::FenceQuery { reply_to } => {
+                ctx.schedule(0, reply_to, Msg::FenceInfo { from: ctx.self_id, cts: 0 });
+            }
+            Msg::FenceApply { reply_to, .. } => self.on_fence(reply_to, ctx),
+            other => panic!("{}: unexpected {:?}", self.name, other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coherence::none::PlainL1;
+    use crate::coherence::L1Routes;
+    use crate::dram::{GlobalMemory, MemCtrl, SharedMemory};
+    use crate::interconnect::Switch;
+    use crate::mem::addr::Topology;
+    use crate::mem::AddrMap;
+    use crate::sim::{Engine, Link, LinkId};
+    use std::collections::HashMap as Map;
+
+    struct Prober {
+        name: String,
+        l1: CompId,
+        script: Vec<(Cycle, MemReq)>,
+        pub responses: Vec<(Cycle, MemRsp)>,
+    }
+    impl Component for Prober {
+        crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            match msg {
+                Msg::Tick => {
+                    for (t, req) in std::mem::take(&mut self.script) {
+                        let mut r = req;
+                        r.src = ctx.self_id;
+                        ctx.schedule(t.saturating_sub(now), self.l1, Msg::Req(Box::new(r)));
+                    }
+                }
+                Msg::Rsp(rsp) => self.responses.push((now, *rsp)),
+                _ => {}
+            }
+        }
+    }
+
+    struct Rig {
+        engine: Engine,
+        mem: SharedMemory,
+        probers: Vec<CompId>,
+        l2s: Vec<CompId>,
+        pcie_links: Vec<LinkId>,
+    }
+
+    fn rd(id: u64, addr: u64) -> MemReq {
+        MemReq {
+            id,
+            kind: ReqKind::Read,
+            addr,
+            size: 4,
+            src: CompId::NONE,
+            dst: CompId::NONE,
+            data: vec![],
+            warpts: None,
+        }
+    }
+
+    fn wr(id: u64, addr: u64, v: f32) -> MemReq {
+        MemReq {
+            id,
+            kind: ReqKind::Write,
+            addr,
+            size: 4,
+            src: CompId::NONE,
+            dst: CompId::NONE,
+            data: v.to_le_bytes().to_vec(),
+            warpts: None,
+        }
+    }
+
+    fn f32_of(rsp: &MemRsp) -> f32 {
+        f32::from_le_bytes([rsp.data[0], rsp.data[1], rsp.data[2], rsp.data[3]])
+    }
+
+    /// 2 GPUs x (Prober + PlainL1 + HmgL2 bank), per-GPU MC, PCIe switch.
+    fn build(scripts: Vec<Vec<(Cycle, MemReq)>>) -> Rig {
+        let mut e = Engine::new();
+        let mem = GlobalMemory::new_shared();
+        let map = AddrMap::new(Topology::Rdma, 2, 1, 1, 1 << 20);
+        let n = 2usize;
+        let probers: Vec<CompId> = (0..n).map(|g| CompId(4 * g as u32)).collect();
+        let l1s: Vec<CompId> = (0..n).map(|g| CompId(4 * g as u32 + 1)).collect();
+        let l2s: Vec<CompId> = (0..n).map(|g| CompId(4 * g as u32 + 2)).collect();
+        let mcs: Vec<CompId> = (0..n).map(|g| CompId(4 * g as u32 + 3)).collect();
+        let sw_id = CompId(4 * n as u32);
+        let all_banks = vec![vec![l2s[0]], vec![l2s[1]]];
+        let mut sw = Switch::new("pcie");
+        let mut pcie_links = Vec::new();
+
+        for g in 0..n {
+            let l1_l2 = e.add_link(Link::wire(format!("g{g}.l1->l2"), 5));
+            let l2_l1 = e.add_link(Link::wire(format!("g{g}.l2->l1"), 5));
+            let l2_mc = e.add_link(Link::new(format!("g{g}.l2->mc"), 20, 256));
+            let mc_l2 = e.add_link(Link::new(format!("g{g}.mc->l2"), 20, 341));
+            // PCIe: 32 B/cycle, high latency.
+            let l2_sw = e.add_link(Link::new(format!("g{g}.l2->pcie"), 300, 32));
+            let sw_l2 = e.add_link(Link::new(format!("pcie->g{g}.l2"), 300, 32));
+            sw.add_route(l2s[g], (sw_l2, l2s[g]));
+            pcie_links.push(l2_sw);
+
+            e.add(Box::new(Prober {
+                name: format!("cu{g}"),
+                l1: l1s[g],
+                script: scripts[g].clone(),
+                responses: vec![],
+            }));
+            e.add(Box::new(PlainL1::new(
+                format!("g{g}.l1"),
+                L1Routes {
+                    map: map.clone(),
+                    gpu: g as u32,
+                    local_links: vec![l1_l2],
+                    local_banks: vec![l2s[g]],
+                    remote_hop: None, // HMG: L1 always goes to the local L2
+                    all_banks: all_banks.clone(),
+                },
+                CacheParams::new(16 << 10, 4),
+                64,
+                1,
+            )));
+            let mut up = Map::new();
+            up.insert(l1s[g], l2_l1);
+            e.add(Box::new(HmgL2::new(
+                format!("g{g}.l2"),
+                L2Routes {
+                    map: map.clone(),
+                    gpu: g as u32,
+                    mm_hop: (l2_mc, mcs[g]),
+                    mcs: mcs.clone(),
+                    up_routes: up,
+                    up_default: Some((l2_sw, sw_id)),
+                    peer_hop: Some((l2_sw, sw_id)),
+                    all_banks: all_banks.clone(),
+                },
+                g as u32,
+                0,
+                CacheParams::new(256 << 10, 16),
+                256,
+                10,
+            )));
+            e.add(Box::new(MemCtrl::new(
+                format!("mm{g}"),
+                mem.clone(),
+                (mc_l2, l2s[g]),
+                100,
+                None,
+            )));
+        }
+        e.add(Box::new(sw));
+        for &p in &probers {
+            e.post(0, p, Msg::Tick);
+        }
+        Rig { engine: e, mem, probers, l2s, pcie_links }
+    }
+
+    #[test]
+    fn remote_read_caches_in_local_l2() {
+        // GPU1 reads an address homed at GPU0, twice: the second read must
+        // hit GPU1's L2 (HMG's advantage over raw RDMA) — same PCIe message
+        // count after both reads.
+        let x = 0x100u64; // GPU0's partition
+        let scripts = vec![vec![], vec![(0, rd(1, x)), (50_000, rd(2, x + 4))]];
+        let mut rig = build(scripts);
+        rig.mem.borrow_mut().write_f32(x + 4, 11.0);
+        rig.engine.run_to_completion();
+        let rsps = &rig.engine.downcast::<Prober>(rig.probers[1]).responses;
+        assert_eq!(rsps.len(), 2);
+        assert_eq!(f32_of(&rsps[1].1), 11.0);
+        let remote_stats = rig.engine.downcast::<HmgL2>(rig.l2s[1]).stats;
+        assert_eq!(remote_stats.reqs_down, 1, "one home fetch for two reads");
+        // The second read's L1 missed (different word? same line) — it hit
+        // L1 actually; what matters: the L2 holds a local copy.
+        assert!(rig.engine.link(rig.pcie_links[1]).msgs_sent >= 1);
+    }
+
+    #[test]
+    fn home_write_invalidates_remote_sharers() {
+        // GPU1 reads x (becomes a sharer), GPU0 writes x (home invalidates
+        // GPU1's L2 copy). GPU1 then performs a scoped acquire — HMG's
+        // consistency model requires one before consuming another GPU's
+        // write — modelled as an L1 fence, and re-reads: the L2 copy is
+        // gone, so the home's new value must be fetched.
+        let x = 0x200u64; // homed at GPU0
+        let scripts = vec![
+            vec![(200_000, wr(10, x, 5.0))],
+            vec![(0, rd(1, x)), (400_000, rd(2, x))],
+        ];
+        let mut rig = build(scripts);
+        rig.mem.borrow_mut().write_f32(x, 1.0);
+        // Scoped acquire on GPU1's L1 between the write and the re-read.
+        let l1_gpu1 = CompId(4 + 1);
+        let p1 = rig.probers[1];
+        rig.engine.post(300_000, l1_gpu1, Msg::FenceApply { reply_to: p1, logical_max: 0 });
+        rig.engine.run_to_completion();
+        let rsps = &rig.engine.downcast::<Prober>(rig.probers[1]).responses;
+        let first = rsps.iter().find(|(_, r)| r.id == 1).unwrap();
+        let second = rsps.iter().find(|(_, r)| r.id == 2).unwrap();
+        assert_eq!(f32_of(&first.1), 1.0);
+        assert_eq!(
+            f32_of(&second.1),
+            5.0,
+            "read after invalidation + acquire must see the home's new value"
+        );
+        let home = rig.engine.downcast::<HmgL2>(rig.l2s[0]).stats;
+        assert!(home.invalidations >= 1, "home must have sent an Inv");
+    }
+
+    #[test]
+    fn remote_write_is_performed_at_home() {
+        let x = 0x300u64; // homed at GPU0
+        let scripts = vec![vec![], vec![(0, wr(1, x, 7.0))]];
+        let mut rig = build(scripts);
+        rig.engine.run_to_completion();
+        // Dirty at home L2, not yet in MM (WB).
+        assert_eq!(rig.mem.borrow_mut().read_f32(x), 0.0);
+        // Fence at home drains it.
+        let home = rig.l2s[0];
+        let p0 = rig.probers[0];
+        rig.engine.post(1_000_000, home, Msg::FenceApply { reply_to: p0, logical_max: 0 });
+        rig.engine.run_to_completion();
+        assert_eq!(rig.mem.borrow_mut().read_f32(x), 7.0);
+    }
+
+    #[test]
+    fn directory_tracks_each_sharer_once() {
+        let x = 0x400u64;
+        let scripts = vec![
+            vec![],
+            vec![(0, rd(1, x)), (50_000, rd(2, x)), (100_000, rd(3, x))],
+        ];
+        let mut rig = build(scripts);
+        rig.engine.run_to_completion();
+        let home = rig.engine.downcast::<HmgL2>(rig.l2s[0]);
+        let sharers = home.directory.get(&x).map(|v| v.len()).unwrap_or(0);
+        assert!(sharers <= 1, "sharer recorded once, got {sharers}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Cache coherence protocols (DESIGN.md S9–S12).
+//!
+//! Each protocol provides L1/L2 cache *controller* components built on the
+//! shared storage substrate (`mem::CacheArray`, `mem::Mshr`):
+//!
+//! * [`halcone`] — the paper's contribution: cache-level logical clocks
+//!   (`cts`), per-block `rts`/`wts` leases, TSU-backed timestamps.
+//! * [`none`] — non-coherent baselines (RDMA-WB-NC, SM-WB-NC, SM-WT-NC):
+//!   plain WT/WB caches; coherence is the programmer's problem, modelled
+//!   by flush+invalidate fences at kernel boundaries.
+//! * [`hmg`] — the HMG comparator: VI protocol with a home-node directory
+//!   and explicit invalidations over the inter-GPU fabric.
+//!
+//! The G-TSC traffic ablation (E10) is the `carry_warpts` flag on the
+//! HALCONE controllers: it re-adds the CU-level timestamp to every
+//! request's wire format, reproducing the traffic HALCONE's cache-level
+//! counters eliminate.
+
+pub mod halcone;
+pub mod hmg;
+pub mod none;
+
+use std::collections::HashMap;
+
+use crate::mem::AddrMap;
+use crate::sim::{CompId, LinkId};
+
+/// Request id used by L1 write-combining flushes. Must stay *below* the
+/// L2 controllers' reserved write-back id space (`1 << 62`): flush
+/// requests travel to the MM and their responses must retire normal L2
+/// MSHR entries, not be mistaken for L2-generated write-back acks.
+pub const FLUSH_REQ_ID: u64 = 1 << 61;
+
+/// Per-line timestamp metadata (HALCONE).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TsMeta {
+    pub rts: u64,
+    pub wts: u64,
+}
+
+/// L2\$ write policy (paper §4.1: WT vs WB comparison).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WritePolicy {
+    WriteThrough,
+    WriteBack,
+}
+
+/// Routing used by an L1 controller to reach L2 banks.
+///
+/// Local banks are reached over per-bank on-chip links; remote banks
+/// (RDMA-NC only: L1 -> switch -> remote GPU's L2, Fig. 1) go through the
+/// PCIe switch hop.
+#[derive(Clone, Debug)]
+pub struct L1Routes {
+    pub map: AddrMap,
+    pub gpu: u32,
+    /// Per-local-bank on-chip links (index = bank).
+    pub local_links: Vec<LinkId>,
+    /// Per-local-bank component ids (index = bank).
+    pub local_banks: Vec<CompId>,
+    /// Hop toward the inter-GPU switch, when remote access is allowed.
+    pub remote_hop: Option<(LinkId, CompId)>,
+    /// `[gpu][bank]` component ids for every L2 bank in the system.
+    pub all_banks: Vec<Vec<CompId>>,
+}
+
+impl L1Routes {
+    /// Resolve `addr` to (first-hop link, first-hop component, final dst).
+    pub fn route(&self, addr: u64) -> (LinkId, CompId, CompId) {
+        let bank = self.map.l2_bank_of(addr) as usize;
+        if self.map.is_local(self.gpu, addr) || self.remote_hop.is_none() {
+            (self.local_links[bank], self.local_banks[bank], self.local_banks[bank])
+        } else {
+            let (link, sw) = self.remote_hop.unwrap();
+            let home = self.map.home_gpu(addr) as usize;
+            (link, sw, self.all_banks[home][bank])
+        }
+    }
+}
+
+/// Routing used by an L2 controller.
+#[derive(Clone, Debug)]
+pub struct L2Routes {
+    pub map: AddrMap,
+    pub gpu: u32,
+    /// Hop toward main memory (per-GPU uplink into the switch complex, or
+    /// the local memory network under RDMA).
+    pub mm_hop: (LinkId, CompId),
+    /// Memory controller component ids, indexed by global stack.
+    pub mcs: Vec<CompId>,
+    /// Upstream routes back to requesters (L1s on-chip; remote requesters
+    /// fall back to `up_default`, the inter-GPU switch).
+    pub up_routes: HashMap<CompId, LinkId>,
+    pub up_default: Option<(LinkId, CompId)>,
+    /// Peer L2 banks `[gpu][bank]` + hop toward them (HMG).
+    pub peer_hop: Option<(LinkId, CompId)>,
+    pub all_banks: Vec<Vec<CompId>>,
+}
+
+impl L2Routes {
+    /// Route toward the MC owning `addr`.
+    pub fn route_mm(&self, addr: u64) -> (LinkId, CompId, CompId) {
+        let mc = self.mcs[self.map.stack_of(addr) as usize];
+        (self.mm_hop.0, self.mm_hop.1, mc)
+    }
+
+    /// Route a response (or forwarded request) up to `requester`.
+    pub fn route_up(&self, requester: CompId) -> (LinkId, CompId) {
+        if let Some(&link) = self.up_routes.get(&requester) {
+            (link, requester)
+        } else {
+            self.up_default
+                .unwrap_or_else(|| panic!("no upstream route to {requester:?}"))
+        }
+    }
+
+    /// Route toward a peer L2 bank (HMG home / sharer traffic).
+    pub fn route_peer(&self, gpu: u32, bank: u32) -> (LinkId, CompId, CompId) {
+        let (link, sw) = self.peer_hop.expect("peer routing not configured");
+        (link, sw, self.all_banks[gpu as usize][bank as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::addr::Topology;
+
+    fn map(topology: Topology) -> AddrMap {
+        AddrMap::new(topology, 2, 2, 2, 1 << 20)
+    }
+
+    #[test]
+    fn l1_routes_local_by_bank() {
+        let r = L1Routes {
+            map: map(Topology::SharedMem),
+            gpu: 0,
+            local_links: vec![LinkId(0), LinkId(1)],
+            local_banks: vec![CompId(10), CompId(11)],
+            remote_hop: None,
+            all_banks: vec![vec![CompId(10), CompId(11)], vec![CompId(20), CompId(21)]],
+        };
+        // line 0 -> bank 0; line 1 (addr 64) -> bank 1.
+        assert_eq!(r.route(0), (LinkId(0), CompId(10), CompId(10)));
+        assert_eq!(r.route(64), (LinkId(1), CompId(11), CompId(11)));
+    }
+
+    #[test]
+    fn l1_routes_remote_partition_through_switch() {
+        let r = L1Routes {
+            map: map(Topology::Rdma),
+            gpu: 0,
+            local_links: vec![LinkId(0), LinkId(1)],
+            local_banks: vec![CompId(10), CompId(11)],
+            remote_hop: Some((LinkId(9), CompId(99))),
+            all_banks: vec![vec![CompId(10), CompId(11)], vec![CompId(20), CompId(21)]],
+        };
+        // Address in GPU1's partition, bank 1.
+        let addr = (1 << 20) + 64;
+        assert_eq!(r.route(addr), (LinkId(9), CompId(99), CompId(21)));
+        // Local address stays on-chip.
+        assert_eq!(r.route(64), (LinkId(1), CompId(11), CompId(11)));
+    }
+
+    #[test]
+    fn l2_route_up_falls_back_to_switch() {
+        let mut up = HashMap::new();
+        up.insert(CompId(3), LinkId(5));
+        let r = L2Routes {
+            map: map(Topology::SharedMem),
+            gpu: 0,
+            mm_hop: (LinkId(0), CompId(50)),
+            mcs: vec![CompId(60), CompId(61), CompId(62), CompId(63)],
+            up_routes: up,
+            up_default: Some((LinkId(7), CompId(99))),
+            peer_hop: None,
+            all_banks: vec![],
+        };
+        assert_eq!(r.route_up(CompId(3)), (LinkId(5), CompId(3)));
+        assert_eq!(r.route_up(CompId(44)), (LinkId(7), CompId(99)));
+    }
+}

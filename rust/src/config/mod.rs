@@ -1,0 +1,390 @@
+//! Configuration system (DESIGN.md S16): Table 2 geometry, §4.1 link
+//! budgets, the five named MGPU configurations, a key=value config-file
+//! parser and CLI-style overrides.
+//!
+//! The offline environment has no serde/toml; the format is a minimal
+//! `key = value` subset (one per line, `#` comments), which covers
+//! everything the experiments need.
+
+use crate::coherence::WritePolicy;
+use crate::mem::addr::Topology;
+use crate::mem::AddrMap;
+use crate::tsu::Leases;
+use crate::workloads::WorkloadParams;
+
+/// Coherence protocol selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coherence {
+    /// No hardware coherence (fences flush/invalidate).
+    None,
+    /// The paper's protocol. `carry_warpts` re-adds CU-level timestamp
+    /// traffic (G-TSC ablation, E10).
+    Halcone { leases: Leases, carry_warpts: bool },
+    /// HMG-style VI + directory (RDMA topologies only).
+    Hmg,
+}
+
+/// Full system configuration (defaults = paper Table 2 + §4.1).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub name: String,
+    pub topology: Topology,
+    pub n_gpus: u32,
+    pub cus_per_gpu: u32,
+    pub wavefronts_per_cu: u32,
+    pub l2_policy: WritePolicy,
+    pub coherence: Coherence,
+
+    // Geometry (Table 2).
+    pub l1_bytes: u64,
+    pub l1_ways: u32,
+    pub l2_banks: u32,
+    pub l2_bank_bytes: u64,
+    pub l2_ways: u32,
+    pub stacks_per_gpu: u32,
+    pub gpu_mem_bytes: u64,
+
+    // Latencies (cycles @ 1 GHz).
+    pub l1_lat: u64,
+    pub l2_lat: u64,
+    pub mc_lat: u64,
+    pub alu_lat: u64,
+    pub onchip_lat: u64,
+    pub swc_lat: u64,
+    pub pcie_lat: u64,
+
+    // Bandwidths (bytes/cycle @ 1 GHz: 1 B/cy = 1 GB/s).
+    pub gpu_uplink_bw: u64,
+    pub hbm_bw: u64,
+    pub pcie_bw: u64,
+
+    // Structures.
+    pub mshr_l1: usize,
+    pub mshr_l2: usize,
+    pub tsu_entries: u64,
+
+    /// Workload problem-size scale (DESIGN.md scaling note).
+    pub scale: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            name: "SM-WT-C-HALCONE".into(),
+            topology: Topology::SharedMem,
+            n_gpus: 4,
+            cus_per_gpu: 32,
+            wavefronts_per_cu: 8,
+            l2_policy: WritePolicy::WriteThrough,
+            coherence: Coherence::Halcone { leases: Leases::default(), carry_warpts: false },
+            l1_bytes: 16 << 10,
+            l1_ways: 4,
+            l2_banks: 8,
+            l2_bank_bytes: 256 << 10,
+            l2_ways: 16,
+            stacks_per_gpu: 8,
+            gpu_mem_bytes: 4 << 30, // 8 x 512 MB HBM per GPU
+            l1_lat: 1,
+            l2_lat: 10,
+            mc_lat: 100,
+            alu_lat: 1,
+            onchip_lat: 5,
+            swc_lat: 20,
+            pcie_lat: 300,
+            gpu_uplink_bw: 256, // 256 GB/s per-GPU L2<->MM (§4.1)
+            hbm_bw: 341,        // 341 GB/s per stack (§4.1)
+            pcie_bw: 32,        // PCIe 4.0 switch (§4.1)
+            mshr_l1: 64,
+            mshr_l2: 1024,
+            tsu_entries: 1 << 16,
+            scale: 1.0,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// The paper's five evaluated configurations (§4.1).
+    pub fn preset(name: &str) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.name = name.into();
+        match name {
+            "RDMA-WB-NC" => {
+                c.topology = Topology::Rdma;
+                c.l2_policy = WritePolicy::WriteBack;
+                c.coherence = Coherence::None;
+            }
+            "RDMA-WB-C-HMG" => {
+                c.topology = Topology::Rdma;
+                c.l2_policy = WritePolicy::WriteBack;
+                c.coherence = Coherence::Hmg;
+            }
+            "SM-WB-NC" => {
+                c.topology = Topology::SharedMem;
+                c.l2_policy = WritePolicy::WriteBack;
+                c.coherence = Coherence::None;
+            }
+            "SM-WT-NC" => {
+                c.topology = Topology::SharedMem;
+                c.l2_policy = WritePolicy::WriteThrough;
+                c.coherence = Coherence::None;
+            }
+            "SM-WT-C-HALCONE" => {
+                c.topology = Topology::SharedMem;
+                c.l2_policy = WritePolicy::WriteThrough;
+                c.coherence =
+                    Coherence::Halcone { leases: Leases::default(), carry_warpts: false };
+            }
+            other => panic!("unknown preset '{other}' (see §4.1 names)"),
+        }
+        c
+    }
+
+    /// All five §4.1 configuration names, in the paper's order.
+    pub const PRESETS: [&'static str; 5] = [
+        "RDMA-WB-NC",
+        "RDMA-WB-C-HMG",
+        "SM-WB-NC",
+        "SM-WT-NC",
+        "SM-WT-C-HALCONE",
+    ];
+
+    pub fn addr_map(&self) -> AddrMap {
+        AddrMap::new(
+            self.topology,
+            self.n_gpus,
+            self.stacks_per_gpu,
+            self.l2_banks,
+            self.gpu_mem_bytes,
+        )
+    }
+
+    pub fn workload_params(&self) -> WorkloadParams {
+        WorkloadParams {
+            n_gpus: self.n_gpus,
+            cus_per_gpu: self.cus_per_gpu,
+            wavefronts_per_cu: self.wavefronts_per_cu,
+            map: self.addr_map(),
+            scale: self.scale,
+        }
+    }
+
+    /// Apply one `key=value` override; errors on unknown keys/bad values.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let uerr = |e: &dyn std::fmt::Display| format!("{key}={value}: {e}");
+        macro_rules! num {
+            ($field:expr, $t:ty) => {
+                $field = value.parse::<$t>().map_err(|e| uerr(&e))?
+            };
+        }
+        match key {
+            "name" => self.name = value.into(),
+            "topology" => {
+                self.topology = match value {
+                    "sm" | "shared" | "sharedmem" => Topology::SharedMem,
+                    "rdma" => Topology::Rdma,
+                    v => return Err(format!("topology={v}: want sm|rdma")),
+                }
+            }
+            "n_gpus" => num!(self.n_gpus, u32),
+            "cus_per_gpu" => num!(self.cus_per_gpu, u32),
+            "wavefronts_per_cu" => num!(self.wavefronts_per_cu, u32),
+            "l2_policy" => {
+                self.l2_policy = match value {
+                    "wt" => WritePolicy::WriteThrough,
+                    "wb" => WritePolicy::WriteBack,
+                    v => return Err(format!("l2_policy={v}: want wt|wb")),
+                }
+            }
+            "coherence" => {
+                self.coherence = match value {
+                    "none" => Coherence::None,
+                    "halcone" => {
+                        Coherence::Halcone { leases: Leases::default(), carry_warpts: false }
+                    }
+                    "gtsc" => {
+                        Coherence::Halcone { leases: Leases::default(), carry_warpts: true }
+                    }
+                    "hmg" => Coherence::Hmg,
+                    v => return Err(format!("coherence={v}: want none|halcone|gtsc|hmg")),
+                }
+            }
+            "rd_lease" | "wr_lease" => {
+                let v: u64 = value.parse().map_err(|e| uerr(&e))?;
+                if let Coherence::Halcone { leases, .. } = &mut self.coherence {
+                    if key == "rd_lease" {
+                        leases.rd = v;
+                    } else {
+                        leases.wr = v;
+                    }
+                } else {
+                    return Err(format!("{key} only applies to coherence=halcone"));
+                }
+            }
+            "l1_bytes" => num!(self.l1_bytes, u64),
+            "l1_ways" => num!(self.l1_ways, u32),
+            "l2_banks" => num!(self.l2_banks, u32),
+            "l2_bank_bytes" => num!(self.l2_bank_bytes, u64),
+            "l2_ways" => num!(self.l2_ways, u32),
+            "stacks_per_gpu" => num!(self.stacks_per_gpu, u32),
+            "gpu_mem_bytes" => num!(self.gpu_mem_bytes, u64),
+            "l1_lat" => num!(self.l1_lat, u64),
+            "l2_lat" => num!(self.l2_lat, u64),
+            "mc_lat" => num!(self.mc_lat, u64),
+            "alu_lat" => num!(self.alu_lat, u64),
+            "onchip_lat" => num!(self.onchip_lat, u64),
+            "swc_lat" => num!(self.swc_lat, u64),
+            "pcie_lat" => num!(self.pcie_lat, u64),
+            "gpu_uplink_bw" => num!(self.gpu_uplink_bw, u64),
+            "hbm_bw" => num!(self.hbm_bw, u64),
+            "pcie_bw" => num!(self.pcie_bw, u64),
+            "mshr_l1" => num!(self.mshr_l1, usize),
+            "mshr_l2" => num!(self.mshr_l2, usize),
+            "tsu_entries" => num!(self.tsu_entries, u64),
+            "scale" => num!(self.scale, f64),
+            other => return Err(format!("unknown config key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file body (`key = value`, `#` comments, blank lines).
+    /// A `preset = NAME` line switches the baseline preset first.
+    pub fn parse(text: &str) -> Result<SystemConfig, String> {
+        let mut cfg = SystemConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key=value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            if k == "preset" {
+                let scale = cfg.scale;
+                cfg = SystemConfig::preset(v);
+                cfg.scale = scale;
+            } else {
+                cfg.set(k, v).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Render Table 2-style configuration summary (E2 / `print-config`).
+    pub fn describe(&self) -> String {
+        let coher = match self.coherence {
+            Coherence::None => "NC".to_string(),
+            Coherence::Halcone { leases, carry_warpts } => format!(
+                "HALCONE (RdLease={}, WrLease={}{})",
+                leases.rd,
+                leases.wr,
+                if carry_warpts { ", +warpts wire ablation" } else { "" }
+            ),
+            Coherence::Hmg => "HMG (VI + directory)".to_string(),
+        };
+        format!(
+            "config {name}\n\
+             topology            {topo:?}\n\
+             GPUs                {gpus} x {cus} CUs @ 1.0 GHz ({wf} wavefronts/CU)\n\
+             L1 vector cache     {l1} KB {l1w}-way, 64 B lines, {ml1} MSHRs\n\
+             L2 cache            {banks} x {l2} KB {l2w}-way per GPU, {ml2} MSHRs\n\
+             DRAM                {stacks} x {dram} MB HBM per GPU ({hbm} GB/s/stack)\n\
+             L2<->MM uplink      {up} GB/s per GPU\n\
+             PCIe switch         {pcie} GB/s, {plat} cy\n\
+             MC latency          {mc} cy, TSU {tsu} entries\n\
+             L2 policy           {pol:?}\n\
+             coherence           {coher}",
+            name = self.name,
+            topo = self.topology,
+            gpus = self.n_gpus,
+            cus = self.cus_per_gpu,
+            wf = self.wavefronts_per_cu,
+            l1 = self.l1_bytes >> 10,
+            l1w = self.l1_ways,
+            ml1 = self.mshr_l1,
+            banks = self.l2_banks,
+            l2 = self.l2_bank_bytes >> 10,
+            l2w = self.l2_ways,
+            ml2 = self.mshr_l2,
+            stacks = self.stacks_per_gpu,
+            dram = (self.gpu_mem_bytes / self.stacks_per_gpu as u64) >> 20,
+            hbm = self.hbm_bw,
+            up = self.gpu_uplink_bw,
+            pcie = self.pcie_bw,
+            plat = self.pcie_lat,
+            mc = self.mc_lat,
+            tsu = self.tsu_entries,
+            pol = self.l2_policy,
+            coher = coher,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_table() {
+        let h = SystemConfig::preset("SM-WT-C-HALCONE");
+        assert_eq!(h.topology, Topology::SharedMem);
+        assert_eq!(h.l2_policy, WritePolicy::WriteThrough);
+        assert!(matches!(h.coherence, Coherence::Halcone { .. }));
+
+        let r = SystemConfig::preset("RDMA-WB-NC");
+        assert_eq!(r.topology, Topology::Rdma);
+        assert_eq!(r.l2_policy, WritePolicy::WriteBack);
+        assert_eq!(r.coherence, Coherence::None);
+
+        let g = SystemConfig::preset("RDMA-WB-C-HMG");
+        assert_eq!(g.coherence, Coherence::Hmg);
+    }
+
+    #[test]
+    fn default_is_table2() {
+        let c = SystemConfig::default();
+        assert_eq!(c.cus_per_gpu, 32);
+        assert_eq!(c.l1_bytes, 16 << 10);
+        assert_eq!(c.l1_ways, 4);
+        assert_eq!(c.l2_banks, 8);
+        assert_eq!(c.l2_bank_bytes, 256 << 10);
+        assert_eq!(c.l2_ways, 16);
+        assert_eq!(c.stacks_per_gpu, 8);
+    }
+
+    #[test]
+    fn parse_file_with_preset_and_overrides() {
+        let cfg = SystemConfig::parse(
+            "# experiment\npreset = SM-WT-C-HALCONE\nn_gpus = 8\nrd_lease = 20\nscale=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.n_gpus, 8);
+        assert_eq!(cfg.scale, 0.5);
+        match cfg.coherence {
+            Coherence::Halcone { leases, .. } => assert_eq!(leases.rd, 20),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        assert!(SystemConfig::parse("bogus = 1\n").is_err());
+        let mut c = SystemConfig::default();
+        assert!(c.set("coherence", "mesi").is_err());
+        assert!(c.set("topology", "ring").is_err());
+    }
+
+    #[test]
+    fn lease_override_requires_halcone() {
+        let mut c = SystemConfig::preset("SM-WT-NC");
+        assert!(c.set("rd_lease", "5").is_err());
+    }
+
+    #[test]
+    fn describe_mentions_key_parameters() {
+        let d = SystemConfig::default().describe();
+        assert!(d.contains("32 CUs"));
+        assert!(d.contains("16 KB 4-way"));
+        assert!(d.contains("HALCONE"));
+    }
+}

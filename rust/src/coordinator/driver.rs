@@ -1,0 +1,244 @@
+//! The leader/driver component: kernel-launch orchestration.
+//!
+//! Dispatches each workload phase (= kernel launch) to every CU, waits for
+//! all `PhaseDone`s, then runs the two-stage kernel-boundary fence:
+//!
+//! 1. `FenceQuery` -> every cache reports its logical clock (`cts`).
+//! 2. `FenceApply { logical_max = max(cts) + 1 }` -> protocol-specific
+//!    action (HALCONE: clock advance, NC: flush+invalidate, HMG/WB: dirty
+//!    write-back) — see DESIGN.md §6 for the `+1` correctness argument.
+//!
+//! The final phase is also fenced so write-back configurations drain dirty
+//! data to MM before the coordinator verifies the memory image.
+//!
+//! Under RDMA the driver models the paper's host-to-GPU copy phase as an
+//! initial delay (bytes over the per-GPU PCIe links); MGPU-SM skips it —
+//! "shared memory eliminates this traffic" (§5.1).
+
+use crate::sim::{CompId, Component, Ctx, Cycle, Msg};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    Idle,
+    Running,
+    FenceQuery,
+    FenceApply,
+    Finished,
+}
+
+/// Kernel-launch coordinator.
+pub struct Driver {
+    name: String,
+    cus: Vec<CompId>,
+    caches: Vec<CompId>,
+    n_phases: u32,
+    phase: u32,
+    state: State,
+    pending: usize,
+    logical_max: u64,
+    /// Host->GPU copy time charged before phase 0 (RDMA only).
+    initial_delay: Cycle,
+    /// Completion time of each phase (diagnostics).
+    pub phase_end: Vec<Cycle>,
+    /// Total cycles when everything (incl. final fence) finished.
+    pub done_at: Option<Cycle>,
+}
+
+impl Driver {
+    pub fn new(
+        name: impl Into<String>,
+        cus: Vec<CompId>,
+        caches: Vec<CompId>,
+        n_phases: u32,
+        initial_delay: Cycle,
+    ) -> Self {
+        Driver {
+            name: name.into(),
+            cus,
+            caches,
+            n_phases,
+            phase: 0,
+            state: State::Idle,
+            pending: 0,
+            logical_max: 0,
+            initial_delay,
+            phase_end: Vec::new(),
+            done_at: None,
+        }
+    }
+
+    fn dispatch(&mut self, delay: Cycle, ctx: &mut Ctx) {
+        self.state = State::Running;
+        self.pending = self.cus.len();
+        let phase = self.phase;
+        for &cu in &self.cus {
+            ctx.schedule(delay, cu, Msg::StartPhase { phase });
+        }
+    }
+
+    fn start_fence(&mut self, ctx: &mut Ctx) {
+        self.state = State::FenceQuery;
+        self.pending = self.caches.len();
+        let me = ctx.self_id;
+        for &c in &self.caches {
+            ctx.schedule(0, c, Msg::FenceQuery { reply_to: me });
+        }
+    }
+}
+
+impl Component for Driver {
+    crate::impl_component_any!();
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        match (self.state, msg) {
+            (State::Idle, Msg::Tick) => {
+                if self.n_phases == 0 {
+                    self.state = State::Finished;
+                    self.done_at = Some(now);
+                    return;
+                }
+                self.dispatch(self.initial_delay, ctx);
+            }
+            (State::Running, Msg::PhaseDone { .. }) => {
+                self.pending -= 1;
+                if self.pending == 0 {
+                    self.phase_end.push(now);
+                    self.start_fence(ctx);
+                }
+            }
+            (State::FenceQuery, Msg::FenceInfo { cts, .. }) => {
+                self.logical_max = self.logical_max.max(cts);
+                self.pending -= 1;
+                if self.pending == 0 {
+                    self.state = State::FenceApply;
+                    self.pending = self.caches.len();
+                    // +1 so every stale lease provably expires (DESIGN §6).
+                    let lm = self.logical_max + 1;
+                    let me = ctx.self_id;
+                    for &c in &self.caches {
+                        ctx.schedule(0, c, Msg::FenceApply { reply_to: me, logical_max: lm });
+                    }
+                }
+            }
+            (State::FenceApply, Msg::FenceDone { .. }) => {
+                self.pending -= 1;
+                if self.pending == 0 {
+                    self.phase += 1;
+                    if self.phase < self.n_phases {
+                        self.dispatch(0, ctx);
+                    } else {
+                        self.state = State::Finished;
+                        self.done_at = Some(now);
+                    }
+                }
+            }
+            (s, m) => panic!("{}: message {m:?} in state {s:?}", self.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Engine;
+
+    /// CU stub: completes each phase after a fixed delay.
+    struct StubCu {
+        name: String,
+        driver: CompId,
+        delay: Cycle,
+        pub phases_seen: Vec<u32>,
+    }
+    impl Component for StubCu {
+        crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            if let Msg::StartPhase { phase } = msg {
+                self.phases_seen.push(phase);
+                let d = self.driver;
+                ctx.schedule(self.delay, d, Msg::PhaseDone { cu: ctx.self_id });
+            }
+        }
+    }
+
+    /// Cache stub: reports a fixed cts, acks fences after a delay.
+    struct StubCache {
+        name: String,
+        cts: u64,
+        pub fences: Vec<u64>,
+    }
+    impl Component for StubCache {
+        crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            match msg {
+                Msg::FenceQuery { reply_to } => {
+                    let cts = self.cts;
+                    ctx.schedule(1, reply_to, Msg::FenceInfo { from: ctx.self_id, cts });
+                }
+                Msg::FenceApply { reply_to, logical_max } => {
+                    self.fences.push(logical_max);
+                    ctx.schedule(3, reply_to, Msg::FenceDone { from: ctx.self_id });
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn runs_phases_with_fences_between() {
+        let mut e = Engine::new();
+        let driver = CompId(0);
+        let cu0 = CompId(1);
+        let cu1 = CompId(2);
+        let c0 = CompId(3);
+        let c1 = CompId(4);
+        e.add(Box::new(Driver::new("drv", vec![cu0, cu1], vec![c0, c1], 3, 0)));
+        e.add(Box::new(StubCu { name: "cu0".into(), driver, delay: 100, phases_seen: vec![] }));
+        e.add(Box::new(StubCu { name: "cu1".into(), driver, delay: 70, phases_seen: vec![] }));
+        e.add(Box::new(StubCache { name: "c0".into(), cts: 15, fences: vec![] }));
+        e.add(Box::new(StubCache { name: "c1".into(), cts: 9, fences: vec![] }));
+        e.post(0, driver, Msg::Tick);
+        e.run_to_completion();
+        let d = e.downcast::<Driver>(driver);
+        assert_eq!(d.phase_end.len(), 3);
+        assert!(d.done_at.is_some());
+        // All CUs saw phases 0, 1, 2 in order.
+        assert_eq!(e.downcast::<StubCu>(cu0).phases_seen, vec![0, 1, 2]);
+        // Fences carried max(cts) + 1 = 16.
+        assert_eq!(e.downcast::<StubCache>(c0).fences, vec![16, 16, 16]);
+    }
+
+    #[test]
+    fn initial_delay_charges_copy_phase() {
+        let mut e = Engine::new();
+        let driver = CompId(0);
+        let cu = CompId(1);
+        let c = CompId(2);
+        e.add(Box::new(Driver::new("drv", vec![cu], vec![c], 1, 5000)));
+        e.add(Box::new(StubCu { name: "cu".into(), driver, delay: 10, phases_seen: vec![] }));
+        e.add(Box::new(StubCache { name: "c".into(), cts: 0, fences: vec![] }));
+        e.post(0, driver, Msg::Tick);
+        e.run_to_completion();
+        let d = e.downcast::<Driver>(driver);
+        assert!(d.done_at.unwrap() >= 5010);
+    }
+
+    #[test]
+    fn zero_phases_finishes_immediately() {
+        let mut e = Engine::new();
+        let driver = CompId(0);
+        e.add(Box::new(Driver::new("drv", vec![], vec![], 0, 0)));
+        e.post(0, driver, Msg::Tick);
+        e.run_to_completion();
+        assert_eq!(e.downcast::<Driver>(driver).done_at, Some(0));
+    }
+}

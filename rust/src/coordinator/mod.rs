@@ -1,0 +1,13 @@
+//! Experiment coordination (DESIGN.md S13/S19): the kernel-launch driver,
+//! the topology builder for the paper's five MGPU configurations, the
+//! runner and the golden-model verifier.
+
+pub mod driver;
+pub mod runner;
+pub mod topology;
+pub mod verify;
+
+pub use driver::Driver;
+pub use runner::{run_workload, RunResult};
+pub use topology::{build, System};
+pub use verify::CheckOutcome;

@@ -1,0 +1,434 @@
+//! Topology builder (DESIGN.md S13): turns a [`SystemConfig`] + workload
+//! into a fully wired simulation.
+//!
+//! * **SharedMem** (Fig. 3): every GPU's L2 banks connect through a
+//!   per-GPU uplink (256 GB/s, the paper's per-GPU L2-to-MM budget) into
+//!   one switch complex, which fans out to all HBM stacks (341 GB/s each;
+//!   4 GPUs x 256 ~ 1 TB/s aggregate, §4.1).
+//! * **Rdma** (Fig. 1): each GPU owns its stacks behind a local memory
+//!   switch; inter-GPU traffic (NC remote L1 access, HMG peer/home and
+//!   invalidations) crosses per-GPU PCIe links (32 GB/s) through one PCIe
+//!   switch.
+
+use std::collections::HashMap;
+
+use crate::coherence::halcone::{HalconeL1, HalconeL2};
+use crate::coherence::hmg::HmgL2;
+use crate::coherence::none::{PlainL1, PlainL2};
+use crate::coherence::{L1Routes, L2Routes};
+use crate::config::{Coherence, SystemConfig};
+use crate::coordinator::driver::Driver;
+use crate::dram::{GlobalMemory, MemCtrl, SharedMemory};
+use crate::gpu::Cu;
+use crate::interconnect::Switch;
+use crate::mem::addr::Topology;
+use crate::mem::cache::CacheParams;
+use crate::sim::{CompId, Cycle, Engine, Link, LinkId};
+use crate::tsu::Tsu;
+use crate::workloads::Workload;
+
+/// A built system ready to run.
+pub struct System {
+    pub engine: Engine,
+    pub mem: SharedMemory,
+    pub driver: CompId,
+    pub cus: Vec<CompId>,
+    pub l1s: Vec<CompId>,
+    pub l2s: Vec<CompId>,
+    pub mcs: Vec<CompId>,
+    /// PCIe link ids (RDMA traffic accounting).
+    pub pcie_links: Vec<LinkId>,
+    /// L2<->MM network link ids.
+    pub mem_links: Vec<LinkId>,
+    pub coherence: Coherence,
+}
+
+/// Compute the RDMA host->GPU copy delay for a workload's initial image:
+/// each GPU receives the bytes homed in its partition over its own PCIe
+/// link; copies proceed in parallel, so the delay is the slowest GPU's.
+pub fn copy_delay(cfg: &SystemConfig, wl: &Workload) -> Cycle {
+    if cfg.topology != Topology::Rdma {
+        return 0;
+    }
+    let map = cfg.addr_map();
+    let mut per_gpu = vec![0u64; cfg.n_gpus as usize];
+    for (addr, vals) in &wl.init {
+        per_gpu[map.home_gpu(*addr) as usize] += vals.len() as u64 * 4;
+    }
+    per_gpu.iter().map(|b| b.div_ceil(cfg.pcie_bw)).max().unwrap_or(0)
+}
+
+/// Build the full system and load the workload's programs into the CUs.
+/// (Computes the RDMA copy delay from `wl.init`; see [`copy_delay`].)
+pub fn build(cfg: &SystemConfig, wl: Workload) -> System {
+    let initial_delay = copy_delay(cfg, &wl);
+    build_with_delay(cfg, wl, initial_delay)
+}
+
+/// [`build`] with an explicit initial (host-copy) delay.
+pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cycle) -> System {
+    if matches!(cfg.coherence, Coherence::Halcone { .. }) {
+        assert_eq!(
+            cfg.topology,
+            Topology::SharedMem,
+            "HALCONE is defined for MGPU-SM systems (paper §3)"
+        );
+    }
+    if cfg.coherence == Coherence::Hmg {
+        assert_eq!(cfg.topology, Topology::Rdma, "HMG comparator runs on RDMA topology");
+    }
+
+    let map = cfg.addr_map();
+    let g = cfg.n_gpus as usize;
+    let c = cfg.cus_per_gpu as usize;
+    let b = cfg.l2_banks as usize;
+    let stacks = map.total_stacks() as usize;
+
+    // ---- Id layout (components are added in exactly this order).
+    let driver = CompId(0);
+    let mut next = 1u32;
+    let mut cu_ids = vec![vec![CompId::NONE; c]; g];
+    let mut l1_ids = vec![vec![CompId::NONE; c]; g];
+    let mut l2_ids = vec![vec![CompId::NONE; b]; g];
+    for gi in 0..g {
+        for ci in 0..c {
+            cu_ids[gi][ci] = CompId(next);
+            next += 1;
+        }
+        for ci in 0..c {
+            l1_ids[gi][ci] = CompId(next);
+            next += 1;
+        }
+        for bi in 0..b {
+            l2_ids[gi][bi] = CompId(next);
+            next += 1;
+        }
+    }
+    let rdma = cfg.topology == Topology::Rdma;
+    // Switches: SM -> one switch complex; RDMA -> per-GPU local memory
+    // switch + one PCIe switch.
+    let swc = CompId(next); // SM only
+    let lsw_ids: Vec<CompId> = (0..g).map(|i| CompId(next + i as u32)).collect(); // RDMA
+    let psw = CompId(next + g as u32); // RDMA
+    next += if rdma { g as u32 + 1 } else { 1 };
+    let mc_ids: Vec<CompId> = (0..stacks).map(|s| CompId(next + s as u32)).collect();
+
+    let all_banks: Vec<Vec<CompId>> = l2_ids.clone();
+
+    // ---- Engine, links.
+    let mut engine = Engine::new();
+    let mem = GlobalMemory::new_shared();
+    let mut pcie_links = Vec::new();
+    let mut mem_links = Vec::new();
+
+    // Per-L1 tx toward local banks (shared across banks: one on-chip port).
+    let mut l1_tx = vec![vec![LinkId(u32::MAX); c]; g];
+    // Per-bank tx up (shared across its GPU's L1s).
+    let mut l2_up_tx = vec![vec![LinkId(u32::MAX); b]; g];
+    // Per-GPU uplink/downlink to the memory network.
+    let mut gpu_up = vec![LinkId(u32::MAX); g];
+    let mut gpu_down = vec![LinkId(u32::MAX); g];
+    // Per-GPU PCIe up/down (RDMA only).
+    let mut pcie_up = vec![LinkId(u32::MAX); g];
+    let mut pcie_down = vec![LinkId(u32::MAX); g];
+    // Per-stack links to/from the memory network switch.
+    let mut mc_rx = vec![LinkId(u32::MAX); stacks];
+    let mut mc_tx = vec![LinkId(u32::MAX); stacks];
+
+    for gi in 0..g {
+        for ci in 0..c {
+            l1_tx[gi][ci] =
+                engine.add_link(Link::wire(format!("g{gi}.l1_{ci}.tx"), cfg.onchip_lat));
+        }
+        for bi in 0..b {
+            l2_up_tx[gi][bi] =
+                engine.add_link(Link::wire(format!("g{gi}.l2_{bi}.up"), cfg.onchip_lat));
+        }
+        gpu_up[gi] = engine.add_link(Link::new(
+            format!("g{gi}.mmnet.up"),
+            cfg.swc_lat,
+            cfg.gpu_uplink_bw,
+        ));
+        gpu_down[gi] = engine.add_link(Link::new(
+            format!("g{gi}.mmnet.down"),
+            cfg.swc_lat,
+            cfg.gpu_uplink_bw,
+        ));
+        mem_links.push(gpu_up[gi]);
+        mem_links.push(gpu_down[gi]);
+        if rdma {
+            pcie_up[gi] =
+                engine.add_link(Link::new(format!("g{gi}.pcie.up"), cfg.pcie_lat, cfg.pcie_bw));
+            pcie_down[gi] = engine.add_link(Link::new(
+                format!("g{gi}.pcie.down"),
+                cfg.pcie_lat,
+                cfg.pcie_bw,
+            ));
+            pcie_links.push(pcie_up[gi]);
+            pcie_links.push(pcie_down[gi]);
+        }
+    }
+    for s in 0..stacks {
+        mc_rx[s] = engine.add_link(Link::new(format!("mm{s}.rx"), cfg.swc_lat, cfg.hbm_bw));
+        mc_tx[s] = engine.add_link(Link::new(format!("mm{s}.tx"), cfg.swc_lat, cfg.hbm_bw));
+        mem_links.push(mc_rx[s]);
+        mem_links.push(mc_tx[s]);
+    }
+
+    // ---- Components (order must match the id layout above).
+    let flat_cus: Vec<CompId> = cu_ids.iter().flatten().copied().collect();
+    let flat_l1s: Vec<CompId> = l1_ids.iter().flatten().copied().collect();
+    let flat_l2s: Vec<CompId> = l2_ids.iter().flatten().copied().collect();
+    let mut caches = flat_l1s.clone();
+    caches.extend(&flat_l2s);
+
+    let id = engine.add(Box::new(Driver::new(
+        "driver",
+        flat_cus.clone(),
+        caches,
+        wl.phases.len() as u32,
+        initial_delay,
+    )));
+    assert_eq!(id, driver);
+
+    for gi in 0..g {
+        // CUs (taking each CU's program out of the workload).
+        for ci in 0..c {
+            let program: Vec<Vec<Vec<crate::gpu::CuOp>>> = wl
+                .phases
+                .iter_mut()
+                .map(|ph| std::mem::take(&mut ph.work[gi][ci]))
+                .collect();
+            let id = engine.add(Box::new(Cu::new(
+                format!("g{gi}.cu{ci}"),
+                l1_ids[gi][ci],
+                driver,
+                program,
+                cfg.alu_lat,
+            )));
+            assert_eq!(id, cu_ids[gi][ci]);
+        }
+        // L1s.
+        for ci in 0..c {
+            let routes = L1Routes {
+                map: map.clone(),
+                gpu: gi as u32,
+                local_links: vec![l1_tx[gi][ci]; b],
+                local_banks: l2_ids[gi].clone(),
+                // NC-RDMA: L1 reaches remote GPUs' L2 through PCIe (Fig. 1).
+                // HMG: L1 stays local; the L2 handles remote traffic.
+                remote_hop: (rdma && cfg.coherence == Coherence::None)
+                    .then_some((pcie_up[gi], psw)),
+                all_banks: all_banks.clone(),
+            };
+            let params = CacheParams::new(cfg.l1_bytes, cfg.l1_ways);
+            let name = format!("g{gi}.l1_{ci}");
+            let id = match cfg.coherence {
+                Coherence::Halcone { carry_warpts, .. } => engine.add(Box::new(HalconeL1::new(
+                    name,
+                    routes,
+                    params,
+                    cfg.mshr_l1,
+                    cfg.l1_lat,
+                    carry_warpts,
+                ))),
+                _ => engine.add(Box::new(PlainL1::new(
+                    name,
+                    routes,
+                    params,
+                    cfg.mshr_l1,
+                    cfg.l1_lat,
+                ))),
+            };
+            assert_eq!(id, l1_ids[gi][ci]);
+        }
+        // L2 banks.
+        for bi in 0..b {
+            let mut up_routes = HashMap::new();
+            for ci in 0..c {
+                up_routes.insert(l1_ids[gi][ci], l2_up_tx[gi][bi]);
+            }
+            let mm_hop = if rdma { (gpu_up[gi], lsw_ids[gi]) } else { (gpu_up[gi], swc) };
+            let routes = L2Routes {
+                map: map.clone(),
+                gpu: gi as u32,
+                mm_hop,
+                mcs: mc_ids.clone(),
+                up_routes,
+                up_default: rdma.then_some((pcie_up[gi], psw)),
+                peer_hop: rdma.then_some((pcie_up[gi], psw)),
+                all_banks: all_banks.clone(),
+            };
+            let params = CacheParams::new(cfg.l2_bank_bytes, cfg.l2_ways);
+            let name = format!("g{gi}.l2_{bi}");
+            let id = match cfg.coherence {
+                Coherence::Halcone { carry_warpts, .. } => engine.add(Box::new(HalconeL2::new(
+                    name,
+                    routes,
+                    params,
+                    cfg.mshr_l2,
+                    cfg.l2_lat,
+                    carry_warpts,
+                ))),
+                Coherence::None => engine.add(Box::new(PlainL2::new(
+                    name,
+                    routes,
+                    cfg.l2_policy,
+                    params,
+                    cfg.mshr_l2,
+                    cfg.l2_lat,
+                ))),
+                Coherence::Hmg => engine.add(Box::new(HmgL2::new(
+                    name,
+                    routes,
+                    gi as u32,
+                    bi as u32,
+                    params,
+                    cfg.mshr_l2,
+                    cfg.l2_lat,
+                ))),
+            };
+            assert_eq!(id, l2_ids[gi][bi]);
+        }
+    }
+
+    // Switches.
+    if rdma {
+        for gi in 0..g {
+            let mut lsw = Switch::new(format!("g{gi}.memsw"));
+            // Local stacks live at global indices [gi*spg, (gi+1)*spg).
+            let spg = cfg.stacks_per_gpu as usize;
+            for s in gi * spg..(gi + 1) * spg {
+                lsw.add_route(mc_ids[s], (mc_rx[s], mc_ids[s]));
+            }
+            for bi in 0..b {
+                lsw.add_route(l2_ids[gi][bi], (gpu_down[gi], l2_ids[gi][bi]));
+            }
+            let id = engine.add(Box::new(lsw));
+            assert_eq!(id, lsw_ids[gi]);
+        }
+        let mut p = Switch::new("pcie_sw");
+        for gi in 0..g {
+            for bi in 0..b {
+                p.add_route(l2_ids[gi][bi], (pcie_down[gi], l2_ids[gi][bi]));
+            }
+            for ci in 0..c {
+                p.add_route(l1_ids[gi][ci], (pcie_down[gi], l1_ids[gi][ci]));
+            }
+        }
+        let id = engine.add(Box::new(p));
+        assert_eq!(id, psw);
+    } else {
+        let mut s = Switch::new("switch_complex");
+        for (si, &mc) in mc_ids.iter().enumerate() {
+            s.add_route(mc, (mc_rx[si], mc));
+        }
+        for gi in 0..g {
+            for bi in 0..b {
+                s.add_route(l2_ids[gi][bi], (gpu_down[gi], l2_ids[gi][bi]));
+            }
+        }
+        let id = engine.add(Box::new(s));
+        assert_eq!(id, swc);
+    }
+
+    // Memory controllers (+ TSUs when HALCONE).
+    for (si, &mc) in mc_ids.iter().enumerate() {
+        let up = if rdma {
+            let owner = si / cfg.stacks_per_gpu as usize;
+            (mc_tx[si], lsw_ids[owner])
+        } else {
+            (mc_tx[si], swc)
+        };
+        let tsu = match cfg.coherence {
+            Coherence::Halcone { leases, .. } => Some(Tsu::new(cfg.tsu_entries, leases)),
+            _ => None,
+        };
+        let id = engine.add(Box::new(MemCtrl::new(
+            format!("mm{si}"),
+            mem.clone(),
+            up,
+            cfg.mc_lat,
+            tsu,
+        )));
+        assert_eq!(id, mc);
+    }
+
+    System {
+        engine,
+        mem,
+        driver,
+        cus: flat_cus,
+        l1s: flat_l1s,
+        l2s: flat_l2s,
+        mcs: mc_ids,
+        pcie_links,
+        mem_links,
+        coherence: cfg.coherence,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{self, WorkloadParams};
+
+    fn small_cfg(preset: &str) -> SystemConfig {
+        let mut cfg = SystemConfig::preset(preset);
+        cfg.n_gpus = 2;
+        cfg.cus_per_gpu = 2;
+        cfg.wavefronts_per_cu = 2;
+        cfg.l2_banks = 2;
+        cfg.stacks_per_gpu = 2;
+        cfg.gpu_mem_bytes = 64 << 20;
+        cfg.scale = 0.05;
+        cfg
+    }
+
+    fn wl(cfg: &SystemConfig, name: &str) -> Workload {
+        let p: WorkloadParams = cfg.workload_params();
+        workloads::build(name, &p)
+    }
+
+    #[test]
+    fn builds_all_presets() {
+        for preset in SystemConfig::PRESETS {
+            let cfg = small_cfg(preset);
+            let w = wl(&cfg, "rl");
+            let sys = build(&cfg, w);
+            assert_eq!(sys.cus.len(), 4);
+            assert_eq!(sys.l1s.len(), 4);
+            assert_eq!(sys.l2s.len(), 4);
+            assert_eq!(sys.mcs.len(), 4);
+        }
+    }
+
+    #[test]
+    fn rdma_has_pcie_links_sm_does_not() {
+        let cfg = small_cfg("RDMA-WB-NC");
+        let sys = build(&cfg, wl(&cfg, "rl"));
+        assert!(!sys.pcie_links.is_empty());
+        let cfg = small_cfg("SM-WT-NC");
+        let sys = build(&cfg, wl(&cfg, "rl"));
+        assert!(sys.pcie_links.is_empty());
+    }
+
+    #[test]
+    fn copy_delay_only_for_rdma() {
+        let cfg_r = small_cfg("RDMA-WB-NC");
+        let w = wl(&cfg_r, "rl");
+        assert!(copy_delay(&cfg_r, &w) > 0);
+        let cfg_s = small_cfg("SM-WT-NC");
+        let w = wl(&cfg_s, "rl");
+        assert_eq!(copy_delay(&cfg_s, &w), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "MGPU-SM")]
+    fn halcone_on_rdma_is_rejected() {
+        let mut cfg = small_cfg("SM-WT-C-HALCONE");
+        cfg.topology = Topology::Rdma;
+        let w = wl(&cfg, "rl");
+        build(&cfg, w);
+    }
+}

@@ -1,0 +1,166 @@
+//! Golden-model verification (DESIGN.md S19): after a simulation, the
+//! final memory image must match what the workload's math says — computed
+//! either by an AOT-compiled JAX/Pallas artifact through the PJRT runtime
+//! or by a Rust reference. A coherence bug that leaks a stale value
+//! anywhere in the hierarchy fails these checks.
+
+use crate::dram::SharedMemory;
+use crate::runtime::Runtime;
+use crate::workloads::Verify;
+
+/// Result of one check.
+#[derive(Clone, Debug)]
+pub struct CheckOutcome {
+    pub desc: String,
+    /// "artifact" | "rust" | "skipped".
+    pub kind: &'static str,
+    pub passed: bool,
+    pub max_err: f32,
+}
+
+/// Relative-or-absolute closeness: |got - want| <= tol * max(1, |want|).
+/// `tol = 0` demands bit-equal f32.
+fn max_err(got: &[f32], want: &[f32]) -> f32 {
+    got.iter()
+        .zip(want)
+        .map(|(g, w)| (g - w).abs() / 1f32.max(w.abs()))
+        .fold(0.0, f32::max)
+}
+
+/// Snapshot the input arrays of every check (call after init, before run).
+pub fn snapshot_inputs(checks: &[Verify], mem: &SharedMemory) -> Vec<Vec<Vec<f32>>> {
+    checks
+        .iter()
+        .map(|chk| match chk {
+            Verify::Artifact { inputs, .. } | Verify::Rust { inputs, .. } => {
+                inputs.iter().map(|a| a.read(mem)).collect()
+            }
+            Verify::None => vec![],
+        })
+        .collect()
+}
+
+/// Run all checks against the post-run memory image.
+pub fn run_checks(
+    checks: &[Verify],
+    snapshots: &[Vec<Vec<f32>>],
+    mem: &SharedMemory,
+    mut runtime: Option<&mut Runtime>,
+) -> Vec<CheckOutcome> {
+    let mut out = Vec::new();
+    for (chk, snap) in checks.iter().zip(snapshots) {
+        match chk {
+            Verify::None => {}
+            Verify::Rust { outputs, golden, tol, .. } => {
+                let want = golden(snap);
+                let mut worst = 0.0f32;
+                let mut pass = true;
+                for (arr, w) in outputs.iter().zip(&want) {
+                    let got = arr.read(mem);
+                    let e = max_err(&got, w);
+                    worst = worst.max(e);
+                    pass &= got.len() == w.len() && e <= *tol;
+                }
+                out.push(CheckOutcome {
+                    desc: format!(
+                        "rust golden ({})",
+                        outputs.iter().map(|a| a.name.as_str()).collect::<Vec<_>>().join(",")
+                    ),
+                    kind: "rust",
+                    passed: pass,
+                    max_err: worst,
+                });
+            }
+            Verify::Artifact { artifact, outputs, tol, .. } => {
+                let Some(rt) = runtime.as_deref_mut() else {
+                    out.push(CheckOutcome {
+                        desc: format!("artifact {artifact} (no runtime)"),
+                        kind: "skipped",
+                        passed: true,
+                        max_err: 0.0,
+                    });
+                    continue;
+                };
+                match rt.exec_f32(artifact, snap) {
+                    Ok(want) => {
+                        let mut worst = 0.0f32;
+                        let mut pass = true;
+                        for (arr, w) in outputs.iter().zip(&want) {
+                            let got = arr.read(mem);
+                            let e = max_err(&got, w);
+                            worst = worst.max(e);
+                            pass &= got.len() == w.len() && e <= *tol;
+                        }
+                        out.push(CheckOutcome {
+                            desc: format!("XLA artifact {artifact}"),
+                            kind: "artifact",
+                            passed: pass,
+                            max_err: worst,
+                        });
+                    }
+                    Err(e) => out.push(CheckOutcome {
+                        desc: format!("artifact {artifact}: {e}"),
+                        kind: "skipped",
+                        passed: true,
+                        max_err: 0.0,
+                    }),
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::GlobalMemory;
+    use crate::workloads::Array;
+
+    #[test]
+    fn max_err_is_relative_above_one() {
+        assert_eq!(max_err(&[1.0], &[1.0]), 0.0);
+        assert!(max_err(&[100.1], &[100.0]) < 0.01);
+        assert!(max_err(&[0.1], &[0.0]) >= 0.1); // absolute below 1
+    }
+
+    #[test]
+    fn rust_check_passes_and_fails_correctly() {
+        let mem = GlobalMemory::new_shared();
+        let input = Array::contiguous("in", 0x100, 4);
+        let output = Array::contiguous("out", 0x200, 4);
+        input.write(&mem, &[1.0, 2.0, 3.0, 4.0]);
+        output.write(&mem, &[2.0, 4.0, 6.0, 8.0]);
+        let checks = vec![Verify::Rust {
+            inputs: vec![input.clone()],
+            outputs: vec![output.clone()],
+            golden: Box::new(|ins| vec![ins[0].iter().map(|x| 2.0 * x).collect()]),
+            tol: 0.0,
+        }];
+        let snaps = snapshot_inputs(&checks, &mem);
+        let res = run_checks(&checks, &snaps, &mem, None);
+        assert!(res[0].passed, "{res:?}");
+
+        // Corrupt one output word: the check must fail.
+        mem.borrow_mut().write_f32(0x204, 99.0);
+        let res = run_checks(&checks, &snaps, &mem, None);
+        assert!(!res[0].passed);
+        assert!(res[0].max_err > 1.0);
+    }
+
+    #[test]
+    fn artifact_without_runtime_is_skipped_not_failed() {
+        let mem = GlobalMemory::new_shared();
+        let arr = Array::contiguous("x", 0, 4);
+        let checks = vec![Verify::Artifact {
+            artifact: "whatever".into(),
+            inputs: vec![arr.clone()],
+            outputs: vec![arr.clone()],
+            tol: 0.0,
+        }];
+        let snaps = snapshot_inputs(&checks, &mem);
+        let res = run_checks(&checks, &snaps, &mem, None);
+        assert_eq!(res[0].kind, "skipped");
+        assert!(res[0].passed);
+    }
+}

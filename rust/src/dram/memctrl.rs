@@ -1,0 +1,213 @@
+//! HBM memory controller component.
+//!
+//! One `MemCtrl` per HBM stack. Models the paper's fixed 100-cycle
+//! controller latency (§4.1, "calibrated using a real GPU with HBM
+//! memory"); per-stack bandwidth is modelled by the network link feeding
+//! the controller and the return link. When coherence is on, the stack's
+//! TSU is consulted *in parallel* with the access: TSU latency (50cy) <
+//! MC latency (100cy), so the timestamps are ready before the data and add
+//! zero time — exactly the paper's Fig. 6 claim. The TSU's occupancy and
+//! traffic are still fully accounted.
+
+use crate::dram::storage::SharedMemory;
+use crate::sim::msg::{MemRsp, TsPair};
+use crate::sim::{CompId, Component, Ctx, Cycle, LinkId, Msg, ReqKind};
+use crate::tsu::Tsu;
+
+/// Statistics exported to the metrics sink.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemCtrlStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// Memory controller + attached HBM stack + optional TSU.
+pub struct MemCtrl {
+    name: String,
+    mem: SharedMemory,
+    /// Return path: (link, next-hop component) toward the network.
+    up: (LinkId, CompId),
+    /// Fixed access latency in cycles.
+    latency: Cycle,
+    /// Timestamp storage unit (HALCONE configurations only).
+    pub tsu: Option<Tsu>,
+    pub stats: MemCtrlStats,
+    line: u64,
+}
+
+impl MemCtrl {
+    pub fn new(
+        name: impl Into<String>,
+        mem: SharedMemory,
+        up: (LinkId, CompId),
+        latency: Cycle,
+        tsu: Option<Tsu>,
+    ) -> Self {
+        MemCtrl {
+            name: name.into(),
+            mem,
+            up,
+            latency,
+            tsu,
+            stats: MemCtrlStats::default(),
+            line: crate::mem::LINE,
+        }
+    }
+
+    fn ts_for(&mut self, kind: ReqKind, line_addr: u64) -> Option<TsPair> {
+        self.tsu.as_mut().map(|tsu| match kind {
+            ReqKind::Read => tsu.on_read(line_addr),
+            ReqKind::Write => tsu.on_write(line_addr),
+        })
+    }
+}
+
+impl Component for MemCtrl {
+    crate::impl_component_any!();
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        let req = match msg {
+            Msg::Req(r) => r,
+            other => panic!("{}: unexpected {:?}", self.name, other),
+        };
+        let line_addr = req.addr & !(self.line - 1);
+        self.stats.bytes_in += req.wire_bytes();
+
+        // TSU lookup runs in parallel with the DRAM access (free in time).
+        let ts = self.ts_for(req.kind, line_addr);
+
+        let data = match req.kind {
+            ReqKind::Read => {
+                self.stats.reads += 1;
+                self.mem.borrow_mut().read_line(line_addr).into_vec()
+            }
+            ReqKind::Write => {
+                self.stats.writes += 1;
+                let mut mem = self.mem.borrow_mut();
+                mem.write_bytes(req.addr, &req.data);
+                // Return the merged line so write-allocate levels can fill.
+                mem.read_line(line_addr).into_vec()
+            }
+        };
+
+        let rsp = MemRsp {
+            id: req.id,
+            kind: req.kind,
+            addr: req.addr,
+            dst: req.src,
+            data,
+            ts,
+        };
+        self.stats.bytes_out += rsp.wire_bytes();
+        let (link, next) = self.up;
+        ctx.send_delayed(self.latency, link, next, rsp.wire_bytes(), Msg::Rsp(Box::new(rsp)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::storage::GlobalMemory;
+    use crate::sim::msg::MemReq;
+    use crate::sim::{Engine, Link};
+    use crate::tsu::Leases;
+
+    struct Collector {
+        name: String,
+        rsps: Vec<(Cycle, MemRsp)>,
+    }
+    impl Component for Collector {
+    crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, now: Cycle, msg: Msg, _ctx: &mut Ctx) {
+            if let Msg::Rsp(r) = msg {
+                self.rsps.push((now, *r));
+            }
+        }
+    }
+
+    fn setup(tsu: bool) -> (Engine, SharedMemory, CompId, CompId) {
+        let mut e = Engine::new();
+        let mem = GlobalMemory::new_shared();
+        let up = e.add_link(Link::new("mc->l2", 10, 341));
+        let mc_id = CompId(0);
+        let l2_id = CompId(1);
+        let tsu = tsu.then(|| Tsu::new(4096, Leases::default()));
+        e.add(Box::new(MemCtrl::new("mm0", mem.clone(), (up, l2_id), 100, tsu)));
+        e.add(Box::new(Collector { name: "l2".into(), rsps: vec![] }));
+        (e, mem, mc_id, l2_id)
+    }
+
+    fn read_req(id: u64, addr: u64, src: CompId, dst: CompId) -> Msg {
+        Msg::Req(Box::new(MemReq {
+            id,
+            kind: ReqKind::Read,
+            addr,
+            size: 64,
+            src,
+            dst,
+            data: vec![],
+            warpts: None,
+        }))
+    }
+
+    #[test]
+    fn read_returns_line_after_latency() {
+        let (mut e, mem, mc, l2) = setup(false);
+        mem.borrow_mut().write_f32(0x40, 7.5);
+        e.post(0, mc, read_req(1, 0x40, l2, mc));
+        e.run_to_completion();
+        let c = e.component(l2);
+        let _ = c;
+        // Verify timing through the link: response entered at t=100,
+        // 72 bytes @341B/cy = 1 cycle, +10 latency => t=111.
+        assert_eq!(e.now(), 111);
+    }
+
+    #[test]
+    fn write_merges_and_returns_full_line() {
+        let (mut e, mem, mc, l2) = setup(false);
+        mem.borrow_mut().write_bytes(0x80, &[0xAA; 64]);
+        e.post(
+            0,
+            mc,
+            Msg::Req(Box::new(MemReq {
+                id: 2,
+                kind: ReqKind::Write,
+                addr: 0x84,
+                size: 4,
+                src: l2,
+                dst: mc,
+                data: vec![1, 2, 3, 4],
+                warpts: None,
+            })),
+        );
+        e.run_to_completion();
+        let mut m = mem.borrow_mut();
+        assert_eq!(m.read_bytes(0x84, 4), vec![1, 2, 3, 4]);
+        assert_eq!(m.read_bytes(0x80, 4), vec![0xAA; 4]); // rest preserved
+    }
+
+    #[test]
+    fn tsu_attaches_timestamps_without_extra_latency() {
+        let (mut e, _mem, mc, l2) = setup(true);
+        e.post(0, mc, read_req(3, 0x40, l2, mc));
+        let end_with_tsu = {
+            e.run_to_completion();
+            e.now()
+        };
+        // Same access without TSU: the response is 4 bytes smaller but the
+        // cycle count must be identical (TSU off the critical path).
+        let (mut e2, _m2, mc2, l2b) = setup(false);
+        e2.post(0, mc2, read_req(3, 0x40, l2b, mc2));
+        e2.run_to_completion();
+        assert_eq!(end_with_tsu, e2.now());
+    }
+}

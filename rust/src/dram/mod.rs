@@ -1,0 +1,8 @@
+//! Main memory: functional backing store + HBM memory controllers
+//! (DESIGN.md S7), with the per-stack TSU attached (S8).
+
+pub mod memctrl;
+pub mod storage;
+
+pub use memctrl::MemCtrl;
+pub use storage::{GlobalMemory, SharedMemory};

@@ -1,0 +1,169 @@
+//! Functional backing store for the whole MGPU system.
+//!
+//! One `GlobalMemory` instance backs every memory controller: the physical
+//! address space is singular regardless of topology (under RDMA it is
+//! *partitioned*, not duplicated). Storage is sparse at line granularity —
+//! workloads touch tens of MB out of a multi-GB space.
+//!
+//! The store is shared between MC components and the coordinator via
+//! `Rc<RefCell<_>>` ([`SharedMemory`]); the engine is single-threaded by
+//! design, so this is safe and cheap.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::mem::LINE;
+
+/// Sparse line-granular memory.
+#[derive(Debug, Default)]
+pub struct GlobalMemory {
+    lines: HashMap<u64, Box<[u8]>>,
+    /// Functional accesses (metrics / debugging).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+/// Shared handle used by memory controllers and the coordinator.
+pub type SharedMemory = Rc<RefCell<GlobalMemory>>;
+
+impl GlobalMemory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn new_shared() -> SharedMemory {
+        Rc::new(RefCell::new(Self::new()))
+    }
+
+    fn line_base(addr: u64) -> u64 {
+        addr & !(LINE - 1)
+    }
+
+    /// Copy out the 64-byte line containing `addr` (zeros if untouched).
+    pub fn read_line(&mut self, addr: u64) -> Box<[u8]> {
+        self.reads += 1;
+        let base = Self::line_base(addr);
+        self.lines
+            .get(&base)
+            .cloned()
+            .unwrap_or_else(|| vec![0u8; LINE as usize].into_boxed_slice())
+    }
+
+    /// Write `data` starting at `addr` (may span lines).
+    pub fn write_bytes(&mut self, addr: u64, data: &[u8]) {
+        self.writes += 1;
+        let mut cur = addr;
+        let mut remaining = data;
+        while !remaining.is_empty() {
+            let base = Self::line_base(cur);
+            let off = (cur - base) as usize;
+            let n = remaining.len().min(LINE as usize - off);
+            let line = self
+                .lines
+                .entry(base)
+                .or_insert_with(|| vec![0u8; LINE as usize].into_boxed_slice());
+            line[off..off + n].copy_from_slice(&remaining[..n]);
+            cur += n as u64;
+            remaining = &remaining[n..];
+        }
+    }
+
+    /// Read `n` bytes starting at `addr` (may span lines).
+    pub fn read_bytes(&mut self, addr: u64, n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        let mut cur = addr;
+        while out.len() < n {
+            let base = Self::line_base(cur);
+            let off = (cur - base) as usize;
+            let take = (n - out.len()).min(LINE as usize - off);
+            match self.lines.get(&base) {
+                Some(line) => out.extend_from_slice(&line[off..off + take]),
+                None => out.extend(std::iter::repeat_n(0u8, take)),
+            }
+            cur += take as u64;
+        }
+        self.reads += 1;
+        out
+    }
+
+    /// Typed helpers for f32 workload data.
+    pub fn write_f32(&mut self, addr: u64, v: f32) {
+        self.write_bytes(addr, &v.to_le_bytes());
+    }
+
+    pub fn read_f32(&mut self, addr: u64) -> f32 {
+        let b = self.read_bytes(addr, 4);
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    pub fn write_f32_slice(&mut self, addr: u64, vs: &[f32]) {
+        let mut bytes = Vec::with_capacity(vs.len() * 4);
+        for v in vs {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write_bytes(addr, &bytes);
+    }
+
+    pub fn read_f32_vec(&mut self, addr: u64, n: usize) -> Vec<f32> {
+        let bytes = self.read_bytes(addr, n * 4);
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Number of distinct lines touched.
+    pub fn resident_lines(&self) -> usize {
+        self.lines.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untouched_memory_reads_zero() {
+        let mut m = GlobalMemory::new();
+        assert_eq!(m.read_f32(0x1234), 0.0);
+        assert!(m.read_line(0x40).iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut m = GlobalMemory::new();
+        m.write_f32(100, 3.5);
+        m.write_f32(104, -1.25);
+        assert_eq!(m.read_f32(100), 3.5);
+        assert_eq!(m.read_f32(104), -1.25);
+    }
+
+    #[test]
+    fn cross_line_write_spans_correctly() {
+        let mut m = GlobalMemory::new();
+        let data: Vec<u8> = (0..100u8).collect();
+        m.write_bytes(60, &data); // starts 4 bytes before a line boundary
+        assert_eq!(m.read_bytes(60, 100), data);
+        assert_eq!(m.resident_lines(), 3); // lines 0, 64, 128
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let mut m = GlobalMemory::new();
+        let vs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        m.write_f32_slice(0x1000, &vs);
+        assert_eq!(m.read_f32_vec(0x1000, 1000), vs);
+    }
+
+    #[test]
+    fn partial_line_update_preserves_rest() {
+        let mut m = GlobalMemory::new();
+        m.write_bytes(0, &[0xAA; 64]);
+        m.write_bytes(16, &[0xBB; 4]);
+        let line = m.read_line(0);
+        assert_eq!(&line[..16], &[0xAA; 16]);
+        assert_eq!(&line[16..20], &[0xBB; 4]);
+        assert_eq!(&line[20..], &[0xAA; 44]);
+    }
+}

@@ -1,0 +1,598 @@
+//! Compute Unit: in-order wavefronts with memory-level parallelism.
+//!
+//! Timing model: each CU runs `W` wavefront contexts (paper-style latency
+//! hiding). A wavefront executes its op list strictly in order; **loads
+//! block until the value returns** (one outstanding load per wavefront),
+//! while **stores are fire-and-forget** under the GPUs' weak consistency
+//! model (§2 of the paper): the wavefront continues immediately and the
+//! phase only completes once every store has been acknowledged. A credit
+//! cap bounds outstanding stores per CU so the L1 MSHR cannot overflow;
+//! wavefronts park when credits run out and resume on acks. ALU ops and
+//! explicit delays accumulate issue latency between memory ops.
+//! Memory-level parallelism therefore comes from both the wavefront count
+//! and store pipelining — a deliberately simple stand-in for GCN3's
+//! 40-wavefront occupancy that preserves the memory-bound vs
+//! compute-bound distinction the paper's Table 3 relies on.
+
+use crate::metrics::CacheCtrlStats;
+use crate::sim::msg::{MemReq, MemRsp};
+use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
+
+/// Lanes per wavefront vector register. A full vector memory op covers
+/// exactly one 64-byte cache line (16 x f32) — the coalesced access
+/// granularity MGPUSim (and real GCN3 hardware) issues for contiguous
+/// lane addresses.
+pub const LANES: usize = 16;
+
+/// One micro-op of a wavefront program. Registers are 16-lane f32 vectors
+/// (SIMT): scalar loads/immediates broadcast across lanes, ALU ops are
+/// lanewise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CuOp {
+    /// Scalar load: f32 at `addr`, broadcast into all lanes of `reg`.
+    Ld { reg: u8, addr: u64 },
+    /// Coalesced vector load: `n` consecutive f32 starting at `addr` into
+    /// lanes 0..n of `reg` (remaining lanes zeroed). Must not cross a
+    /// cache-line boundary (one memory transaction).
+    LdV { reg: u8, addr: u64, n: u8 },
+    /// Scalar store: lane 0 of `reg` to `addr`.
+    St { addr: u64, reg: u8 },
+    /// Coalesced vector store: lanes 0..n of `reg` to `addr` (one
+    /// transaction; must not cross a line boundary).
+    StV { addr: u64, reg: u8, n: u8 },
+    /// reg\[dst\] = broadcast(imm).
+    MovImm { dst: u8, imm: f32 },
+    /// Lanewise reg\[dst\] = reg\[a\] + reg\[b\].
+    Add { dst: u8, a: u8, b: u8 },
+    /// Lanewise reg\[dst\] = reg\[a\] - reg\[b\].
+    Sub { dst: u8, a: u8, b: u8 },
+    /// Lanewise reg\[dst\] = reg\[a\] * reg\[b\].
+    Mul { dst: u8, a: u8, b: u8 },
+    /// Lanewise reg\[dst\] = min(reg\[a\], reg\[b\]).
+    Min { dst: u8, a: u8, b: u8 },
+    /// Lanewise reg\[dst\] = max(reg\[a\], reg\[b\]).
+    Max { dst: u8, a: u8, b: u8 },
+    /// Cross-lane reduction: all lanes of `dst` = sum of lanes of `src`
+    /// (dot-product style accumulate).
+    Red { dst: u8, src: u8 },
+    /// reg\[dst\]\[lane\] = reg\[src\]\[0\] (pack scalars into a vector for
+    /// a later coalesced store).
+    Pack { dst: u8, lane: u8, src: u8 },
+    /// Busy compute for `cycles` (models non-f32 work, e.g. AES rounds).
+    Delay { cycles: u32 },
+}
+
+pub const NREGS: usize = 16;
+
+/// A vector register value.
+pub type VReg = [f32; LANES];
+
+/// Execution counters for one CU.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CuStats {
+    pub loads: u64,
+    pub stores: u64,
+    pub alu: u64,
+    pub delay_cycles: u64,
+}
+
+#[derive(Debug)]
+struct Wavefront {
+    /// Program counter into `Cu::program[phase][wf]` (ops are not copied
+    /// per phase — cloning programs showed up in perf, §Perf log).
+    pc: usize,
+    regs: [VReg; NREGS],
+    done: bool,
+}
+
+/// Pending destination of an outstanding memory request.
+#[derive(Clone, Copy, Debug)]
+enum Dest {
+    /// Store ack (no payload).
+    Ack,
+    /// Scalar load: broadcast into register.
+    Scalar(u8),
+    /// Vector load: lanes 0..n of register.
+    Vector(u8, u8),
+}
+
+/// A compute unit component.
+pub struct Cu {
+    name: String,
+    l1: CompId,
+    driver: CompId,
+    /// `[phase][wavefront]` op lists for this CU.
+    program: Vec<Vec<Vec<CuOp>>>,
+    wavefronts: Vec<Wavefront>,
+    /// Outstanding memory requests: (id, wavefront, destination).
+    /// A small linear-scanned vec — outstanding counts are bounded by
+    /// wavefronts + store credits (~32), and the SipHash of a HashMap
+    /// showed up at ~5% of total runtime in perf (EXPERIMENTS.md §Perf).
+    outstanding: Vec<(u64, usize, Dest)>,
+    next_id: u64,
+    /// Per-ALU-op issue latency.
+    alu_lat: Cycle,
+    active: usize,
+    phase: u32,
+    /// Outstanding (unacknowledged) stores.
+    stores_in_flight: u32,
+    /// Store credits remaining (cap on stores_in_flight).
+    store_credits: u32,
+    /// Wavefronts parked waiting for a store credit.
+    parked: Vec<usize>,
+    pub stats: CuStats,
+}
+
+/// Default store-credit cap per CU (must stay below the L1 MSHR size).
+pub const STORE_CREDITS: u32 = 24;
+
+impl Cu {
+    pub fn new(
+        name: impl Into<String>,
+        l1: CompId,
+        driver: CompId,
+        program: Vec<Vec<Vec<CuOp>>>,
+        alu_lat: Cycle,
+    ) -> Self {
+        Cu {
+            name: name.into(),
+            l1,
+            driver,
+            program,
+            wavefronts: Vec::new(),
+            outstanding: Vec::with_capacity(64),
+            next_id: 0,
+            alu_lat,
+            active: 0,
+            phase: 0,
+            stores_in_flight: 0,
+            store_credits: STORE_CREDITS,
+            parked: Vec::new(),
+            stats: CuStats::default(),
+        }
+    }
+
+    /// All wavefronts retired and every store acknowledged?
+    fn phase_complete(&self) -> bool {
+        self.active == 0 && self.stores_in_flight == 0
+    }
+
+    fn start_phase(&mut self, phase: u32, ctx: &mut Ctx) {
+        self.phase = phase;
+        let n_wfs = self.program.get(phase as usize).map_or(0, |l| l.len());
+        self.wavefronts = (0..n_wfs)
+            .map(|_| Wavefront { pc: 0, regs: [[0.0; LANES]; NREGS], done: false })
+            .collect();
+        self.active = 0;
+        for (i, w) in self.wavefronts.iter_mut().enumerate() {
+            if self.program[phase as usize][i].is_empty() {
+                w.done = true;
+            } else {
+                self.active += 1;
+            }
+        }
+        if self.active == 0 {
+            let driver = self.driver;
+            ctx.schedule(0, driver, Msg::PhaseDone { cu: ctx.self_id });
+            return;
+        }
+        // Stagger wavefront starts by one cycle to avoid lockstep bursts.
+        for i in 0..self.wavefronts.len() {
+            self.step(i, i as Cycle, ctx);
+        }
+    }
+
+    /// Advance wavefront `wf`, issuing at `now + extra` (stagger/replay).
+    fn step(&mut self, wf: usize, extra: Cycle, ctx: &mut Ctx) {
+        let mut delay = extra;
+        let phase = self.phase as usize;
+        loop {
+            if self.wavefronts[wf].done {
+                return;
+            }
+            let pc = self.wavefronts[wf].pc;
+            let ops = &self.program[phase][wf];
+            if pc >= ops.len() {
+                self.wavefronts[wf].done = true;
+                self.active -= 1;
+                if self.phase_complete() {
+                    let driver = self.driver;
+                    ctx.schedule(delay, driver, Msg::PhaseDone { cu: ctx.self_id });
+                }
+                return;
+            }
+            // Park on a store without credits (pc unchanged; resumed by an
+            // ack in on_rsp).
+            if matches!(ops[pc], CuOp::St { .. } | CuOp::StV { .. })
+                && self.store_credits == 0
+            {
+                self.parked.push(wf);
+                return;
+            }
+            let op = ops[pc].clone();
+            let w = &mut self.wavefronts[wf];
+            w.pc += 1;
+            match op {
+                CuOp::MovImm { dst, imm } => {
+                    w.regs[dst as usize] = [imm; LANES];
+                    self.stats.alu += 1;
+                    delay += self.alu_lat;
+                }
+                CuOp::Add { dst, a, b } => {
+                    let (a, b) = (w.regs[a as usize], w.regs[b as usize]);
+                    for (l, d) in w.regs[dst as usize].iter_mut().enumerate() {
+                        *d = a[l] + b[l];
+                    }
+                    self.stats.alu += 1;
+                    delay += self.alu_lat;
+                }
+                CuOp::Sub { dst, a, b } => {
+                    let (a, b) = (w.regs[a as usize], w.regs[b as usize]);
+                    for (l, d) in w.regs[dst as usize].iter_mut().enumerate() {
+                        *d = a[l] - b[l];
+                    }
+                    self.stats.alu += 1;
+                    delay += self.alu_lat;
+                }
+                CuOp::Mul { dst, a, b } => {
+                    let (a, b) = (w.regs[a as usize], w.regs[b as usize]);
+                    for (l, d) in w.regs[dst as usize].iter_mut().enumerate() {
+                        *d = a[l] * b[l];
+                    }
+                    self.stats.alu += 1;
+                    delay += self.alu_lat;
+                }
+                CuOp::Min { dst, a, b } => {
+                    let (a, b) = (w.regs[a as usize], w.regs[b as usize]);
+                    for (l, d) in w.regs[dst as usize].iter_mut().enumerate() {
+                        *d = a[l].min(b[l]);
+                    }
+                    self.stats.alu += 1;
+                    delay += self.alu_lat;
+                }
+                CuOp::Max { dst, a, b } => {
+                    let (a, b) = (w.regs[a as usize], w.regs[b as usize]);
+                    for (l, d) in w.regs[dst as usize].iter_mut().enumerate() {
+                        *d = a[l].max(b[l]);
+                    }
+                    self.stats.alu += 1;
+                    delay += self.alu_lat;
+                }
+                CuOp::Red { dst, src } => {
+                    let s: f32 = w.regs[src as usize].iter().sum();
+                    w.regs[dst as usize] = [s; LANES];
+                    self.stats.alu += 1;
+                    delay += self.alu_lat;
+                }
+                CuOp::Pack { dst, lane, src } => {
+                    let v = w.regs[src as usize][0];
+                    w.regs[dst as usize][lane as usize] = v;
+                    self.stats.alu += 1;
+                    delay += self.alu_lat;
+                }
+                CuOp::Delay { cycles } => {
+                    self.stats.delay_cycles += cycles as u64;
+                    delay += cycles as Cycle;
+                }
+                CuOp::Ld { reg, addr } => {
+                    self.issue_load(wf, Dest::Scalar(reg), addr, 4, delay, ctx);
+                    return;
+                }
+                CuOp::LdV { reg, addr, n } => {
+                    debug_assert!(n as usize <= LANES);
+                    debug_assert_eq!(
+                        addr / 64,
+                        (addr + 4 * n as u64 - 1) / 64,
+                        "LdV crosses a line boundary"
+                    );
+                    self.issue_load(wf, Dest::Vector(reg, n), addr, 4 * n as u32, delay, ctx);
+                    return;
+                }
+                CuOp::St { addr, reg } => {
+                    let data = w.regs[reg as usize][0].to_le_bytes().to_vec();
+                    self.issue_store(wf, addr, data, delay, ctx);
+                    delay += 1; // issue slot
+                }
+                CuOp::StV { addr, reg, n } => {
+                    debug_assert!(n as usize <= LANES);
+                    debug_assert_eq!(
+                        addr / 64,
+                        (addr + 4 * n as u64 - 1) / 64,
+                        "StV crosses a line boundary"
+                    );
+                    let mut data = Vec::with_capacity(4 * n as usize);
+                    for l in 0..n as usize {
+                        data.extend_from_slice(&w.regs[reg as usize][l].to_le_bytes());
+                    }
+                    self.issue_store(wf, addr, data, delay, ctx);
+                    delay += 1;
+                }
+            }
+        }
+    }
+
+    fn issue_load(
+        &mut self,
+        wf: usize,
+        dest: Dest,
+        addr: u64,
+        size: u32,
+        delay: Cycle,
+        ctx: &mut Ctx,
+    ) {
+        self.stats.loads += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.outstanding.push((id, wf, dest));
+        let req = MemReq {
+            id,
+            kind: ReqKind::Read,
+            addr,
+            size,
+            src: ctx.self_id,
+            dst: self.l1,
+            data: vec![],
+            warpts: None,
+        };
+        let l1 = self.l1;
+        ctx.schedule(delay + 1, l1, Msg::Req(Box::new(req)));
+    }
+
+    fn issue_store(&mut self, wf: usize, addr: u64, data: Vec<u8>, delay: Cycle, ctx: &mut Ctx) {
+        // Fire-and-forget under weak consistency: issue and keep
+        // executing; the ack returns a credit.
+        self.stats.stores += 1;
+        self.store_credits -= 1;
+        self.stores_in_flight += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.outstanding.push((id, wf, Dest::Ack));
+        let req = MemReq {
+            id,
+            kind: ReqKind::Write,
+            addr,
+            size: data.len() as u32,
+            src: ctx.self_id,
+            dst: self.l1,
+            data,
+            warpts: None,
+        };
+        let l1 = self.l1;
+        ctx.schedule(delay + 1, l1, Msg::Req(Box::new(req)));
+    }
+
+    fn on_rsp(&mut self, rsp: MemRsp, ctx: &mut Ctx) {
+        let idx = self
+            .outstanding
+            .iter()
+            .position(|&(id, _, _)| id == rsp.id)
+            .unwrap_or_else(|| panic!("{}: response for unknown request {}", self.name, rsp.id));
+        let (_, wf, dest) = self.outstanding.swap_remove(idx);
+        match dest {
+            Dest::Scalar(reg) => {
+                debug_assert_eq!(rsp.kind, ReqKind::Read);
+                let v =
+                    f32::from_le_bytes([rsp.data[0], rsp.data[1], rsp.data[2], rsp.data[3]]);
+                self.wavefronts[wf].regs[reg as usize] = [v; LANES];
+                self.step(wf, 0, ctx);
+            }
+            Dest::Vector(reg, n) => {
+                debug_assert_eq!(rsp.kind, ReqKind::Read);
+                let mut vals = [0.0f32; LANES];
+                for (l, v) in vals.iter_mut().enumerate().take(n as usize) {
+                    let b = &rsp.data[4 * l..4 * l + 4];
+                    *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+                self.wavefronts[wf].regs[reg as usize] = vals;
+                self.step(wf, 0, ctx);
+            }
+            Dest::Ack => {
+                // Store ack: return the credit, resume a parked wavefront.
+                self.stores_in_flight -= 1;
+                self.store_credits += 1;
+                if let Some(parked_wf) = self.parked.pop() {
+                    self.step(parked_wf, 0, ctx);
+                } else if self.phase_complete() {
+                    let driver = self.driver;
+                    ctx.schedule(0, driver, Msg::PhaseDone { cu: ctx.self_id });
+                }
+            }
+        }
+    }
+}
+
+impl Component for Cu {
+    crate::impl_component_any!();
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            Msg::StartPhase { phase } => self.start_phase(phase, ctx),
+            Msg::Rsp(rsp) => self.on_rsp(*rsp, ctx),
+            other => panic!("{}: unexpected {:?}", self.name, other),
+        }
+    }
+}
+
+/// Convenience: total transactions a CU exchanged with its L1 (for the
+/// Core-to-Cache traffic accounting of E10).
+pub fn cu_l1_traffic(stats: &CuStats) -> CacheCtrlStats {
+    CacheCtrlStats {
+        reqs_down: stats.loads + stats.stores,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::GlobalMemory;
+
+    /// Fake L1 that serves from a GlobalMemory after a fixed delay.
+    struct FakeL1 {
+        name: String,
+        mem: crate::dram::SharedMemory,
+        lat: Cycle,
+        pub reqs: u64,
+    }
+    impl Component for FakeL1 {
+        crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            if let Msg::Req(req) = msg {
+                self.reqs += 1;
+                let mut mem = self.mem.borrow_mut();
+                let rsp = match req.kind {
+                    ReqKind::Read => MemRsp {
+                        id: req.id,
+                        kind: ReqKind::Read,
+                        addr: req.addr,
+                        dst: req.src,
+                        data: mem.read_bytes(req.addr, req.size as usize),
+                        ts: None,
+                    },
+                    ReqKind::Write => {
+                        mem.write_bytes(req.addr, &req.data);
+                        MemRsp {
+                            id: req.id,
+                            kind: ReqKind::Write,
+                            addr: req.addr,
+                            dst: req.src,
+                            data: vec![],
+                            ts: None,
+                        }
+                    }
+                };
+                ctx.schedule(self.lat, req.src, Msg::Rsp(Box::new(rsp)));
+            }
+        }
+    }
+
+    /// Driver stub that records PhaseDone times.
+    struct FakeDriver {
+        name: String,
+        pub done_at: Vec<Cycle>,
+    }
+    impl Component for FakeDriver {
+        crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, now: Cycle, msg: Msg, _ctx: &mut Ctx) {
+            if let Msg::PhaseDone { .. } = msg {
+                self.done_at.push(now);
+            }
+        }
+    }
+
+    fn run_program(
+        program: Vec<Vec<Vec<CuOp>>>,
+        init: &[(u64, f32)],
+    ) -> (crate::dram::SharedMemory, Cycle, CuStats, u64) {
+        let mut e = crate::sim::Engine::new();
+        let mem = GlobalMemory::new_shared();
+        for &(a, v) in init {
+            mem.borrow_mut().write_f32(a, v);
+        }
+        let cu_id = CompId(0);
+        let l1_id = CompId(1);
+        let drv_id = CompId(2);
+        e.add(Box::new(Cu::new("cu0", l1_id, drv_id, program, 1)));
+        e.add(Box::new(FakeL1 { name: "l1".into(), mem: mem.clone(), lat: 10, reqs: 0 }));
+        e.add(Box::new(FakeDriver { name: "drv".into(), done_at: vec![] }));
+        e.post(0, cu_id, Msg::StartPhase { phase: 0 });
+        let end = e.run_to_completion();
+        let stats = e.downcast::<Cu>(cu_id).stats;
+        let reqs = e.downcast::<FakeL1>(l1_id).reqs;
+        let done = e.downcast::<FakeDriver>(drv_id).done_at.len() as u64;
+        assert_eq!(done, 1, "driver must get exactly one PhaseDone");
+        (mem, end, stats, reqs)
+    }
+
+    #[test]
+    fn vector_add_program_computes_sum() {
+        // C[i] = A[i] + B[i] for 4 elements, one wavefront.
+        let (a, b, c) = (0x100u64, 0x200u64, 0x300u64);
+        let mut ops = vec![];
+        for i in 0..4u64 {
+            ops.push(CuOp::Ld { reg: 0, addr: a + 4 * i });
+            ops.push(CuOp::Ld { reg: 1, addr: b + 4 * i });
+            ops.push(CuOp::Add { dst: 2, a: 0, b: 1 });
+            ops.push(CuOp::St { addr: c + 4 * i, reg: 2 });
+        }
+        let init: Vec<(u64, f32)> = (0..4u64)
+            .flat_map(|i| [(a + 4 * i, i as f32), (b + 4 * i, 10.0)])
+            .collect();
+        let (mem, _, stats, _) = run_program(vec![vec![ops]], &init);
+        for i in 0..4u64 {
+            assert_eq!(mem.borrow_mut().read_f32(c + 4 * i), i as f32 + 10.0);
+        }
+        assert_eq!(stats.loads, 8);
+        assert_eq!(stats.stores, 4);
+        assert_eq!(stats.alu, 4);
+    }
+
+    #[test]
+    fn wavefronts_overlap_memory_latency() {
+        // 2 wavefronts each doing 4 dependent loads: with MLP=2 the total
+        // time is much less than 2x a single wavefront's serial time.
+        let prog_of = |base: u64| -> Vec<CuOp> {
+            (0..4u64).map(|i| CuOp::Ld { reg: 0, addr: base + 4 * i }).collect()
+        };
+        let (_, t2, _, _) =
+            run_program(vec![vec![prog_of(0x100), prog_of(0x200)]], &[]);
+        let (_, t1, _, _) = run_program(vec![vec![prog_of(0x100)]], &[]);
+        assert!(t2 < 2 * t1, "two wavefronts must overlap: {t2} vs 2x{t1}");
+    }
+
+    #[test]
+    fn min_max_ops() {
+        let ops = vec![
+            CuOp::MovImm { dst: 0, imm: 3.0 },
+            CuOp::MovImm { dst: 1, imm: -2.0 },
+            CuOp::Min { dst: 2, a: 0, b: 1 },
+            CuOp::Max { dst: 3, a: 0, b: 1 },
+            CuOp::St { addr: 0x10, reg: 2 },
+            CuOp::St { addr: 0x14, reg: 3 },
+        ];
+        let (mem, _, _, _) = run_program(vec![vec![ops]], &[]);
+        assert_eq!(mem.borrow_mut().read_f32(0x10), -2.0);
+        assert_eq!(mem.borrow_mut().read_f32(0x14), 3.0);
+    }
+
+    #[test]
+    fn delay_op_adds_time_without_traffic() {
+        let fast = vec![CuOp::St { addr: 0, reg: 0 }];
+        let slow = vec![CuOp::Delay { cycles: 5000 }, CuOp::St { addr: 0, reg: 0 }];
+        let (_, t_fast, _, reqs_fast) = run_program(vec![vec![fast]], &[]);
+        let (_, t_slow, stats, reqs_slow) = run_program(vec![vec![slow]], &[]);
+        assert!(t_slow >= t_fast + 5000);
+        assert_eq!(reqs_fast, reqs_slow);
+        assert_eq!(stats.delay_cycles, 5000);
+    }
+
+    #[test]
+    fn empty_phase_reports_done_immediately() {
+        let (_, t, _, reqs) = run_program(vec![vec![]], &[]);
+        assert_eq!(reqs, 0);
+        assert_eq!(t, 0);
+    }
+
+    #[test]
+    fn sub_and_mul() {
+        let ops = vec![
+            CuOp::MovImm { dst: 0, imm: 7.0 },
+            CuOp::MovImm { dst: 1, imm: 4.0 },
+            CuOp::Sub { dst: 2, a: 0, b: 1 },
+            CuOp::Mul { dst: 3, a: 2, b: 1 },
+            CuOp::St { addr: 0x20, reg: 3 },
+        ];
+        let (mem, _, _, _) = run_program(vec![vec![ops]], &[]);
+        assert_eq!(mem.borrow_mut().read_f32(0x20), 12.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! GPU front-end: compute units executing wavefront micro-programs
+//! (DESIGN.md S14).
+//!
+//! Instead of emulating the GCN3 ISA, workloads are compiled (by
+//! `workloads/*`) into tiny register-machine programs over f32 values.
+//! The data flowing through the simulated cache hierarchy is *real*: a
+//! store writes the value computed from previously loaded ones, so the
+//! final memory image is checkable against the XLA golden model.
+
+pub mod cu;
+
+pub use cu::{Cu, CuOp, CuStats};

@@ -1,0 +1,214 @@
+//! Switches and network fabric (DESIGN.md S3).
+//!
+//! Two instances matter for the paper:
+//!
+//! * the **PCIe switch** of the RDMA topologies (Fig. 1): 16 GT/s x 16 bit
+//!   per transfer = 32 GB/s unidirectional, high latency;
+//! * the **switch complex** of MGPU-SM (§3.1/§4.1): connects every GPU's
+//!   L2 banks to every HBM stack; per-GPU L2-to-MM bandwidth 256 GB/s,
+//!   aggregate capped by the per-stack HBM links (341 GB/s each).
+//!
+//! A [`Switch`] is a pure router: messages carry their final destination
+//! (`dst`), the switch looks up the next hop and forwards, paying the next
+//! hop link's serialization + latency. Multi-hop paths compose switches.
+
+use std::collections::HashMap;
+
+use crate::sim::{CompId, Component, Ctx, Cycle, LinkId, Msg};
+
+/// Next hop for a destination: (link to traverse, component to deliver to).
+pub type Hop = (LinkId, CompId);
+
+/// A crossbar switch with a static routing table.
+pub struct Switch {
+    name: String,
+    routes: HashMap<CompId, Hop>,
+    default_route: Option<Hop>,
+    /// Messages forwarded (metrics).
+    pub forwarded: u64,
+    /// Bytes forwarded (metrics).
+    pub bytes: u64,
+}
+
+impl Switch {
+    pub fn new(name: impl Into<String>) -> Self {
+        Switch {
+            name: name.into(),
+            routes: HashMap::new(),
+            default_route: None,
+            forwarded: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Route traffic destined for `dst` through `hop`.
+    pub fn add_route(&mut self, dst: CompId, hop: Hop) {
+        self.routes.insert(dst, hop);
+    }
+
+    /// Fallback next hop for unknown destinations (e.g. "toward the other
+    /// switch" in multi-hop fabrics).
+    pub fn set_default_route(&mut self, hop: Hop) {
+        self.default_route = Some(hop);
+    }
+
+    fn hop_for(&self, dst: CompId) -> Hop {
+        self.routes
+            .get(&dst)
+            .copied()
+            .or(self.default_route)
+            .unwrap_or_else(|| panic!("{}: no route to {:?}", self.name, dst))
+    }
+
+    fn forward(&mut self, dst: CompId, bytes: u64, msg: Msg, ctx: &mut Ctx) {
+        let (link, next) = self.hop_for(dst);
+        self.forwarded += 1;
+        self.bytes += bytes;
+        ctx.send(link, next, bytes, msg);
+    }
+}
+
+impl Component for Switch {
+    crate::impl_component_any!();
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        match &msg {
+            Msg::Req(req) => {
+                let (dst, bytes) = (req.dst, req.wire_bytes());
+                self.forward(dst, bytes, msg, ctx);
+            }
+            Msg::Rsp(rsp) => {
+                let (dst, bytes) = (rsp.dst, rsp.wire_bytes());
+                self.forward(dst, bytes, msg, ctx);
+            }
+            Msg::Inv { dst, .. } => {
+                let dst = *dst;
+                self.forward(dst, 16, msg, ctx);
+            }
+            Msg::InvAck { dst, .. } => {
+                let dst = *dst;
+                self.forward(dst, 8, msg, ctx);
+            }
+            other => panic!("{}: cannot route {:?}", self.name, other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::msg::{MemReq, MemRsp, ReqKind};
+    use crate::sim::{Engine, Link};
+
+    /// Sink that records deliveries.
+    struct Sink {
+        name: String,
+        pub got: Vec<(Cycle, u64)>, // (time, req id)
+    }
+    impl Component for Sink {
+    crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, now: Cycle, msg: Msg, _ctx: &mut Ctx) {
+            match msg {
+                Msg::Req(r) => self.got.push((now, r.id)),
+                Msg::Rsp(r) => self.got.push((now, r.id)),
+                _ => {}
+            }
+        }
+    }
+
+    fn req(id: u64, dst: CompId) -> Msg {
+        Msg::Req(Box::new(MemReq {
+            id,
+            kind: ReqKind::Read,
+            addr: 0x40,
+            size: 64,
+            src: CompId(0),
+            dst,
+            data: vec![],
+            warpts: None,
+        }))
+    }
+
+    #[test]
+    fn routes_by_destination() {
+        let mut e = Engine::new();
+        let l_a = e.add_link(Link::new("sw->a", 5, 32));
+        let l_b = e.add_link(Link::new("sw->b", 50, 32));
+        let sw_id = CompId(0);
+        let a_id = CompId(1);
+        let b_id = CompId(2);
+        let mut sw = Switch::new("sw");
+        sw.add_route(a_id, (l_a, a_id));
+        sw.add_route(b_id, (l_b, b_id));
+        e.add(Box::new(sw));
+        e.add(Box::new(Sink { name: "a".into(), got: vec![] }));
+        e.add(Box::new(Sink { name: "b".into(), got: vec![] }));
+        e.post(0, sw_id, req(1, a_id));
+        e.post(0, sw_id, req(2, b_id));
+        e.run_to_completion();
+        // 12-byte read request: 1 serialization cycle + latency.
+        let a = e.component(a_id);
+        let _ = a; // sinks checked via downcast-free approach below
+        // Instead verify link counters.
+        assert_eq!(e.link(l_a).msgs_sent, 1);
+        assert_eq!(e.link(l_b).msgs_sent, 1);
+    }
+
+    #[test]
+    fn default_route_used_for_unknown_dst() {
+        let mut e = Engine::new();
+        let l = e.add_link(Link::wire("sw->hub", 3));
+        let sw_id = CompId(0);
+        let hub_id = CompId(1);
+        let mut sw = Switch::new("sw");
+        sw.set_default_route((l, hub_id));
+        e.add(Box::new(sw));
+        e.add(Box::new(Sink { name: "hub".into(), got: vec![] }));
+        e.post(0, sw_id, req(9, CompId(77)));
+        e.run_to_completion();
+        assert_eq!(e.link(l).msgs_sent, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no route")]
+    fn unroutable_panics() {
+        let mut e = Engine::new();
+        let sw_id = CompId(0);
+        e.add(Box::new(Switch::new("sw")));
+        e.post(0, sw_id, req(1, CompId(5)));
+        e.run_to_completion();
+    }
+
+    #[test]
+    fn responses_route_on_rsp_dst() {
+        let mut e = Engine::new();
+        let l = e.add_link(Link::new("sw->a", 2, 64));
+        let sw_id = CompId(0);
+        let a_id = CompId(1);
+        let mut sw = Switch::new("sw");
+        sw.add_route(a_id, (l, a_id));
+        e.add(Box::new(sw));
+        e.add(Box::new(Sink { name: "a".into(), got: vec![] }));
+        e.post(
+            0,
+            sw_id,
+            Msg::Rsp(Box::new(MemRsp {
+                id: 3,
+                kind: ReqKind::Read,
+                addr: 0,
+                dst: a_id,
+                data: vec![0; 64],
+                ts: None,
+            })),
+        );
+        e.run_to_completion();
+        assert_eq!(e.link(l).msgs_sent, 1);
+        assert_eq!(e.link(l).bytes_sent, 72); // 64 payload + 8 header
+    }
+}

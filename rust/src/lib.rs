@@ -1,0 +1,28 @@
+//! HALCONE: a hardware-level timestamp-based cache coherence scheme for
+//! multi-GPU systems — full-system reproduction.
+//!
+//! This crate contains:
+//! - a cycle-level discrete-event MGPU simulator ([`sim`], [`mem`], [`gpu`],
+//!   [`interconnect`], [`dram`]),
+//! - the HALCONE timestamp coherence protocol and its baselines
+//!   ([`coherence`], [`tsu`]),
+//! - workload models for the paper's standard + Xtreme benchmarks
+//!   ([`workloads`]),
+//! - a PJRT runtime that executes AOT-compiled JAX/Pallas kernels as the
+//!   functional golden model ([`runtime`]),
+//! - the experiment coordinator, config system and metrics
+//!   ([`coordinator`], [`config`], [`metrics`]).
+
+pub mod coherence;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod gpu;
+pub mod interconnect;
+pub mod mem;
+pub mod metrics;
+pub mod proptools;
+pub mod runtime;
+pub mod sim;
+pub mod tsu;
+pub mod workloads;

@@ -1,0 +1,255 @@
+//! HALCONE CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   run          simulate one workload under one configuration
+//!   compare      run every §4.1 preset on a workload, report speedups
+//!   verify       run workloads under HALCONE and check against the
+//!                XLA/Pallas golden artifacts + Rust references
+//!   print-config show the Table 2 configuration (E2)
+//!   list         available workloads, presets and artifacts
+//!
+//! Argument parsing is hand-rolled (no clap in the offline registry).
+
+use std::process::ExitCode;
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_workload;
+use halcone::runtime::Runtime;
+use halcone::workloads::{STANDARD, XTREME};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: halcone <command> [options]\n\
+         \n\
+         commands:\n\
+           run          --workload NAME [--preset P] [--set k=v ...]\n\
+           compare      --workload NAME [--presets A,B,...] [--set k=v ...]\n\
+           verify       [--workload NAME|all] [--artifacts DIR] [--set k=v ...]\n\
+           print-config [--preset P] [--set k=v ...]\n\
+           list\n\
+         \n\
+         common options:\n\
+           --preset P        one of {presets:?}\n\
+           --config FILE     key=value config file (preset= line allowed)\n\
+           --set key=value   override any config key (repeatable)\n\
+           --artifacts DIR   AOT artifact directory (default: artifacts)\n",
+        presets = SystemConfig::PRESETS
+    );
+    std::process::exit(2)
+}
+
+struct Args {
+    command: String,
+    workload: Option<String>,
+    preset: Option<String>,
+    presets: Option<Vec<String>>,
+    config_file: Option<String>,
+    sets: Vec<(String, String)>,
+    artifacts: String,
+}
+
+fn parse_args() -> Args {
+    let mut argv = std::env::args().skip(1);
+    let command = argv.next().unwrap_or_else(|| usage());
+    let mut a = Args {
+        command,
+        workload: None,
+        preset: None,
+        presets: None,
+        config_file: None,
+        sets: vec![],
+        artifacts: "artifacts".into(),
+    };
+    while let Some(flag) = argv.next() {
+        let mut val = |name: &str| {
+            argv.next().unwrap_or_else(|| {
+                eprintln!("missing value for {name}");
+                usage()
+            })
+        };
+        match flag.as_str() {
+            "--workload" | "-w" => a.workload = Some(val("--workload")),
+            "--preset" | "-p" => a.preset = Some(val("--preset")),
+            "--presets" => {
+                a.presets = Some(val("--presets").split(',').map(String::from).collect())
+            }
+            "--config" => a.config_file = Some(val("--config")),
+            "--artifacts" => a.artifacts = val("--artifacts"),
+            "--set" | "-s" => {
+                let kv = val("--set");
+                match kv.split_once('=') {
+                    Some((k, v)) => a.sets.push((k.trim().into(), v.trim().into())),
+                    None => {
+                        eprintln!("--set wants key=value, got '{kv}'");
+                        usage()
+                    }
+                }
+            }
+            "--help" | "-h" => usage(),
+            other => {
+                eprintln!("unknown flag '{other}'");
+                usage()
+            }
+        }
+    }
+    a
+}
+
+fn build_config(a: &Args) -> SystemConfig {
+    let mut cfg = if let Some(f) = &a.config_file {
+        let text = std::fs::read_to_string(f).unwrap_or_else(|e| {
+            eprintln!("reading {f}: {e}");
+            std::process::exit(2)
+        });
+        SystemConfig::parse(&text).unwrap_or_else(|e| {
+            eprintln!("{f}: {e}");
+            std::process::exit(2)
+        })
+    } else if let Some(p) = &a.preset {
+        SystemConfig::preset(p)
+    } else {
+        SystemConfig::default()
+    };
+    for (k, v) in &a.sets {
+        if let Err(e) = cfg.set(k, v) {
+            eprintln!("--set {k}={v}: {e}");
+            std::process::exit(2);
+        }
+    }
+    cfg
+}
+
+fn open_runtime(a: &Args) -> Option<Runtime> {
+    match Runtime::open(&a.artifacts) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("note: artifact runtime unavailable ({e:#}); artifact checks skipped");
+            None
+        }
+    }
+}
+
+fn cmd_run(a: &Args) -> ExitCode {
+    let Some(workload) = &a.workload else {
+        eprintln!("run: --workload required");
+        usage()
+    };
+    let cfg = build_config(a);
+    let mut rt = open_runtime(a);
+    let res = run_workload(&cfg, workload, rt.as_mut());
+    println!("{}", res.summary());
+    println!(
+        "  mm reads/writes: {}/{}  pcie bytes: {}  mem-net bytes: {}  host: {:.3}s ({:.1}M events/s)",
+        res.metrics.mm_reads,
+        res.metrics.mm_writes,
+        res.metrics.pcie_bytes,
+        res.metrics.mem_bytes,
+        res.metrics.host_seconds,
+        res.metrics.events as f64 / res.metrics.host_seconds.max(1e-9) / 1e6,
+    );
+    for c in &res.checks {
+        println!(
+            "  check[{}] {} max_err={:.2e} {}",
+            c.kind,
+            if c.passed { "ok  " } else { "FAIL" },
+            c.max_err,
+            c.desc
+        );
+    }
+    if res.all_passed() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_compare(a: &Args) -> ExitCode {
+    let Some(workload) = &a.workload else {
+        eprintln!("compare: --workload required");
+        usage()
+    };
+    let presets: Vec<String> = a
+        .presets
+        .clone()
+        .unwrap_or_else(|| SystemConfig::PRESETS.iter().map(|s| s.to_string()).collect());
+    let mut rt = open_runtime(a);
+    let mut baseline = None;
+    let mut ok = true;
+    println!(
+        "{:<18} {:>14} {:>9} {:>10} {:>10}",
+        "config", "cycles", "speedup", "l1->l2", "l2->mm"
+    );
+    for p in &presets {
+        let mut cfg = SystemConfig::preset(p);
+        for (k, v) in &a.sets {
+            if let Err(e) = cfg.set(k, v) {
+                eprintln!("--set {k}={v}: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+        let res = run_workload(&cfg, workload, rt.as_mut());
+        let base = *baseline.get_or_insert(res.metrics.cycles);
+        println!(
+            "{:<18} {:>14} {:>8.2}x {:>10} {:>10}{}",
+            p,
+            res.metrics.cycles,
+            base as f64 / res.metrics.cycles as f64,
+            res.metrics.l1_l2_transactions(),
+            res.metrics.l2_mm_transactions(),
+            if res.all_passed() { "" } else { "  CHECKS FAILED" }
+        );
+        ok &= res.all_passed();
+    }
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_verify(a: &Args) -> ExitCode {
+    let names: Vec<&str> = match a.workload.as_deref() {
+        None | Some("all") => STANDARD.iter().chain(XTREME.iter()).copied().collect(),
+        Some(w) => vec![w],
+    };
+    let cfg = build_config(a);
+    let mut rt = open_runtime(a);
+    let mut ok = true;
+    for name in names {
+        let res = run_workload(&cfg, name, rt.as_mut());
+        println!("{}", res.summary());
+        ok &= res.all_passed();
+    }
+    println!("verify: {}", if ok { "ALL CHECKS PASSED" } else { "FAILURES" });
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn cmd_list(a: &Args) -> ExitCode {
+    println!("workloads (standard): {STANDARD:?}");
+    println!("workloads (xtreme):   {XTREME:?}");
+    println!("presets:              {:?}", SystemConfig::PRESETS);
+    match Runtime::open(&a.artifacts) {
+        Ok(rt) => println!("artifacts:            {:?}", rt.artifacts()),
+        Err(_) => println!("artifacts:            (none — run `make artifacts`)"),
+    }
+    ExitCode::SUCCESS
+}
+
+fn main() -> ExitCode {
+    let args = parse_args();
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "compare" => cmd_compare(&args),
+        "verify" => cmd_verify(&args),
+        "print-config" => {
+            println!("{}", build_config(&args).describe());
+            ExitCode::SUCCESS
+        }
+        "list" => cmd_list(&args),
+        _ => usage(),
+    }
+}

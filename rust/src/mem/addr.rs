@@ -1,0 +1,178 @@
+//! Physical address mapping.
+//!
+//! Two topologies (paper §4.1):
+//!
+//! * **SharedMem (MGPU-SM)** — one flat physical address space interleaved
+//!   across all HBM stacks at 4 KB page granularity ("we allocate memory by
+//!   interleaving 4 KB pages across all the memory modules").
+//! * **Rdma** — each GPU owns a contiguous partition of the address space,
+//!   itself page-interleaved across that GPU's local stacks; accesses to a
+//!   remote partition cross the PCIe switch.
+//!
+//! Within a GPU, cache lines are interleaved across the L2 banks.
+
+/// Which MGPU topology the address map describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    SharedMem,
+    Rdma,
+}
+
+/// Address decomposition rules for one MGPU system instance.
+#[derive(Clone, Debug)]
+pub struct AddrMap {
+    pub topology: Topology,
+    pub n_gpus: u32,
+    /// HBM stacks per GPU (SharedMem: stacks are global = n_gpus * this
+    /// only when `shared_stacks` is false; the paper's example uses a fixed
+    /// shared pool, see `total_stacks`).
+    pub stacks_per_gpu: u32,
+    /// L2 banks per GPU.
+    pub l2_banks: u32,
+    /// Bytes per GPU partition (Rdma) — also sizes the flat space.
+    pub gpu_mem_bytes: u64,
+    /// Page interleave granularity.
+    pub page: u64,
+    /// Cache line size.
+    pub line: u64,
+}
+
+impl AddrMap {
+    pub fn new(
+        topology: Topology,
+        n_gpus: u32,
+        stacks_per_gpu: u32,
+        l2_banks: u32,
+        gpu_mem_bytes: u64,
+    ) -> Self {
+        AddrMap {
+            topology,
+            n_gpus,
+            stacks_per_gpu,
+            l2_banks,
+            gpu_mem_bytes,
+            page: 4096,
+            line: super::LINE,
+        }
+    }
+
+    /// Total number of memory controllers / HBM stacks in the system.
+    pub fn total_stacks(&self) -> u32 {
+        self.n_gpus * self.stacks_per_gpu
+    }
+
+    /// Total addressable bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.gpu_mem_bytes * self.n_gpus as u64
+    }
+
+    /// Align an address down to its line base.
+    pub fn line_base(&self, addr: u64) -> u64 {
+        addr & !(self.line - 1)
+    }
+
+    /// The GPU owning `addr`'s partition (Rdma home / HMG home node).
+    /// In SharedMem the notion still exists for data-placement decisions
+    /// but carries no NUMA cost.
+    pub fn home_gpu(&self, addr: u64) -> u32 {
+        ((addr / self.gpu_mem_bytes) as u32).min(self.n_gpus - 1)
+    }
+
+    /// Global index of the HBM stack (= memory controller) serving `addr`.
+    pub fn stack_of(&self, addr: u64) -> u32 {
+        match self.topology {
+            Topology::SharedMem => {
+                // Flat space: pages interleave across ALL stacks.
+                ((addr / self.page) % self.total_stacks() as u64) as u32
+            }
+            Topology::Rdma => {
+                // Partitioned: pages interleave across the owner's stacks.
+                let gpu = self.home_gpu(addr);
+                let local = (addr % self.gpu_mem_bytes) / self.page;
+                gpu * self.stacks_per_gpu + (local % self.stacks_per_gpu as u64) as u32
+            }
+        }
+    }
+
+    /// L2 bank index within a GPU for `addr` (line-interleaved).
+    pub fn l2_bank_of(&self, addr: u64) -> u32 {
+        ((addr / self.line) % self.l2_banks as u64) as u32
+    }
+
+    /// Whether `addr` is local to `gpu` (always true under SharedMem).
+    pub fn is_local(&self, gpu: u32, addr: u64) -> bool {
+        match self.topology {
+            Topology::SharedMem => true,
+            Topology::Rdma => self.home_gpu(addr) == gpu,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sm4() -> AddrMap {
+        AddrMap::new(Topology::SharedMem, 4, 8, 8, 512 << 20)
+    }
+
+    fn rdma4() -> AddrMap {
+        AddrMap::new(Topology::Rdma, 4, 8, 8, 512 << 20)
+    }
+
+    #[test]
+    fn shared_mem_interleaves_pages_across_all_stacks() {
+        let m = sm4();
+        assert_eq!(m.total_stacks(), 32);
+        let stacks: Vec<u32> = (0..64u64).map(|p| m.stack_of(p * 4096)).collect();
+        // First 32 pages hit each stack exactly once, round-robin.
+        assert_eq!(stacks[..32], (0..32).collect::<Vec<u32>>()[..]);
+        assert_eq!(stacks[32], 0);
+        // Within one page, same stack.
+        assert_eq!(m.stack_of(5 * 4096 + 64), m.stack_of(5 * 4096));
+    }
+
+    #[test]
+    fn rdma_partitions_by_gpu() {
+        let m = rdma4();
+        let part = 512u64 << 20;
+        assert_eq!(m.home_gpu(0), 0);
+        assert_eq!(m.home_gpu(part - 1), 0);
+        assert_eq!(m.home_gpu(part), 1);
+        assert_eq!(m.home_gpu(3 * part + 7), 3);
+        assert!(m.is_local(1, part + 100));
+        assert!(!m.is_local(0, part + 100));
+        // Stacks stay inside the owner's range [gpu*8, gpu*8+8).
+        for p in 0..32u64 {
+            let s = m.stack_of(2 * part + p * 4096);
+            assert!((16..24).contains(&s), "stack {s} outside gpu2");
+        }
+    }
+
+    #[test]
+    fn l2_banks_line_interleave() {
+        let m = sm4();
+        let banks: Vec<u32> = (0..16u64).map(|l| m.l2_bank_of(l * 64)).collect();
+        assert_eq!(banks[..8], (0..8).collect::<Vec<u32>>()[..]);
+        assert_eq!(banks[8], 0);
+        // Sub-line offsets do not change the bank.
+        assert_eq!(m.l2_bank_of(64 + 60), m.l2_bank_of(64));
+    }
+
+    #[test]
+    fn line_base_masks_offset() {
+        let m = sm4();
+        assert_eq!(m.line_base(0), 0);
+        assert_eq!(m.line_base(63), 0);
+        assert_eq!(m.line_base(64), 64);
+        assert_eq!(m.line_base(130), 128);
+    }
+
+    #[test]
+    fn shared_mem_is_always_local() {
+        let m = sm4();
+        for gpu in 0..4 {
+            assert!(m.is_local(gpu, 3 * (512 << 20) + 5));
+        }
+    }
+}

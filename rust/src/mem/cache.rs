@@ -1,0 +1,352 @@
+//! Set-associative cache array with true-LRU replacement and per-line
+//! protocol metadata.
+//!
+//! The array is *storage only*: controllers (coherence/*.rs) implement the
+//! protocol FSMs on top. Lines carry real data bytes so the simulator is
+//! functionally correct, not just timing-correct — the final memory image
+//! is checked against the XLA golden model (DESIGN.md S19).
+
+use crate::mem::LINE;
+
+/// Geometry of a cache array.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheParams {
+    pub size_bytes: u64,
+    pub ways: u32,
+    pub line: u64,
+}
+
+impl CacheParams {
+    pub fn new(size_bytes: u64, ways: u32) -> Self {
+        CacheParams { size_bytes, ways, line: LINE }
+    }
+
+    pub fn sets(&self) -> u64 {
+        self.size_bytes / (self.line * self.ways as u64)
+    }
+}
+
+/// One resident cache line.
+#[derive(Clone, Debug)]
+pub struct Line<M> {
+    pub tag: u64,
+    pub dirty: bool,
+    /// LRU stamp: larger = more recently used.
+    lru: u64,
+    pub data: Box<[u8]>,
+    pub meta: M,
+}
+
+/// Why `insert` displaced a line (metrics: capacity/conflict vs coherency).
+#[derive(Clone, Debug)]
+pub struct Eviction<M> {
+    pub addr: u64,
+    pub dirty: bool,
+    pub data: Box<[u8]>,
+    pub meta: M,
+}
+
+/// Set-associative cache storage.
+#[derive(Clone, Debug)]
+pub struct CacheArray<M> {
+    params: CacheParams,
+    sets: u64,
+    /// `sets * ways` slots, row-major by set.
+    slots: Vec<Option<Line<M>>>,
+    /// Global LRU counter.
+    clock: u64,
+    /// Accesses that hit (metrics).
+    pub hits: u64,
+    /// Accesses that missed (metrics).
+    pub misses: u64,
+}
+
+impl<M> CacheArray<M> {
+    pub fn new(params: CacheParams) -> Self {
+        let sets = params.sets();
+        assert!(sets > 0, "cache too small for geometry: {params:?}");
+        assert!(sets.is_power_of_two(), "set count must be a power of two, got {sets}");
+        let mut slots = Vec::new();
+        slots.resize_with((sets * params.ways as u64) as usize, || None);
+        CacheArray { params, sets, slots, clock: 0, hits: 0, misses: 0 }
+    }
+
+    pub fn params(&self) -> &CacheParams {
+        &self.params
+    }
+
+    fn set_of(&self, addr: u64) -> u64 {
+        (addr / self.params.line) & (self.sets - 1)
+    }
+
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr / self.params.line / self.sets
+    }
+
+    fn set_range(&self, set: u64) -> std::ops::Range<usize> {
+        let start = (set * self.params.ways as u64) as usize;
+        start..start + self.params.ways as usize
+    }
+
+    /// Reconstruct the line-aligned address of a resident line.
+    fn addr_of(&self, set: u64, tag: u64) -> u64 {
+        (tag * self.sets + set) * self.params.line
+    }
+
+    /// Look up `addr`; on hit, touch LRU and return the line.
+    pub fn lookup(&mut self, addr: u64) -> Option<&mut Line<M>> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        let range = self.set_range(set);
+        self.clock += 1;
+        let clock = self.clock;
+        let slot = self.slots[range]
+            .iter_mut()
+            .find(|s| s.as_ref().is_some_and(|l| l.tag == tag))?;
+        let line = slot.as_mut().unwrap();
+        line.lru = clock;
+        Some(line)
+    }
+
+    /// Look up without touching LRU or counters (controller peeks).
+    pub fn peek(&self, addr: u64) -> Option<&Line<M>> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        self.slots[self.set_range(set)]
+            .iter()
+            .flatten()
+            .find(|l| l.tag == tag)
+    }
+
+    /// Record a hit/miss for metrics (controllers decide what counts:
+    /// a tag hit with an expired lease is a *coherency* miss, not a hit).
+    pub fn record(&mut self, hit: bool) {
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+    }
+
+    /// Insert a line for `addr`, evicting the set's LRU victim if full.
+    /// Returns the eviction (with its line-aligned address) if one occurred.
+    pub fn insert(&mut self, addr: u64, data: Box<[u8]>, dirty: bool, meta: M) -> Option<Eviction<M>> {
+        debug_assert_eq!(addr % self.params.line, 0, "insert wants line-aligned addr");
+        debug_assert_eq!(data.len() as u64, self.params.line);
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        self.clock += 1;
+        let clock = self.clock;
+        let range = self.set_range(set);
+
+        // Same-tag replacement (refill of an existing line).
+        if let Some(slot) = self.slots[range.clone()]
+            .iter_mut()
+            .find(|s| s.as_ref().is_some_and(|l| l.tag == tag))
+        {
+            let line = slot.as_mut().unwrap();
+            line.data = data;
+            line.dirty = dirty;
+            line.meta = meta;
+            line.lru = clock;
+            return None;
+        }
+
+        // Free slot?
+        if let Some(slot) = self.slots[range.clone()].iter_mut().find(|s| s.is_none()) {
+            *slot = Some(Line { tag, dirty, lru: clock, data, meta });
+            return None;
+        }
+
+        // Evict LRU.
+        let victim_idx = range
+            .clone()
+            .min_by_key(|&i| self.slots[i].as_ref().unwrap().lru)
+            .unwrap();
+        let victim = self.slots[victim_idx].take().unwrap();
+        self.slots[victim_idx] = Some(Line { tag, dirty, lru: clock, data, meta });
+        Some(Eviction {
+            addr: self.addr_of(set, victim.tag),
+            dirty: victim.dirty,
+            data: victim.data,
+            meta: victim.meta,
+        })
+    }
+
+    /// Would inserting `addr` evict a line? Returns the victim's
+    /// (line-aligned address, dirty) without modifying anything. Used by
+    /// write-back controllers that must drain the victim *before* the fill
+    /// (paper §5.1: "first, the L2 performs a write to MM ... only then the
+    /// L2 can service the pending read or write transactions").
+    pub fn would_evict(&self, addr: u64) -> Option<(u64, bool)> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        let range = self.set_range(set);
+        let mut lru_best: Option<(u64, u64, bool)> = None; // (lru, addr, dirty)
+        for i in range {
+            match &self.slots[i] {
+                None => return None, // free slot: no eviction
+                Some(l) if l.tag == tag => return None, // in-place refill
+                Some(l) => {
+                    let cand = (l.lru, self.addr_of(set, l.tag), l.dirty);
+                    if lru_best.is_none_or(|(lru, _, _)| cand.0 < lru) {
+                        lru_best = Some(cand);
+                    }
+                }
+            }
+        }
+        lru_best.map(|(_, a, d)| (a, d))
+    }
+
+    /// Drop `addr`'s line if resident; returns it.
+    pub fn invalidate(&mut self, addr: u64) -> Option<Eviction<M>> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        let range = self.set_range(set);
+        let idx = range.filter(|&i| {
+            self.slots[i].as_ref().is_some_and(|l| l.tag == tag)
+        }).next()?;
+        let line = self.slots[idx].take().unwrap();
+        Some(Eviction { addr: self.addr_of(set, line.tag), dirty: line.dirty, data: line.data, meta: line.meta })
+    }
+
+    /// Drain every resident line (fence flushes); preserves nothing.
+    pub fn drain(&mut self) -> Vec<Eviction<M>> {
+        let mut out = Vec::new();
+        for set in 0..self.sets {
+            for i in self.set_range(set) {
+                if let Some(line) = self.slots[i].take() {
+                    out.push(Eviction {
+                        addr: self.addr_of(set, line.tag),
+                        dirty: line.dirty,
+                        data: line.data,
+                        meta: line.meta,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Visit every resident line (fence cts updates, WB scans).
+    pub fn for_each_mut(&mut self, mut f: impl FnMut(u64, &mut Line<M>)) {
+        for set in 0..self.sets {
+            for i in self.set_range(set) {
+                if let Some(line) = self.slots[i].as_mut() {
+                    let addr = (line.tag * self.sets + set) * self.params.line;
+                    f(addr, line);
+                }
+            }
+        }
+    }
+
+    /// Number of resident lines.
+    pub fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr(size: u64, ways: u32) -> CacheArray<u32> {
+        CacheArray::new(CacheParams::new(size, ways))
+    }
+
+    fn line_data(fill: u8) -> Box<[u8]> {
+        vec![fill; 64].into_boxed_slice()
+    }
+
+    #[test]
+    fn geometry_16kb_4way() {
+        // Paper Table 2: L1 vector cache 16 KB 4-way, 64 B lines -> 64 sets.
+        let a = arr(16 << 10, 4);
+        assert_eq!(a.params().sets(), 64);
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut a = arr(4096, 4);
+        assert!(a.lookup(0x40).is_none());
+        a.insert(0x40, line_data(7), false, 1);
+        let line = a.lookup(0x40).expect("hit");
+        assert_eq!(line.data[0], 7);
+        assert_eq!(line.meta, 1);
+        // Different offset within the same line also hits via line_base
+        // handled by controllers; the array expects aligned addrs for
+        // insert but lookup masks internally through set/tag math.
+        assert!(a.lookup(0x40 + 4).is_some());
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 1 set, 2 ways: 128-byte cache.
+        let mut a = arr(128, 2);
+        a.insert(0, line_data(1), false, 0);
+        a.insert(64, line_data(2), false, 0);
+        a.lookup(0); // touch line 0 -> line 64 becomes LRU
+        let ev = a.insert(128, line_data(3), true, 0).expect("eviction");
+        assert_eq!(ev.addr, 64);
+        assert!(a.peek(0).is_some());
+        assert!(a.peek(64).is_none());
+        assert!(a.peek(128).is_some());
+    }
+
+    #[test]
+    fn conflict_misses_within_one_set() {
+        // 4 sets x 1 way; lines 0, 256 (4 sets * 64) collide in set 0.
+        let mut a = arr(256, 1);
+        a.insert(0, line_data(1), false, 0);
+        let ev = a.insert(256, line_data(2), false, 0).expect("conflict eviction");
+        assert_eq!(ev.addr, 0);
+    }
+
+    #[test]
+    fn same_tag_insert_replaces_in_place() {
+        let mut a = arr(4096, 4);
+        a.insert(0x80, line_data(1), false, 9);
+        assert!(a.insert(0x80, line_data(2), true, 10).is_none());
+        let l = a.peek(0x80).unwrap();
+        assert_eq!(l.data[0], 2);
+        assert!(l.dirty);
+        assert_eq!(l.meta, 10);
+        assert_eq!(a.occupancy(), 1);
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut a = arr(4096, 4);
+        a.insert(0x100, line_data(5), true, 0);
+        let ev = a.invalidate(0x100).expect("was resident");
+        assert!(ev.dirty);
+        assert_eq!(ev.addr, 0x100);
+        assert!(a.peek(0x100).is_none());
+        assert!(a.invalidate(0x100).is_none());
+    }
+
+    #[test]
+    fn drain_returns_everything_with_addresses() {
+        let mut a = arr(1024, 2);
+        for i in 0..8u64 {
+            a.insert(i * 64, line_data(i as u8), i % 2 == 0, 0);
+        }
+        let mut drained = a.drain();
+        drained.sort_by_key(|e| e.addr);
+        assert_eq!(drained.len(), 8);
+        for (i, e) in drained.iter().enumerate() {
+            assert_eq!(e.addr, i as u64 * 64);
+            assert_eq!(e.data[0], i as u8);
+        }
+        assert_eq!(a.occupancy(), 0);
+    }
+
+    #[test]
+    fn addr_reconstruction_roundtrip() {
+        let mut a = arr(16 << 10, 4);
+        // Large tags: address beyond 1 GB.
+        let addr = (1u64 << 30) + 0x1fc0;
+        a.insert(addr, line_data(3), true, 0);
+        let mut seen = None;
+        a.for_each_mut(|la, l| {
+            assert!(l.dirty);
+            seen = Some(la);
+        });
+        assert_eq!(seen, Some(addr));
+    }
+}

@@ -1,0 +1,15 @@
+//! Memory-system building blocks shared by every cache level and protocol:
+//! address mapping (page interleave across HBM stacks, bank interleave
+//! across L2 banks, RDMA partitioning), the set-associative cache array,
+//! and the miss-status-holding-register (MSHR) file.
+
+pub mod addr;
+pub mod cache;
+pub mod mshr;
+
+pub use addr::AddrMap;
+pub use cache::{CacheArray, CacheParams, Line};
+pub use mshr::{Mshr, MshrEntry};
+
+/// Cache line size in bytes (paper §3.2.6 assumes 64 B blocks).
+pub const LINE: u64 = 64;

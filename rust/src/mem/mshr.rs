@@ -1,0 +1,161 @@
+//! Miss-Status Holding Registers.
+//!
+//! An MSHR entry exists for every line with an outstanding fill or a
+//! locked write (HALCONE locks a block from the write hit until the
+//! lower level's timestamps arrive — paper Alg. 4/5). Requests arriving
+//! for a line with an active entry are queued on it and replayed when the
+//! entry retires; same-line fills are merged into one downstream request.
+
+use std::collections::HashMap;
+
+use crate::sim::msg::MemReq;
+
+/// Why the entry was allocated (controllers replay differently).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MshrKind {
+    /// Read fill outstanding.
+    Fill,
+    /// Write forwarded downstream; block locked until timestamps return.
+    WriteLock,
+}
+
+/// One in-flight line.
+#[derive(Debug)]
+pub struct MshrEntry {
+    pub kind: MshrKind,
+    /// The request that allocated the entry.
+    pub primary: MemReq,
+    /// Requests that arrived while the entry was active, in order.
+    pub waiters: Vec<MemReq>,
+}
+
+/// The MSHR file for one cache controller.
+#[derive(Debug, Default)]
+pub struct Mshr {
+    entries: HashMap<u64, MshrEntry>,
+    capacity: usize,
+    /// Peak simultaneous entries (metrics).
+    pub peak: usize,
+    /// Total merges onto existing entries (metrics).
+    pub merges: u64,
+}
+
+impl Mshr {
+    pub fn new(capacity: usize) -> Self {
+        Mshr { entries: HashMap::new(), capacity, peak: 0, merges: 0 }
+    }
+
+    /// Whether a new entry can be allocated.
+    pub fn has_free(&self) -> bool {
+        self.entries.len() < self.capacity
+    }
+
+    /// Active entry for `line_addr`, if any.
+    pub fn get(&self, line_addr: u64) -> Option<&MshrEntry> {
+        self.entries.get(&line_addr)
+    }
+
+    pub fn get_mut(&mut self, line_addr: u64) -> Option<&mut MshrEntry> {
+        self.entries.get_mut(&line_addr)
+    }
+
+    /// Allocate an entry; panics if one exists (controller bug) or the file
+    /// is full (controllers must check `has_free` and stall otherwise).
+    pub fn allocate(&mut self, line_addr: u64, kind: MshrKind, primary: MemReq) {
+        assert!(self.has_free(), "MSHR overflow at {line_addr:#x}");
+        let prev = self.entries.insert(
+            line_addr,
+            MshrEntry { kind, primary, waiters: Vec::new() },
+        );
+        assert!(prev.is_none(), "duplicate MSHR entry for {line_addr:#x}");
+        self.peak = self.peak.max(self.entries.len());
+    }
+
+    /// Queue `req` behind the active entry for `line_addr`.
+    pub fn merge(&mut self, line_addr: u64, req: MemReq) {
+        self.merges += 1;
+        self.entries
+            .get_mut(&line_addr)
+            .unwrap_or_else(|| panic!("merge without entry for {line_addr:#x}"))
+            .waiters
+            .push(req);
+    }
+
+    /// Retire the entry, returning it for replay.
+    pub fn retire(&mut self, line_addr: u64) -> MshrEntry {
+        self.entries
+            .remove(&line_addr)
+            .unwrap_or_else(|| panic!("retire without entry for {line_addr:#x}"))
+    }
+
+    /// Number of active entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::CompId;
+    use crate::sim::msg::ReqKind;
+
+    fn req(id: u64, addr: u64) -> MemReq {
+        MemReq {
+            id,
+            kind: ReqKind::Read,
+            addr,
+            size: 4,
+            src: CompId(0),
+            dst: CompId(1),
+            data: vec![],
+            warpts: None,
+        }
+    }
+
+    #[test]
+    fn allocate_merge_retire_preserves_order() {
+        let mut m = Mshr::new(4);
+        m.allocate(0x40, MshrKind::Fill, req(1, 0x40));
+        m.merge(0x40, req(2, 0x44));
+        m.merge(0x40, req(3, 0x48));
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.merges, 2);
+        let e = m.retire(0x40);
+        assert_eq!(e.primary.id, 1);
+        let ids: Vec<u64> = e.waiters.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3]);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn capacity_gates_allocation() {
+        let mut m = Mshr::new(2);
+        m.allocate(0x00, MshrKind::Fill, req(1, 0));
+        assert!(m.has_free());
+        m.allocate(0x40, MshrKind::WriteLock, req(2, 0x40));
+        assert!(!m.has_free());
+        m.retire(0x00);
+        assert!(m.has_free());
+        assert_eq!(m.peak, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate MSHR entry")]
+    fn duplicate_allocation_panics() {
+        let mut m = Mshr::new(4);
+        m.allocate(0x40, MshrKind::Fill, req(1, 0x40));
+        m.allocate(0x40, MshrKind::Fill, req(2, 0x40));
+    }
+
+    #[test]
+    fn kinds_are_tracked() {
+        let mut m = Mshr::new(4);
+        m.allocate(0x80, MshrKind::WriteLock, req(9, 0x80));
+        assert_eq!(m.get(0x80).unwrap().kind, MshrKind::WriteLock);
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal benchmark statistics harness (criterion is unavailable in the
+//! offline registry — DESIGN.md S21).
+//!
+//! Used by the `rust/benches/*` binaries (`harness = false`): warm up,
+//! run `iters` timed iterations, report median and MAD. Simulation
+//! experiments are deterministic, so a handful of iterations suffices for
+//! host-time numbers; simulated-cycle outputs are exact.
+
+use std::time::Instant;
+
+/// Result of a timed measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub median_s: f64,
+    /// Median absolute deviation.
+    pub mad_s: f64,
+    pub iters: usize,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement { median_s: median, mad_s: devs[devs.len() / 2], iters: samples.len() }
+}
+
+/// Fixed-width table printer for bench output (the "same rows the paper
+/// reports" requirement): pass header once, then rows.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Self {
+        assert_eq!(headers.len(), widths.len());
+        let mut line = String::new();
+        for (h, w) in headers.iter().zip(widths) {
+            line.push_str(&format!("{h:>w$} ", w = w));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+        Table { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{c:>w$} ", w = *w));
+        }
+        println!("{line}");
+    }
+}
+
+/// Format a ratio as the paper does ("4.6x").
+pub fn fmt_x(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_positive_median() {
+        let m = measure(1, 5, || (0..1000u64).sum::<u64>());
+        assert!(m.median_s >= 0.0);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn fmt_x_two_decimals() {
+        assert_eq!(fmt_x(4.6), "4.60x");
+        assert_eq!(fmt_x(0.168), "0.17x");
+    }
+}

@@ -1,0 +1,152 @@
+//! Metrics: per-controller counters and whole-run aggregation.
+//!
+//! The paper's evaluation reports three quantity families:
+//! runtime (speed-up), L2\$<->MM transaction counts (Fig. 7b, 8c) and
+//! L1\$<->L2\$ transaction counts (Fig. 7c). Every cache controller and
+//! memory controller keeps a [`CacheCtrlStats`]/`MemCtrlStats`; the
+//! coordinator sweeps them into a [`RunMetrics`] after the run.
+
+pub mod bench;
+
+/// Counters kept by every cache controller (L1 and L2, all protocols).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheCtrlStats {
+    /// Requests received from the level above (CU for L1, L1 for L2).
+    pub reqs_in: u64,
+    /// Responses sent back up.
+    pub rsps_out: u64,
+    /// Requests sent to the level below (L2 for L1, MM for L2).
+    pub reqs_down: u64,
+    /// Responses received from below.
+    pub rsps_down: u64,
+    /// Lease-valid (or plain) hits.
+    pub hits: u64,
+    /// Misses with no tag match (compulsory/capacity/conflict).
+    pub misses: u64,
+    /// Tag match but lease expired (HALCONE) or invalidated (HMG).
+    pub coherency_misses: u64,
+    /// Requests merged onto in-flight MSHR entries.
+    pub mshr_merges: u64,
+    /// Bytes sent downstream (request traffic).
+    pub bytes_down: u64,
+    /// Bytes sent upstream (response traffic).
+    pub bytes_up: u64,
+    /// Write-backs issued (WB policies / fences).
+    pub writebacks: u64,
+    /// HMG: invalidations sent (home) or received (sharer).
+    pub invalidations: u64,
+}
+
+impl CacheCtrlStats {
+    /// Total transactions exchanged with the level below (the paper's
+    /// "number of transactions" metric counts requests + responses).
+    pub fn down_transactions(&self) -> u64 {
+        self.reqs_down + self.rsps_down
+    }
+
+    /// Total transactions exchanged with the level above.
+    pub fn up_transactions(&self) -> u64 {
+        self.reqs_in + self.rsps_out
+    }
+
+    pub fn accumulate(&mut self, o: &CacheCtrlStats) {
+        self.reqs_in += o.reqs_in;
+        self.rsps_out += o.rsps_out;
+        self.reqs_down += o.reqs_down;
+        self.rsps_down += o.rsps_down;
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.coherency_misses += o.coherency_misses;
+        self.mshr_merges += o.mshr_merges;
+        self.bytes_down += o.bytes_down;
+        self.bytes_up += o.bytes_up;
+        self.writebacks += o.writebacks;
+        self.invalidations += o.invalidations;
+    }
+}
+
+/// Whole-run results assembled by the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// End-to-end simulated cycles (includes copy phases and fences).
+    pub cycles: u64,
+    /// Events the engine dispatched (simulator perf, not paper metric).
+    pub events: u64,
+    /// Wall-clock seconds the simulation took (simulator perf).
+    pub host_seconds: f64,
+    /// Aggregated L1 controller stats.
+    pub l1: CacheCtrlStats,
+    /// Aggregated L2 controller stats.
+    pub l2: CacheCtrlStats,
+    /// MM reads + writes served.
+    pub mm_reads: u64,
+    pub mm_writes: u64,
+    /// TSU counters (0 when coherence is off).
+    pub tsu_lookups: u64,
+    pub tsu_evictions: u64,
+    /// Bytes moved over inter-GPU / PCIe links (RDMA configs).
+    pub pcie_bytes: u64,
+    /// Bytes moved L2<->MM.
+    pub mem_bytes: u64,
+}
+
+impl RunMetrics {
+    /// Paper Fig. 7(b): L2$ <-> MM transactions.
+    pub fn l2_mm_transactions(&self) -> u64 {
+        self.l2.down_transactions()
+    }
+
+    /// Paper Fig. 7(c): L1$ <-> L2$ transactions.
+    pub fn l1_l2_transactions(&self) -> u64 {
+        self.l1.down_transactions()
+    }
+
+    /// Speed-up of `self` relative to a baseline run.
+    pub fn speedup_vs(&self, baseline: &RunMetrics) -> f64 {
+        baseline.cycles as f64 / self.cycles as f64
+    }
+}
+
+/// Geometric mean (the paper's "Mean" bars).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transactions_sum_reqs_and_rsps() {
+        let s = CacheCtrlStats { reqs_down: 10, rsps_down: 8, ..Default::default() };
+        assert_eq!(s.down_transactions(), 18);
+    }
+
+    #[test]
+    fn accumulate_adds_fieldwise() {
+        let mut a = CacheCtrlStats { hits: 1, misses: 2, ..Default::default() };
+        let b = CacheCtrlStats { hits: 10, coherency_misses: 5, ..Default::default() };
+        a.accumulate(&b);
+        assert_eq!(a.hits, 11);
+        assert_eq!(a.misses, 2);
+        assert_eq!(a.coherency_misses, 5);
+    }
+
+    #[test]
+    fn speedup_is_baseline_over_self() {
+        let fast = RunMetrics { cycles: 100, ..Default::default() };
+        let slow = RunMetrics { cycles: 460, ..Default::default() };
+        assert!((fast.speedup_vs(&slow) - 4.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_matches_hand_computation() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+}

@@ -1,0 +1,74 @@
+//! Minimal property-testing harness (proptest is unavailable in the
+//! offline registry — DESIGN.md S20).
+//!
+//! A property is a closure from a seeded [`Rng`] to `Result<(), String>`;
+//! [`check`] runs it across many derived seeds and reports the first
+//! failing seed, which reproduces deterministically (no shrinking — the
+//! failing seed plus the generator is enough to replay and debug).
+
+pub use crate::workloads::Rng;
+
+/// Number of cases [`check`] runs by default.
+pub const DEFAULT_CASES: u64 = 64;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`; panics with the
+/// failing seed and message on the first violation.
+pub fn check_with(
+    name: &str,
+    base_seed: u64,
+    cases: u64,
+    mut prop: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+        let mut rng = Rng(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (seed {seed:#x}, case {case}): {msg}");
+        }
+    }
+}
+
+/// [`check_with`] with the default case count.
+pub fn check(name: &str, base_seed: u64, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    check_with(name, base_seed, DEFAULT_CASES, prop);
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("sum commutes", 1, |rng| {
+            let (a, b) = (rng.next_f32(), rng.next_f32());
+            prop_assert!(a + b == b + a, "{a} + {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn seeds_vary_across_cases() {
+        let mut seen = std::collections::HashSet::new();
+        check_with("seed variety", 3, 32, |rng| {
+            seen.insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.len(), 32);
+    }
+}

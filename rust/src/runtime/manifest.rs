@@ -1,0 +1,122 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`).
+//!
+//! Line format: `name;in=float32[64x64];float32[64];out=float32[64]`
+//! — `;`-separated specs, the first prefixed `in=`, the first of the
+//! output group prefixed `out=`.
+
+use anyhow::{bail, Context, Result};
+
+/// Shape + dtype of one artifact argument.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    fn parse(s: &str) -> Result<TensorSpec> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .with_context(|| format!("bad tensor spec '{s}'"))?;
+        let dims_s = rest.strip_suffix(']').with_context(|| format!("bad spec '{s}'"))?;
+        let dims = if dims_s.is_empty() {
+            vec![]
+        } else {
+            dims_s
+                .split('x')
+                .map(|d| d.parse::<usize>().with_context(|| format!("bad dim in '{s}'")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype: dtype.to_string(), dims })
+    }
+}
+
+/// One artifact's signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parse the whole manifest body.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSig>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        out.push(
+            parse_line(line).with_context(|| format!("manifest line {}", lineno + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+fn parse_line(line: &str) -> Result<ArtifactSig> {
+    let mut parts = line.split(';');
+    let name = parts.next().context("missing name")?.to_string();
+    let mut inputs = Vec::new();
+    let mut outputs = Vec::new();
+    let mut in_outputs = false;
+    for p in parts {
+        let spec_s = if let Some(rest) = p.strip_prefix("in=") {
+            in_outputs = false;
+            rest
+        } else if let Some(rest) = p.strip_prefix("out=") {
+            in_outputs = true;
+            rest
+        } else {
+            p
+        };
+        let spec = TensorSpec::parse(spec_s)?;
+        if in_outputs {
+            outputs.push(spec);
+        } else {
+            inputs.push(spec);
+        }
+    }
+    if inputs.is_empty() || outputs.is_empty() {
+        bail!("artifact '{name}' needs at least one input and one output");
+    }
+    Ok(ArtifactSig { name, inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_in_out() {
+        let sigs =
+            parse_manifest("relu_16384;in=float32[16384];out=float32[16384]\n").unwrap();
+        assert_eq!(sigs.len(), 1);
+        assert_eq!(sigs[0].name, "relu_16384");
+        assert_eq!(sigs[0].inputs[0].dims, vec![16384]);
+        assert_eq!(sigs[0].outputs[0].elements(), 16384);
+    }
+
+    #[test]
+    fn parses_multi_arg_and_matrix() {
+        let sigs = parse_manifest(
+            "bicg_256;in=float32[256x256];float32[256];float32[256];out=float32[256];float32[256]",
+        )
+        .unwrap();
+        let s = &sigs[0];
+        assert_eq!(s.inputs.len(), 3);
+        assert_eq!(s.outputs.len(), 2);
+        assert_eq!(s.inputs[0].dims, vec![256, 256]);
+        assert_eq!(s.inputs[0].elements(), 65536);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_manifest("x;in=foo;out=float32[4]").is_err());
+        assert!(parse_manifest("x;in=float32[2]").is_err());
+    }
+}

@@ -1,0 +1,342 @@
+//! The event loop: components, scheduling context, and the engine itself.
+
+use std::collections::BinaryHeap;
+
+use crate::sim::link::{Link, LinkId};
+use crate::sim::msg::{Event, Msg};
+use crate::sim::Cycle;
+
+/// Index of a component registered with the [`Engine`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CompId(pub u32);
+
+impl CompId {
+    pub const NONE: CompId = CompId(u32::MAX);
+}
+
+/// A simulated hardware component (cache, CU, memory controller, ...).
+///
+/// Components interact exclusively by exchanging [`Msg`]s through the
+/// [`Ctx`]: either scheduling a future event on themselves/others
+/// (`ctx.schedule`) or sending through a bandwidth-modelled link
+/// (`ctx.send`).
+pub trait Component {
+    /// Stable diagnostic name ("gpu0.cu3.l1", "mm2", ...).
+    fn name(&self) -> &str;
+
+    /// Deliver `msg` at cycle `now`.
+    fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx);
+
+    /// Downcast support (setup and metrics extraction).
+    fn as_any(&self) -> &dyn std::any::Any;
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+/// Implements the `as_any`/`as_any_mut` boilerplate for a component type.
+#[macro_export]
+macro_rules! impl_component_any {
+    () => {
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    };
+}
+
+/// Scheduling context handed to [`Component::handle`].
+///
+/// Borrow discipline: while a component runs, the engine lends out the
+/// event queue and link table (never other components), so a component can
+/// freely mutate itself and schedule traffic without aliasing.
+pub struct Ctx<'a> {
+    now: Cycle,
+    seq: &'a mut u64,
+    queue: &'a mut BinaryHeap<Event>,
+    links: &'a mut [Link],
+    /// Id of the component currently executing.
+    pub self_id: CompId,
+}
+
+impl Ctx<'_> {
+    /// Current simulation time.
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    /// Deliver `msg` to `target` after `delay` cycles (no link modelled).
+    pub fn schedule(&mut self, delay: Cycle, target: CompId, msg: Msg) {
+        let seq = *self.seq;
+        *self.seq += 1;
+        self.queue.push(Event { time: self.now + delay, seq, target, msg });
+    }
+
+    /// Send `msg` of `bytes` to `target` through `link`; delivery time is
+    /// determined by the link's serialization + latency model.
+    pub fn send(&mut self, link: LinkId, target: CompId, bytes: u64, msg: Msg) {
+        let deliver = self.links[link.0 as usize].accept(self.now, bytes);
+        let seq = *self.seq;
+        *self.seq += 1;
+        self.queue.push(Event { time: deliver, seq, target, msg });
+    }
+
+    /// Like [`Ctx::send`], but the message enters the link only after
+    /// `delay` cycles of local processing (e.g. a memory controller's fixed
+    /// access latency before the response starts back across the network).
+    pub fn send_delayed(
+        &mut self,
+        delay: Cycle,
+        link: LinkId,
+        target: CompId,
+        bytes: u64,
+        msg: Msg,
+    ) {
+        let deliver = self.links[link.0 as usize].accept(self.now + delay, bytes);
+        let seq = *self.seq;
+        *self.seq += 1;
+        self.queue.push(Event { time: deliver, seq, target, msg });
+    }
+
+    /// Inspect a link (e.g. for backpressure decisions).
+    pub fn link(&self, link: LinkId) -> &Link {
+        &self.links[link.0 as usize]
+    }
+}
+
+/// The discrete-event engine: owns components, links and the event queue.
+pub struct Engine {
+    comps: Vec<Option<Box<dyn Component>>>,
+    links: Vec<Link>,
+    queue: BinaryHeap<Event>,
+    seq: u64,
+    now: Cycle,
+    events_processed: u64,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine {
+            comps: Vec::new(),
+            links: Vec::new(),
+            queue: BinaryHeap::with_capacity(1 << 16),
+            seq: 0,
+            now: 0,
+            events_processed: 0,
+        }
+    }
+
+    /// Register a component; returns its id.
+    pub fn add(&mut self, c: Box<dyn Component>) -> CompId {
+        let id = CompId(self.comps.len() as u32);
+        self.comps.push(Some(c));
+        id
+    }
+
+    /// Register a link; returns its id.
+    pub fn add_link(&mut self, l: Link) -> LinkId {
+        let id = LinkId(self.links.len() as u32);
+        self.links.push(l);
+        id
+    }
+
+    /// Schedule an initial event from outside any component.
+    pub fn post(&mut self, time: Cycle, target: CompId, msg: Msg) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Event { time, seq, target, msg });
+    }
+
+    /// Run until the queue drains or `limit` cycles elapse.
+    ///
+    /// Returns the final simulation time. Panics if an event targets an
+    /// unknown component (a wiring bug, not a runtime condition).
+    pub fn run(&mut self, limit: Cycle) -> Cycle {
+        while let Some(ev) = self.queue.pop() {
+            if ev.time > limit {
+                // Put it back: callers may resume with a higher limit.
+                self.queue.push(ev);
+                self.now = limit;
+                return self.now;
+            }
+            debug_assert!(ev.time >= self.now, "time went backwards");
+            self.now = ev.time;
+            self.events_processed += 1;
+            let idx = ev.target.0 as usize;
+            let mut comp = self.comps[idx]
+                .take()
+                .unwrap_or_else(|| panic!("event for unregistered component {idx}"));
+            let mut ctx = Ctx {
+                now: self.now,
+                seq: &mut self.seq,
+                queue: &mut self.queue,
+                links: &mut self.links,
+                self_id: ev.target,
+            };
+            comp.handle(self.now, ev.msg, &mut ctx);
+            self.comps[idx] = Some(comp);
+        }
+        self.now
+    }
+
+    /// Run until the queue is fully drained (no cycle limit).
+    pub fn run_to_completion(&mut self) -> Cycle {
+        self.run(Cycle::MAX)
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    /// Total events dispatched so far (perf metric).
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Whether any events remain queued.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Immutable access to a component (downcast by the caller).
+    pub fn component(&self, id: CompId) -> &dyn Component {
+        self.comps[id.0 as usize].as_deref().expect("component checked out")
+    }
+
+    /// Mutable access to a component (setup / result extraction only —
+    /// never call from inside `handle`).
+    pub fn component_mut(&mut self, id: CompId) -> &mut Box<dyn Component> {
+        self.comps[id.0 as usize].as_mut().expect("component checked out")
+    }
+
+    /// Typed access to a component (panics on type mismatch — a test or
+    /// coordinator wiring bug).
+    pub fn downcast<T: 'static>(&self, id: CompId) -> &T {
+        self.component(id)
+            .as_any()
+            .downcast_ref::<T>()
+            .unwrap_or_else(|| panic!("component {:?} has unexpected type", id))
+    }
+
+    /// Typed mutable access to a component.
+    pub fn downcast_mut<T: 'static>(&mut self, id: CompId) -> &mut T {
+        self.component_mut(id)
+            .as_any_mut()
+            .downcast_mut::<T>()
+            .unwrap_or_else(|| panic!("component {:?} has unexpected type", id))
+    }
+
+    /// Immutable access to a link's counters.
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0 as usize]
+    }
+
+    /// All links (metrics aggregation).
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ping-pong pair: A sends to B, B replies, N rounds.
+    struct Pinger {
+        name: String,
+        peer: CompId,
+        link: LinkId,
+        remaining: u32,
+        received: u32,
+        last_seen: Cycle,
+    }
+
+    impl Component for Pinger {
+    crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            match msg {
+                Msg::Tick => {
+                    self.received += 1;
+                    self.last_seen = now;
+                    if self.remaining > 0 {
+                        self.remaining -= 1;
+                        ctx.send(self.link, self.peer, 64, Msg::Tick);
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    fn pinger(name: &str, peer: CompId, link: LinkId, remaining: u32) -> Box<Pinger> {
+        Box::new(Pinger {
+            name: name.into(),
+            peer,
+            link,
+            remaining,
+            received: 0,
+            last_seen: 0,
+        })
+    }
+
+    #[test]
+    fn ping_pong_round_trip_timing() {
+        let mut e = Engine::new();
+        let l_ab = e.add_link(Link::new("a->b", 10, 64));
+        let l_ba = e.add_link(Link::new("b->a", 10, 64));
+        // Ids are assigned in insertion order; pre-compute them.
+        let a_id = CompId(0);
+        let b_id = CompId(1);
+        e.add(pinger("a", b_id, l_ab, 3));
+        e.add(pinger("b", a_id, l_ba, 3));
+        e.post(0, a_id, Msg::Tick);
+        let end = e.run_to_completion();
+        // Each hop: 1 cycle serialization + 10 latency = 11.
+        // a@0 -> b@11 -> a@22 -> b@33 -> a@44 -> b@55 -> a@66: a sent 3, b sent 3.
+        assert_eq!(end, 66);
+        assert_eq!(e.events_processed(), 7);
+    }
+
+    #[test]
+    fn run_with_limit_pauses_and_resumes() {
+        let mut e = Engine::new();
+        let l = e.add_link(Link::wire("w", 100));
+        let a_id = CompId(0);
+        let b_id = CompId(1);
+        e.add(pinger("a", b_id, l, 5));
+        e.add(pinger("b", a_id, l, 5));
+        e.post(0, a_id, Msg::Tick);
+        let t = e.run(150);
+        assert_eq!(t, 150);
+        assert!(!e.is_idle());
+        let end = e.run_to_completion();
+        assert!(end > 150);
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn determinism_same_seed_same_trace() {
+        let build_and_run = || {
+            let mut e = Engine::new();
+            let l = e.add_link(Link::new("l", 7, 16));
+            let a_id = CompId(0);
+            let b_id = CompId(1);
+            e.add(pinger("a", b_id, l, 100));
+            e.add(pinger("b", a_id, l, 100));
+            e.post(0, a_id, Msg::Tick);
+            let end = e.run_to_completion();
+            (end, e.events_processed(), e.link(l).bytes_sent)
+        };
+        assert_eq!(build_and_run(), build_and_run());
+    }
+}

@@ -1,0 +1,23 @@
+//! Deterministic discrete-event simulation engine.
+//!
+//! This is the substrate replacing MGPUSim's Akita engine (DESIGN.md S1/S2):
+//! a single-threaded, fully deterministic event loop over *components*
+//! (caches, memory controllers, CUs, switches) connected by
+//! bandwidth-modelled *links*.
+//!
+//! Determinism contract: events fire in `(time, sequence)` order, where the
+//! sequence number is assigned at scheduling time. Two runs of the same
+//! configuration produce identical event interleavings, cycle counts and
+//! memory images — a requirement for the paper's relative-timing
+//! experiments and for reproducible CI.
+
+pub mod engine;
+pub mod link;
+pub mod msg;
+
+pub use engine::{CompId, Component, Ctx, Engine};
+pub use link::{Link, LinkId};
+pub use msg::{MemReq, MemRsp, Msg, ReqId, ReqKind, TsPair};
+
+/// Simulation time in core clock cycles (1 GHz in the paper's Table 2).
+pub type Cycle = u64;

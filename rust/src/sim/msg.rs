@@ -1,0 +1,205 @@
+//! Message types exchanged between simulated components.
+//!
+//! One crate-wide enum keeps dispatch monomorphic and allocation-free on
+//! the hot path (no `Box<dyn Any>`); protocol-specific payloads (HALCONE
+//! timestamps, HMG invalidations) are inline variants/fields.
+
+use crate::sim::engine::CompId;
+use crate::sim::Cycle;
+
+/// Unique id of an in-flight memory request (assigned by the issuer).
+pub type ReqId = u64;
+
+/// Kind of memory access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    Read,
+    Write,
+}
+
+/// Timestamp pair carried by HALCONE responses (`rts`, `wts`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TsPair {
+    pub rts: u64,
+    pub wts: u64,
+}
+
+/// A memory request travelling *down* the hierarchy (CU -> L1 -> L2 -> MM).
+///
+/// `src` is the component to respond to; `id` is echoed in the response.
+/// Word-granularity accesses (from CUs) carry `size <= line`; cache-line
+/// fills use the full line size. `data` carries write payloads.
+#[derive(Clone, Debug)]
+pub struct MemReq {
+    pub id: ReqId,
+    pub kind: ReqKind,
+    pub addr: u64,
+    pub size: u32,
+    pub src: CompId,
+    /// Final destination component; switches route on this.
+    pub dst: CompId,
+    /// Write payload (`size` bytes), empty for reads.
+    pub data: Vec<u8>,
+    /// G-TSC ablation: logical timestamp carried with the request
+    /// (HALCONE eliminates this field; it exists to account the traffic
+    /// delta of CU-level counters, DESIGN.md E10).
+    pub warpts: Option<u64>,
+}
+
+/// A memory response travelling *up* the hierarchy.
+#[derive(Clone, Debug)]
+pub struct MemRsp {
+    pub id: ReqId,
+    pub kind: ReqKind,
+    pub addr: u64,
+    /// Final destination component (the original requester).
+    pub dst: CompId,
+    /// Read payload (line or word), empty for write acks.
+    pub data: Vec<u8>,
+    /// HALCONE: block timestamps assigned by the level below.
+    pub ts: Option<TsPair>,
+}
+
+/// All messages understood by simulated components.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Memory request (downward). Boxed: `Event`s live in the scheduler's
+    /// binary heap, and sift operations move the whole struct — keeping
+    /// `Msg` at pointer size nearly halved heap time (§Perf log).
+    Req(Box<MemReq>),
+    /// Memory response (upward).
+    Rsp(Box<MemRsp>),
+    /// HMG: invalidate `addr`'s line at `dst`; reply `InvAck` to `dir`.
+    Inv { addr: u64, dir: CompId, dst: CompId },
+    /// HMG: invalidation ack for `addr` from sharer `from`, routed to `dst`.
+    InvAck { addr: u64, from: CompId, dst: CompId },
+    /// Driver -> CU: start executing phase `phase`.
+    StartPhase { phase: u32 },
+    /// CU -> Driver: all wavefronts of this CU finished the phase.
+    PhaseDone { cu: CompId },
+    /// Driver -> caches (fence stage 1): report your logical clock.
+    FenceQuery { reply_to: CompId },
+    /// Cache -> Driver: this cache's current cts (and max block rts seen).
+    FenceInfo { from: CompId, cts: u64 },
+    /// Driver -> caches (fence stage 2): apply the fence. Semantics depend
+    /// on the protocol: HALCONE advances cts to `logical_max`; NC flushes +
+    /// invalidates; HMG writes back dirty lines and drops the rest.
+    FenceApply { reply_to: CompId, logical_max: u64 },
+    /// Cache -> Driver: fence completed (all dirty write-backs drained).
+    FenceDone { from: CompId },
+    /// Self-scheduled wakeup (component-internal timer).
+    Tick,
+    /// Bulk DMA transfer completion marker (RDMA copy phases).
+    DmaDone { bytes: u64 },
+}
+
+impl MemReq {
+    /// On-wire size in bytes for link bandwidth accounting: address (8) +
+    /// metadata (4) + payload + optional timestamp (2; G-TSC ablation).
+    pub fn wire_bytes(&self) -> u64 {
+        8 + 4 + self.data.len() as u64 + if self.warpts.is_some() { 2 } else { 0 }
+    }
+}
+
+impl MemRsp {
+    /// On-wire size: ACK (4) + metadata (4) + payload + timestamps
+    /// (2 x 16-bit when present).
+    pub fn wire_bytes(&self) -> u64 {
+        4 + 4 + self.data.len() as u64 + if self.ts.is_some() { 4 } else { 0 }
+    }
+}
+
+/// An event in the queue: deliver `msg` to `target` at `time`.
+#[derive(Debug)]
+pub struct Event {
+    pub time: Cycle,
+    pub seq: u64,
+    pub target: CompId,
+    pub msg: Msg,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first. Ties broken
+        // by sequence number => deterministic FIFO among same-cycle events.
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_ordering_is_time_then_seq() {
+        let e = |time, seq| Event { time, seq, target: CompId(0), msg: Msg::Tick };
+        let mut heap = std::collections::BinaryHeap::new();
+        heap.push(e(5, 0));
+        heap.push(e(3, 2));
+        heap.push(e(3, 1));
+        heap.push(e(7, 3));
+        let order: Vec<(u64, u64)> =
+            std::iter::from_fn(|| heap.pop().map(|ev| (ev.time, ev.seq))).collect();
+        assert_eq!(order, vec![(3, 1), (3, 2), (5, 0), (7, 3)]);
+    }
+
+    #[test]
+    fn wire_bytes_match_paper_overheads() {
+        // Paper §3.2.6: 64B block + 4B ACK + 4B metadata + 8B address;
+        // HALCONE adds 2x16-bit timestamps to responses => +5% read traffic.
+        let read_req = MemReq {
+            id: 0,
+            kind: ReqKind::Read,
+            addr: 0,
+            size: 64,
+            src: CompId(0),
+            dst: CompId(1),
+            data: vec![],
+            warpts: None,
+        };
+        let rsp_nc = MemRsp {
+            id: 0,
+            kind: ReqKind::Read,
+            addr: 0,
+            dst: CompId(0),
+            data: vec![0; 64],
+            ts: None,
+        };
+        let rsp_c = MemRsp {
+            ts: Some(TsPair::default()),
+            ..rsp_nc.clone()
+        };
+        let nc = read_req.wire_bytes() + rsp_nc.wire_bytes();
+        let c = read_req.wire_bytes() + rsp_c.wire_bytes();
+        let overhead = (c - nc) as f64 / nc as f64;
+        assert!(overhead < 0.06, "read transaction overhead {overhead} too big");
+    }
+
+    #[test]
+    fn warpts_adds_request_bytes() {
+        let mut req = MemReq {
+            id: 0,
+            kind: ReqKind::Read,
+            addr: 0,
+            size: 64,
+            src: CompId(0),
+            dst: CompId(1),
+            data: vec![],
+            warpts: None,
+        };
+        let without = req.wire_bytes();
+        req.warpts = Some(7);
+        assert_eq!(req.wire_bytes(), without + 2);
+    }
+}

@@ -1,0 +1,265 @@
+//! Streaming / elementwise workload models: `aes`, `fir`, `rl` (Table 3).
+
+use crate::gpu::CuOp;
+use crate::workloads::{
+    chunk, empty_work, owners, vec_chunks, Alloc, Array, Phase, Rng, Verify, Workload,
+    WorkloadParams,
+};
+
+/// AES (Hetero-Mark) — *compute-bound* streaming: each 16-byte block is
+/// loaded, churned through 10 rounds of table lookups/xors (modelled as a
+/// fixed compute delay; the f32 payload transform is `out = 1.5*in + 2.5`
+/// so the result stays checkable), and stored.
+pub fn aes(p: &WorkloadParams) -> Workload {
+    let own = owners(p);
+    let q = own.len() * p.wavefronts_per_cu as usize * 4;
+    let n = p.scaled(65536, q);
+    let mut alloc = Alloc::new(&p.map);
+    let input = alloc.partitioned("pt", n, &own);
+    let output = alloc.partitioned("ct", n, &own);
+
+    let mut rng = Rng(0xAE5);
+    let iv = rng.vec_f32(n);
+    let init = init_of(&input, &iv);
+
+    let per = n / own.len();
+    let mut work = empty_work(p);
+    for (s, &(gpu, cu)) in own.iter().enumerate() {
+        for (w, (ws, wl)) in chunk(per, p.wavefronts_per_cu as usize).into_iter().enumerate() {
+            let mut ops = vec![
+                CuOp::MovImm { dst: 4, imm: 1.5 },
+                CuOp::MovImm { dst: 5, imm: 2.5 },
+            ];
+            let start = s * per + ws;
+            for (oaddr, i, n) in vec_chunks(&output, start, wl) {
+                // Each 16-byte block costs 10 rounds of table lookups/xors
+                // (compute delay); a 64-byte coalesced access carries four
+                // such blocks.
+                ops.push(CuOp::LdV { reg: 0, addr: input.addr_of(i), n });
+                ops.push(CuOp::Mul { dst: 1, a: 0, b: 4 });
+                ops.push(CuOp::Add { dst: 2, a: 1, b: 5 });
+                ops.push(CuOp::StV { addr: oaddr, reg: 2, n });
+                ops.push(CuOp::Delay { cycles: 120 * n.div_ceil(4) as u32 });
+            }
+            work[gpu as usize][cu][w] = ops;
+        }
+    }
+
+    Workload {
+        name: "aes".into(),
+        init,
+        phases: vec![Phase { name: "encrypt".into(), work }],
+        checks: vec![Verify::Rust {
+            inputs: vec![input.clone()],
+            outputs: vec![output.clone()],
+            golden: Box::new(|ins| {
+                vec![ins[0].iter().map(|x| 1.5 * x + 2.5).collect()]
+            }),
+            tol: 0.0,
+        }],
+        kind: "Compute",
+    }
+}
+
+/// FIR (Hetero-Mark) — *memory-bound*: y[i] = sum_t h[t] * x[i+t] with 16
+/// taps. Heavy spatial reuse on x; h is L1-resident.
+pub fn fir(p: &WorkloadParams) -> Workload {
+    const TAPS: usize = 16;
+    let own = owners(p);
+    let q = own.len() * p.wavefronts_per_cu as usize;
+    let n = p.scaled(65536, q);
+    let mut alloc = Alloc::new(&p.map);
+    // Padded input is contiguous (sliding windows cross slice bounds).
+    let x = Array::contiguous("x", alloc.on_gpu(0, n + TAPS - 1), n + TAPS - 1);
+    let h = Array::contiguous("h", alloc.on_gpu(0, TAPS), TAPS);
+    let y = alloc.partitioned("y", n, &own);
+
+    let mut rng = Rng(0xF14);
+    let xv = rng.vec_f32(n + TAPS - 1);
+    let hv = rng.vec_f32(TAPS);
+    let mut init = init_of(&x, &xv);
+    init.extend(init_of(&h, &hv));
+
+    let per = n / own.len();
+    let mut work = empty_work(p);
+    for (s, &(gpu, cu)) in own.iter().enumerate() {
+        for (w, (ws, wl)) in chunk(per, p.wavefronts_per_cu as usize).into_iter().enumerate() {
+            let start = s * per + ws;
+            let mut ops = Vec::with_capacity(wl * TAPS);
+            // The sliding windows of neighbouring outputs overlap at
+            // arbitrary offsets, so x reads stay scalar (they are L1 hits
+            // after the first touch); outputs pack into coalesced stores.
+            for (oaddr, i0, n) in vec_chunks(&y, start, wl) {
+                for j in 0..n as usize {
+                    let i = i0 + j;
+                    ops.push(CuOp::MovImm { dst: 3, imm: 0.0 });
+                    for t in 0..TAPS {
+                        ops.push(CuOp::Ld { reg: 0, addr: x.addr_of(i + t) });
+                        ops.push(CuOp::Ld { reg: 1, addr: h.addr_of(t) });
+                        ops.push(CuOp::Mul { dst: 2, a: 0, b: 1 });
+                        ops.push(CuOp::Add { dst: 3, a: 3, b: 2 });
+                    }
+                    ops.push(CuOp::Pack { dst: 5, lane: j as u8, src: 3 });
+                }
+                ops.push(CuOp::StV { addr: oaddr, reg: 5, n });
+            }
+            work[gpu as usize][cu][w] = ops;
+        }
+    }
+
+    let mut checks = vec![Verify::Rust {
+        inputs: vec![x.clone(), h.clone()],
+        outputs: vec![y.clone()],
+        golden: Box::new(move |ins| {
+            let (xs, hs) = (&ins[0], &ins[1]);
+            let n = xs.len() - TAPS + 1;
+            let mut out = vec![0.0f32; n];
+            for t in 0..TAPS {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o += hs[t] * xs[i + t];
+                }
+            }
+            vec![out]
+        }),
+        tol: 1e-4,
+    }];
+    if n == 65536 {
+        checks.push(Verify::Artifact {
+            artifact: "fir_65536".into(),
+            inputs: vec![x.clone(), h.clone()],
+            outputs: vec![y.clone()],
+            tol: 1e-4,
+        });
+    }
+
+    Workload {
+        name: "fir".into(),
+        init,
+        phases: vec![Phase { name: "filter".into(), work }],
+        checks,
+        kind: "Memory",
+    }
+}
+
+/// ReLU (DNNMark `rl`) — *memory-bound* pure streaming: out = max(in, 0).
+pub fn relu(p: &WorkloadParams) -> Workload {
+    let own = owners(p);
+    let q = own.len() * p.wavefronts_per_cu as usize;
+    let n = p.scaled(65536, q);
+    let mut alloc = Alloc::new(&p.map);
+    let input = alloc.partitioned("in", n, &own);
+    let output = alloc.partitioned("out", n, &own);
+
+    let mut rng = Rng(0x4E1);
+    let iv = rng.vec_f32(n);
+    let init = init_of(&input, &iv);
+
+    let per = n / own.len();
+    let mut work = empty_work(p);
+    for (s, &(gpu, cu)) in own.iter().enumerate() {
+        for (w, (ws, wl)) in chunk(per, p.wavefronts_per_cu as usize).into_iter().enumerate() {
+            let start = s * per + ws;
+            let mut ops = vec![CuOp::MovImm { dst: 1, imm: 0.0 }];
+            for (oaddr, i, n) in vec_chunks(&output, start, wl) {
+                ops.push(CuOp::LdV { reg: 0, addr: input.addr_of(i), n });
+                ops.push(CuOp::Max { dst: 2, a: 0, b: 1 });
+                ops.push(CuOp::StV { addr: oaddr, reg: 2, n });
+            }
+            work[gpu as usize][cu][w] = ops;
+        }
+    }
+
+    let mut checks = vec![Verify::Rust {
+        inputs: vec![input.clone()],
+        outputs: vec![output.clone()],
+        golden: Box::new(|ins| vec![ins[0].iter().map(|x| x.max(0.0)).collect()]),
+        tol: 0.0,
+    }];
+    if n == 65536 {
+        checks.push(Verify::Artifact {
+            artifact: "relu_65536".into(),
+            inputs: vec![input.clone()],
+            outputs: vec![output.clone()],
+            tol: 0.0,
+        });
+    }
+
+    Workload {
+        name: "rl".into(),
+        init,
+        phases: vec![Phase { name: "relu".into(), work }],
+        checks,
+        kind: "Memory",
+    }
+}
+
+/// Build the init list for a (possibly sliced) array from logical values.
+pub(crate) fn init_of(arr: &Array, vals: &[f32]) -> Vec<(u64, Vec<f32>)> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    for &(base, len) in &arr.slices {
+        out.push((base, vals[off..off + len].to_vec()));
+        off += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::addr::Topology;
+    use crate::mem::AddrMap;
+
+    fn params() -> WorkloadParams {
+        WorkloadParams {
+            n_gpus: 2,
+            cus_per_gpu: 2,
+            wavefronts_per_cu: 2,
+            map: AddrMap::new(Topology::SharedMem, 2, 2, 2, 64 << 20),
+            scale: 0.05,
+        }
+    }
+
+    #[test]
+    fn aes_is_compute_tagged_with_delays() {
+        let w = aes(&params());
+        assert_eq!(w.kind, "Compute");
+        let has_delay = w.phases[0]
+            .work
+            .iter()
+            .flatten()
+            .flatten()
+            .flatten()
+            .any(|op| matches!(op, CuOp::Delay { .. }));
+        assert!(has_delay);
+    }
+
+    #[test]
+    fn fir_reads_overlap_windows() {
+        let w = fir(&params());
+        // Neighbouring outputs share x reads: count distinct Ld addresses
+        // vs total Lds — reuse must be substantial.
+        let mut lds = vec![];
+        for op in w.phases[0].work.iter().flatten().flatten().flatten() {
+            if let CuOp::Ld { addr, .. } = op {
+                lds.push(*addr);
+            }
+        }
+        let total = lds.len();
+        lds.sort_unstable();
+        lds.dedup();
+        assert!(lds.len() * 2 < total, "expect >2x read reuse in FIR");
+    }
+
+    #[test]
+    fn relu_golden_matches_ops_semantics() {
+        let w = relu(&params());
+        match &w.checks[0] {
+            Verify::Rust { golden, .. } => {
+                let out = golden(&[vec![-1.0, 2.0, -0.5, 3.0]]);
+                assert_eq!(out[0], vec![0.0, 2.0, 0.0, 3.0]);
+            }
+            _ => panic!("expected rust check"),
+        }
+    }
+}

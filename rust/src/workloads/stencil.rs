@@ -1,0 +1,252 @@
+//! Stencil / pooling workload models: `conv`, `mp` (Table 3).
+
+use crate::gpu::CuOp;
+use crate::workloads::elementwise::init_of;
+use crate::workloads::{
+    chunk, empty_work, owners, vec_chunks, Alloc, Array, Phase, Rng, Verify, Workload,
+    WorkloadParams,
+};
+
+/// Simple 3x3 'same' convolution (AMDAPPSDK `conv`) — *memory-bound*
+/// stencil with spatial reuse; image rows are block-partitioned across
+/// CUs, so halo rows are read-shared between neighbours.
+pub fn conv3x3(p: &WorkloadParams) -> Workload {
+    let n = p.scaled(256, 32);
+    let own = owners(p);
+    let mut alloc = Alloc::new(&p.map);
+    let img = Array::contiguous("img", alloc.on_gpu(0, n * n), n * n);
+    let k = Array::contiguous("k", alloc.on_gpu(0, 9), 9);
+    let out = Array::contiguous("out", alloc.on_gpu(0, n * n), n * n);
+
+    let mut rng = Rng(0xC0);
+    let iv = rng.vec_f32(n * n);
+    let kv = rng.vec_f32(9);
+    let mut init = init_of(&img, &iv);
+    init.extend(init_of(&k, &kv));
+
+    let mut work = empty_work(p);
+    let rows = chunk(n, own.len());
+    for (s, &(gpu, cu)) in own.iter().enumerate() {
+        let (r0, rl) = rows[s];
+        for (w, (wr, wl)) in chunk(rl, p.wavefronts_per_cu as usize).into_iter().enumerate() {
+            let mut ops = Vec::new();
+            // Halo taps are misaligned across rows, so image reads stay
+            // scalar (heavy L1 reuse); outputs pack into coalesced stores.
+            for i in r0 + wr..r0 + wr + wl {
+                for (oaddr, o0, nn) in vec_chunks(&out, i * n, n) {
+                    for lane in 0..nn as usize {
+                        let j = o0 - i * n + lane;
+                        ops.push(CuOp::MovImm { dst: 3, imm: 0.0 });
+                        for di in 0..3usize {
+                            for dj in 0..3usize {
+                                let (ii, jj) = (i + di, j + dj);
+                                // zero padding: skip out-of-bounds taps
+                                if ii == 0 || jj == 0 || ii > n || jj > n {
+                                    continue;
+                                }
+                                let (ii, jj) = (ii - 1, jj - 1);
+                                ops.push(CuOp::Ld { reg: 0, addr: img.addr_of(ii * n + jj) });
+                                ops.push(CuOp::Ld { reg: 1, addr: k.addr_of(di * 3 + dj) });
+                                ops.push(CuOp::Mul { dst: 2, a: 0, b: 1 });
+                                ops.push(CuOp::Add { dst: 3, a: 3, b: 2 });
+                            }
+                        }
+                        ops.push(CuOp::Pack { dst: 5, lane: lane as u8, src: 3 });
+                    }
+                    ops.push(CuOp::StV { addr: oaddr, reg: 5, n: nn });
+                }
+            }
+            work[gpu as usize][cu][w] = ops;
+        }
+    }
+
+    let mut checks = vec![Verify::Rust {
+        inputs: vec![img.clone(), k.clone()],
+        outputs: vec![out.clone()],
+        golden: Box::new(move |ins| {
+            let (img, k) = (&ins[0], &ins[1]);
+            let mut out = vec![0.0f32; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for di in 0..3usize {
+                        for dj in 0..3usize {
+                            let (ii, jj) = (i + di, j + dj);
+                            if ii == 0 || jj == 0 || ii > n || jj > n {
+                                continue;
+                            }
+                            acc += img[(ii - 1) * n + (jj - 1)] * k[di * 3 + dj];
+                        }
+                    }
+                    out[i * n + j] = acc;
+                }
+            }
+            vec![out]
+        }),
+        tol: 1e-4,
+    }];
+    if n == 256 {
+        checks.push(Verify::Artifact {
+            artifact: "conv3x3_256".into(),
+            inputs: vec![img.clone(), k.clone()],
+            outputs: vec![out.clone()],
+            tol: 1e-4,
+        });
+    }
+
+    Workload {
+        name: "conv".into(),
+        init,
+        phases: vec![Phase { name: "conv3x3".into(), work }],
+        checks,
+        kind: "Memory",
+    }
+}
+
+/// 2x2 max-pooling (DNNMark `mp`) — *compute-tagged* in Table 3 (pooling
+/// layers sit between heavy compute; modelled with a per-output delay).
+pub fn maxpool(p: &WorkloadParams) -> Workload {
+    let n = p.scaled(256, 32); // input is n x n, output (n/2) x (n/2)
+    let on = n / 2;
+    let own = owners(p);
+    let mut alloc = Alloc::new(&p.map);
+    let input = Array::contiguous("in", alloc.on_gpu(0, n * n), n * n);
+    let output = Array::contiguous("out", alloc.on_gpu(0, on * on), on * on);
+
+    let mut rng = Rng(0x3B);
+    let iv = rng.vec_f32(n * n);
+    let init = init_of(&input, &iv);
+
+    let mut work = empty_work(p);
+    let rows = chunk(on, own.len());
+    for (s, &(gpu, cu)) in own.iter().enumerate() {
+        let (r0, rl) = rows[s];
+        for (w, (wr, wl)) in chunk(rl, p.wavefronts_per_cu as usize).into_iter().enumerate() {
+            let mut ops = Vec::new();
+            // 2x2 windows read even/odd lane pairs — scalar reads (L1-hot),
+            // packed coalesced output stores.
+            for oi in r0 + wr..r0 + wr + wl {
+                for (oaddr, o0, nn) in vec_chunks(&output, oi * on, on) {
+                    for lane in 0..nn as usize {
+                        let oj = o0 - oi * on + lane;
+                        let (i, j) = (2 * oi, 2 * oj);
+                        ops.push(CuOp::Ld { reg: 0, addr: input.addr_of(i * n + j) });
+                        ops.push(CuOp::Ld { reg: 1, addr: input.addr_of(i * n + j + 1) });
+                        ops.push(CuOp::Max { dst: 0, a: 0, b: 1 });
+                        ops.push(CuOp::Ld { reg: 1, addr: input.addr_of((i + 1) * n + j) });
+                        ops.push(CuOp::Max { dst: 0, a: 0, b: 1 });
+                        ops.push(CuOp::Ld { reg: 1, addr: input.addr_of((i + 1) * n + j + 1) });
+                        ops.push(CuOp::Max { dst: 0, a: 0, b: 1 });
+                        ops.push(CuOp::Delay { cycles: 20 });
+                        ops.push(CuOp::Pack { dst: 5, lane: lane as u8, src: 0 });
+                    }
+                    ops.push(CuOp::StV { addr: oaddr, reg: 5, n: nn });
+                }
+            }
+            work[gpu as usize][cu][w] = ops;
+        }
+    }
+
+    let mut checks = vec![Verify::Rust {
+        inputs: vec![input.clone()],
+        outputs: vec![output.clone()],
+        golden: Box::new(move |ins| {
+            let x = &ins[0];
+            let mut out = vec![0.0f32; on * on];
+            for oi in 0..on {
+                for oj in 0..on {
+                    let (i, j) = (2 * oi, 2 * oj);
+                    out[oi * on + oj] = x[i * n + j]
+                        .max(x[i * n + j + 1])
+                        .max(x[(i + 1) * n + j])
+                        .max(x[(i + 1) * n + j + 1]);
+                }
+            }
+            vec![out]
+        }),
+        tol: 0.0,
+    }];
+    if n == 256 {
+        checks.push(Verify::Artifact {
+            artifact: "maxpool_256".into(),
+            inputs: vec![input.clone()],
+            outputs: vec![output.clone()],
+            tol: 0.0,
+        });
+    }
+
+    Workload {
+        name: "mp".into(),
+        init,
+        phases: vec![Phase { name: "maxpool".into(), work }],
+        checks,
+        kind: "Compute",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::addr::Topology;
+    use crate::mem::AddrMap;
+
+    fn params() -> WorkloadParams {
+        WorkloadParams {
+            n_gpus: 2,
+            cus_per_gpu: 2,
+            wavefronts_per_cu: 2,
+            map: AddrMap::new(Topology::SharedMem, 2, 2, 2, 64 << 20),
+            scale: 0.25,
+        }
+    }
+
+    #[test]
+    fn conv_golden_identity_kernel() {
+        let w = conv3x3(&params());
+        let n = 64usize;
+        match &w.checks[0] {
+            Verify::Rust { golden, .. } => {
+                let img: Vec<f32> = (0..n * n).map(|i| i as f32).collect();
+                let mut k = vec![0.0f32; 9];
+                k[4] = 1.0; // center tap = identity
+                let out = golden(&[img.clone(), k]);
+                assert_eq!(out[0], img);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn maxpool_output_quarter_size() {
+        let w = maxpool(&params());
+        match &w.checks[0] {
+            Verify::Rust { inputs, outputs, .. } => {
+                assert_eq!(outputs[0].len() * 4, inputs[0].len());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn conv_interior_output_reads_nine_taps() {
+        let w = conv3x3(&params());
+        // Count Lds between consecutive MovImm markers for an interior row.
+        let ops = &w.phases[0].work[0][0][1]; // second wavefront: interior
+        let mut counts = vec![];
+        let mut cur = 0;
+        for op in ops.iter() {
+            match op {
+                CuOp::MovImm { .. } => {
+                    if cur > 0 {
+                        counts.push(cur);
+                    }
+                    cur = 0;
+                }
+                CuOp::Ld { .. } => cur += 1,
+                _ => {}
+            }
+        }
+        // Interior outputs read 9 image taps + 9 kernel taps = 18 loads.
+        assert!(counts.iter().any(|&c| c == 18), "counts: {counts:?}");
+    }
+}

@@ -1,0 +1,228 @@
+//! The Xtreme synthetic suite (paper §4.3.2): C = A + B with enforced
+//! read-write sharing, built to stress the coherence protocol.
+//!
+//! Slicing follows the paper: vectors A, B, C are split into one slice per
+//! CU; slice `s` lives in the partition of the GPU owning that CU (so under
+//! RDMA each CU's slice is local, like the paper's placement).
+//!
+//! * **Xtreme1** — every CU repeats `C_s = A_s + B_s` 10 times, then
+//!   `A_s = C_s + B_s` 10 times. No sharing; the repeated writes push each
+//!   cache's cts forward and self-invalidate previously read blocks.
+//! * **Xtreme2** — after one `C = A + B` pass, CU0 of GPU0 repeatedly
+//!   rewrites *CU1-of-GPU0's* slice (`A_1 = C_1 + B_1` x10): intra-GPU
+//!   SWMR sharing. A final `C = A + B` pass rereads everything.
+//! * **Xtreme3** — same, but the victim slice belongs to a CU of *another
+//!   GPU*: inter-GPU sharing.
+
+use crate::gpu::CuOp;
+use crate::workloads::{
+    chunk, empty_work, owners, vec_chunks, Alloc, Array, Phase, Rng, Verify, Workload,
+    WorkloadParams,
+};
+
+/// Ops for `dst[i] = s1[i] + s2[i]` over logical range [start, start+len),
+/// repeated `reps` times (the repetition is *inside* the kernel, as in the
+/// paper's step (2)/(3) loops). Accesses are wavefront-coalesced: one
+/// vector transaction per cache-line run (the three arrays are laid out
+/// with identical intra-slice alignment, so one chunking serves all).
+fn add_range(
+    dst: &Array,
+    s1: &Array,
+    s2: &Array,
+    start: usize,
+    len: usize,
+    reps: usize,
+) -> Vec<CuOp> {
+    let chunks = vec_chunks(dst, start, len);
+    let mut ops = Vec::with_capacity(chunks.len() * reps * 4);
+    for _ in 0..reps {
+        for &(daddr, i, n) in &chunks {
+            ops.push(CuOp::LdV { reg: 0, addr: s1.addr_of(i), n });
+            ops.push(CuOp::LdV { reg: 1, addr: s2.addr_of(i), n });
+            ops.push(CuOp::Add { dst: 2, a: 0, b: 1 });
+            ops.push(CuOp::StV { addr: daddr, reg: 2, n });
+        }
+    }
+    ops
+}
+
+/// Phase where every CU computes `dst_s = s1_s + s2_s` on its own slice.
+fn all_cu_phase(
+    p: &WorkloadParams,
+    name: &str,
+    dst: &Array,
+    s1: &Array,
+    s2: &Array,
+    reps: usize,
+) -> Phase {
+    let own = owners(p);
+    let per = dst.len() / own.len();
+    let mut work = empty_work(p);
+    for (s, &(gpu, cu)) in own.iter().enumerate() {
+        let slice_start = s * per;
+        for (w, (ws, wl)) in chunk(per, p.wavefronts_per_cu as usize).into_iter().enumerate() {
+            work[gpu as usize][cu][w] =
+                add_range(dst, s1, s2, slice_start + ws, wl, reps);
+        }
+    }
+    Phase { name: name.into(), work }
+}
+
+/// Build Xtreme `variant` (1, 2 or 3).
+pub fn xtreme(p: &WorkloadParams, variant: u8) -> Workload {
+    let own = owners(p);
+    // Paper sweeps 192 KB..96 MB per vector; default here is 64 KB/vector
+    // (16384 f32), scaled by `p.scale` and rounded to a slice multiple.
+    let n = {
+        let q = own.len() * p.wavefronts_per_cu as usize;
+        p.scaled(65536, q)
+    };
+    let per = n / own.len();
+    let mut alloc = Alloc::new(&p.map);
+    let a = alloc.partitioned("A", n, &own);
+    let b = alloc.partitioned("B", n, &own);
+    let c = alloc.partitioned("C", n, &own);
+
+    let mut rng = Rng(0xA11CE + variant as u64);
+    let av = rng.vec_f32(n);
+    let bv = rng.vec_f32(n);
+    let mut init = Vec::new();
+    for (arr, vals) in [(&a, &av), (&b, &bv)] {
+        let mut off = 0;
+        for &(base, len) in &arr.slices {
+            init.push((base, vals[off..off + len].to_vec()));
+            off += len;
+        }
+    }
+
+    // The victim slice for variants 2/3 (paper: CU_X1's slice for Xtreme2,
+    // CU_Y1's for Xtreme3). The writer is always CU0 of GPU0.
+    let victim_slice = match variant {
+        2 => 1usize.min(own.len() - 1), // another CU on GPU0
+        3 => (p.cus_per_gpu as usize + 1).min(own.len() - 1), // a CU on GPU1
+        _ => 0,
+    };
+
+    let mut phases = Vec::new();
+    let mut golden_a = av.clone();
+    let golden_c: Vec<f32>;
+
+    match variant {
+        1 => {
+            phases.push(all_cu_phase(p, "C=A+B x10", &c, &a, &b, 10));
+            phases.push(all_cu_phase(p, "A=C+B x10", &a, &c, &b, 10));
+            // Fixed point: C = A + B, then A = C + B = A + 2B.
+            golden_c = av.iter().zip(&bv).map(|(x, y)| x + y).collect();
+            golden_a = golden_c.iter().zip(&bv).map(|(x, y)| x + y).collect();
+        }
+        2 | 3 => {
+            phases.push(all_cu_phase(p, "C=A+B", &c, &a, &b, 1));
+            // CU0 of GPU0 rewrites the victim slice 10 times.
+            let mut work = empty_work(p);
+            let start = victim_slice * per;
+            let chunks = chunk(per, p.wavefronts_per_cu as usize);
+            for (w, (ws, wl)) in chunks.into_iter().enumerate() {
+                work[0][0][w] = add_range(&a, &c, &b, start + ws, wl, 10);
+            }
+            phases.push(Phase { name: "A_v=C_v+B_v x10 (CU0.0)".into(), work });
+            phases.push(all_cu_phase(p, "C=A+B (reread)", &c, &a, &b, 1));
+            // Golden: A' = A + 2B on the victim slice; C' = A' + B.
+            for i in start..start + per {
+                golden_a[i] = av[i] + 2.0 * bv[i];
+            }
+            golden_c = golden_a.iter().zip(&bv).map(|(x, y)| x + y).collect();
+        }
+        other => panic!("xtreme variant {other}"),
+    }
+
+    let mut checks: Vec<Verify> = Vec::new();
+    let (ga, gc) = (golden_a, golden_c);
+    checks.push(Verify::Rust {
+        inputs: vec![a.clone(), b.clone()],
+        outputs: vec![a.clone(), c.clone()],
+        golden: Box::new(move |_inputs| vec![ga.clone(), gc.clone()]),
+        tol: 0.0,
+    });
+    if variant == 1 && n == 65536 {
+        // Cross-check against the AOT Pallas artifact (end-to-end E2E path).
+        checks.push(Verify::Artifact {
+            artifact: "xtreme_round_65536".into(),
+            inputs: vec![a.clone(), b.clone()],
+            outputs: vec![a.clone(), c.clone()],
+            tol: 0.0,
+        });
+    }
+
+    Workload {
+        name: format!("xtreme{variant}"),
+        init,
+        phases,
+        checks,
+        kind: "Synthetic",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::addr::Topology;
+    use crate::mem::AddrMap;
+
+    fn params() -> WorkloadParams {
+        WorkloadParams {
+            n_gpus: 2,
+            cus_per_gpu: 2,
+            wavefronts_per_cu: 2,
+            map: AddrMap::new(Topology::SharedMem, 2, 2, 2, 64 << 20),
+            scale: 0.05, // tiny
+        }
+    }
+
+    #[test]
+    fn xtreme1_has_two_phases_everyone_works() {
+        let w = xtreme(&params(), 1);
+        assert_eq!(w.phases.len(), 2);
+        for ph in &w.phases {
+            for gw in &ph.work {
+                for cw in gw {
+                    assert!(cw.iter().any(|wf| !wf.is_empty()), "all CUs busy");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xtreme2_middle_phase_only_cu00() {
+        let w = xtreme(&params(), 2);
+        assert_eq!(w.phases.len(), 3);
+        let mid = &w.phases[1];
+        assert!(mid.work[0][0].iter().any(|wf| !wf.is_empty()));
+        assert!(mid.work[0][1].iter().all(|wf| wf.is_empty()));
+        assert!(mid.work[1][0].iter().all(|wf| wf.is_empty()));
+    }
+
+    #[test]
+    fn xtreme3_victim_is_on_other_gpu() {
+        let p = params();
+        let w = xtreme(&p, 3);
+        // The victim slice (cus_per_gpu + 1 = slice 3) belongs to GPU1;
+        // the middle phase writer ops must touch GPU1's partition.
+        let mid = &w.phases[1];
+        let ops = &mid.work[0][0];
+        let touches_gpu1 = ops.iter().flatten().any(|op| match op {
+            CuOp::St { addr, .. } | CuOp::StV { addr, .. } => p.map.home_gpu(*addr) == 1,
+            _ => false,
+        });
+        assert!(touches_gpu1, "xtreme3 middle phase must write a GPU1-homed slice");
+    }
+
+    #[test]
+    fn repetition_multiplies_ops() {
+        let a = Array::contiguous("a", 0x1000, 8);
+        let b = Array::contiguous("b", 0x2000, 8);
+        let c = Array::contiguous("c", 0x3000, 8);
+        let once = add_range(&c, &a, &b, 0, 8, 1).len();
+        let ten = add_range(&c, &a, &b, 0, 8, 10).len();
+        assert_eq!(ten, 10 * once);
+    }
+}

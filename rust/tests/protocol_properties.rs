@@ -1,0 +1,283 @@
+//! Property-based integration tests over the full simulated stack:
+//! random micro-programs executed through every cache hierarchy must
+//! produce exactly the memory image a sequential shadow interpreter
+//! predicts. These are the coordinator-invariant sweeps DESIGN.md S20
+//! promises: any coherence/routing/batching bug that corrupts or loses a
+//! write shows up as a shadow divergence.
+
+use std::collections::HashMap;
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_built;
+use halcone::gpu::cu::LANES;
+use halcone::gpu::CuOp;
+use halcone::prop_assert;
+use halcone::proptools::{check_with, Rng};
+use halcone::workloads::{empty_work, owners, Phase, Verify, Workload, WorkloadParams};
+
+fn small_cfg(preset: &str) -> SystemConfig {
+    let mut cfg = SystemConfig::preset(preset);
+    cfg.n_gpus = 2;
+    cfg.cus_per_gpu = 2;
+    cfg.wavefronts_per_cu = 2;
+    cfg.l2_banks = 2;
+    cfg.stacks_per_gpu = 2;
+    cfg.gpu_mem_bytes = 64 << 20;
+    cfg
+}
+
+/// Sequential shadow interpreter for a single wavefront's program.
+fn shadow_exec(ops: &[CuOp], mem: &mut HashMap<u64, f32>) {
+    let mut regs = [[0.0f32; LANES]; 16];
+    for op in ops {
+        match *op {
+            CuOp::Ld { reg, addr } => regs[reg as usize] = [*mem.get(&addr).unwrap_or(&0.0); LANES],
+            CuOp::LdV { reg, addr, n } => {
+                let mut v = [0.0f32; LANES];
+                for (l, vl) in v.iter_mut().enumerate().take(n as usize) {
+                    *vl = *mem.get(&(addr + 4 * l as u64)).unwrap_or(&0.0);
+                }
+                regs[reg as usize] = v;
+            }
+            CuOp::St { addr, reg } => {
+                mem.insert(addr, regs[reg as usize][0]);
+            }
+            CuOp::StV { addr, reg, n } => {
+                for l in 0..n as usize {
+                    mem.insert(addr + 4 * l as u64, regs[reg as usize][l]);
+                }
+            }
+            CuOp::MovImm { dst, imm } => regs[dst as usize] = [imm; LANES],
+            CuOp::Add { dst, a, b } => {
+                for l in 0..LANES {
+                    regs[dst as usize][l] = regs[a as usize][l] + regs[b as usize][l];
+                }
+            }
+            CuOp::Sub { dst, a, b } => {
+                for l in 0..LANES {
+                    regs[dst as usize][l] = regs[a as usize][l] - regs[b as usize][l];
+                }
+            }
+            CuOp::Mul { dst, a, b } => {
+                for l in 0..LANES {
+                    regs[dst as usize][l] = regs[a as usize][l] * regs[b as usize][l];
+                }
+            }
+            CuOp::Min { dst, a, b } => {
+                for l in 0..LANES {
+                    regs[dst as usize][l] = regs[a as usize][l].min(regs[b as usize][l]);
+                }
+            }
+            CuOp::Max { dst, a, b } => {
+                for l in 0..LANES {
+                    regs[dst as usize][l] = regs[a as usize][l].max(regs[b as usize][l]);
+                }
+            }
+            CuOp::Red { dst, src } => {
+                let s: f32 = regs[src as usize].iter().sum();
+                regs[dst as usize] = [s; LANES];
+            }
+            CuOp::Pack { dst, lane, src } => {
+                let v = regs[src as usize][0];
+                regs[dst as usize][lane as usize] = v;
+            }
+            CuOp::Delay { .. } => {}
+        }
+    }
+}
+
+/// Generate a random single-wavefront program over a private 64-line
+/// region starting at `base`, with value provenance through registers.
+fn random_program(rng: &mut Rng, base: u64, ops_len: usize) -> Vec<CuOp> {
+    let mut ops = vec![CuOp::MovImm { dst: 0, imm: rng.next_f32() }];
+    for _ in 0..ops_len {
+        let addr = base + 4 * rng.below(16 * 64); // 64 lines of f32
+        match rng.below(10) {
+            0..=2 => ops.push(CuOp::Ld { reg: (rng.below(4)) as u8, addr }),
+            3..=4 => {
+                let line_off = (addr / 4) % 16;
+                let n = (rng.below(16 - line_off) + 1) as u8;
+                ops.push(CuOp::LdV { reg: (rng.below(4)) as u8, addr, n });
+            }
+            5..=6 => ops.push(CuOp::St { addr, reg: (rng.below(4)) as u8 }),
+            7 => {
+                let line_off = (addr / 4) % 16;
+                let n = (rng.below(16 - line_off) + 1) as u8;
+                ops.push(CuOp::StV { addr, reg: (rng.below(4)) as u8, n });
+            }
+            8 => ops.push(CuOp::Add {
+                dst: (rng.below(4)) as u8,
+                a: (rng.below(4)) as u8,
+                b: (rng.below(4)) as u8,
+            }),
+            _ => ops.push(CuOp::Mul {
+                dst: (rng.below(4)) as u8,
+                a: (rng.below(4)) as u8,
+                b: (rng.below(4)) as u8,
+            }),
+        }
+    }
+    ops
+}
+
+/// The big invariant: random programs over *disjoint* per-wavefront
+/// regions, run through the full simulated hierarchy, leave memory exactly
+/// as the shadow interpreter predicts — for every §4.1 configuration.
+fn random_trace_memory_check(preset: &'static str, seed: u64) {
+    use halcone::coordinator::topology;
+    use halcone::sim::Msg;
+
+    check_with(&format!("random trace memory [{preset}]"), seed, 10, |rng| {
+        let cfg = small_cfg(preset);
+        let params: WorkloadParams = cfg.workload_params();
+        let own = owners(&params);
+
+        let mut work = empty_work(&params);
+        let mut shadow: HashMap<u64, f32> = HashMap::new();
+        for (s, &(gpu, cu)) in own.iter().enumerate() {
+            for w in 0..params.wavefronts_per_cu as usize {
+                let base = gpu as u64 * cfg.gpu_mem_bytes
+                    + 0x10000
+                    + (s * params.wavefronts_per_cu as usize + w) as u64 * 0x1000;
+                let prog = random_program(rng, base, 80);
+                shadow_exec(&prog, &mut shadow);
+                work[gpu as usize][cu][w] = prog;
+            }
+        }
+
+        let wl = Workload {
+            name: "random".into(),
+            init: vec![],
+            phases: vec![Phase { name: "p0".into(), work }],
+            checks: vec![],
+            kind: "Synthetic",
+        };
+        let mut sys = topology::build(&cfg, wl);
+        sys.engine.post(0, sys.driver, Msg::Tick);
+        sys.engine.run_to_completion();
+
+        let mut mem = sys.mem.borrow_mut();
+        for (&addr, &want) in &shadow {
+            let got = mem.read_f32(addr);
+            prop_assert!(
+                got == want,
+                "addr {addr:#x}: simulated {got} != shadow {want}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_traces_match_shadow_halcone() {
+    random_trace_memory_check("SM-WT-C-HALCONE", 0xB);
+}
+
+#[test]
+fn random_traces_match_shadow_sm_wt_nc() {
+    random_trace_memory_check("SM-WT-NC", 0xC);
+}
+
+#[test]
+fn random_traces_match_shadow_sm_wb_nc() {
+    random_trace_memory_check("SM-WB-NC", 0xD);
+}
+
+#[test]
+fn random_traces_match_shadow_rdma_nc() {
+    random_trace_memory_check("RDMA-WB-NC", 0xE);
+}
+
+#[test]
+fn random_traces_match_shadow_hmg() {
+    random_trace_memory_check("RDMA-WB-C-HMG", 0xF);
+}
+
+/// Cross-phase producer/consumer visibility: phase 0 writes a region from
+/// one GPU, phase 1 reads it from the *other* GPU and copies it; the copy
+/// must equal the original under every protocol (the fence contract).
+#[test]
+fn cross_gpu_producer_consumer_all_presets() {
+    for preset in SystemConfig::PRESETS {
+        check_with(&format!("producer/consumer [{preset}]"), 0x77, 8, |rng| {
+            let cfg = small_cfg(preset);
+            let params: WorkloadParams = cfg.workload_params();
+
+            let src = 0x40000u64; // GPU0 partition
+            let dst = cfg.gpu_mem_bytes + 0x40000; // GPU1 partition
+            let n = 64usize;
+            let vals: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+
+            // Phase 0: GPU0/CU0 writes vals to src.
+            let mut w0 = empty_work(&params);
+            let mut ops = vec![];
+            for (i, v) in vals.iter().enumerate() {
+                ops.push(CuOp::MovImm { dst: 0, imm: *v });
+                ops.push(CuOp::St { addr: src + 4 * i as u64, reg: 0 });
+            }
+            w0[0][0][0] = ops;
+
+            // Phase 1: GPU1/CU1 copies src -> dst.
+            let mut w1 = empty_work(&params);
+            let mut ops = vec![];
+            for i in 0..n {
+                ops.push(CuOp::Ld { reg: 1, addr: src + 4 * i as u64 });
+                ops.push(CuOp::St { addr: dst + 4 * i as u64, reg: 1 });
+            }
+            w1[1][1][0] = ops;
+
+            let wl = Workload {
+                name: "pc".into(),
+                init: vec![],
+                phases: vec![
+                    Phase { name: "produce".into(), work: w0 },
+                    Phase { name: "consume".into(), work: w1 },
+                ],
+                checks: vec![],
+                kind: "Synthetic",
+            };
+
+            use halcone::coordinator::topology;
+            use halcone::sim::Msg;
+            let mut sys = topology::build(&cfg, wl);
+            sys.engine.post(0, sys.driver, Msg::Tick);
+            sys.engine.run_to_completion();
+            let mut mem = sys.mem.borrow_mut();
+            for (i, v) in vals.iter().enumerate() {
+                let got = mem.read_f32(dst + 4 * i as u64);
+                prop_assert!(
+                    got == *v,
+                    "[{preset}] copy[{i}]: {got} != {v} (stale cross-GPU read)"
+                );
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Determinism: identical configs + programs give identical cycle counts.
+#[test]
+fn simulation_is_deterministic_property() {
+    check_with("determinism", 0x5EED, 6, |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| {
+            let cfg = small_cfg("SM-WT-C-HALCONE");
+            let params: WorkloadParams = cfg.workload_params();
+            let mut r = Rng(seed);
+            let mut work = empty_work(&params);
+            work[0][0][0] = random_program(&mut r, 0x20000, 100);
+            work[1][1][1] = random_program(&mut r, cfg.gpu_mem_bytes + 0x20000, 100);
+            let wl = Workload {
+                name: "det".into(),
+                init: vec![],
+                phases: vec![Phase { name: "p".into(), work }],
+                checks: vec![],
+                kind: "Synthetic",
+            };
+            let res = run_built(&cfg, wl, None);
+            (res.metrics.cycles, res.metrics.events)
+        };
+        prop_assert!(run(seed) == run(seed), "same seed diverged");
+        Ok(())
+    });
+}

@@ -1,0 +1,312 @@
+//! Property sweeps over the substrate invariants (DESIGN.md S20):
+//! cache-array vs shadow model, TSU monotonicity, link causality, address
+//! map consistency, write-combining byte-exactness, and the lease
+//! scale-invariance the §5.4 sweep exposed.
+
+use std::collections::HashMap;
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_workload;
+use halcone::mem::cache::{CacheArray, CacheParams};
+use halcone::mem::AddrMap;
+use halcone::prop_assert;
+use halcone::proptools::{check, check_with, Rng};
+use halcone::sim::Link;
+use halcone::tsu::{Leases, Tsu};
+
+#[test]
+fn cache_array_matches_shadow_model() {
+    check("cache vs shadow", 0xCACE, |rng| {
+        let mut cache = CacheArray::<u32>::new(CacheParams::new(1 << 10, 2)); // 8 sets
+        let mut shadow: HashMap<u64, (u8, bool, u32)> = HashMap::new(); // addr -> (fill, dirty, meta)
+        for step in 0..300u32 {
+            let addr = rng.below(64) * 64; // 64 distinct lines over 8 sets
+            match rng.below(4) {
+                0 | 1 => {
+                    let fill = (step % 251) as u8;
+                    let dirty = rng.below(2) == 0;
+                    if let Some(ev) = cache.insert(
+                        addr,
+                        vec![fill; 64].into_boxed_slice(),
+                        dirty,
+                        step,
+                    ) {
+                        // Evicted line must have been resident with the
+                        // exact bytes/flags the shadow recorded.
+                        let (f, d, m) = shadow
+                            .remove(&ev.addr)
+                            .ok_or_else(|| format!("evicted non-resident {:#x}", ev.addr))?;
+                        prop_assert!(ev.data[0] == f, "evicted data mismatch");
+                        prop_assert!(ev.dirty == d, "evicted dirty mismatch");
+                        prop_assert!(ev.meta == m, "evicted meta mismatch");
+                    }
+                    shadow.insert(addr, (fill, dirty, step));
+                }
+                2 => {
+                    let hit = cache.lookup(addr).is_some();
+                    prop_assert!(
+                        hit == shadow.contains_key(&addr),
+                        "lookup({addr:#x}) = {hit}, shadow disagrees"
+                    );
+                    if let Some(line) = cache.lookup(addr) {
+                        let (f, _, m) = shadow[&addr];
+                        prop_assert!(line.data[0] == f, "hit data mismatch");
+                        prop_assert!(line.meta == m, "hit meta mismatch");
+                    }
+                }
+                _ => {
+                    let evicted = cache.invalidate(addr).is_some();
+                    prop_assert!(
+                        evicted == shadow.remove(&addr).is_some(),
+                        "invalidate({addr:#x}) disagreed with shadow"
+                    );
+                }
+            }
+            prop_assert!(
+                cache.occupancy() == shadow.len(),
+                "occupancy {} != shadow {}",
+                cache.occupancy(),
+                shadow.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tsu_timestamps_are_monotone_per_block() {
+    check("tsu monotone", 0x75, |rng| {
+        let mut tsu = Tsu::new(256, Leases { rd: 1 + rng.below(30), wr: 1 + rng.below(30) });
+        let mut last_rts: HashMap<u64, u64> = HashMap::new();
+        for _ in 0..400 {
+            let addr = rng.below(512) * 64;
+            let ts = if rng.below(2) == 0 { tsu.on_read(addr) } else { tsu.on_write(addr) };
+            prop_assert!(ts.wts < ts.rts, "lease must be non-empty: {ts:?}");
+            if let Some(&prev) = last_rts.get(&addr) {
+                prop_assert!(
+                    ts.rts > prev,
+                    "memts must advance per access: {} -> {}",
+                    prev,
+                    ts.rts
+                );
+                prop_assert!(ts.wts >= prev - 0, "wts is the previous memts floor");
+            }
+            last_rts.insert(addr, ts.rts);
+            prop_assert!(tsu.max_memts >= ts.rts, "max_memts is a high-water mark");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn links_deliver_in_causal_fifo_order() {
+    check("link causality", 0x11, |rng| {
+        let mut link = Link::new("p", rng.below(100), 1 + rng.below(300));
+        let mut now = 0u64;
+        let mut last_delivery = 0u64;
+        for _ in 0..200 {
+            now += rng.below(50);
+            let bytes = 1 + rng.below(256);
+            let d = link.accept(now, bytes);
+            prop_assert!(d > now, "delivery {d} must be after send {now}");
+            prop_assert!(
+                d >= last_delivery,
+                "FIFO violated: {d} < previous delivery {last_delivery}"
+            );
+            last_delivery = d;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn addr_map_is_consistent() {
+    use halcone::mem::addr::Topology;
+    check("addr map", 0xADD8, |rng| {
+        let gpus = 1 + rng.below(16) as u32;
+        let stacks = 1 << rng.below(4);
+        let banks = 1 << rng.below(4);
+        for topo in [Topology::SharedMem, Topology::Rdma] {
+            let m = AddrMap::new(topo, gpus, stacks, banks, 64 << 20);
+            for _ in 0..50 {
+                let addr = rng.below(m.total_bytes());
+                let stack = m.stack_of(addr);
+                prop_assert!(stack < m.total_stacks(), "stack {stack} out of range");
+                let home = m.home_gpu(addr);
+                prop_assert!(home < gpus, "home {home} out of range");
+                prop_assert!(
+                    m.is_local(home, addr),
+                    "an address must be local to its home GPU"
+                );
+                // Same line -> same stack and same bank.
+                let lb = m.line_base(addr);
+                prop_assert!(m.stack_of(lb) == stack, "line split across stacks");
+                prop_assert!(
+                    m.l2_bank_of(addr) == m.l2_bank_of(lb),
+                    "line split across banks"
+                );
+                if topo == Topology::Rdma {
+                    // RDMA stacks stay inside the owner's range.
+                    prop_assert!(
+                        stack / stacks == home,
+                        "stack {stack} not owned by home {home}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lease_scaling_leaves_protocol_decisions_invariant() {
+    // Doubling both leases scales every timestamp uniformly; hit/miss
+    // decisions (cts <= rts comparisons) are order-preserved, so cycle
+    // counts must be identical. (Found via the §5.4 sweep: (20,10) ≡
+    // (10,5) exactly.)
+    check_with("lease scale invariance", 0x5CA1E, 3, |rng| {
+        let k = 1 + rng.below(3); // scale factor 1..4
+        let run = |rd: u64, wr: u64| {
+            let mut cfg = SystemConfig::preset("SM-WT-C-HALCONE");
+            cfg.n_gpus = 2;
+            cfg.cus_per_gpu = 2;
+            cfg.wavefronts_per_cu = 2;
+            cfg.l2_banks = 2;
+            cfg.stacks_per_gpu = 2;
+            cfg.gpu_mem_bytes = 64 << 20;
+            cfg.scale = 0.05;
+            cfg.set("rd_lease", &rd.to_string()).unwrap();
+            cfg.set("wr_lease", &wr.to_string()).unwrap();
+            let res = run_workload(&cfg, "xtreme1", None);
+            assert!(res.all_passed());
+            (res.metrics.cycles, res.metrics.l2_mm_transactions())
+        };
+        let base = run(10, 5);
+        let scaled = run(10 * k, 5 * k);
+        prop_assert!(
+            base == scaled,
+            "lease scaling by {k} changed behaviour: {base:?} vs {scaled:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn mshr_capacity_is_respected_under_load() {
+    use halcone::mem::mshr::{Mshr, MshrKind};
+    use halcone::sim::msg::{MemReq, ReqKind};
+    use halcone::sim::CompId;
+    check("mshr bounded", 0x3348, |rng| {
+        let cap = 1 + rng.below(16) as usize;
+        let mut mshr = Mshr::new(cap);
+        let mut live: Vec<u64> = Vec::new();
+        for i in 0..200u64 {
+            if mshr.has_free() && (rng.below(3) != 0 || live.is_empty()) {
+                let addr = i * 64;
+                mshr.allocate(
+                    addr,
+                    MshrKind::Fill,
+                    MemReq {
+                        id: i,
+                        kind: ReqKind::Read,
+                        addr,
+                        size: 4,
+                        src: CompId(0),
+                        dst: CompId(1),
+                        data: vec![],
+                        warpts: None,
+                    },
+                );
+                live.push(addr);
+            } else if !live.is_empty() {
+                let idx = rng.below(live.len() as u64) as usize;
+                let addr = live.swap_remove(idx);
+                let e = mshr.retire(addr);
+                prop_assert!(e.primary.addr == addr, "retire returned wrong entry");
+            }
+            prop_assert!(mshr.len() <= cap, "MSHR exceeded capacity");
+            prop_assert!(mshr.peak <= cap, "peak exceeded capacity");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn workload_programs_touch_only_their_partitions() {
+    // Placement contract: under RDMA, partitioned arrays' addresses fall
+    // inside their owner GPU's range (what the copy-phase and NUMA
+    // modelling rely on).
+    use halcone::gpu::CuOp;
+    use halcone::workloads::{self, WorkloadParams};
+    let cfg = {
+        let mut c = SystemConfig::preset("RDMA-WB-NC");
+        c.n_gpus = 2;
+        c.cus_per_gpu = 2;
+        c.wavefronts_per_cu = 2;
+        c.gpu_mem_bytes = 64 << 20;
+        c.scale = 0.05;
+        c
+    };
+    let params: WorkloadParams = cfg.workload_params();
+    for name in ["rl", "xtreme1", "aes", "bfs"] {
+        let wl = workloads::build(name, &params);
+        for ph in &wl.phases {
+            for (gpu, gw) in ph.work.iter().enumerate() {
+                for ops in gw.iter().flatten() {
+                    for op in ops {
+                        if let CuOp::StV { addr, .. } | CuOp::St { addr, .. } = op {
+                            // Stores of partitioned outputs are local to
+                            // the executing GPU for these benchmarks.
+                            assert_eq!(
+                                params.map.home_gpu(*addr),
+                                gpu as u32,
+                                "{name}: gpu{gpu} stores to a remote partition"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_time_never_goes_backwards() {
+    use halcone::sim::{CompId, Component, Ctx, Cycle, Engine, Msg};
+    struct RandomScheduler {
+        name: String,
+        rng: Rng,
+        remaining: u32,
+        pub last: Cycle,
+    }
+    impl Component for RandomScheduler {
+        halcone::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, now: Cycle, _msg: Msg, ctx: &mut Ctx) {
+            assert!(now >= self.last, "time went backwards: {} < {}", now, self.last);
+            self.last = now;
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                // Random fan-out of future events, including same-cycle.
+                for _ in 0..1 + self.rng.below(3) {
+                    ctx.schedule(self.rng.below(20), ctx.self_id, Msg::Tick);
+                }
+            }
+        }
+    }
+    check("engine causality", 0xE4617E, |rng| {
+        let mut e = Engine::new();
+        let id = CompId(0);
+        e.add(Box::new(RandomScheduler {
+            name: "r".into(),
+            rng: Rng(rng.next_u64()),
+            remaining: 500,
+            last: 0,
+        }));
+        e.post(0, id, Msg::Tick);
+        e.run_to_completion();
+        Ok(())
+    });
+}
