@@ -6,29 +6,27 @@
 //! (b) L2$<->MM transactions normalized to SM-WB-NC (paper: WT ~ +22.7%);
 //! (c) L1$<->L2$ transactions normalized to SM-WB-NC (HALCONE ~ +1%).
 //!
+//! The grid itself is the built-in `fig7` campaign, driven through the
+//! sweep executor (all cores; equivalent to
+//! `halcone sweep --campaign fig7`); the tables below post-process the
+//! campaign result.
+//!
 //!     cargo bench --bench fig7_standard_benchmarks
 
 use halcone::config::SystemConfig;
-use halcone::coordinator::runner::{run_workload, RunResult};
 use halcone::metrics::bench::Table;
 use halcone::metrics::geomean;
+use halcone::sweep::exec::{run_campaign, ExecOptions};
+use halcone::sweep::spec::CampaignSpec;
 use halcone::workloads::STANDARD;
 
 fn main() {
-    let presets = SystemConfig::PRESETS;
-    let mut results: Vec<Vec<RunResult>> = Vec::new();
+    let spec = CampaignSpec::builtin("fig7").unwrap();
+    let campaign = run_campaign(&spec, &ExecOptions::default())
+        .unwrap_or_else(|e| panic!("fig7 campaign: {e}"));
+    assert!(campaign.all_passed(), "fig7 campaign cells failed");
 
-    for wl in STANDARD {
-        let row: Vec<RunResult> = presets
-            .iter()
-            .map(|p| {
-                let res = run_workload(&SystemConfig::preset(p), wl, None);
-                assert!(res.all_passed(), "{p}/{wl} checks failed: {:?}", res.checks);
-                res
-            })
-            .collect();
-        results.push(row);
-    }
+    let presets = SystemConfig::PRESETS;
 
     // ---- Fig. 7(a): speed-up vs RDMA-WB-NC.
     println!("== Fig. 7(a): speed-up vs RDMA-WB-NC ==\n");
@@ -37,11 +35,11 @@ fn main() {
     let widths = [8usize, 11, 15, 9, 9, 16];
     let t = Table::new(&headers, &widths);
     let mut per_cfg: Vec<Vec<f64>> = vec![Vec::new(); presets.len()];
-    for (wl, row) in STANDARD.iter().zip(&results) {
-        let base = row[0].metrics.cycles as f64;
+    for wl in STANDARD {
+        let base = campaign.expect_metrics(presets[0], wl).cycles as f64;
         let mut cells = vec![wl.to_string()];
-        for (c, res) in row.iter().enumerate() {
-            let s = base / res.metrics.cycles as f64;
+        for (c, p) in presets.iter().enumerate() {
+            let s = base / campaign.expect_metrics(p, wl).cycles as f64;
             per_cfg[c].push(s);
             cells.push(format!("{s:.2}x"));
         }
@@ -59,10 +57,10 @@ fn main() {
     let t = Table::new(&["bench", "SM-WB-NC", "SM-WT-NC", "SM-WT-C-HALCONE"], &[8, 12, 12, 16]);
     let mut wt_ratio = Vec::new();
     let mut hc_ratio = Vec::new();
-    for (wl, row) in STANDARD.iter().zip(&results) {
-        let wb = row[2].metrics.l2_mm_transactions() as f64;
-        let wt = row[3].metrics.l2_mm_transactions() as f64 / wb;
-        let hc = row[4].metrics.l2_mm_transactions() as f64 / wb;
+    for wl in STANDARD {
+        let wb = campaign.expect_metrics("SM-WB-NC", wl).l2_mm_transactions() as f64;
+        let wt = campaign.expect_metrics("SM-WT-NC", wl).l2_mm_transactions() as f64 / wb;
+        let hc = campaign.expect_metrics("SM-WT-C-HALCONE", wl).l2_mm_transactions() as f64 / wb;
         wt_ratio.push(wt);
         hc_ratio.push(hc);
         t.row(&[wl.to_string(), "1.00".into(), format!("{wt:.2}"), format!("{hc:.2}")]);
@@ -79,10 +77,10 @@ fn main() {
     println!("== Fig. 7(c): L1$<->L2$ transactions (normalized to SM-WB-NC) ==\n");
     let t = Table::new(&["bench", "SM-WB-NC", "SM-WT-NC", "SM-WT-C-HALCONE"], &[8, 12, 12, 16]);
     let mut hc1 = Vec::new();
-    for (wl, row) in STANDARD.iter().zip(&results) {
-        let wb = row[2].metrics.l1_l2_transactions() as f64;
-        let wt = row[3].metrics.l1_l2_transactions() as f64 / wb;
-        let hc = row[4].metrics.l1_l2_transactions() as f64 / wb;
+    for wl in STANDARD {
+        let wb = campaign.expect_metrics("SM-WB-NC", wl).l1_l2_transactions() as f64;
+        let wt = campaign.expect_metrics("SM-WT-NC", wl).l1_l2_transactions() as f64 / wb;
+        let hc = campaign.expect_metrics("SM-WT-C-HALCONE", wl).l1_l2_transactions() as f64 / wb;
         hc1.push(hc);
         t.row(&[wl.to_string(), "1.00".into(), format!("{wt:.2}"), format!("{hc:.2}")]);
     }

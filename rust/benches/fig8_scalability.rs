@@ -6,30 +6,39 @@
 //! (c) L2$<->MM transactions across CU counts (flat for the L2-bottlenecked
 //!     benchmarks bfs/bs — the reason they do not scale).
 //!
+//! Both grids run through the sweep executor as the built-in `fig8`
+//! (GPU-count axis) and `fig8cu` (CU-count axis) campaigns, in parallel
+//! across all cores.
+//!
 //!     cargo bench --bench fig8_scalability
 
-use halcone::config::SystemConfig;
-use halcone::coordinator::runner::run_workload;
 use halcone::metrics::bench::Table;
 use halcone::metrics::geomean;
+use halcone::sweep::exec::{run_campaign, CampaignResult, ExecOptions};
+use halcone::sweep::spec::CampaignSpec;
 use halcone::workloads::STANDARD;
 
+fn campaign(name: &str) -> CampaignResult {
+    let spec = CampaignSpec::builtin(name).unwrap();
+    let res = run_campaign(&spec, &ExecOptions::default())
+        .unwrap_or_else(|e| panic!("{name} campaign: {e}"));
+    assert!(res.all_passed(), "{name} campaign cells failed");
+    res
+}
+
 fn main() {
-    // ---- (a) GPU-count scaling.
+    // ---- (a) GPU-count scaling (`fig8` campaign).
+    let gpus = campaign("fig8");
     println!("== Fig. 8(a): speed-up vs 1 coherent GPU (32 CUs/GPU) ==\n");
     let gpu_counts = [1u32, 2, 4, 8, 16];
     let t = Table::new(&["bench", "1", "2", "4", "8", "16"], &[8, 7, 7, 7, 7, 7]);
     let mut per_count: Vec<Vec<f64>> = vec![Vec::new(); gpu_counts.len()];
     for wl in STANDARD {
-        let mut base = None;
+        let base = gpus.expect_metrics("SM-WT-C-HALCONE+n_gpus=1", wl).cycles as f64;
         let mut cells = vec![wl.to_string()];
         for (i, &g) in gpu_counts.iter().enumerate() {
-            let mut cfg = SystemConfig::preset("SM-WT-C-HALCONE");
-            cfg.n_gpus = g;
-            let res = run_workload(&cfg, wl, None);
-            assert!(res.all_passed(), "{wl}@{g}gpus failed");
-            let b = *base.get_or_insert(res.metrics.cycles as f64);
-            let s = b / res.metrics.cycles as f64;
+            let m = gpus.expect_metrics(&format!("SM-WT-C-HALCONE+n_gpus={g}"), wl);
+            let s = base / m.cycles as f64;
             per_count[i].push(s);
             cells.push(format!("{s:.2}x"));
         }
@@ -42,7 +51,8 @@ fn main() {
     t.row(&cells);
     println!("\npaper Fig. 8(a) means: 1.00x / 1.76x / 2.74x / 4.05x / 5.43x\n");
 
-    // ---- (b) + (c) CU-count scaling at 4 GPUs.
+    // ---- (b) + (c) CU-count scaling at 4 GPUs (`fig8cu` campaign).
+    let cus = campaign("fig8cu");
     println!("== Fig. 8(b): speed-up vs 32 CUs/GPU (4 GPUs) ==");
     println!("== Fig. 8(c): L2$<->MM transactions, normalized to 32 CUs ==\n");
     let cu_counts = [32u32, 48, 64];
@@ -52,21 +62,16 @@ fn main() {
     );
     let mut per_cu: Vec<Vec<f64>> = vec![Vec::new(); cu_counts.len()];
     for wl in STANDARD {
-        let mut base_cy = None;
-        let mut base_tx = None;
+        let base = cus.expect_metrics("SM-WT-C-HALCONE+cus_per_gpu=32", wl);
+        let (base_cy, base_tx) = (base.cycles as f64, base.l2_mm_transactions() as f64);
         let mut speed = vec![];
         let mut tx = vec![];
         for (i, &c) in cu_counts.iter().enumerate() {
-            let mut cfg = SystemConfig::preset("SM-WT-C-HALCONE");
-            cfg.cus_per_gpu = c;
-            let res = run_workload(&cfg, wl, None);
-            assert!(res.all_passed(), "{wl}@{c}cus failed");
-            let bc = *base_cy.get_or_insert(res.metrics.cycles as f64);
-            let bt = *base_tx.get_or_insert(res.metrics.l2_mm_transactions() as f64);
-            let s = bc / res.metrics.cycles as f64;
+            let m = cus.expect_metrics(&format!("SM-WT-C-HALCONE+cus_per_gpu={c}"), wl);
+            let s = base_cy / m.cycles as f64;
             per_cu[i].push(s);
             speed.push(format!("{s:.2}x"));
-            tx.push(format!("{:.2}", res.metrics.l2_mm_transactions() as f64 / bt));
+            tx.push(format!("{:.2}", m.l2_mm_transactions() as f64 / base_tx));
         }
         let mut cells = vec![wl.to_string()];
         cells.extend(speed);

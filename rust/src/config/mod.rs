@@ -139,6 +139,16 @@ impl SystemConfig {
         c
     }
 
+    /// Non-panicking [`SystemConfig::preset`] (campaign specs validate
+    /// user-supplied names before expansion).
+    pub fn try_preset(name: &str) -> Result<SystemConfig, String> {
+        if Self::PRESETS.contains(&name) {
+            Ok(Self::preset(name))
+        } else {
+            Err(format!("unknown preset '{name}' (see §4.1 names: {:?})", Self::PRESETS))
+        }
+    }
+
     /// All five §4.1 configuration names, in the paper's order.
     pub const PRESETS: [&'static str; 5] = [
         "RDMA-WB-NC",
@@ -261,13 +271,53 @@ impl SystemConfig {
             let (k, v) = (k.trim(), v.trim());
             if k == "preset" {
                 let scale = cfg.scale;
-                cfg = SystemConfig::preset(v);
+                cfg = SystemConfig::try_preset(v)
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?;
                 cfg.scale = scale;
             } else {
                 cfg.set(k, v).map_err(|e| format!("line {}: {e}", lineno + 1))?;
             }
         }
         Ok(cfg)
+    }
+
+    /// Apply every non-`preset` line of a config-file body on top of
+    /// `self`. This is how `compare` honors `--config FILE` across its
+    /// preset columns: each column starts from its own preset, then
+    /// takes the file's overrides (a `preset =` line would make every
+    /// column identical, so it is ignored here). Lease keys are skipped
+    /// on columns without HALCONE coherence — a file tuned for the
+    /// HALCONE column must not abort the NC/HMG columns, where leases
+    /// are meaningless.
+    pub fn apply_overrides(&mut self, text: &str) -> Result<(), String> {
+        // Lease lines are deferred until every other key has applied, so
+        // their applicability depends on the *final* coherence setting —
+        // not on where a `coherence = halcone` line sits in the file.
+        let mut leases: Vec<(usize, &str, &str)> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key=value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            if k == "preset" {
+                continue;
+            }
+            if matches!(k, "rd_lease" | "wr_lease") {
+                leases.push((lineno, k, v));
+                continue;
+            }
+            self.set(k, v).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        if matches!(self.coherence, Coherence::Halcone { .. }) {
+            for (lineno, k, v) in leases {
+                self.set(k, v).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            }
+        }
+        Ok(())
     }
 
     /// Render Table 2-style configuration summary (E2 / `print-config`).
@@ -367,8 +417,49 @@ mod tests {
     }
 
     #[test]
+    fn try_preset_rejects_unknown_names() {
+        assert!(SystemConfig::try_preset("SM-WT-NC").is_ok());
+        assert!(SystemConfig::try_preset("MESI").is_err());
+    }
+
+    #[test]
+    fn apply_overrides_keeps_base_preset() {
+        let mut cfg = SystemConfig::preset("SM-WB-NC");
+        cfg.apply_overrides("preset = SM-WT-C-HALCONE # ignored\nn_gpus = 8\nscale = 0.5\n")
+            .unwrap();
+        assert_eq!(cfg.coherence, Coherence::None); // preset line skipped
+        assert_eq!(cfg.n_gpus, 8);
+        assert_eq!(cfg.scale, 0.5);
+        assert!(cfg.apply_overrides("bogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn apply_overrides_skips_leases_off_halcone_but_applies_them_on() {
+        // A lease-tuning file must not abort non-HALCONE compare columns.
+        let mut nc = SystemConfig::preset("SM-WT-NC");
+        nc.apply_overrides("rd_lease = 20\nwr_lease = 10\nn_gpus = 8\n").unwrap();
+        assert_eq!(nc.n_gpus, 8);
+        let mut hc = SystemConfig::preset("SM-WT-C-HALCONE");
+        hc.apply_overrides("rd_lease = 20\n").unwrap();
+        match hc.coherence {
+            Coherence::Halcone { leases, .. } => assert_eq!(leases.rd, 20),
+            _ => panic!(),
+        }
+        // A lease line before `coherence = halcone` still applies: only
+        // the final coherence decides lease applicability.
+        let mut flipped = SystemConfig::preset("SM-WT-NC");
+        flipped.apply_overrides("rd_lease = 20\ncoherence = halcone\n").unwrap();
+        match flipped.coherence {
+            Coherence::Halcone { leases, .. } => assert_eq!(leases.rd, 20),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
     fn unknown_key_is_an_error() {
         assert!(SystemConfig::parse("bogus = 1\n").is_err());
+        // A preset typo in a --config file is a clean error, not a panic.
+        assert!(SystemConfig::parse("preset = SM-WT-NCC\n").is_err());
         let mut c = SystemConfig::default();
         assert!(c.set("coherence", "mesi").is_err());
         assert!(c.set("topology", "ring").is_err());

@@ -90,6 +90,11 @@ pub fn collect_metrics(sys: &System, host_seconds: f64) -> RunMetrics {
         host_seconds,
         ..Default::default()
     };
+    for &id in &sys.cus {
+        let s = engine.downcast::<Cu>(id).stats;
+        m.cu_loads += s.loads;
+        m.cu_stores += s.stores;
+    }
     for &id in &sys.l1s {
         m.l1.accumulate(&l1_stats_of(engine, id));
     }
@@ -112,17 +117,6 @@ pub fn collect_metrics(sys: &System, host_seconds: f64) -> RunMetrics {
         m.mem_bytes += engine.link(l).bytes_sent;
     }
     m
-}
-
-/// Total CU-side memory ops (sanity + perf reporting).
-pub fn total_cu_ops(sys: &System) -> u64 {
-    sys.cus
-        .iter()
-        .map(|&id| {
-            let s = sys.engine.downcast::<Cu>(id).stats;
-            s.loads + s.stores
-        })
-        .sum()
 }
 
 /// Build, run and verify `workload_name` under `cfg`.
@@ -264,6 +258,15 @@ mod tests {
             overhead < 1.25,
             "HALCONE overhead too large on streaming workload: {overhead:.3}"
         );
+    }
+
+    #[test]
+    fn cu_counters_land_in_metrics() {
+        let cfg = small("SM-WT-NC");
+        let res = run_workload(&cfg, "fir", None);
+        assert!(res.metrics.cu_loads > 0, "fir issues loads");
+        assert!(res.metrics.cu_stores > 0, "fir issues stores");
+        assert!(res.metrics.cycles_per_op().unwrap() > 0.0);
     }
 
     #[test]

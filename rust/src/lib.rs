@@ -11,7 +11,9 @@
 //! - a PJRT runtime that executes AOT-compiled JAX/Pallas kernels as the
 //!   functional golden model ([`runtime`]),
 //! - the experiment coordinator, config system and metrics
-//!   ([`coordinator`], [`config`], [`metrics`]).
+//!   ([`coordinator`], [`config`], [`metrics`]),
+//! - the campaign engine: declarative experiment grids, a parallel
+//!   executor, JSON artifacts and a perf regression gate ([`sweep`]).
 
 pub mod coherence;
 pub mod config;
@@ -24,5 +26,6 @@ pub mod metrics;
 pub mod proptools;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod tsu;
 pub mod workloads;

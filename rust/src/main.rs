@@ -3,10 +3,14 @@
 //! Subcommands:
 //!   run          simulate one workload under one configuration
 //!   compare      run every §4.1 preset on a workload, report speedups
+//!   sweep        run a whole experiment campaign in parallel, write
+//!                campaign.json + a speedup table (Figs. 7/8 in one go)
+//!   gate         re-run a campaign and diff it against a committed
+//!                campaign.json baseline (perf regression gate)
 //!   verify       run workloads under HALCONE and check against the
 //!                XLA/Pallas golden artifacts + Rust references
 //!   print-config show the Table 2 configuration (E2)
-//!   list         available workloads, presets and artifacts
+//!   list         available workloads, presets, campaigns and artifacts
 //!
 //! Argument parsing is hand-rolled (no clap in the offline registry).
 
@@ -15,6 +19,9 @@ use std::process::ExitCode;
 use halcone::config::SystemConfig;
 use halcone::coordinator::runner::run_workload;
 use halcone::runtime::Runtime;
+use halcone::sweep::exec::{self, run_campaign, ExecOptions};
+use halcone::sweep::spec::CampaignSpec;
+use halcone::sweep::{gate, json, report};
 use halcone::workloads::{STANDARD, XTREME};
 
 fn usage() -> ! {
@@ -24,6 +31,9 @@ fn usage() -> ! {
          commands:\n\
            run          --workload NAME [--preset P] [--set k=v ...]\n\
            compare      --workload NAME [--presets A,B,...] [--set k=v ...]\n\
+           sweep        --campaign NAME | --spec FILE  [--jobs N] [--out FILE] [--set k=v ...]\n\
+           gate         --baseline FILE [--current FILE] [--campaign NAME|--spec FILE]\n\
+                        [--tolerance FRAC] [--jobs N] [--out FILE]\n\
            verify       [--workload NAME|all] [--artifacts DIR] [--set k=v ...]\n\
            print-config [--preset P] [--set k=v ...]\n\
            list\n\
@@ -32,8 +42,19 @@ fn usage() -> ! {
            --preset P        one of {presets:?}\n\
            --config FILE     key=value config file (preset= line allowed)\n\
            --set key=value   override any config key (repeatable)\n\
-           --artifacts DIR   AOT artifact directory (default: artifacts)\n",
-        presets = SystemConfig::PRESETS
+           --artifacts DIR   AOT artifact directory (default: artifacts)\n\
+         \n\
+         sweep/gate options:\n\
+           --campaign NAME   built-in campaign, one of {campaigns:?}\n\
+           --spec FILE       campaign spec file (key=value; see sweep::spec)\n\
+           --jobs N          worker threads (default: all cores)\n\
+           --out FILE        write the artifact here (sweep default: campaign.json;\n\
+                             gate writes one only when --out is given)\n\
+           --baseline FILE   committed campaign.json to gate against\n\
+           --current FILE    pre-generated campaign.json (skip re-running)\n\
+           --tolerance FRAC  allowed relative cycle drift (default: 0.05)\n",
+        presets = SystemConfig::PRESETS,
+        campaigns = CampaignSpec::BUILTINS,
     );
     std::process::exit(2)
 }
@@ -46,6 +67,13 @@ struct Args {
     config_file: Option<String>,
     sets: Vec<(String, String)>,
     artifacts: String,
+    campaign: Option<String>,
+    spec_file: Option<String>,
+    jobs: Option<usize>,
+    out: Option<String>,
+    baseline: Option<String>,
+    current: Option<String>,
+    tolerance: Option<f64>,
 }
 
 fn parse_args() -> Args {
@@ -59,6 +87,13 @@ fn parse_args() -> Args {
         config_file: None,
         sets: vec![],
         artifacts: "artifacts".into(),
+        campaign: None,
+        spec_file: None,
+        jobs: None,
+        out: None,
+        baseline: None,
+        current: None,
+        tolerance: None,
     };
     while let Some(flag) = argv.next() {
         let mut val = |name: &str| {
@@ -75,6 +110,39 @@ fn parse_args() -> Args {
             }
             "--config" => a.config_file = Some(val("--config")),
             "--artifacts" => a.artifacts = val("--artifacts"),
+            "--campaign" => a.campaign = Some(val("--campaign")),
+            "--spec" => a.spec_file = Some(val("--spec")),
+            "--jobs" | "-j" => {
+                let v = val("--jobs");
+                match v.parse::<usize>() {
+                    Ok(n) if n >= 1 => a.jobs = Some(n),
+                    Ok(_) => {
+                        eprintln!("--jobs must be at least 1");
+                        usage()
+                    }
+                    Err(e) => {
+                        eprintln!("--jobs {v}: {e}");
+                        usage()
+                    }
+                }
+            }
+            "--out" | "-o" => a.out = Some(val("--out")),
+            "--baseline" => a.baseline = Some(val("--baseline")),
+            "--current" => a.current = Some(val("--current")),
+            "--tolerance" => {
+                let v = val("--tolerance");
+                match v.parse::<f64>() {
+                    Ok(t) if t.is_finite() && t >= 0.0 => a.tolerance = Some(t),
+                    Ok(_) => {
+                        eprintln!("--tolerance must be a finite fraction >= 0");
+                        usage()
+                    }
+                    Err(e) => {
+                        eprintln!("--tolerance {v}: {e}");
+                        usage()
+                    }
+                }
+            }
             "--set" | "-s" => {
                 let kv = val("--set");
                 match kv.split_once('=') {
@@ -95,12 +163,16 @@ fn parse_args() -> Args {
     a
 }
 
+fn read_file_or_die(path: &str) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("reading {path}: {e}");
+        std::process::exit(2)
+    })
+}
+
 fn build_config(a: &Args) -> SystemConfig {
     let mut cfg = if let Some(f) = &a.config_file {
-        let text = std::fs::read_to_string(f).unwrap_or_else(|e| {
-            eprintln!("reading {f}: {e}");
-            std::process::exit(2)
-        });
+        let text = read_file_or_die(f);
         SystemConfig::parse(&text).unwrap_or_else(|e| {
             eprintln!("{f}: {e}");
             std::process::exit(2)
@@ -139,7 +211,9 @@ fn cmd_run(a: &Args) -> ExitCode {
     let res = run_workload(&cfg, workload, rt.as_mut());
     println!("{}", res.summary());
     println!(
-        "  mm reads/writes: {}/{}  pcie bytes: {}  mem-net bytes: {}  host: {:.3}s ({:.1}M events/s)",
+        "  cu loads/stores: {}/{}  mm reads/writes: {}/{}  pcie bytes: {}  mem-net bytes: {}  host: {:.3}s ({:.1}M events/s)",
+        res.metrics.cu_loads,
+        res.metrics.cu_stores,
         res.metrics.mm_reads,
         res.metrics.mm_writes,
         res.metrics.pcie_bytes,
@@ -172,15 +246,31 @@ fn cmd_compare(a: &Args) -> ExitCode {
         .presets
         .clone()
         .unwrap_or_else(|| SystemConfig::PRESETS.iter().map(|s| s.to_string()).collect());
+    // Honor --config FILE like run/verify do: each preset column starts
+    // from its own preset, then takes the file's (non-preset) overrides
+    // and the --set flags, in that order.
+    let file_text = a.config_file.as_ref().map(|f| read_file_or_die(f));
     let mut rt = open_runtime(a);
-    let mut baseline = None;
+    let mut baseline: Option<halcone::metrics::RunMetrics> = None;
     let mut ok = true;
     println!(
         "{:<18} {:>14} {:>9} {:>10} {:>10}",
         "config", "cycles", "speedup", "l1->l2", "l2->mm"
     );
     for p in &presets {
-        let mut cfg = SystemConfig::preset(p);
+        let mut cfg = match SystemConfig::try_preset(p) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        if let Some(text) = &file_text {
+            if let Err(e) = cfg.apply_overrides(text) {
+                eprintln!("{}: {e}", a.config_file.as_deref().unwrap_or("--config"));
+                return ExitCode::FAILURE;
+            }
+        }
         for (k, v) in &a.sets {
             if let Err(e) = cfg.set(k, v) {
                 eprintln!("--set {k}={v}: {e}");
@@ -188,12 +278,16 @@ fn cmd_compare(a: &Args) -> ExitCode {
             }
         }
         let res = run_workload(&cfg, workload, rt.as_mut());
-        let base = *baseline.get_or_insert(res.metrics.cycles);
+        let base = baseline.get_or_insert_with(|| res.metrics.clone());
+        let speedup = match res.metrics.speedup_vs(base) {
+            Some(s) => format!("{s:.2}x"),
+            None => "n/a".to_string(), // zero-cycle baseline or cell
+        };
         println!(
-            "{:<18} {:>14} {:>8.2}x {:>10} {:>10}{}",
+            "{:<18} {:>14} {:>9} {:>10} {:>10}{}",
             p,
             res.metrics.cycles,
-            base as f64 / res.metrics.cycles as f64,
+            speedup,
             res.metrics.l1_l2_transactions(),
             res.metrics.l2_mm_transactions(),
             if res.all_passed() { "" } else { "  CHECKS FAILED" }
@@ -204,6 +298,144 @@ fn cmd_compare(a: &Args) -> ExitCode {
         ExitCode::SUCCESS
     } else {
         ExitCode::FAILURE
+    }
+}
+
+/// Resolve the campaign spec for sweep/gate: `--spec FILE` wins, then
+/// `--campaign NAME`, then `fallback` (gate's baseline-recorded spec);
+/// `--set` flags become extra fixed overrides.
+fn load_spec(a: &Args, fallback: Option<CampaignSpec>) -> Result<CampaignSpec, String> {
+    if a.spec_file.is_some() && a.campaign.is_some() {
+        return Err("--campaign and --spec are mutually exclusive".into());
+    }
+    let mut spec = if let Some(f) = &a.spec_file {
+        CampaignSpec::parse(&read_file_or_die(f)).map_err(|e| format!("{f}: {e}"))?
+    } else if let Some(name) = &a.campaign {
+        CampaignSpec::builtin(name)?
+    } else if let Some(spec) = fallback {
+        spec
+    } else {
+        return Err("need --campaign NAME or --spec FILE".into());
+    };
+    spec.fixed.extend(a.sets.iter().cloned());
+    spec.dedup_fixed();
+    Ok(spec)
+}
+
+fn sweep_to_json(
+    spec: &CampaignSpec,
+    jobs: Option<usize>,
+    out: Option<&str>,
+) -> Result<(String, bool), String> {
+    let opts = ExecOptions { jobs: jobs.unwrap_or_else(exec::default_jobs), progress: true };
+    // run_campaign expands + validates the grid itself; the count here
+    // is arithmetic so the grid is not built twice.
+    let total = spec.config_labels().len() * spec.workloads.len();
+    eprintln!("campaign {}: {total} cells on {} threads", spec.name, opts.jobs);
+    let result = run_campaign(spec, &opts)?;
+    report::print_speedup_table(&result);
+    let text = report::to_json(&result);
+    if let Some(out) = out {
+        std::fs::write(out, &text).map_err(|e| format!("writing {out}: {e}"))?;
+        eprintln!("wrote {out}");
+    }
+    Ok((text, result.all_passed()))
+}
+
+fn cmd_sweep(a: &Args) -> ExitCode {
+    let spec = match load_spec(a, None) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("sweep: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    // Default artifact path (gate reads it back later).
+    let out = a.out.clone().unwrap_or_else(|| "campaign.json".into());
+    match sweep_to_json(&spec, a.jobs, Some(&out)) {
+        Ok((_, all_passed)) => {
+            if all_passed {
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("sweep: some cells failed (see table / artifact)");
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("sweep: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_gate(a: &Args) -> ExitCode {
+    let Some(bpath) = &a.baseline else {
+        eprintln!("gate: --baseline FILE required");
+        usage()
+    };
+    if a.current.is_some()
+        && (a.campaign.is_some()
+            || a.spec_file.is_some()
+            || !a.sets.is_empty()
+            || a.jobs.is_some()
+            || a.out.is_some())
+    {
+        eprintln!(
+            "gate: --current conflicts with --campaign/--spec/--set/--jobs/--out \
+             (nothing is re-run in --current mode)"
+        );
+        return ExitCode::FAILURE;
+    }
+    let baseline_text = read_file_or_die(bpath);
+    let tolerance = a.tolerance.unwrap_or(0.05);
+    let current_text = if let Some(cpath) = &a.current {
+        read_file_or_die(cpath)
+    } else {
+        // Re-run the exact campaign the baseline artifact records —
+        // including its fixed overrides and custom axes, which a plain
+        // name lookup would lose (overridable with --campaign/--spec).
+        let fallback = if a.campaign.is_none() && a.spec_file.is_none() {
+            match json::parse(&baseline_text).and_then(|v| CampaignSpec::from_artifact(&v)) {
+                Ok(spec) => Some(spec),
+                Err(e) => {
+                    eprintln!(
+                        "gate: cannot reconstruct the campaign from {bpath} ({e}); \
+                         pass --campaign NAME or --spec FILE"
+                    );
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else {
+            None
+        };
+        let spec = match load_spec(a, fallback) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("gate: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        match sweep_to_json(&spec, a.jobs, a.out.as_deref()) {
+            Ok((text, _)) => text,
+            Err(e) => {
+                eprintln!("gate: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    };
+    match gate::diff(&baseline_text, &current_text, tolerance) {
+        Ok(rep) => {
+            println!("{}", rep.describe());
+            if rep.passed() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("gate: {e}");
+            ExitCode::FAILURE
+        }
     }
 }
 
@@ -232,6 +464,7 @@ fn cmd_list(a: &Args) -> ExitCode {
     println!("workloads (standard): {STANDARD:?}");
     println!("workloads (xtreme):   {XTREME:?}");
     println!("presets:              {:?}", SystemConfig::PRESETS);
+    println!("campaigns:            {:?}", CampaignSpec::BUILTINS);
     match Runtime::open(&a.artifacts) {
         Ok(rt) => println!("artifacts:            {:?}", rt.artifacts()),
         Err(_) => println!("artifacts:            (none — run `make artifacts`)"),
@@ -244,6 +477,8 @@ fn main() -> ExitCode {
     match args.command.as_str() {
         "run" => cmd_run(&args),
         "compare" => cmd_compare(&args),
+        "sweep" => cmd_sweep(&args),
+        "gate" => cmd_gate(&args),
         "verify" => cmd_verify(&args),
         "print-config" => {
             println!("{}", build_config(&args).describe());

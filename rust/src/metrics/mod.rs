@@ -74,6 +74,10 @@ pub struct RunMetrics {
     pub events: u64,
     /// Wall-clock seconds the simulation took (simulator perf).
     pub host_seconds: f64,
+    /// CU-issued loads / stores (per-op throughput denominators for
+    /// campaign artifacts).
+    pub cu_loads: u64,
+    pub cu_stores: u64,
     /// Aggregated L1 controller stats.
     pub l1: CacheCtrlStats,
     /// Aggregated L2 controller stats.
@@ -101,9 +105,28 @@ impl RunMetrics {
         self.l1.down_transactions()
     }
 
-    /// Speed-up of `self` relative to a baseline run.
-    pub fn speedup_vs(&self, baseline: &RunMetrics) -> f64 {
-        baseline.cycles as f64 / self.cycles as f64
+    /// Total CU-issued memory operations.
+    pub fn cu_ops(&self) -> u64 {
+        self.cu_loads + self.cu_stores
+    }
+
+    /// Simulated cycles per CU memory op (`None` for an op-free run).
+    pub fn cycles_per_op(&self) -> Option<f64> {
+        let ops = self.cu_ops();
+        if ops == 0 {
+            return None;
+        }
+        Some(self.cycles as f64 / ops as f64)
+    }
+
+    /// Speed-up of `self` relative to a baseline run. `None` when either
+    /// run recorded zero cycles — a degenerate cell would otherwise
+    /// yield a silent `inf`/`NaN` in reports.
+    pub fn speedup_vs(&self, baseline: &RunMetrics) -> Option<f64> {
+        if self.cycles == 0 || baseline.cycles == 0 {
+            return None;
+        }
+        Some(baseline.cycles as f64 / self.cycles as f64)
     }
 }
 
@@ -140,7 +163,25 @@ mod tests {
     fn speedup_is_baseline_over_self() {
         let fast = RunMetrics { cycles: 100, ..Default::default() };
         let slow = RunMetrics { cycles: 460, ..Default::default() };
-        assert!((fast.speedup_vs(&slow) - 4.6).abs() < 1e-9);
+        assert!((fast.speedup_vs(&slow).unwrap() - 4.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_cycle_runs_have_no_speedup() {
+        let zero = RunMetrics { cycles: 0, ..Default::default() };
+        let some = RunMetrics { cycles: 100, ..Default::default() };
+        assert_eq!(some.speedup_vs(&zero), None);
+        assert_eq!(zero.speedup_vs(&some), None);
+        assert_eq!(zero.speedup_vs(&zero), None);
+    }
+
+    #[test]
+    fn cu_op_throughput_guards_div_by_zero() {
+        let idle = RunMetrics { cycles: 10, ..Default::default() };
+        assert_eq!(idle.cycles_per_op(), None);
+        let busy = RunMetrics { cycles: 100, cu_loads: 30, cu_stores: 20, ..Default::default() };
+        assert_eq!(busy.cu_ops(), 50);
+        assert!((busy.cycles_per_op().unwrap() - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,40 @@
+//! Runtime stand-in for builds without the `xla` feature.
+//!
+//! Presents the same surface as the PJRT-backed [`super::pjrt`]
+//! implementation so callers compile unchanged; `open` always fails,
+//! which the callers already treat as "artifacts unavailable".
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::ArtifactSig;
+
+/// No-op artifact runtime (the `xla` feature is off).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails: artifact execution needs the `xla` feature.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        bail!(
+            "artifact runtime for {:?} unavailable: built without the `xla` feature",
+            dir.as_ref()
+        )
+    }
+
+    /// Artifact names available (none).
+    pub fn artifacts(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn signature(&self, _name: &str) -> Option<&ArtifactSig> {
+        None
+    }
+
+    /// Unreachable in practice (`open` never yields a stub `Runtime`).
+    pub fn exec_f32(&mut self, name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        bail!("artifact '{name}': built without the `xla` feature")
+    }
+}

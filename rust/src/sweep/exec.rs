@@ -1,0 +1,287 @@
+//! Parallel campaign executor.
+//!
+//! Cells are independent deterministic simulations (see
+//! `deterministic_across_runs` in `coordinator::runner`), so the grid is
+//! embarrassingly parallel: a pool of `std::thread::scope` workers pulls
+//! cell indices off a shared atomic counter (work stealing degenerates
+//! to work *sharing* with a single queue, which is optimal here — cells
+//! are coarse, milliseconds to minutes each). Each cell runs under
+//! `catch_unwind`, so a deadlocked or asserting simulation fails that
+//! cell and the campaign keeps draining. Results land in per-cell slots
+//! indexed by expansion order, which keeps every artifact byte-stable
+//! regardless of `--jobs` (the determinism contract in
+//! `tests/sweep_campaign.rs`).
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::runner::run_workload;
+use crate::coordinator::verify::CheckOutcome;
+use crate::metrics::RunMetrics;
+use crate::sweep::spec::{CampaignSpec, Cell};
+
+/// What happened to one cell.
+pub enum CellOutcome {
+    /// Simulation finished (checks may still have failed).
+    Finished { metrics: RunMetrics, checks: Vec<CheckOutcome> },
+    /// The simulation panicked (deadlock assert, bad config interaction).
+    Failed { error: String },
+}
+
+/// One cell plus its outcome.
+pub struct CellResult {
+    pub cell: Cell,
+    pub outcome: CellOutcome,
+}
+
+impl CellResult {
+    pub fn metrics(&self) -> Option<&RunMetrics> {
+        match &self.outcome {
+            CellOutcome::Finished { metrics, .. } => Some(metrics),
+            CellOutcome::Failed { .. } => None,
+        }
+    }
+
+    pub fn checks(&self) -> &[CheckOutcome] {
+        match &self.outcome {
+            CellOutcome::Finished { checks, .. } => checks,
+            CellOutcome::Failed { .. } => &[],
+        }
+    }
+
+    pub fn error(&self) -> Option<&str> {
+        match &self.outcome {
+            CellOutcome::Failed { error } => Some(error),
+            CellOutcome::Finished { .. } => None,
+        }
+    }
+
+    /// Finished with every check green.
+    pub fn passed(&self) -> bool {
+        matches!(&self.outcome, CellOutcome::Finished { checks, .. }
+                 if checks.iter().all(|c| c.passed))
+    }
+
+    /// Artifact status tag: `ok` | `checks_failed` | `error`.
+    pub fn status(&self) -> &'static str {
+        match &self.outcome {
+            CellOutcome::Failed { .. } => "error",
+            CellOutcome::Finished { checks, .. } => {
+                if checks.iter().all(|c| c.passed) {
+                    "ok"
+                } else {
+                    "checks_failed"
+                }
+            }
+        }
+    }
+}
+
+/// Executor knobs.
+pub struct ExecOptions {
+    /// Worker threads (clamped to the cell count; min 1).
+    pub jobs: usize,
+    /// Stream one line per finished cell to stderr.
+    pub progress: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { jobs: default_jobs(), progress: true }
+    }
+}
+
+/// Host parallelism (the `--jobs` default).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A finished campaign: the spec plus one result per cell, in spec order.
+pub struct CampaignResult {
+    pub spec: CampaignSpec,
+    pub jobs: usize,
+    pub cells: Vec<CellResult>,
+}
+
+impl CampaignResult {
+    /// Cell lookup by config label (see `Cell::config_label`) + workload.
+    pub fn get(&self, config: &str, workload: &str) -> Option<&CellResult> {
+        self.cells
+            .iter()
+            .find(|c| c.cell.config_label == config && c.cell.workload == workload)
+    }
+
+    /// Every cell finished and passed its checks.
+    pub fn all_passed(&self) -> bool {
+        self.cells.iter().all(|c| c.passed())
+    }
+
+    /// Panicking metrics lookup for consumers that know the cell exists
+    /// (the figure benches address their grids by construction).
+    pub fn expect_metrics(&self, config: &str, workload: &str) -> &RunMetrics {
+        self.get(config, workload)
+            .and_then(|c| c.metrics())
+            .unwrap_or_else(|| panic!("missing cell {config}/{workload}"))
+    }
+}
+
+/// Expand `spec` and run every cell on up to `opts.jobs` threads.
+/// Errors only on an invalid spec; per-cell failures are recorded in the
+/// result, not propagated.
+pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignResult, String> {
+    let cells = spec.cells()?;
+    let total = cells.len();
+    let jobs = opts.jobs.max(1).min(total.max(1));
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<CellOutcome>>> = (0..total).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let cell = &cells[i];
+                let outcome = run_cell(cell);
+                if opts.progress {
+                    let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+                    progress_line(n, total, cell, &outcome);
+                }
+                *slots[i].lock().unwrap() = Some(outcome);
+            });
+        }
+    });
+
+    let results = cells
+        .into_iter()
+        .zip(slots)
+        .map(|(cell, slot)| CellResult {
+            cell,
+            outcome: slot
+                .into_inner()
+                .unwrap()
+                .expect("worker pool exited with an unfilled cell slot"),
+        })
+        .collect();
+    Ok(CampaignResult { spec: spec.clone(), jobs, cells: results })
+}
+
+fn run_cell(cell: &Cell) -> CellOutcome {
+    let cfg = match cell.config() {
+        Ok(c) => c,
+        Err(e) => return CellOutcome::Failed { error: e },
+    };
+    // The simulator runs artifact-free here (the PJRT runtime is not
+    // thread-shareable); Rust reference checks still verify every cell.
+    // The default panic hook stays installed, so a failing cell also
+    // prints its raw panic line to stderr — swapping the hook is
+    // process-global and would race concurrent tests.
+    match panic::catch_unwind(AssertUnwindSafe(|| run_workload(&cfg, &cell.workload, None))) {
+        Ok(res) => CellOutcome::Finished { metrics: res.metrics, checks: res.checks },
+        Err(payload) => CellOutcome::Failed { error: panic_message(payload) },
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+fn progress_line(n: usize, total: usize, cell: &Cell, outcome: &CellOutcome) {
+    match outcome {
+        CellOutcome::Finished { metrics, checks } => eprintln!(
+            "[{n}/{total}] {:<28} {:<8} {:>12} cycles  {}  ({:.2}s)",
+            cell.config_label,
+            cell.workload,
+            metrics.cycles,
+            if checks.iter().all(|c| c.passed) { "ok" } else { "CHECKS FAILED" },
+            metrics.host_seconds,
+        ),
+        CellOutcome::Failed { error } => eprintln!(
+            "[{n}/{total}] {:<28} {:<8} FAILED: {error}",
+            cell.config_label, cell.workload,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::CampaignSpec;
+
+    fn tiny_spec(workloads: &str) -> CampaignSpec {
+        CampaignSpec::parse(&format!(
+            "name = t\n\
+             presets = SM-WT-C-HALCONE\n\
+             workloads = {workloads}\n\
+             set.n_gpus = 2\n\
+             set.cus_per_gpu = 2\n\
+             set.wavefronts_per_cu = 2\n\
+             set.l2_banks = 2\n\
+             set.stacks_per_gpu = 2\n\
+             set.gpu_mem_bytes = 67108864\n\
+             set.scale = 0.05\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn runs_cells_and_indexes_results_in_spec_order() {
+        let spec = tiny_spec("rl,fir");
+        let res = run_campaign(&spec, &ExecOptions { jobs: 4, progress: false }).unwrap();
+        assert_eq!(res.cells.len(), 2);
+        assert!(res.all_passed(), "smoke cells failed");
+        for (i, c) in res.cells.iter().enumerate() {
+            assert_eq!(c.cell.index, i);
+            assert_eq!(c.status(), "ok");
+            assert!(c.metrics().unwrap().cycles > 0);
+        }
+        assert!(res.get("SM-WT-C-HALCONE", "fir").is_some());
+        assert!(res.get("SM-WT-C-HALCONE", "nope").is_none());
+    }
+
+    #[test]
+    fn a_panicking_cell_fails_alone() {
+        // A 4 KB GPU partition is exhausted by the very first array
+        // allocation (the bump allocator starts at offset 0x1000 and
+        // asserts), so that cell must record an error while its healthy
+        // sibling completes.
+        let spec = CampaignSpec::parse(
+            "name = t\n\
+             presets = SM-WT-C-HALCONE\n\
+             workloads = rl\n\
+             axis.gpu_mem_bytes = 4096,67108864\n\
+             set.n_gpus = 2\n\
+             set.cus_per_gpu = 2\n\
+             set.wavefronts_per_cu = 2\n\
+             set.l2_banks = 2\n\
+             set.stacks_per_gpu = 2\n\
+             set.scale = 0.05\n",
+        )
+        .unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false }).unwrap();
+        assert_eq!(res.cells.len(), 2);
+        let broken = res.get("SM-WT-C-HALCONE+gpu_mem_bytes=4096", "rl").unwrap();
+        assert_eq!(broken.status(), "error");
+        assert!(broken.error().is_some());
+        let healthy = res.get("SM-WT-C-HALCONE+gpu_mem_bytes=67108864", "rl").unwrap();
+        assert_eq!(healthy.status(), "ok");
+        assert!(!res.all_passed());
+    }
+
+    #[test]
+    fn jobs_larger_than_grid_is_fine() {
+        let spec = tiny_spec("rl");
+        let res = run_campaign(&spec, &ExecOptions { jobs: 64, progress: false }).unwrap();
+        assert_eq!(res.cells.len(), 1);
+        assert!(res.all_passed());
+    }
+}

@@ -1,0 +1,254 @@
+//! Regression gate: diff a fresh `campaign.json` against a committed
+//! baseline and fail on cycle-count drift.
+//!
+//! Simulated cycles are deterministic for a given commit, so any drift
+//! against a same-commit baseline is a real behaviour change; the
+//! tolerance exists to let intentional small perf deltas land without
+//! regenerating the baseline on every PR. The gate is direction-
+//! agnostic — an unexplained speed-*up* also means the baseline no
+//! longer describes the code and must be refreshed.
+
+use std::collections::BTreeMap;
+
+use crate::sweep::json::{self, Value};
+use crate::sweep::report;
+
+/// One gated cell that fell outside the tolerance (or vanished).
+pub struct Violation {
+    /// `config/workload`.
+    pub cell: String,
+    pub why: String,
+}
+
+/// Outcome of one gate comparison.
+pub struct GateReport {
+    pub campaign: String,
+    pub tolerance: f64,
+    /// Cells present in both documents.
+    pub compared: usize,
+    pub violations: Vec<Violation>,
+    /// Informational (e.g. cells new since the baseline).
+    pub notes: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Multi-line human rendering.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!("VIOLATION {}: {}\n", v.cell, v.why));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        let verdict = if self.passed() {
+            "PASS".to_string()
+        } else {
+            format!("FAIL ({} violations)", self.violations.len())
+        };
+        out.push_str(&format!(
+            "gate[{}]: {verdict} ({} cells compared, tolerance ±{:.2}%)",
+            self.campaign,
+            self.compared,
+            100.0 * self.tolerance,
+        ));
+        out
+    }
+}
+
+struct CellView {
+    status: String,
+    cycles: Option<f64>,
+}
+
+/// Severity order for status regressions: a cell may not move down
+/// this ladder (ok -> checks_failed -> error) relative to its baseline.
+fn status_rank(status: &str) -> u8 {
+    match status {
+        "ok" => 0,
+        "checks_failed" => 1,
+        _ => 2,
+    }
+}
+
+fn fmt_key(key: &(String, String)) -> String {
+    format!("{}/{}", key.0, key.1)
+}
+
+fn index_cells(root: &Value, which: &str) -> Result<BTreeMap<(String, String), CellView>, String> {
+    let cells = root
+        .get("cells")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| format!("{which}: no 'cells' array"))?;
+    let mut out = BTreeMap::new();
+    for cell in cells {
+        let config = cell
+            .get("config")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("{which}: cell missing 'config'"))?;
+        let workload = cell
+            .get("workload")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("{which}: cell missing 'workload'"))?;
+        let key = (config.to_string(), workload.to_string());
+        let view = CellView {
+            status: cell
+                .get("status")
+                .and_then(Value::as_str)
+                .unwrap_or("?")
+                .to_string(),
+            cycles: cell
+                .get("metrics")
+                .and_then(|m| m.get("cycles"))
+                .and_then(Value::as_f64),
+        };
+        if out.insert(key.clone(), view).is_some() {
+            return Err(format!("{which}: duplicate cell {}", fmt_key(&key)));
+        }
+    }
+    Ok(out)
+}
+
+/// Compare two campaign artifacts. `tolerance` is the allowed relative
+/// cycle drift per cell (0.05 = ±5%).
+pub fn diff(baseline: &str, current: &str, tolerance: f64) -> Result<GateReport, String> {
+    let b = json::parse(baseline).map_err(|e| format!("baseline: {e}"))?;
+    let c = json::parse(current).map_err(|e| format!("current: {e}"))?;
+    report::check_schema(&b, "baseline")?;
+    report::check_schema(&c, "current")?;
+    let bname = b.get("campaign").and_then(Value::as_str).unwrap_or("?").to_string();
+    let cname = c.get("campaign").and_then(Value::as_str).unwrap_or("?").to_string();
+    if bname != cname {
+        return Err(format!(
+            "campaign mismatch: baseline is '{bname}', current is '{cname}'"
+        ));
+    }
+    let bcells = index_cells(&b, "baseline")?;
+    let ccells = index_cells(&c, "current")?;
+    let mut report = GateReport {
+        campaign: bname,
+        tolerance,
+        compared: 0,
+        violations: Vec::new(),
+        notes: Vec::new(),
+    };
+    for (key, bc) in &bcells {
+        let Some(cc) = ccells.get(key) else {
+            report.violations.push(Violation {
+                cell: fmt_key(key),
+                why: "missing from current run".into(),
+            });
+            continue;
+        };
+        report.compared += 1;
+        if status_rank(&cc.status) > status_rank(&bc.status) {
+            report.violations.push(Violation {
+                cell: fmt_key(key),
+                why: format!("status regressed: {} -> {}", bc.status, cc.status),
+            });
+            continue;
+        }
+        if let (Some(bcy), Some(ccy)) = (bc.cycles, cc.cycles) {
+            if bcy > 0.0 {
+                let drift = ccy / bcy - 1.0;
+                if drift.abs() > tolerance {
+                    report.violations.push(Violation {
+                        cell: fmt_key(key),
+                        why: format!(
+                            "cycles drifted {:+.2}% ({bcy} -> {ccy}), tolerance ±{:.2}%",
+                            100.0 * drift,
+                            100.0 * tolerance,
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for key in ccells.keys() {
+        if !bcells.contains_key(key) {
+            report.notes.push(format!("{}: new cell (not in baseline)", fmt_key(key)));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(cycles: u64, status: &str) -> String {
+        format!(
+            r#"{{"schema_version": 1, "campaign": "t", "cells": [
+                 {{"config": "A", "workload": "rl", "status": "{status}",
+                   "metrics": {{"cycles": {cycles}}}}},
+                 {{"config": "B", "workload": "rl", "status": "ok",
+                   "metrics": {{"cycles": 1000}}}}
+               ]}}"#
+        )
+    }
+
+    #[test]
+    fn identical_documents_pass_at_zero_tolerance() {
+        let d = doc(500, "ok");
+        let rep = diff(&d, &d, 0.0).unwrap();
+        assert!(rep.passed());
+        assert_eq!(rep.compared, 2);
+        assert!(rep.describe().contains("PASS"));
+    }
+
+    #[test]
+    fn drift_beyond_tolerance_fails_in_both_directions() {
+        let base = doc(1000, "ok");
+        assert!(!diff(&base, &doc(1100, "ok"), 0.05).unwrap().passed());
+        assert!(!diff(&base, &doc(900, "ok"), 0.05).unwrap().passed());
+        assert!(diff(&base, &doc(1040, "ok"), 0.05).unwrap().passed());
+    }
+
+    #[test]
+    fn status_regression_and_missing_cells_fail() {
+        let base = doc(1000, "ok");
+        let rep = diff(&base, &doc(1000, "checks_failed"), 0.5).unwrap();
+        assert_eq!(rep.violations.len(), 1);
+        assert!(rep.violations[0].why.contains("status regressed"));
+
+        // Already-failing baseline cells may not degrade further
+        // (checks_failed -> error), but recovering is not a violation.
+        let failing_base = doc(1000, "checks_failed");
+        let rep = diff(&failing_base, &doc(1000, "error"), 0.5).unwrap();
+        assert_eq!(rep.violations.len(), 1);
+        assert!(diff(&failing_base, &doc(1000, "ok"), 0.5).unwrap().passed());
+
+        let shrunk = r#"{"schema_version": 1, "campaign": "t", "cells": [
+            {"config": "B", "workload": "rl", "status": "ok", "metrics": {"cycles": 1000}}
+        ]}"#;
+        let rep = diff(&base, shrunk, 0.5).unwrap();
+        assert!(rep.violations.iter().any(|v| v.why.contains("missing")));
+
+        // New cells are notes, not violations.
+        let rep = diff(shrunk, &base, 0.5).unwrap();
+        assert!(rep.passed());
+        assert_eq!(rep.notes.len(), 1);
+    }
+
+    #[test]
+    fn campaign_mismatch_is_an_error() {
+        let a = r#"{"schema_version": 1, "campaign": "a", "cells": []}"#;
+        let b = r#"{"schema_version": 1, "campaign": "b", "cells": []}"#;
+        assert!(diff(a, b, 0.1).is_err());
+        assert!(diff("not json", a, 0.1).is_err());
+    }
+
+    #[test]
+    fn unsupported_schema_version_is_an_error() {
+        let good = doc(100, "ok");
+        let v2 = good.replace("\"schema_version\": 1", "\"schema_version\": 2");
+        let none = good.replace("\"schema_version\": 1, ", "");
+        assert!(diff(&v2, &good, 0.1).unwrap_err().contains("schema_version"));
+        assert!(diff(&good, &v2, 0.1).unwrap_err().contains("schema_version"));
+        assert!(diff(&none, &good, 0.1).is_err());
+    }
+}

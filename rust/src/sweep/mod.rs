@@ -1,0 +1,26 @@
+//! Experiment-campaign subsystem: declarative grids over preset ×
+//! workload × config overrides, a parallel executor, machine-readable
+//! JSON artifacts and a perf regression gate.
+//!
+//! The paper's evaluation is a large grid (11 benchmarks × 6 presets ×
+//! GPU/CU counts, Figs. 7–9 + Tab. 4); `sweep` turns one figure into
+//! one command:
+//!
+//! ```text
+//! halcone sweep --campaign fig7 --jobs 8 --out fig7.json
+//! halcone gate  --baseline fig7.json
+//! ```
+//!
+//! Modules: [`spec`] (campaign grammar + built-ins), [`exec`]
+//! (work-sharing thread pool with panic isolation), [`report`]
+//! (`campaign.json` + speedup/geomean tables), [`gate`] (baseline
+//! diffing), [`json`] (dependency-free JSON).
+
+pub mod exec;
+pub mod gate;
+pub mod json;
+pub mod report;
+pub mod spec;
+
+pub use exec::{run_campaign, CampaignResult, CellOutcome, CellResult, ExecOptions};
+pub use spec::{CampaignSpec, Cell};

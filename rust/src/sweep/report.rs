@@ -1,0 +1,329 @@
+//! Campaign artifacts: `campaign.json` and the human speedup table.
+//!
+//! The JSON document is fully deterministic except for the per-cell
+//! `host_seconds` timing — every other field depends only on the spec
+//! and the (deterministic) simulations, never on `--jobs` or load.
+//! [`to_json_canonical`] drops the `host_seconds` fields and must be
+//! byte-identical across `--jobs` levels (`tests/sweep_campaign.rs`).
+
+use crate::metrics::bench::Table;
+use crate::metrics::{geomean, CacheCtrlStats, RunMetrics};
+use crate::sweep::exec::{CampaignResult, CellOutcome, CellResult};
+use crate::sweep::json::Value;
+
+/// Bumped whenever the artifact layout changes shape.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Reject artifacts written under a different schema (shared by the
+/// gate and `CampaignSpec::from_artifact` so the message and the check
+/// cannot drift apart).
+pub fn check_schema(doc: &Value, what: &str) -> Result<(), String> {
+    let sv = doc.get("schema_version").and_then(Value::as_f64);
+    if sv != Some(SCHEMA_VERSION as f64) {
+        return Err(format!(
+            "{what}: artifact schema_version {} is not the supported {SCHEMA_VERSION}; \
+             regenerate it with this binary",
+            sv.map(|v| v.to_string()).unwrap_or_else(|| "(missing)".into()),
+        ));
+    }
+    Ok(())
+}
+
+/// Full artifact, including host timing.
+pub fn to_json(result: &CampaignResult) -> String {
+    render(result, true)
+}
+
+/// Artifact with host-dependent fields removed: the determinism and
+/// regression-gate input.
+pub fn to_json_canonical(result: &CampaignResult) -> String {
+    render(result, false)
+}
+
+/// The config label speedups are computed against: the spec's named
+/// baseline, or the first config column.
+pub fn baseline_label(result: &CampaignResult) -> String {
+    result
+        .spec
+        .baseline
+        .clone()
+        .or_else(|| result.spec.config_labels().into_iter().next())
+        .unwrap_or_default()
+}
+
+/// Speed-up of `cr` vs the baseline cell of the same workload. `None`
+/// when either cell errored or recorded zero cycles.
+pub fn speedup_of(result: &CampaignResult, cr: &CellResult, base_label: &str) -> Option<f64> {
+    let m = cr.metrics()?;
+    let base = result.get(base_label, &cr.cell.workload)?.metrics()?;
+    m.speedup_vs(base)
+}
+
+/// Serialize an override list as a JSON object, last value winning on
+/// duplicate keys — the same resolution `Cell::config` applies — so
+/// external consumers (jq, python) read the value that actually took
+/// effect instead of a duplicate-key object.
+fn overrides_obj(kvs: &[(String, String)]) -> Value {
+    let mut out: Vec<(String, Value)> = Vec::new();
+    for (k, v) in kvs {
+        if let Some(slot) = out.iter_mut().find(|(k2, _)| k2 == k) {
+            slot.1 = Value::str(v);
+        } else {
+            out.push((k.clone(), Value::str(v)));
+        }
+    }
+    Value::Obj(out)
+}
+
+fn render(result: &CampaignResult, include_host: bool) -> String {
+    let spec = &result.spec;
+    let base_label = baseline_label(result);
+    let cells: Vec<Value> = result
+        .cells
+        .iter()
+        .map(|cr| cell_json(result, cr, &base_label, include_host))
+        .collect();
+    let spec_obj = Value::Obj(vec![
+        (
+            "presets".into(),
+            Value::Arr(spec.presets.iter().map(Value::str).collect()),
+        ),
+        (
+            "workloads".into(),
+            Value::Arr(spec.workloads.iter().map(Value::str).collect()),
+        ),
+        (
+            "axes".into(),
+            Value::Arr(
+                spec.axes
+                    .iter()
+                    .map(|(k, vs)| {
+                        Value::Obj(vec![
+                            ("key".into(), Value::str(k)),
+                            ("values".into(), Value::Arr(vs.iter().map(Value::str).collect())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("fixed".into(), overrides_obj(&spec.fixed)),
+        ("baseline".into(), Value::str(&base_label)),
+    ]);
+    let root = Value::Obj(vec![
+        ("schema_version".into(), Value::u64(SCHEMA_VERSION)),
+        ("campaign".into(), Value::str(&spec.name)),
+        ("spec".into(), spec_obj),
+        ("cells".into(), Value::Arr(cells)),
+    ]);
+    let mut out = root.to_pretty();
+    out.push('\n');
+    out
+}
+
+fn cell_json(
+    result: &CampaignResult,
+    cr: &CellResult,
+    base_label: &str,
+    include_host: bool,
+) -> Value {
+    let mut o: Vec<(String, Value)> = vec![
+        ("index".into(), Value::u64(cr.cell.index as u64)),
+        ("config".into(), Value::str(&cr.cell.config_label)),
+        ("preset".into(), Value::str(&cr.cell.preset)),
+        ("workload".into(), Value::str(&cr.cell.workload)),
+        ("overrides".into(), overrides_obj(&cr.cell.overrides)),
+        ("status".into(), Value::str(cr.status())),
+    ];
+    match &cr.outcome {
+        CellOutcome::Failed { error } => o.push(("error".into(), Value::str(error))),
+        CellOutcome::Finished { metrics, checks } => {
+            let speedup = match speedup_of(result, cr, base_label) {
+                Some(s) => Value::f64(s),
+                None => Value::Null,
+            };
+            o.push(("speedup".into(), speedup));
+            o.push(("metrics".into(), metrics_json(metrics, include_host)));
+            o.push((
+                "checks".into(),
+                Value::Arr(
+                    checks
+                        .iter()
+                        .map(|c| {
+                            Value::Obj(vec![
+                                ("kind".into(), Value::str(c.kind)),
+                                ("desc".into(), Value::str(&c.desc)),
+                                ("passed".into(), Value::Bool(c.passed)),
+                                ("max_err".into(), Value::f64(c.max_err as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+    }
+    Value::Obj(o)
+}
+
+fn cache_stats_json(s: &CacheCtrlStats) -> Value {
+    Value::Obj(vec![
+        ("reqs_in".into(), Value::u64(s.reqs_in)),
+        ("rsps_out".into(), Value::u64(s.rsps_out)),
+        ("reqs_down".into(), Value::u64(s.reqs_down)),
+        ("rsps_down".into(), Value::u64(s.rsps_down)),
+        ("hits".into(), Value::u64(s.hits)),
+        ("misses".into(), Value::u64(s.misses)),
+        ("coherency_misses".into(), Value::u64(s.coherency_misses)),
+        ("mshr_merges".into(), Value::u64(s.mshr_merges)),
+        ("bytes_down".into(), Value::u64(s.bytes_down)),
+        ("bytes_up".into(), Value::u64(s.bytes_up)),
+        ("writebacks".into(), Value::u64(s.writebacks)),
+        ("invalidations".into(), Value::u64(s.invalidations)),
+    ])
+}
+
+fn metrics_json(m: &RunMetrics, include_host: bool) -> Value {
+    let mut o: Vec<(String, Value)> = vec![
+        ("cycles".into(), Value::u64(m.cycles)),
+        ("events".into(), Value::u64(m.events)),
+    ];
+    if include_host {
+        o.push(("host_seconds".into(), Value::f64(m.host_seconds)));
+    }
+    o.extend([
+        ("cu_loads".into(), Value::u64(m.cu_loads)),
+        ("cu_stores".into(), Value::u64(m.cu_stores)),
+        ("mm_reads".into(), Value::u64(m.mm_reads)),
+        ("mm_writes".into(), Value::u64(m.mm_writes)),
+        ("tsu_lookups".into(), Value::u64(m.tsu_lookups)),
+        ("tsu_evictions".into(), Value::u64(m.tsu_evictions)),
+        ("pcie_bytes".into(), Value::u64(m.pcie_bytes)),
+        ("mem_bytes".into(), Value::u64(m.mem_bytes)),
+        ("l1_l2_transactions".into(), Value::u64(m.l1_l2_transactions())),
+        ("l2_mm_transactions".into(), Value::u64(m.l2_mm_transactions())),
+        ("l1".into(), cache_stats_json(&m.l1)),
+        ("l2".into(), cache_stats_json(&m.l2)),
+    ]);
+    Value::Obj(o)
+}
+
+/// Print the paper-style table: workloads × config columns, speed-up vs
+/// the baseline column, geomean ("Mean" bars) summary row. `n/a` marks
+/// a zero-cycle baseline, `err` a failed cell; `!` flags failed checks.
+pub fn print_speedup_table(result: &CampaignResult) {
+    let labels = result.spec.config_labels();
+    let base_label = baseline_label(result);
+    let mut headers: Vec<&str> = vec!["bench"];
+    headers.extend(labels.iter().map(|s| s.as_str()));
+    let mut widths: Vec<usize> = vec![8];
+    widths.extend(labels.iter().map(|l| l.len().max(9)));
+    println!(
+        "== campaign {}: speed-up vs {} ==\n",
+        result.spec.name, base_label
+    );
+    let t = Table::new(&headers, &widths);
+    let mut per_cfg: Vec<Vec<f64>> = vec![Vec::new(); labels.len()];
+    for wl in &result.spec.workloads {
+        let mut row = vec![wl.clone()];
+        for (ci, label) in labels.iter().enumerate() {
+            let txt = match result.get(label, wl) {
+                None => "-".to_string(),
+                Some(cr) => match speedup_of(result, cr, &base_label) {
+                    Some(s) => {
+                        per_cfg[ci].push(s);
+                        format!("{s:.2}x{}", if cr.passed() { "" } else { "!" })
+                    }
+                    None => match cr.status() {
+                        "error" => "err".to_string(),
+                        _ => "n/a".to_string(),
+                    },
+                },
+            };
+            row.push(txt);
+        }
+        t.row(&row);
+    }
+    let mut row = vec!["geomean".to_string()];
+    for s in &per_cfg {
+        row.push(if s.is_empty() { "-".to_string() } else { format!("{:.2}x", geomean(s)) });
+    }
+    t.row(&row);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::exec::{run_campaign, ExecOptions};
+    use crate::sweep::json;
+    use crate::sweep::spec::CampaignSpec;
+
+    #[test]
+    fn artifact_parses_and_carries_the_grid() {
+        let spec = CampaignSpec::builtin("smoke").unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false }).unwrap();
+        let text = to_json(&res);
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.get("campaign").unwrap().as_str(), Some("smoke"));
+        assert_eq!(
+            doc.get("schema_version").unwrap().as_f64(),
+            Some(SCHEMA_VERSION as f64)
+        );
+        let cells = doc.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 4);
+        for cell in cells {
+            assert_eq!(cell.get("status").unwrap().as_str(), Some("ok"));
+            let m = cell.get("metrics").unwrap();
+            assert!(m.get("cycles").unwrap().as_f64().unwrap() > 0.0);
+            assert!(m.get("host_seconds").is_some());
+            assert!(m.get("cu_loads").unwrap().as_f64().is_some());
+        }
+        // Canonical form drops host timing and nothing else.
+        let canon = to_json_canonical(&res);
+        assert!(!canon.contains("host_seconds"));
+        json::parse(&canon).unwrap();
+    }
+
+    #[test]
+    fn duplicate_overrides_serialize_last_wins() {
+        let v = overrides_obj(&[
+            ("scale".to_string(), "0.5".to_string()),
+            ("n_gpus".to_string(), "2".to_string()),
+            ("scale".to_string(), "0.25".to_string()),
+        ]);
+        assert_eq!(v.get("scale").unwrap().as_str(), Some("0.25"));
+        assert_eq!(v.get("n_gpus").unwrap().as_str(), Some("2"));
+        match &v {
+            Value::Obj(kvs) => assert_eq!(kvs.len(), 2),
+            _ => panic!("expected object"),
+        }
+    }
+
+    #[test]
+    fn artifact_spec_roundtrips_for_gate_reruns() {
+        // The gate reconstructs the campaign from the artifact; every
+        // grid-defining field must survive the round trip.
+        let mut spec = CampaignSpec::builtin("smoke").unwrap();
+        spec.fixed.push(("l1_bytes".into(), "8192".into())); // like --set
+        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false }).unwrap();
+        let doc = json::parse(&to_json(&res)).unwrap();
+        let rebuilt = CampaignSpec::from_artifact(&doc).unwrap();
+        assert_eq!(rebuilt.name, spec.name);
+        assert_eq!(rebuilt.presets, spec.presets);
+        assert_eq!(rebuilt.workloads, spec.workloads);
+        assert_eq!(rebuilt.axes, spec.axes);
+        assert_eq!(rebuilt.fixed, spec.fixed);
+        assert_eq!(rebuilt.baseline.as_deref(), Some("SM-WT-NC"));
+    }
+
+    #[test]
+    fn baseline_cells_report_speedup_one() {
+        let spec = CampaignSpec::builtin("smoke").unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 1, progress: false }).unwrap();
+        let base = baseline_label(&res);
+        assert_eq!(base, "SM-WT-NC");
+        for wl in &res.spec.workloads {
+            let cr = res.get(&base, wl).unwrap();
+            let s = speedup_of(&res, cr, &base).unwrap();
+            assert!((s - 1.0).abs() < 1e-12, "{wl}: {s}");
+        }
+    }
+}

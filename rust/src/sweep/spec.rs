@@ -1,0 +1,505 @@
+//! Declarative campaign specs: the experiment grid as data.
+//!
+//! A campaign is a cartesian product of three axis families —
+//! §4.1 presets × workloads × config-override axes (`n_gpus`,
+//! `cus_per_gpu`, `rd_lease`, `scale`, ... any `SystemConfig::set` key)
+//! — with optional per-axis include/exclude filters. Specs parse from
+//! the same hand-rolled `key = value` format `SystemConfig::parse`
+//! uses:
+//!
+//! ```text
+//! name      = lease-sweep
+//! presets   = SM-WT-C-HALCONE            # axis (default: all five)
+//! workloads = fir,bfs,mm                 # axis (default: STANDARD)
+//! axis.rd_lease = 8,16,32                # config-override axis
+//! set.scale = 0.5                        # fixed override, every cell
+//! exclude.workloads = bfs                # per-axis filter
+//! baseline  = SM-WT-C-HALCONE+rd_lease=8 # speedup reference column
+//! ```
+//!
+//! Built-ins reproduce the paper's grids: `fig7` (Fig. 7), `fig8` /
+//! `fig8cu` (Fig. 8a / 8b-c), `tab4` (§5.4 lease sensitivity) and
+//! `smoke` (a seconds-long CI campaign).
+
+use crate::config::SystemConfig;
+use crate::sweep::json::Value;
+use crate::workloads;
+
+/// One runnable grid point: preset + workload + config overrides.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Stable position in the expansion (artifact order).
+    pub index: usize,
+    pub preset: String,
+    pub workload: String,
+    /// `key=value` overrides applied on top of the preset, in order
+    /// (fixed `set.` entries first, then axis values).
+    pub overrides: Vec<(String, String)>,
+    /// Column label in tables and artifacts: `PRESET+key=value+...`.
+    pub config_label: String,
+}
+
+impl Cell {
+    /// Materialize the cell's `SystemConfig`.
+    pub fn config(&self) -> Result<SystemConfig, String> {
+        let mut cfg = SystemConfig::try_preset(&self.preset)?;
+        for (k, v) in &self.overrides {
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+}
+
+/// A declarative experiment campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    pub name: String,
+    /// §4.1 preset axis.
+    pub presets: Vec<String>,
+    /// Workload axis (paper abbreviations).
+    pub workloads: Vec<String>,
+    /// Config-override axes, cartesian-expanded in order (last fastest).
+    pub axes: Vec<(String, Vec<String>)>,
+    /// Overrides applied to every cell before the axis values.
+    pub fixed: Vec<(String, String)>,
+    /// Config label speedups are computed against (default: first column).
+    pub baseline: Option<String>,
+}
+
+impl CampaignSpec {
+    /// Built-in campaign names.
+    pub const BUILTINS: [&'static str; 5] = ["smoke", "fig7", "fig8", "fig8cu", "tab4"];
+
+    /// Look up a built-in campaign.
+    pub fn builtin(name: &str) -> Result<CampaignSpec, String> {
+        let standard = workloads::STANDARD.join(",");
+        let presets = SystemConfig::PRESETS.join(",");
+        let text = match name {
+            // Tiny geometry (the runner tests' "small" configs) so CI can
+            // exercise the whole pipeline in seconds.
+            "smoke" => "name = smoke\n\
+                 presets = SM-WT-NC,SM-WT-C-HALCONE\n\
+                 workloads = rl,fir\n\
+                 set.n_gpus = 2\n\
+                 set.cus_per_gpu = 2\n\
+                 set.wavefronts_per_cu = 2\n\
+                 set.l2_banks = 2\n\
+                 set.stacks_per_gpu = 2\n\
+                 set.gpu_mem_bytes = 67108864\n\
+                 set.scale = 0.05\n\
+                 baseline = SM-WT-NC\n"
+                .to_string(),
+            "fig7" => format!(
+                "name = fig7\npresets = {presets}\nworkloads = {standard}\nbaseline = RDMA-WB-NC\n"
+            ),
+            "fig8" => format!(
+                "name = fig8\n\
+                 presets = SM-WT-C-HALCONE\n\
+                 workloads = {standard}\n\
+                 axis.n_gpus = 1,2,4,8,16\n\
+                 baseline = SM-WT-C-HALCONE+n_gpus=1\n"
+            ),
+            "fig8cu" => format!(
+                "name = fig8cu\n\
+                 presets = SM-WT-C-HALCONE\n\
+                 workloads = {standard}\n\
+                 axis.cus_per_gpu = 32,48,64\n\
+                 baseline = SM-WT-C-HALCONE+cus_per_gpu=32\n"
+            ),
+            "tab4" => "name = tab4\n\
+                 presets = SM-WT-C-HALCONE\n\
+                 workloads = xtreme1,xtreme2,xtreme3\n\
+                 axis.rd_lease = 5,10,20\n\
+                 axis.wr_lease = 5,10,20\n\
+                 baseline = SM-WT-C-HALCONE+rd_lease=10+wr_lease=5\n"
+                .to_string(),
+            other => {
+                return Err(format!(
+                    "unknown campaign '{other}' (built-ins: {:?})",
+                    Self::BUILTINS
+                ))
+            }
+        };
+        CampaignSpec::parse(&text)
+    }
+
+    /// Parse a spec body (`key = value`, `#` comments, blank lines).
+    pub fn parse(text: &str) -> Result<CampaignSpec, String> {
+        let mut spec = CampaignSpec {
+            name: "custom".into(),
+            presets: Vec::new(),
+            workloads: Vec::new(),
+            axes: Vec::new(),
+            fixed: Vec::new(),
+            baseline: None,
+        };
+        let mut includes: Vec<(String, Vec<String>)> = Vec::new();
+        let mut excludes: Vec<(String, Vec<String>)> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key=value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            let list: Vec<String> = v
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if let Some(axis) = k.strip_prefix("axis.") {
+                spec.axes.push((axis.to_string(), list));
+            } else if let Some(key) = k.strip_prefix("set.") {
+                spec.fixed.push((key.to_string(), v.to_string()));
+            } else if let Some(axis) = k.strip_prefix("include.") {
+                includes.push((axis.to_string(), list));
+            } else if let Some(axis) = k.strip_prefix("exclude.") {
+                excludes.push((axis.to_string(), list));
+            } else {
+                match k {
+                    "name" => spec.name = v.to_string(),
+                    "presets" | "preset" => spec.presets = list,
+                    "workloads" | "workload" => spec.workloads = list,
+                    "baseline" => spec.baseline = Some(v.to_string()),
+                    other => return Err(format!("line {}: unknown spec key '{other}'", lineno + 1)),
+                }
+            }
+        }
+        if spec.presets.is_empty() {
+            spec.presets = SystemConfig::PRESETS.iter().map(|s| s.to_string()).collect();
+        }
+        if spec.workloads.is_empty() {
+            spec.workloads = workloads::STANDARD.iter().map(|s| s.to_string()).collect();
+        }
+        for (axis, keep) in &includes {
+            spec.filter(axis, keep, true)?;
+        }
+        for (axis, drop) in &excludes {
+            spec.filter(axis, drop, false)?;
+        }
+        spec.dedup_fixed();
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Collapse duplicate fixed-override keys: last value wins and sits
+    /// at the position of its last occurrence. Execution, the artifact's
+    /// `fixed` object and gate reconstruction then all see the identical
+    /// list — an interleaved duplicate (e.g. `coherence` set twice
+    /// around a lease key) would otherwise run under one order and be
+    /// rebuilt under another. Call after extending `fixed` by hand.
+    pub fn dedup_fixed(&mut self) {
+        let mut out: Vec<(String, String)> = Vec::new();
+        for (k, v) in self.fixed.drain(..) {
+            if let Some(pos) = out.iter().position(|(k2, _)| *k2 == k) {
+                out.remove(pos);
+            }
+            out.push((k, v));
+        }
+        self.fixed = out;
+    }
+
+    /// Reconstruct the spec recorded in a `campaign.json` artifact, so
+    /// `halcone gate` re-runs exactly the campaign its baseline was
+    /// generated with — including `set.` overrides, `--set` flags and
+    /// custom `--spec` files, none of which a name lookup would recover.
+    pub fn from_artifact(doc: &Value) -> Result<CampaignSpec, String> {
+        crate::sweep::report::check_schema(doc, "artifact")?;
+        fn strings(v: &Value, what: &str) -> Result<Vec<String>, String> {
+            v.as_arr()
+                .ok_or_else(|| format!("artifact spec: '{what}' is not an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| format!("artifact spec: non-string in '{what}'"))
+                })
+                .collect()
+        }
+        let name = doc
+            .get("campaign")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "artifact has no 'campaign' name".to_string())?;
+        let spec_obj = doc
+            .get("spec")
+            .ok_or_else(|| "artifact has no 'spec' object".to_string())?;
+        let field = |key: &str| {
+            spec_obj
+                .get(key)
+                .ok_or_else(|| format!("artifact spec: missing '{key}'"))
+        };
+        let presets = strings(field("presets")?, "presets")?;
+        let workloads = strings(field("workloads")?, "workloads")?;
+        let mut axes = Vec::new();
+        let axes_arr = field("axes")?
+            .as_arr()
+            .ok_or_else(|| "artifact spec: 'axes' is not an array".to_string())?;
+        for a in axes_arr {
+            let key = a
+                .get("key")
+                .and_then(Value::as_str)
+                .ok_or_else(|| "artifact spec: axis missing 'key'".to_string())?;
+            let values = strings(
+                a.get("values")
+                    .ok_or_else(|| "artifact spec: axis missing 'values'".to_string())?,
+                "axis values",
+            )?;
+            axes.push((key.to_string(), values));
+        }
+        let mut fixed = Vec::new();
+        if let Some(Value::Obj(kvs)) = spec_obj.get("fixed") {
+            for (k, v) in kvs {
+                let v = v
+                    .as_str()
+                    .ok_or_else(|| format!("artifact spec: non-string fixed value for '{k}'"))?;
+                fixed.push((k.clone(), v.to_string()));
+            }
+        }
+        let baseline = spec_obj.get("baseline").and_then(Value::as_str).map(str::to_string);
+        let spec = CampaignSpec {
+            name: name.to_string(),
+            presets,
+            workloads,
+            axes,
+            fixed,
+            baseline,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Keep (`keep = true`) or drop the listed values of one axis.
+    fn filter(&mut self, axis: &str, values: &[String], keep: bool) -> Result<(), String> {
+        let list = match axis {
+            "presets" | "preset" => &mut self.presets,
+            "workloads" | "workload" => &mut self.workloads,
+            other => self
+                .axes
+                .iter_mut()
+                .find(|(k, _)| k == other)
+                .map(|(_, vs)| vs)
+                .ok_or_else(|| format!("filter on unknown axis '{other}'"))?,
+        };
+        list.retain(|x| values.contains(x) == keep);
+        if list.is_empty() {
+            return Err(format!("filter on '{axis}' removed every value"));
+        }
+        Ok(())
+    }
+
+    /// Sanity-check axis contents (cheap; full config validation happens
+    /// in [`CampaignSpec::cells`]).
+    fn validate(&self) -> Result<(), String> {
+        // Duplicate axis values would expand to duplicate (config,
+        // workload) cells — ambiguous lookups, and an artifact the
+        // gate refuses to index.
+        fn no_dups(kind: &str, vals: &[String]) -> Result<(), String> {
+            for (i, v) in vals.iter().enumerate() {
+                if vals[..i].contains(v) {
+                    return Err(format!("duplicate {kind} '{v}'"));
+                }
+            }
+            Ok(())
+        }
+        no_dups("preset", &self.presets)?;
+        no_dups("workload", &self.workloads)?;
+        for p in &self.presets {
+            SystemConfig::try_preset(p)?;
+        }
+        for w in &self.workloads {
+            if !workloads::is_known(w) {
+                return Err(format!(
+                    "unknown workload '{w}' (see `halcone list`)"
+                ));
+            }
+        }
+        for (k, vs) in &self.axes {
+            if vs.is_empty() {
+                return Err(format!("axis '{k}' has no values"));
+            }
+            if self.axes.iter().filter(|(k2, _)| k2 == k).count() > 1 {
+                return Err(format!("axis '{k}' listed twice"));
+            }
+            no_dups(&format!("value for axis '{k}'"), vs)?;
+        }
+        if let Some(b) = &self.baseline {
+            if !self.config_labels().iter().any(|l| l == b) {
+                return Err(format!(
+                    "baseline '{b}' is not one of the campaign's config labels {:?}",
+                    self.config_labels()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// All axis-override combinations, cartesian, in axis order (last
+    /// axis fastest). One empty combo when there are no axes.
+    fn axis_combos(&self) -> Vec<Vec<(String, String)>> {
+        let mut combos: Vec<Vec<(String, String)>> = vec![Vec::new()];
+        for (k, vals) in &self.axes {
+            let mut next = Vec::with_capacity(combos.len() * vals.len());
+            for c in &combos {
+                for v in vals {
+                    let mut c2 = c.clone();
+                    c2.push((k.clone(), v.clone()));
+                    next.push(c2);
+                }
+            }
+            combos = next;
+        }
+        combos
+    }
+
+    fn label(preset: &str, combo: &[(String, String)]) -> String {
+        let mut s = preset.to_string();
+        for (k, v) in combo {
+            s.push('+');
+            s.push_str(k);
+            s.push('=');
+            s.push_str(v);
+        }
+        s
+    }
+
+    /// Distinct config variants (preset × axis combos) in column order.
+    pub fn config_labels(&self) -> Vec<String> {
+        let combos = self.axis_combos();
+        let mut out = Vec::with_capacity(self.presets.len() * combos.len());
+        for p in &self.presets {
+            for combo in &combos {
+                out.push(Self::label(p, combo));
+            }
+        }
+        out
+    }
+
+    /// Expand the grid. Every cell's config is built once here so an
+    /// invalid key/value fails fast, before any simulation starts.
+    pub fn cells(&self) -> Result<Vec<Cell>, String> {
+        self.validate()?;
+        let combos = self.axis_combos();
+        let mut out = Vec::with_capacity(self.workloads.len() * self.presets.len() * combos.len());
+        for wl in &self.workloads {
+            for p in &self.presets {
+                for combo in &combos {
+                    let mut overrides = self.fixed.clone();
+                    overrides.extend(combo.iter().cloned());
+                    let cell = Cell {
+                        index: out.len(),
+                        preset: p.clone(),
+                        workload: wl.clone(),
+                        overrides,
+                        config_label: Self::label(p, combo),
+                    };
+                    cell.config()
+                        .map_err(|e| format!("cell {}/{wl}: {e}", cell.config_label))?;
+                    out.push(cell);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_axes_filters_and_baseline() {
+        let spec = CampaignSpec::parse(
+            "name = t\n\
+             presets = SM-WT-NC,SM-WT-C-HALCONE\n\
+             workloads = rl,fir,mm\n\
+             axis.n_gpus = 2,4\n\
+             set.scale = 0.1\n\
+             exclude.workloads = mm\n\
+             baseline = SM-WT-NC+n_gpus=2\n",
+        )
+        .unwrap();
+        assert_eq!(spec.workloads, ["rl", "fir"]);
+        assert_eq!(
+            spec.config_labels(),
+            [
+                "SM-WT-NC+n_gpus=2",
+                "SM-WT-NC+n_gpus=4",
+                "SM-WT-C-HALCONE+n_gpus=2",
+                "SM-WT-C-HALCONE+n_gpus=4",
+            ]
+        );
+        let cells = spec.cells().unwrap();
+        assert_eq!(cells.len(), 2 * 4);
+        assert_eq!(cells[0].overrides, [
+            ("scale".to_string(), "0.1".to_string()),
+            ("n_gpus".to_string(), "2".to_string()),
+        ]);
+        assert_eq!(cells[0].config().unwrap().n_gpus, 2);
+        assert!((cells[0].config().unwrap().scale - 0.1).abs() < 1e-12);
+        // Indices are the expansion order.
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn duplicate_set_keys_collapse_last_wins() {
+        let spec = CampaignSpec::parse(
+            "workloads = rl\nset.scale = 0.5\nset.n_gpus = 2\nset.scale = 0.25\n",
+        )
+        .unwrap();
+        assert_eq!(spec.fixed, [
+            ("n_gpus".to_string(), "2".to_string()),
+            ("scale".to_string(), "0.25".to_string()),
+        ]);
+    }
+
+    #[test]
+    fn include_filter_keeps_only_listed_values() {
+        let spec = CampaignSpec::parse(
+            "workloads = rl,fir,mm\ninclude.workloads = fir\n",
+        )
+        .unwrap();
+        assert_eq!(spec.workloads, ["fir"]);
+        // presets defaulted to all five.
+        assert_eq!(spec.presets.len(), 5);
+    }
+
+    #[test]
+    fn rejects_unknown_names_and_empty_axes() {
+        assert!(CampaignSpec::parse("presets = NOPE\n").is_err());
+        assert!(CampaignSpec::parse("workloads = nope\n").is_err());
+        assert!(CampaignSpec::parse("workloads = rl\nexclude.workloads = rl\n").is_err());
+        assert!(CampaignSpec::parse("baseline = NOPE\n").is_err());
+        assert!(CampaignSpec::parse("bogus = 1\n").is_err());
+        // Duplicates would expand into duplicate cells the gate rejects.
+        assert!(CampaignSpec::parse("workloads = fir,fir\n").is_err());
+        assert!(CampaignSpec::parse("presets = SM-WT-NC,SM-WT-NC\n").is_err());
+        assert!(CampaignSpec::parse("axis.n_gpus = 2,2\n").is_err());
+        // Axis values are validated against real configs at expansion:
+        // rd_lease is rejected under the default (non-HALCONE) presets.
+        assert!(CampaignSpec::parse("axis.rd_lease = 5\n").unwrap().cells().is_err());
+    }
+
+    #[test]
+    fn builtins_expand_to_valid_cells() {
+        for name in CampaignSpec::BUILTINS {
+            let spec = CampaignSpec::builtin(name).unwrap();
+            let cells = spec.cells().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!cells.is_empty(), "{name}: empty grid");
+        }
+        assert_eq!(CampaignSpec::builtin("fig7").unwrap().cells().unwrap().len(), 55);
+        assert_eq!(CampaignSpec::builtin("fig8").unwrap().cells().unwrap().len(), 55);
+        assert_eq!(CampaignSpec::builtin("smoke").unwrap().cells().unwrap().len(), 4);
+        assert!(CampaignSpec::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn tab4_baseline_is_the_paper_default_lease_pair() {
+        let spec = CampaignSpec::builtin("tab4").unwrap();
+        assert_eq!(spec.baseline.as_deref(), Some("SM-WT-C-HALCONE+rd_lease=10+wr_lease=5"));
+        assert_eq!(spec.cells().unwrap().len(), 3 * 9);
+    }
+}

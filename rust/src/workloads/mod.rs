@@ -295,6 +295,12 @@ pub const STANDARD: [&str; 11] =
 /// The Xtreme synthetic suite (§4.3.2).
 pub const XTREME: [&str; 3] = ["xtreme1", "xtreme2", "xtreme3"];
 
+/// Whether `name` is in the registry ([`build`] panics on unknowns;
+/// campaign specs validate with this first).
+pub fn is_known(name: &str) -> bool {
+    STANDARD.contains(&name) || XTREME.contains(&name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,85 @@
+//! Campaign-level determinism and gate round-trip.
+//!
+//! Piggybacks on the single-run determinism guarantee
+//! (`deterministic_across_runs` in `coordinator::runner`): since every
+//! cell is deterministic and artifacts are ordered by spec expansion,
+//! the whole `campaign.json` must be byte-identical across `--jobs`
+//! levels once the host-timing fields are excluded.
+
+use halcone::sweep::exec::{run_campaign, ExecOptions};
+use halcone::sweep::spec::CampaignSpec;
+use halcone::sweep::{gate, json, report};
+
+#[test]
+fn campaign_json_is_byte_identical_across_jobs_levels() {
+    let spec = CampaignSpec::builtin("smoke").unwrap();
+    let serial = run_campaign(&spec, &ExecOptions { jobs: 1, progress: false }).unwrap();
+    let parallel = run_campaign(&spec, &ExecOptions { jobs: 8, progress: false }).unwrap();
+    assert!(serial.all_passed(), "smoke campaign failed serially");
+    assert!(parallel.all_passed(), "smoke campaign failed in parallel");
+
+    // Canonical artifacts (host timing excluded) are byte-identical.
+    let a = report::to_json_canonical(&serial);
+    let b = report::to_json_canonical(&parallel);
+    assert_eq!(a, b, "campaign.json differs between --jobs 1 and --jobs 8");
+
+    // The full artifacts differ only on host_seconds lines.
+    let strip = |s: &str| {
+        s.lines()
+            .filter(|l| !l.contains("\"host_seconds\""))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(
+        strip(&report::to_json(&serial)),
+        strip(&report::to_json(&parallel)),
+        "non-host fields differ between --jobs 1 and --jobs 8"
+    );
+}
+
+#[test]
+fn same_commit_gate_round_trip_passes_at_zero_tolerance() {
+    let spec = CampaignSpec::builtin("smoke").unwrap();
+    let run = run_campaign(&spec, &ExecOptions { jobs: 4, progress: false }).unwrap();
+    let baseline = report::to_json(&run);
+    // A fresh artifact from the same commit must gate cleanly even with
+    // zero tolerance (cycles are deterministic).
+    let rerun = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false }).unwrap();
+    let current = report::to_json(&rerun);
+    let rep = gate::diff(&baseline, &current, 0.0).unwrap();
+    assert!(rep.passed(), "{}", rep.describe());
+    assert_eq!(rep.compared, 4);
+}
+
+#[test]
+fn artifact_is_wellformed_json_with_expected_shape() {
+    let spec = CampaignSpec::builtin("smoke").unwrap();
+    let run = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false }).unwrap();
+    let doc = json::parse(&report::to_json(&run)).unwrap();
+    assert_eq!(doc.get("campaign").unwrap().as_str(), Some("smoke"));
+    let spec_obj = doc.get("spec").unwrap();
+    assert_eq!(
+        spec_obj.get("baseline").unwrap().as_str(),
+        Some("SM-WT-NC")
+    );
+    let cells = doc.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 4);
+    for cell in cells {
+        let m = cell.get("metrics").unwrap();
+        for key in [
+            "cycles",
+            "events",
+            "host_seconds",
+            "cu_loads",
+            "cu_stores",
+            "l1_l2_transactions",
+            "l2_mm_transactions",
+        ] {
+            assert!(m.get(key).is_some(), "metrics missing '{key}'");
+        }
+        assert!(cell.get("checks").unwrap().as_arr().unwrap().len() > 0);
+        // Baseline column reports speedup 1.0, others a finite number.
+        let s = cell.get("speedup").unwrap().as_f64().unwrap();
+        assert!(s.is_finite() && s > 0.0);
+    }
+}
