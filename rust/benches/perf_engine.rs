@@ -1,13 +1,16 @@
 //! Simulator performance (EXPERIMENTS.md §Perf, L3): events/second on the
 //! hot paths. Not a paper figure — the §Perf before/after numbers come
-//! from here.
+//! from here, and every run appends a machine-readable snapshot to
+//! `BENCH_perf.json` so the perf trajectory accumulates (docs/PERF.md).
 //!
-//!     cargo bench --bench perf_engine
+//!     cargo bench --bench perf_engine            # full suite
+//!     cargo bench --bench perf_engine -- rl fir  # workload subset (CI smoke)
 
 use halcone::config::SystemConfig;
 use halcone::coordinator::runner::run_workload;
 use halcone::metrics::bench::{measure, Table};
 use halcone::sim::{CompId, Component, Ctx, Cycle, Engine, Link, Msg};
+use halcone::sweep::json::Value;
 
 /// Raw engine throughput: a ping-pong pair exchanging N messages.
 struct Pinger {
@@ -42,18 +45,45 @@ fn engine_throughput(n: u32) -> f64 {
     2.0 * n as f64 / m.median_s
 }
 
+const ALL_WORKLOADS: [&str; 5] = ["rl", "fir", "bfs", "mm", "xtreme1"];
+
 fn main() {
+    // `cargo bench -- rl fir` restricts the full-system rows (the CI
+    // perf-smoke step runs a fast subset); cargo may also pass harness
+    // flags like `--bench`, which we ignore.
+    let selected: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    for s in &selected {
+        if !ALL_WORKLOADS.contains(&s.as_str()) {
+            eprintln!(
+                "error: unknown workload '{s}' (available: {})",
+                ALL_WORKLOADS.join(", ")
+            );
+            std::process::exit(2);
+        }
+    }
+    let workloads: Vec<&str> = if selected.is_empty() {
+        ALL_WORKLOADS.to_vec()
+    } else {
+        ALL_WORKLOADS
+            .iter()
+            .copied()
+            .filter(|w| selected.iter().any(|s| s == w))
+            .collect()
+    };
+
     println!("== L3 simulator performance ==\n");
-    println!(
-        "raw event loop (ping-pong): {:.1} M events/s\n",
-        engine_throughput(2_000_000) / 1e6
-    );
+    let ping_pong = engine_throughput(2_000_000);
+    println!("raw event loop (ping-pong): {:.1} M events/s\n", ping_pong / 1e6);
 
     let t = Table::new(
         &["workload", "events", "sim cycles", "host s", "Mev/s", "sim-ops/s"],
         &[9, 11, 12, 8, 8, 11],
     );
-    for wl in ["rl", "fir", "bfs", "mm", "xtreme1"] {
+    let mut rows: Vec<Value> = Vec::new();
+    for wl in &workloads {
         let cfg = SystemConfig::preset("SM-WT-C-HALCONE");
         // Timed externally of run_workload's own clock for a median of 3.
         let mut last = None;
@@ -64,15 +94,39 @@ fn main() {
             r
         });
         let (events, cycles, ops) = last.unwrap();
+        let mev_s = events as f64 / m.median_s / 1e6;
         t.row(&[
-            wl.into(),
+            (*wl).into(),
             events.to_string(),
             cycles.to_string(),
             format!("{:.3}", m.median_s),
-            format!("{:.1}", events as f64 / m.median_s / 1e6),
+            format!("{:.1}", mev_s),
             format!("{:.1}M", ops as f64 / m.median_s / 1e6),
         ]);
+        rows.push(Value::Obj(vec![
+            ("workload".into(), Value::str(*wl)),
+            ("events".into(), Value::u64(events)),
+            ("cycles".into(), Value::u64(cycles)),
+            ("host_seconds".into(), Value::f64(m.median_s)),
+            ("mev_per_s".into(), Value::f64(mev_s)),
+            ("events_per_sec".into(), Value::f64(events as f64 / m.median_s)),
+        ]));
     }
+
+    // Machine-readable artifact for the perf log (appended-to by each
+    // run via overwrite; history lives in docs/PERF.md + CI summaries).
+    let doc = Value::Obj(vec![
+        ("bench".into(), Value::str("perf_engine")),
+        ("ping_pong_events_per_sec".into(), Value::f64(ping_pong)),
+        ("workloads".into(), Value::Arr(rows)),
+    ]);
+    let mut out = doc.to_pretty();
+    out.push('\n');
+    match std::fs::write("BENCH_perf.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_perf.json"),
+        Err(e) => eprintln!("\nwarning: could not write BENCH_perf.json: {e}"),
+    }
+
     println!("\ntargets (DESIGN.md §Perf): > 2 M events/s on full-system workloads,");
-    println!("no allocation in the event hot loop (validated by flamegraph, see EXPERIMENTS.md)");
+    println!("no allocation in the event hot loop (tests/alloc_discipline.rs)");
 }

@@ -25,10 +25,17 @@
 //!
 //! The `carry_warpts` flag reproduces G-TSC-style CU-level-timestamp
 //! traffic for the E10 ablation (affects wire bytes only).
+//!
+//! §Perf: all payloads are inline [`LineBuf`]s, `MemReq`/`MemRsp` boxes
+//! recycle through the engine pool (`ctx.req_msg`/`ctx.reclaim_req`), and
+//! line bytes live in the cache array's flat backing — the memory-
+//! transaction path allocates nothing in steady state (see docs/PERF.md).
 
 use crate::coherence::{L1Routes, L2Routes, TsMeta};
 use crate::mem::cache::{CacheArray, CacheParams};
+use crate::mem::fxhash::FxHashMap;
 use crate::mem::mshr::{Mshr, MshrKind};
+use crate::mem::LineBuf;
 use crate::metrics::CacheCtrlStats;
 use crate::sim::msg::{MemReq, MemRsp, TsPair};
 use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
@@ -54,20 +61,21 @@ pub struct HalconeL1 {
     /// write-locked coalesce here and flush as one combined write at
     /// unlock. Their CU acks are withheld until the flush lands (so phase
     /// completion implies durability at the level below).
-    coalesce: std::collections::HashMap<u64, Vec<(u64, Vec<u8>)>>,
+    coalesce: FxHashMap<u64, Vec<(u64, LineBuf)>>,
     /// Coalesced requests awaiting their flush's completion.
-    pending_acks: std::collections::HashMap<u64, Vec<MemReq>>,
+    pending_acks: FxHashMap<u64, Vec<MemReq>>,
     pub stats: CacheCtrlStats,
     line: u64,
 }
 
 /// Merge buffered (addr, bytes) writes into maximal contiguous runs.
-pub(crate) fn coalesce_runs(mut buf: Vec<(u64, Vec<u8>)>) -> Vec<(u64, Vec<u8>)> {
+/// All entries target one cache line, so a run never exceeds line size.
+pub(crate) fn coalesce_runs(mut buf: Vec<(u64, LineBuf)>) -> Vec<(u64, LineBuf)> {
     buf.sort_by_key(|(a, _)| *a);
-    let mut runs: Vec<(u64, Vec<u8>)> = Vec::new();
+    let mut runs: Vec<(u64, LineBuf)> = Vec::new();
     for (addr, bytes) in buf {
         match runs.last_mut() {
-            Some((ra, rb)) if *ra + rb.len() as u64 == addr => rb.extend(bytes),
+            Some((ra, rb)) if *ra + rb.len() as u64 == addr => rb.extend_from_slice(&bytes),
             Some((ra, rb)) if addr < *ra + rb.len() as u64 => {
                 // Overwrite within the run (later write wins).
                 let off = (addr - *ra) as usize;
@@ -101,8 +109,8 @@ impl HalconeL1 {
             cts: 0,
             lat,
             carry_warpts,
-            coalesce: std::collections::HashMap::new(),
-            pending_acks: std::collections::HashMap::new(),
+            coalesce: FxHashMap::default(),
+            pending_acks: FxHashMap::default(),
             stats: CacheCtrlStats::default(),
             line,
         }
@@ -114,12 +122,12 @@ impl HalconeL1 {
 
     fn respond_word(&mut self, req: &MemReq, line_data: &[u8], ctx: &mut Ctx) {
         let off = (req.addr - self.line_base(req.addr)) as usize;
-        let data = line_data[off..off + req.size as usize].to_vec();
+        let data = LineBuf::from_slice(&line_data[off..off + req.size as usize]);
         self.respond_sliced(req, data, ctx);
     }
 
     /// Respond with already-sliced payload bytes.
-    fn respond_sliced(&mut self, req: &MemReq, data: Vec<u8>, ctx: &mut Ctx) {
+    fn respond_sliced(&mut self, req: &MemReq, data: LineBuf, ctx: &mut Ctx) {
         let rsp = MemRsp {
             id: req.id,
             kind: ReqKind::Read,
@@ -129,7 +137,8 @@ impl HalconeL1 {
             ts: None,
         };
         self.stats.rsps_out += 1;
-        ctx.schedule(self.lat, req.src, Msg::Rsp(Box::new(rsp)));
+        let msg = ctx.rsp_msg(rsp);
+        ctx.schedule(self.lat, req.src, msg);
     }
 
     fn respond_write_ack(&mut self, req: &MemReq, ctx: &mut Ctx) {
@@ -138,11 +147,12 @@ impl HalconeL1 {
             kind: ReqKind::Write,
             addr: req.addr,
             dst: req.src,
-            data: vec![],
+            data: LineBuf::empty(),
             ts: None,
         };
         self.stats.rsps_out += 1;
-        ctx.schedule(self.lat, req.src, Msg::Rsp(Box::new(rsp)));
+        let msg = ctx.rsp_msg(rsp);
+        ctx.schedule(self.lat, req.src, msg);
     }
 
     fn send_down(&mut self, down: MemReq, ctx: &mut Ctx) {
@@ -150,7 +160,8 @@ impl HalconeL1 {
         self.stats.reqs_down += 1;
         self.stats.bytes_down += down.wire_bytes();
         let bytes = down.wire_bytes();
-        ctx.send(link, next, bytes, Msg::Req(Box::new(down)));
+        let msg = ctx.req_msg(down);
+        ctx.send(link, next, bytes, msg);
     }
 
     fn on_cu_req(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
@@ -163,7 +174,7 @@ impl HalconeL1 {
                     let off = (req.addr - la) as usize;
                     line.data[off..off + req.data.len()].copy_from_slice(&req.data);
                 }
-                self.coalesce.entry(la).or_default().push((req.addr, req.data.clone()));
+                self.coalesce.entry(la).or_default().push((req.addr, req.data));
                 self.pending_acks.entry(la).or_default().push(req);
                 return;
             }
@@ -181,8 +192,9 @@ impl HalconeL1 {
                     if cts <= line.meta.rts {
                         // Copy only the requested bytes (hits are the
                         // hottest path; cloning whole lines showed in perf).
-                        hit_data =
-                            Some(line.data[off..off + req.size as usize].to_vec());
+                        hit_data = Some(LineBuf::from_slice(
+                            &line.data[off..off + req.size as usize],
+                        ));
                     } else {
                         // Tag hit, lease expired: coherency miss (Alg. 1).
                         self.stats.coherency_misses += 1;
@@ -204,7 +216,7 @@ impl HalconeL1 {
                     size: self.line as u32,
                     src: ctx.self_id,
                     dst: self.routes.route(la).2,
-                    data: vec![],
+                    data: LineBuf::empty(),
                     warpts: self.carry_warpts.then_some(self.cts),
                 };
                 self.mshr.allocate(la, MshrKind::Fill, req);
@@ -245,7 +257,7 @@ impl HalconeL1 {
                     size: req.size,
                     src: ctx.self_id,
                     dst: self.routes.route(req.addr).2,
-                    data: req.data.clone(),
+                    data: req.data,
                     warpts: self.carry_warpts.then_some(self.cts),
                 };
                 // Lock the block until timestamps return (Alg. 4).
@@ -266,17 +278,16 @@ impl HalconeL1 {
             MshrKind::Fill => {
                 debug_assert_eq!(rsp.data.len() as u64, self.line);
                 // Clean insert (WT lines are never dirty); evictions drop.
-                let data: Box<[u8]> = rsp.data.clone().into_boxed_slice();
-                self.cache.insert(la, data.clone(), false, meta);
-                self.respond_word(&entry.primary.clone(), &data, ctx);
+                self.cache.insert(la, &rsp.data, false, meta);
+                self.respond_word(&entry.primary, &rsp.data, ctx);
             }
             MshrKind::WriteLock => {
                 if let Some(line) = self.cache.lookup(la) {
-                    line.meta = meta;
+                    *line.meta = meta;
                 }
                 // Writes advance the cache's clock (Alg. 4).
                 self.cts = self.cts.max(meta.wts);
-                let primary = entry.primary.clone();
+                let primary = entry.primary;
                 if primary.src != CompId::NONE {
                     self.respond_write_ack(&primary, ctx);
                 }
@@ -296,10 +307,10 @@ impl HalconeL1 {
                         size: data.len() as u32,
                         src: ctx.self_id,
                         dst: self.routes.route(addr).2,
-                        data: data.clone(),
+                        data,
                         warpts: self.carry_warpts.then_some(self.cts),
                     };
-                    let synthetic = MemReq { src: CompId::NONE, ..down.clone() };
+                    let synthetic = MemReq { src: CompId::NONE, ..down };
                     self.mshr.allocate(la, MshrKind::WriteLock, synthetic);
                     for w in entry.waiters {
                         self.mshr.merge(la, w);
@@ -331,9 +342,13 @@ impl Component for HalconeL1 {
         match msg {
             Msg::Req(req) => {
                 self.stats.reqs_in += 1;
-                self.on_cu_req(now, *req, ctx);
+                let req = ctx.reclaim_req(req);
+                self.on_cu_req(now, req, ctx);
             }
-            Msg::Rsp(rsp) => self.on_down_rsp(now, *rsp, ctx),
+            Msg::Rsp(rsp) => {
+                let rsp = ctx.reclaim_rsp(rsp);
+                self.on_down_rsp(now, rsp, ctx);
+            }
             Msg::FenceQuery { reply_to } => {
                 let cts = self.cts;
                 ctx.schedule(0, reply_to, Msg::FenceInfo { from: ctx.self_id, cts });
@@ -388,7 +403,7 @@ impl HalconeL2 {
         addr & !(self.line - 1)
     }
 
-    fn respond_up(&mut self, req: &MemReq, data: Vec<u8>, meta: TsMeta, ctx: &mut Ctx) {
+    fn respond_up(&mut self, req: &MemReq, data: LineBuf, meta: TsMeta, ctx: &mut Ctx) {
         let rsp = MemRsp {
             id: req.id,
             kind: req.kind,
@@ -401,7 +416,8 @@ impl HalconeL2 {
         self.stats.bytes_up += rsp.wire_bytes();
         let (link, next) = self.routes.route_up(req.src);
         let bytes = rsp.wire_bytes();
-        ctx.send_delayed(self.lat, link, next, bytes, Msg::Rsp(Box::new(rsp)));
+        let msg = ctx.rsp_msg(rsp);
+        ctx.send_delayed(self.lat, link, next, bytes, msg);
     }
 
     fn send_mm(&mut self, down: MemReq, ctx: &mut Ctx) {
@@ -409,7 +425,8 @@ impl HalconeL2 {
         self.stats.reqs_down += 1;
         self.stats.bytes_down += down.wire_bytes();
         let bytes = down.wire_bytes();
-        ctx.send(link, next, bytes, Msg::Req(Box::new(down)));
+        let msg = ctx.req_msg(down);
+        ctx.send(link, next, bytes, msg);
     }
 
     fn on_l1_req(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
@@ -425,7 +442,7 @@ impl HalconeL2 {
                 let mut hit = None;
                 if let Some(line) = self.cache.lookup(req.addr) {
                     if cts <= line.meta.rts {
-                        hit = Some((line.data.to_vec(), line.meta));
+                        hit = Some((LineBuf::from_slice(line.data), *line.meta));
                     } else {
                         self.stats.coherency_misses += 1;
                     }
@@ -446,7 +463,7 @@ impl HalconeL2 {
                     size: self.line as u32,
                     src: ctx.self_id,
                     dst: self.routes.route_mm(la).2,
-                    data: vec![],
+                    data: LineBuf::empty(),
                     warpts: self.carry_warpts.then_some(self.cts),
                 };
                 self.mshr.allocate(la, MshrKind::Fill, req);
@@ -475,7 +492,7 @@ impl HalconeL2 {
                     size: req.size,
                     src: ctx.self_id,
                     dst: self.routes.route_mm(req.addr).2,
-                    data: req.data.clone(),
+                    data: req.data,
                     warpts: self.carry_warpts.then_some(self.cts),
                 };
                 self.mshr.allocate(la, MshrKind::WriteLock, req);
@@ -493,20 +510,17 @@ impl HalconeL2 {
         let meta = merge_ts(self.cts, ts);
         match entry.kind {
             MshrKind::Fill => {
-                let data: Box<[u8]> = rsp.data.clone().into_boxed_slice();
-                self.cache.insert(la, data.clone(), false, meta);
-                let primary = entry.primary.clone();
-                self.respond_up(&primary, data.to_vec(), meta, ctx);
+                self.cache.insert(la, &rsp.data, false, meta);
+                self.respond_up(&entry.primary, rsp.data, meta, ctx);
             }
             MshrKind::WriteLock => {
                 // Write-allocate with the MM's merged line (Alg. 5
                 // `WriteBlockToCache`): a same-tag insert also *replaces*
                 // any tag-matched-but-expired stale copy with fresh bytes.
                 debug_assert_eq!(rsp.data.len() as u64, self.line);
-                self.cache.insert(la, rsp.data.clone().into_boxed_slice(), false, meta);
+                self.cache.insert(la, &rsp.data, false, meta);
                 self.cts = self.cts.max(meta.wts);
-                let primary = entry.primary.clone();
-                self.respond_up(&primary, vec![], meta, ctx);
+                self.respond_up(&entry.primary, LineBuf::empty(), meta, ctx);
             }
         }
         for w in entry.waiters {
@@ -525,9 +539,13 @@ impl Component for HalconeL2 {
         match msg {
             Msg::Req(req) => {
                 self.stats.reqs_in += 1;
-                self.on_l1_req(now, *req, ctx);
+                let req = ctx.reclaim_req(req);
+                self.on_l1_req(now, req, ctx);
             }
-            Msg::Rsp(rsp) => self.on_mm_rsp(now, *rsp, ctx),
+            Msg::Rsp(rsp) => {
+                let rsp = ctx.reclaim_rsp(rsp);
+                self.on_mm_rsp(now, rsp, ctx);
+            }
             Msg::FenceQuery { reply_to } => {
                 let cts = self.cts;
                 ctx.schedule(0, reply_to, Msg::FenceInfo { from: ctx.self_id, cts });
@@ -602,7 +620,7 @@ mod tests {
             size: 4,
             src: CompId::NONE,
             dst: CompId::NONE,
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         }
     }
@@ -615,7 +633,7 @@ mod tests {
             size: 4,
             src: CompId::NONE,
             dst: CompId::NONE,
-            data: v.to_le_bytes().to_vec(),
+            data: LineBuf::from_slice(&v.to_le_bytes()),
             warpts: None,
         }
     }
@@ -916,5 +934,22 @@ mod tests {
         // a *second* L2 fill before the write completed.
         let s = l1_stats(&rig, 0);
         assert_eq!(s.mshr_merges, 1);
+    }
+
+    #[test]
+    fn coalesce_runs_merges_and_overwrites() {
+        let b = |xs: &[u8]| LineBuf::from_slice(xs);
+        // Contiguous runs merge; overlapping later writes win.
+        let runs = coalesce_runs(vec![
+            (8, b(&[3, 4])),
+            (4, b(&[1, 2, 9, 9])),
+            (6, b(&[7, 8])),
+            (20, b(&[5])),
+        ]);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].0, 4);
+        assert_eq!(&runs[0].1[..], &[1, 2, 7, 8, 3, 4]);
+        assert_eq!(runs[1].0, 20);
+        assert_eq!(&runs[1].1[..], &[5]);
     }
 }

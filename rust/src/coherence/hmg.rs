@@ -22,11 +22,13 @@
 //! links as data, so sharing-heavy workloads pay HMG's coherence cost in
 //! both time and bytes — the effect HALCONE's evaluation exploits.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 
 use crate::coherence::L2Routes;
 use crate::mem::cache::{CacheArray, CacheParams};
+use crate::mem::fxhash::{FxHashMap, FxHashSet};
 use crate::mem::mshr::{Mshr, MshrKind};
+use crate::mem::LineBuf;
 use crate::metrics::CacheCtrlStats;
 use crate::sim::msg::{MemReq, MemRsp};
 use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
@@ -57,13 +59,13 @@ pub struct HmgL2 {
     mshr: Mshr,
     lat: Cycle,
     /// Home only: line -> remote sharer banks.
-    directory: HashMap<u64, Vec<CompId>>,
+    directory: FxHashMap<u64, Vec<CompId>>,
     /// Home only: writes blocked on invalidation acks.
-    pending_inv: HashMap<u64, PendingInv>,
+    pending_inv: FxHashMap<u64, PendingInv>,
     /// Peer bank component ids (to distinguish peer requests from L1s).
     peer_banks: HashSet<CompId>,
-    evict_wait: HashMap<u64, StalledFill>,
-    fire_and_forget: HashSet<u64>,
+    evict_wait: FxHashMap<u64, StalledFill>,
+    fire_and_forget: FxHashSet<u64>,
     next_wb_id: u64,
     fence_pending: u64,
     fence_reply: Option<CompId>,
@@ -97,11 +99,11 @@ impl HmgL2 {
             cache: CacheArray::new(params),
             mshr: Mshr::new(mshr_entries),
             lat,
-            directory: HashMap::new(),
-            pending_inv: HashMap::new(),
+            directory: FxHashMap::default(),
+            pending_inv: FxHashMap::default(),
             peer_banks,
-            evict_wait: HashMap::new(),
-            fire_and_forget: HashSet::new(),
+            evict_wait: FxHashMap::default(),
+            fire_and_forget: FxHashSet::default(),
             next_wb_id: WB_ID_BASE,
             fence_pending: 0,
             fence_reply: None,
@@ -124,7 +126,7 @@ impl HmgL2 {
         self.routes.all_banks[g][b]
     }
 
-    fn respond_up(&mut self, req: &MemReq, data: Vec<u8>, ctx: &mut Ctx) {
+    fn respond_up(&mut self, req: &MemReq, data: LineBuf, ctx: &mut Ctx) {
         let rsp = MemRsp {
             id: req.id,
             kind: req.kind,
@@ -137,7 +139,8 @@ impl HmgL2 {
         self.stats.bytes_up += rsp.wire_bytes();
         let (link, next) = self.routes.route_up(req.src);
         let bytes = rsp.wire_bytes();
-        ctx.send_delayed(self.lat, link, next, bytes, Msg::Rsp(Box::new(rsp)));
+        let msg = ctx.rsp_msg(rsp);
+        ctx.send_delayed(self.lat, link, next, bytes, msg);
     }
 
     fn send_mm(&mut self, down: MemReq, ctx: &mut Ctx) {
@@ -145,7 +148,8 @@ impl HmgL2 {
         self.stats.reqs_down += 1;
         self.stats.bytes_down += down.wire_bytes();
         let bytes = down.wire_bytes();
-        ctx.send(link, next, bytes, Msg::Req(Box::new(down)));
+        let msg = ctx.req_msg(down);
+        ctx.send(link, next, bytes, msg);
     }
 
     fn send_home(&mut self, mut req: MemReq, ctx: &mut Ctx) {
@@ -155,10 +159,11 @@ impl HmgL2 {
         self.stats.reqs_down += 1;
         self.stats.bytes_down += req.wire_bytes();
         let bytes = req.wire_bytes();
-        ctx.send(link, sw, bytes, Msg::Req(Box::new(req)));
+        let msg = ctx.req_msg(req);
+        ctx.send(link, sw, bytes, msg);
     }
 
-    fn writeback(&mut self, addr: u64, data: Vec<u8>, ctx: &mut Ctx) -> u64 {
+    fn writeback(&mut self, addr: u64, data: LineBuf, ctx: &mut Ctx) -> u64 {
         let id = self.next_wb_id;
         self.next_wb_id += 1;
         self.stats.writebacks += 1;
@@ -184,25 +189,24 @@ impl HmgL2 {
             size: self.line as u32,
             src: ctx.self_id,
             dst: self.routes.route_mm(la).2,
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         };
         self.send_mm(fill, ctx);
     }
 
-    fn insert_wb_safe(&mut self, la: u64, data: Box<[u8]>, dirty: bool, ctx: &mut Ctx) {
+    fn insert_wb_safe(&mut self, la: u64, data: &[u8], dirty: bool, ctx: &mut Ctx) {
         if let Some(ev) = self.cache.insert(la, data, dirty, ()) {
             if ev.dirty {
-                let id = self.writeback(ev.addr, ev.data.to_vec(), ctx);
+                let id = self.writeback(ev.addr, ev.data, ctx);
                 self.fire_and_forget.insert(id);
             }
         }
     }
 
     fn start_fill(&mut self, la: u64, id: u64, ctx: &mut Ctx) {
-        if let Some((vaddr, true)) = self.cache.would_evict(la) {
-            let ev = self.cache.invalidate(vaddr).expect("victim resident");
-            let wb_id = self.writeback(vaddr, ev.data.to_vec(), ctx);
+        if let Some(ev) = self.cache.take_dirty_victim(la) {
+            let wb_id = self.writeback(ev.addr, ev.data, ctx);
             self.evict_wait.insert(wb_id, StalledFill { line_addr: la });
             return;
         }
@@ -224,14 +228,14 @@ impl HmgL2 {
         let mut hit = false;
         if let Some(line) = self.cache.lookup(req.addr) {
             hit = true;
-            line.dirty = true;
+            *line.dirty = true;
             let off = (req.addr - la) as usize;
             line.data[off..off + req.data.len()].copy_from_slice(&req.data);
         }
         self.cache.record(hit);
         if hit {
             self.stats.hits += 1;
-            self.respond_up(&req, vec![], ctx);
+            self.respond_up(&req, LineBuf::empty(), ctx);
             return;
         }
         self.stats.misses += 1;
@@ -261,7 +265,7 @@ impl HmgL2 {
                 }
                 let mut hit_data = None;
                 if let Some(line) = self.cache.lookup(req.addr) {
-                    hit_data = Some(line.data.to_vec());
+                    hit_data = Some(LineBuf::from_slice(line.data));
                 }
                 if let Some(data) = hit_data {
                     self.cache.record(true);
@@ -272,7 +276,7 @@ impl HmgL2 {
                         data
                     } else {
                         let off = (req.addr - la) as usize;
-                        data[off..off + req.size as usize].to_vec()
+                        LineBuf::from_slice(&data[off..off + req.size as usize])
                     };
                     self.respond_up(&req, payload, ctx);
                     return;
@@ -325,13 +329,15 @@ impl HmgL2 {
             ReqKind::Read => {
                 let mut hit_data = None;
                 if let Some(line) = self.cache.lookup(req.addr) {
-                    hit_data = Some(line.data.to_vec());
+                    let off = (req.addr - la) as usize;
+                    hit_data = Some(LineBuf::from_slice(
+                        &line.data[off..off + req.size as usize],
+                    ));
                 }
                 if let Some(data) = hit_data {
                     self.cache.record(true);
                     self.stats.hits += 1;
-                    let off = (req.addr - la) as usize;
-                    self.respond_up(&req, data[off..off + req.size as usize].to_vec(), ctx);
+                    self.respond_up(&req, data, ctx);
                     return;
                 }
                 self.cache.record(false);
@@ -344,7 +350,7 @@ impl HmgL2 {
                     size: self.line as u32,
                     src: ctx.self_id,
                     dst: CompId::NONE, // set by send_home
-                    data: vec![],
+                    data: LineBuf::empty(),
                     warpts: None,
                 };
                 self.mshr.allocate(la, MshrKind::Fill, req);
@@ -360,7 +366,7 @@ impl HmgL2 {
                     size: req.size,
                     src: ctx.self_id,
                     dst: CompId::NONE,
-                    data: req.data.clone(),
+                    data: req.data,
                     warpts: None,
                 };
                 self.mshr.allocate(la, MshrKind::WriteLock, req);
@@ -401,21 +407,21 @@ impl HmgL2 {
         match entry.kind {
             MshrKind::Fill => {
                 debug_assert_eq!(rsp.data.len() as u64, self.line);
-                let mut data = rsp.data.clone().into_boxed_slice();
-                let primary = entry.primary.clone();
+                let mut data = rsp.data;
+                let primary = entry.primary;
                 match primary.kind {
                     ReqKind::Read => {
                         // Home fill from MM, or remote fill from home:
                         // cache a clean copy and respond.
-                        self.insert_wb_safe(la, data.clone(), false, ctx);
+                        self.insert_wb_safe(la, &data, false, ctx);
                         if self.is_home(la) {
                             self.record_sharer(la, primary.src);
                         }
                         let payload = if primary.size as u64 == self.line {
-                            data.to_vec()
+                            data
                         } else {
                             let off = (primary.addr - la) as usize;
-                            data[off..off + primary.size as usize].to_vec()
+                            LineBuf::from_slice(&data[off..off + primary.size as usize])
                         };
                         self.respond_up(&primary, payload, ctx);
                     }
@@ -423,15 +429,14 @@ impl HmgL2 {
                         // Home write-allocate: merge + dirty.
                         let off = (primary.addr - la) as usize;
                         data[off..off + primary.data.len()].copy_from_slice(&primary.data);
-                        self.insert_wb_safe(la, data, true, ctx);
-                        self.respond_up(&primary, vec![], ctx);
+                        self.insert_wb_safe(la, &data, true, ctx);
+                        self.respond_up(&primary, LineBuf::empty(), ctx);
                     }
                 }
             }
             MshrKind::WriteLock => {
                 // Remote write acknowledged by the home.
-                let primary = entry.primary.clone();
-                self.respond_up(&primary, vec![], ctx);
+                self.respond_up(&entry.primary, LineBuf::empty(), ctx);
             }
         }
         for w in entry.waiters {
@@ -474,7 +479,7 @@ impl HmgL2 {
         let mut pending = 0;
         for ev in drained {
             if ev.dirty {
-                self.writeback(ev.addr, ev.data.to_vec(), ctx);
+                self.writeback(ev.addr, ev.data, ctx);
                 pending += 1;
             }
         }
@@ -503,9 +508,13 @@ impl Component for HmgL2 {
         match msg {
             Msg::Req(req) => {
                 self.stats.reqs_in += 1;
-                self.on_req(now, *req, ctx);
+                let req = ctx.reclaim_req(req);
+                self.on_req(now, req, ctx);
             }
-            Msg::Rsp(rsp) => self.on_rsp(now, *rsp, ctx),
+            Msg::Rsp(rsp) => {
+                let rsp = ctx.reclaim_rsp(rsp);
+                self.on_rsp(now, rsp, ctx);
+            }
             Msg::Inv { addr, dir, .. } => {
                 // This bank is a sharer: drop the (clean) copy and ack.
                 self.cache.invalidate(addr);
@@ -577,7 +586,7 @@ mod tests {
             size: 4,
             src: CompId::NONE,
             dst: CompId::NONE,
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         }
     }
@@ -590,7 +599,7 @@ mod tests {
             size: 4,
             src: CompId::NONE,
             dst: CompId::NONE,
-            data: v.to_le_bytes().to_vec(),
+            data: LineBuf::from_slice(&v.to_le_bytes()),
             warpts: None,
         }
     }

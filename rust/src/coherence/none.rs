@@ -12,11 +12,11 @@
 //! victim is dirty must complete the write-back *before* the fill is
 //! issued, serializing evictions behind the L2<->MM network.
 
-use std::collections::HashMap;
-
 use crate::coherence::{L1Routes, L2Routes, WritePolicy};
 use crate::mem::cache::{CacheArray, CacheParams};
+use crate::mem::fxhash::{FxHashMap, FxHashSet};
 use crate::mem::mshr::{Mshr, MshrKind};
+use crate::mem::LineBuf;
 use crate::metrics::CacheCtrlStats;
 use crate::sim::msg::{MemReq, MemRsp};
 use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
@@ -32,9 +32,9 @@ pub struct PlainL1 {
     mshr: Mshr,
     lat: Cycle,
     /// Write-combining buffer (same semantics as HalconeL1's).
-    coalesce: HashMap<u64, Vec<(u64, Vec<u8>)>>,
+    coalesce: FxHashMap<u64, Vec<(u64, LineBuf)>>,
     /// Coalesced requests awaiting their flush's completion.
-    pending_acks: HashMap<u64, Vec<MemReq>>,
+    pending_acks: FxHashMap<u64, Vec<MemReq>>,
     pub stats: CacheCtrlStats,
     line: u64,
 }
@@ -54,8 +54,8 @@ impl PlainL1 {
             cache: CacheArray::new(params),
             mshr: Mshr::new(mshr_entries),
             lat,
-            coalesce: HashMap::new(),
-            pending_acks: HashMap::new(),
+            coalesce: FxHashMap::default(),
+            pending_acks: FxHashMap::default(),
             stats: CacheCtrlStats::default(),
             line,
         }
@@ -67,12 +67,12 @@ impl PlainL1 {
 
     fn respond_word(&mut self, req: &MemReq, line_data: &[u8], ctx: &mut Ctx) {
         let off = (req.addr - self.line_base(req.addr)) as usize;
-        let data = line_data[off..off + req.size as usize].to_vec();
+        let data = LineBuf::from_slice(&line_data[off..off + req.size as usize]);
         self.respond_sliced(req, data, ctx);
     }
 
     /// Respond with already-sliced payload bytes.
-    fn respond_sliced(&mut self, req: &MemReq, data: Vec<u8>, ctx: &mut Ctx) {
+    fn respond_sliced(&mut self, req: &MemReq, data: LineBuf, ctx: &mut Ctx) {
         let rsp = MemRsp {
             id: req.id,
             kind: ReqKind::Read,
@@ -82,7 +82,8 @@ impl PlainL1 {
             ts: None,
         };
         self.stats.rsps_out += 1;
-        ctx.schedule(self.lat, req.src, Msg::Rsp(Box::new(rsp)));
+        let msg = ctx.rsp_msg(rsp);
+        ctx.schedule(self.lat, req.src, msg);
     }
 
     fn respond_ack(&mut self, req: &MemReq, ctx: &mut Ctx) {
@@ -91,11 +92,12 @@ impl PlainL1 {
             kind: ReqKind::Write,
             addr: req.addr,
             dst: req.src,
-            data: vec![],
+            data: LineBuf::empty(),
             ts: None,
         };
         self.stats.rsps_out += 1;
-        ctx.schedule(self.lat, req.src, Msg::Rsp(Box::new(rsp)));
+        let msg = ctx.rsp_msg(rsp);
+        ctx.schedule(self.lat, req.src, msg);
     }
 
     fn send_down(&mut self, down: MemReq, ctx: &mut Ctx) {
@@ -103,7 +105,8 @@ impl PlainL1 {
         self.stats.reqs_down += 1;
         self.stats.bytes_down += down.wire_bytes();
         let bytes = down.wire_bytes();
-        ctx.send(link, next, bytes, Msg::Req(Box::new(down)));
+        let msg = ctx.req_msg(down);
+        ctx.send(link, next, bytes, msg);
     }
 
     fn on_cu_req(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
@@ -115,7 +118,7 @@ impl PlainL1 {
                     let off = (req.addr - la) as usize;
                     line.data[off..off + req.data.len()].copy_from_slice(&req.data);
                 }
-                self.coalesce.entry(la).or_default().push((req.addr, req.data.clone()));
+                self.coalesce.entry(la).or_default().push((req.addr, req.data));
                 self.pending_acks.entry(la).or_default().push(req);
                 return;
             }
@@ -128,7 +131,9 @@ impl PlainL1 {
                 let off = (req.addr - la) as usize;
                 let mut hit_data = None;
                 if let Some(line) = self.cache.lookup(req.addr) {
-                    hit_data = Some(line.data[off..off + req.size as usize].to_vec());
+                    hit_data = Some(LineBuf::from_slice(
+                        &line.data[off..off + req.size as usize],
+                    ));
                 }
                 if let Some(data) = hit_data {
                     self.cache.record(true);
@@ -145,7 +150,7 @@ impl PlainL1 {
                     size: self.line as u32,
                     src: ctx.self_id,
                     dst: self.routes.route(la).2,
-                    data: vec![],
+                    data: LineBuf::empty(),
                     warpts: None,
                 };
                 self.mshr.allocate(la, MshrKind::Fill, req);
@@ -172,7 +177,7 @@ impl PlainL1 {
                     size: req.size,
                     src: ctx.self_id,
                     dst: self.routes.route(req.addr).2,
-                    data: req.data.clone(),
+                    data: req.data,
                     warpts: None,
                 };
                 self.mshr.allocate(la, MshrKind::WriteLock, req);
@@ -199,12 +204,11 @@ impl PlainL1 {
         match entry.kind {
             MshrKind::Fill => {
                 debug_assert_eq!(rsp.data.len() as u64, self.line);
-                let data: Box<[u8]> = rsp.data.clone().into_boxed_slice();
-                self.cache.insert(la, data.clone(), false, ());
-                self.respond_word(&entry.primary.clone(), &data, ctx);
+                self.cache.insert(la, &rsp.data, false, ());
+                self.respond_word(&entry.primary, &rsp.data, ctx);
             }
             MshrKind::WriteLock => {
-                let primary = entry.primary.clone();
+                let primary = entry.primary;
                 if primary.src != CompId::NONE {
                     self.respond_ack(&primary, ctx);
                 }
@@ -224,7 +228,7 @@ impl PlainL1 {
                         data,
                         warpts: None,
                     };
-                    let synthetic = MemReq { src: CompId::NONE, ..down.clone() };
+                    let synthetic = MemReq { src: CompId::NONE, ..down };
                     self.mshr.allocate(la, MshrKind::WriteLock, synthetic);
                     for w in entry.waiters {
                         self.mshr.merge(la, w);
@@ -256,9 +260,13 @@ impl Component for PlainL1 {
         match msg {
             Msg::Req(req) => {
                 self.stats.reqs_in += 1;
-                self.on_cu_req(now, *req, ctx);
+                let req = ctx.reclaim_req(req);
+                self.on_cu_req(now, req, ctx);
             }
-            Msg::Rsp(rsp) => self.on_down_rsp(now, *rsp, ctx),
+            Msg::Rsp(rsp) => {
+                let rsp = ctx.reclaim_rsp(rsp);
+                self.on_down_rsp(now, rsp, ctx);
+            }
             Msg::FenceQuery { reply_to } => {
                 ctx.schedule(0, reply_to, Msg::FenceInfo { from: ctx.self_id, cts: 0 });
             }
@@ -266,7 +274,7 @@ impl Component for PlainL1 {
                 debug_assert!(self.mshr.is_empty(), "fence with in-flight requests");
                 // WT: all lines clean; the programmer-maintained coherence
                 // contract is "invalidate everything at the boundary".
-                self.cache.drain();
+                self.cache.clear();
                 ctx.schedule(0, reply_to, Msg::FenceDone { from: ctx.self_id });
             }
             Msg::Inv { addr, dir, .. } => {
@@ -296,9 +304,9 @@ pub struct PlainL2 {
     mshr: Mshr,
     lat: Cycle,
     /// WB: write-back id -> the fill waiting on it.
-    evict_wait: HashMap<u64, StalledFill>,
+    evict_wait: FxHashMap<u64, StalledFill>,
     /// WB ids whose acks carry no further action (insert-time evictions).
-    fire_and_forget: std::collections::HashSet<u64>,
+    fire_and_forget: FxHashSet<u64>,
     next_wb_id: u64,
     /// Outstanding fence write-backs + who to tell when drained.
     fence_pending: u64,
@@ -324,8 +332,8 @@ impl PlainL2 {
             cache: CacheArray::new(params),
             mshr: Mshr::new(mshr_entries),
             lat,
-            evict_wait: HashMap::new(),
-            fire_and_forget: std::collections::HashSet::new(),
+            evict_wait: FxHashMap::default(),
+            fire_and_forget: FxHashSet::default(),
             next_wb_id: WB_ID_BASE,
             fence_pending: 0,
             fence_reply: None,
@@ -338,7 +346,7 @@ impl PlainL2 {
         addr & !(self.line - 1)
     }
 
-    fn respond_up(&mut self, req: &MemReq, data: Vec<u8>, ctx: &mut Ctx) {
+    fn respond_up(&mut self, req: &MemReq, data: LineBuf, ctx: &mut Ctx) {
         let rsp = MemRsp {
             id: req.id,
             kind: req.kind,
@@ -351,7 +359,8 @@ impl PlainL2 {
         self.stats.bytes_up += rsp.wire_bytes();
         let (link, next) = self.routes.route_up(req.src);
         let bytes = rsp.wire_bytes();
-        ctx.send_delayed(self.lat, link, next, bytes, Msg::Rsp(Box::new(rsp)));
+        let msg = ctx.rsp_msg(rsp);
+        ctx.send_delayed(self.lat, link, next, bytes, msg);
     }
 
     fn send_mm(&mut self, down: MemReq, ctx: &mut Ctx) {
@@ -359,10 +368,11 @@ impl PlainL2 {
         self.stats.reqs_down += 1;
         self.stats.bytes_down += down.wire_bytes();
         let bytes = down.wire_bytes();
-        ctx.send(link, next, bytes, Msg::Req(Box::new(down)));
+        let msg = ctx.req_msg(down);
+        ctx.send(link, next, bytes, msg);
     }
 
-    fn writeback(&mut self, addr: u64, data: Vec<u8>, ctx: &mut Ctx) -> u64 {
+    fn writeback(&mut self, addr: u64, data: LineBuf, ctx: &mut Ctx) -> u64 {
         let id = self.next_wb_id;
         self.next_wb_id += 1;
         self.stats.writebacks += 1;
@@ -388,7 +398,7 @@ impl PlainL2 {
             size: self.line as u32,
             src: ctx.self_id,
             dst: self.routes.route_mm(la).2,
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         };
         self.send_mm(fill, ctx);
@@ -397,21 +407,23 @@ impl PlainL2 {
     /// WB insert helper: insert-time dirty evictions become fire-and-forget
     /// write-backs (the pre-fill drain handles the common case; this covers
     /// set races between concurrent fills).
-    fn insert_wb_safe(&mut self, la: u64, data: Box<[u8]>, dirty: bool, ctx: &mut Ctx) {
+    fn insert_wb_safe(&mut self, la: u64, data: &[u8], dirty: bool, ctx: &mut Ctx) {
         if let Some(ev) = self.cache.insert(la, data, dirty, ()) {
             if ev.dirty {
-                let id = self.writeback(ev.addr, ev.data.to_vec(), ctx);
+                let id = self.writeback(ev.addr, ev.data, ctx);
                 self.fire_and_forget.insert(id);
             }
         }
     }
 
     /// Begin a miss: under WB, drain a dirty victim first (paper §5.1).
+    /// `take_dirty_victim` removes and returns the victim in one set scan
+    /// (clean victims stay resident until the fill's insert, exactly as
+    /// the old `would_evict` + `invalidate` pair behaved).
     fn start_fill(&mut self, la: u64, id: u64, ctx: &mut Ctx) {
         if self.policy == WritePolicy::WriteBack {
-            if let Some((vaddr, true)) = self.cache.would_evict(la) {
-                let ev = self.cache.invalidate(vaddr).expect("victim resident");
-                let wb_id = self.writeback(vaddr, ev.data.to_vec(), ctx);
+            if let Some(ev) = self.cache.take_dirty_victim(la) {
+                let wb_id = self.writeback(ev.addr, ev.data, ctx);
                 self.evict_wait.insert(wb_id, StalledFill { line_addr: la });
                 return;
             }
@@ -430,7 +442,7 @@ impl PlainL2 {
             ReqKind::Read => {
                 let mut hit_data = None;
                 if let Some(line) = self.cache.lookup(req.addr) {
-                    hit_data = Some(line.data.to_vec());
+                    hit_data = Some(LineBuf::from_slice(line.data));
                 }
                 if let Some(data) = hit_data {
                     self.cache.record(true);
@@ -465,7 +477,7 @@ impl PlainL2 {
                         size: req.size,
                         src: ctx.self_id,
                         dst: self.routes.route_mm(req.addr).2,
-                        data: req.data.clone(),
+                        data: req.data,
                         warpts: None,
                     };
                     self.mshr.allocate(la, MshrKind::WriteLock, req);
@@ -475,7 +487,7 @@ impl PlainL2 {
                     let mut hit = false;
                     if let Some(line) = self.cache.lookup(req.addr) {
                         hit = true;
-                        line.dirty = true;
+                        *line.dirty = true;
                         let off = (req.addr - la) as usize;
                         line.data[off..off + req.data.len()].copy_from_slice(&req.data);
                     }
@@ -483,7 +495,7 @@ impl PlainL2 {
                     if hit {
                         // Write hit absorbs in the L2: no MM traffic at all.
                         self.stats.hits += 1;
-                        self.respond_up(&req, vec![], ctx);
+                        self.respond_up(&req, LineBuf::empty(), ctx);
                         return;
                     }
                     self.stats.misses += 1;
@@ -532,19 +544,19 @@ impl PlainL2 {
         match entry.kind {
             MshrKind::Fill => {
                 debug_assert_eq!(rsp.data.len() as u64, self.line);
-                let mut data = rsp.data.clone().into_boxed_slice();
-                let primary = entry.primary.clone();
+                let mut data = rsp.data;
+                let primary = entry.primary;
                 match primary.kind {
                     ReqKind::Read => {
-                        self.insert_wb_safe(la, data.clone(), false, ctx);
-                        self.respond_up(&primary, data.to_vec(), ctx);
+                        self.insert_wb_safe(la, &data, false, ctx);
+                        self.respond_up(&primary, data, ctx);
                     }
                     ReqKind::Write => {
                         // WB write-allocate: merge the word, mark dirty.
                         let off = (primary.addr - la) as usize;
                         data[off..off + primary.data.len()].copy_from_slice(&primary.data);
-                        self.insert_wb_safe(la, data, true, ctx);
-                        self.respond_up(&primary, vec![], ctx);
+                        self.insert_wb_safe(la, &data, true, ctx);
+                        self.respond_up(&primary, LineBuf::empty(), ctx);
                     }
                 }
             }
@@ -554,10 +566,9 @@ impl PlainL2 {
                 // WT-vs-WT comparison).
                 if self.cache.peek(la).is_none() {
                     debug_assert_eq!(rsp.data.len() as u64, self.line);
-                    self.insert_wb_safe(la, rsp.data.clone().into_boxed_slice(), false, ctx);
+                    self.insert_wb_safe(la, &rsp.data, false, ctx);
                 }
-                let primary = entry.primary.clone();
-                self.respond_up(&primary, vec![], ctx);
+                self.respond_up(&entry.primary, LineBuf::empty(), ctx);
             }
         }
         for w in entry.waiters {
@@ -571,7 +582,7 @@ impl PlainL2 {
         let mut pending = 0;
         for ev in drained {
             if ev.dirty {
-                self.writeback(ev.addr, ev.data.to_vec(), ctx);
+                self.writeback(ev.addr, ev.data, ctx);
                 pending += 1;
             }
         }
@@ -595,9 +606,13 @@ impl Component for PlainL2 {
         match msg {
             Msg::Req(req) => {
                 self.stats.reqs_in += 1;
-                self.on_up_req(now, *req, ctx);
+                let req = ctx.reclaim_req(req);
+                self.on_up_req(now, req, ctx);
             }
-            Msg::Rsp(rsp) => self.on_mm_rsp(now, *rsp, ctx),
+            Msg::Rsp(rsp) => {
+                let rsp = ctx.reclaim_rsp(rsp);
+                self.on_mm_rsp(now, rsp, ctx);
+            }
             Msg::FenceQuery { reply_to } => {
                 ctx.schedule(0, reply_to, Msg::FenceInfo { from: ctx.self_id, cts: 0 });
             }
@@ -659,7 +674,7 @@ mod tests {
             size: 4,
             src: CompId::NONE,
             dst: CompId::NONE,
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         }
     }
@@ -672,7 +687,7 @@ mod tests {
             size: 4,
             src: CompId::NONE,
             dst: CompId::NONE,
-            data: v.to_le_bytes().to_vec(),
+            data: LineBuf::from_slice(&v.to_le_bytes()),
             warpts: None,
         }
     }

@@ -90,6 +90,7 @@ pub fn collect_metrics(sys: &System, host_seconds: f64) -> RunMetrics {
         host_seconds,
         ..Default::default()
     };
+    m.finalize_host_perf();
     for &id in &sys.cus {
         let s = engine.downcast::<Cu>(id).stats;
         m.cu_loads += s.loads;

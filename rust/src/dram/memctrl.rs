@@ -72,7 +72,7 @@ impl Component for MemCtrl {
 
     fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
         let req = match msg {
-            Msg::Req(r) => r,
+            Msg::Req(r) => ctx.reclaim_req(r),
             other => panic!("{}: unexpected {:?}", self.name, other),
         };
         let line_addr = req.addr & !(self.line - 1);
@@ -81,17 +81,18 @@ impl Component for MemCtrl {
         // TSU lookup runs in parallel with the DRAM access (free in time).
         let ts = self.ts_for(req.kind, line_addr);
 
+        // Both paths copy the line into an inline buffer — no heap.
         let data = match req.kind {
             ReqKind::Read => {
                 self.stats.reads += 1;
-                self.mem.borrow_mut().read_line(line_addr).into_vec()
+                self.mem.borrow_mut().read_line(line_addr)
             }
             ReqKind::Write => {
                 self.stats.writes += 1;
                 let mut mem = self.mem.borrow_mut();
                 mem.write_bytes(req.addr, &req.data);
                 // Return the merged line so write-allocate levels can fill.
-                mem.read_line(line_addr).into_vec()
+                mem.read_line(line_addr)
             }
         };
 
@@ -105,7 +106,9 @@ impl Component for MemCtrl {
         };
         self.stats.bytes_out += rsp.wire_bytes();
         let (link, next) = self.up;
-        ctx.send_delayed(self.latency, link, next, rsp.wire_bytes(), Msg::Rsp(Box::new(rsp)));
+        let bytes = rsp.wire_bytes();
+        let msg = ctx.rsp_msg(rsp);
+        ctx.send_delayed(self.latency, link, next, bytes, msg);
     }
 }
 
@@ -113,6 +116,7 @@ impl Component for MemCtrl {
 mod tests {
     use super::*;
     use crate::dram::storage::GlobalMemory;
+    use crate::mem::LineBuf;
     use crate::sim::msg::MemReq;
     use crate::sim::{Engine, Link};
     use crate::tsu::Leases;
@@ -153,7 +157,7 @@ mod tests {
             size: 64,
             src,
             dst,
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         }))
     }
@@ -185,7 +189,7 @@ mod tests {
                 size: 4,
                 src: l2,
                 dst: mc,
-                data: vec![1, 2, 3, 4],
+                data: LineBuf::from_slice(&[1, 2, 3, 4]),
                 warpts: None,
             })),
         );

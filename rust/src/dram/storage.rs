@@ -5,20 +5,27 @@
 //! *partitioned*, not duplicated). Storage is sparse at line granularity —
 //! workloads touch tens of MB out of a multi-GB space.
 //!
+//! Perf notes (§Perf log): lines are stored as inline `[u8; 64]` values
+//! keyed by a dependency-free FxHash-style `u64` hasher (`mem::fxhash`) —
+//! the SipHash default burned ~5% of runtime on line lookups — and
+//! [`read_line`](GlobalMemory::read_line) copies out by value into an
+//! inline [`LineBuf`] instead of cloning a heap box per access.
+//!
 //! The store is shared between MC components and the coordinator via
 //! `Rc<RefCell<_>>` ([`SharedMemory`]); the engine is single-threaded by
 //! design, so this is safe and cheap.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::rc::Rc;
 
+use crate::mem::fxhash::FxHashMap;
+use crate::mem::linebuf::LineBuf;
 use crate::mem::LINE;
 
 /// Sparse line-granular memory.
 #[derive(Debug, Default)]
 pub struct GlobalMemory {
-    lines: HashMap<u64, Box<[u8]>>,
+    lines: FxHashMap<u64, [u8; LINE as usize]>,
     /// Functional accesses (metrics / debugging).
     pub reads: u64,
     pub writes: u64,
@@ -41,13 +48,14 @@ impl GlobalMemory {
     }
 
     /// Copy out the 64-byte line containing `addr` (zeros if untouched).
-    pub fn read_line(&mut self, addr: u64) -> Box<[u8]> {
+    /// Returns an inline buffer — no heap traffic.
+    pub fn read_line(&mut self, addr: u64) -> LineBuf {
         self.reads += 1;
         let base = Self::line_base(addr);
-        self.lines
-            .get(&base)
-            .cloned()
-            .unwrap_or_else(|| vec![0u8; LINE as usize].into_boxed_slice())
+        match self.lines.get(&base) {
+            Some(line) => LineBuf::from_slice(line),
+            None => LineBuf::zeroed(LINE as usize),
+        }
     }
 
     /// Write `data` starting at `addr` (may span lines).
@@ -59,10 +67,7 @@ impl GlobalMemory {
             let base = Self::line_base(cur);
             let off = (cur - base) as usize;
             let n = remaining.len().min(LINE as usize - off);
-            let line = self
-                .lines
-                .entry(base)
-                .or_insert_with(|| vec![0u8; LINE as usize].into_boxed_slice());
+            let line = self.lines.entry(base).or_insert([0u8; LINE as usize]);
             line[off..off + n].copy_from_slice(&remaining[..n]);
             cur += n as u64;
             remaining = &remaining[n..];
@@ -128,6 +133,7 @@ mod tests {
         let mut m = GlobalMemory::new();
         assert_eq!(m.read_f32(0x1234), 0.0);
         assert!(m.read_line(0x40).iter().all(|&b| b == 0));
+        assert_eq!(m.read_line(0x40).len(), LINE as usize);
     }
 
     #[test]
@@ -165,5 +171,14 @@ mod tests {
         assert_eq!(&line[..16], &[0xAA; 16]);
         assert_eq!(&line[16..20], &[0xBB; 4]);
         assert_eq!(&line[20..], &[0xAA; 44]);
+    }
+
+    #[test]
+    fn read_line_is_line_aligned_copy() {
+        let mut m = GlobalMemory::new();
+        m.write_bytes(0x80, &[0x42; 64]);
+        // Any address within the line reads the same full line.
+        assert_eq!(&m.read_line(0x84)[..], &m.read_line(0x80)[..]);
+        assert!(m.read_line(0x84).iter().all(|&b| b == 0x42));
     }
 }

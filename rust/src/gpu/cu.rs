@@ -14,6 +14,7 @@
 //! 40-wavefront occupancy that preserves the memory-bound vs
 //! compute-bound distinction the paper's Table 3 relies on.
 
+use crate::mem::LineBuf;
 use crate::metrics::CacheCtrlStats;
 use crate::sim::msg::{MemReq, MemRsp};
 use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
@@ -289,7 +290,7 @@ impl Cu {
                     return;
                 }
                 CuOp::St { addr, reg } => {
-                    let data = w.regs[reg as usize][0].to_le_bytes().to_vec();
+                    let data = LineBuf::from_slice(&w.regs[reg as usize][0].to_le_bytes());
                     self.issue_store(wf, addr, data, delay, ctx);
                     delay += 1; // issue slot
                 }
@@ -300,7 +301,7 @@ impl Cu {
                         (addr + 4 * n as u64 - 1) / 64,
                         "StV crosses a line boundary"
                     );
-                    let mut data = Vec::with_capacity(4 * n as usize);
+                    let mut data = LineBuf::empty();
                     for l in 0..n as usize {
                         data.extend_from_slice(&w.regs[reg as usize][l].to_le_bytes());
                     }
@@ -331,14 +332,15 @@ impl Cu {
             size,
             src: ctx.self_id,
             dst: self.l1,
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         };
         let l1 = self.l1;
-        ctx.schedule(delay + 1, l1, Msg::Req(Box::new(req)));
+        let msg = ctx.req_msg(req);
+        ctx.schedule(delay + 1, l1, msg);
     }
 
-    fn issue_store(&mut self, wf: usize, addr: u64, data: Vec<u8>, delay: Cycle, ctx: &mut Ctx) {
+    fn issue_store(&mut self, wf: usize, addr: u64, data: LineBuf, delay: Cycle, ctx: &mut Ctx) {
         // Fire-and-forget under weak consistency: issue and keep
         // executing; the ack returns a credit.
         self.stats.stores += 1;
@@ -358,7 +360,8 @@ impl Cu {
             warpts: None,
         };
         let l1 = self.l1;
-        ctx.schedule(delay + 1, l1, Msg::Req(Box::new(req)));
+        let msg = ctx.req_msg(req);
+        ctx.schedule(delay + 1, l1, msg);
     }
 
     fn on_rsp(&mut self, rsp: MemRsp, ctx: &mut Ctx) {
@@ -411,7 +414,10 @@ impl Component for Cu {
     fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
         match msg {
             Msg::StartPhase { phase } => self.start_phase(phase, ctx),
-            Msg::Rsp(rsp) => self.on_rsp(*rsp, ctx),
+            Msg::Rsp(rsp) => {
+                let rsp = ctx.reclaim_rsp(rsp);
+                self.on_rsp(rsp, ctx);
+            }
             other => panic!("{}: unexpected {:?}", self.name, other),
         }
     }
@@ -445,6 +451,7 @@ mod tests {
         }
         fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
             if let Msg::Req(req) = msg {
+                let req = ctx.reclaim_req(req);
                 self.reqs += 1;
                 let mut mem = self.mem.borrow_mut();
                 let rsp = match req.kind {
@@ -453,7 +460,7 @@ mod tests {
                         kind: ReqKind::Read,
                         addr: req.addr,
                         dst: req.src,
-                        data: mem.read_bytes(req.addr, req.size as usize),
+                        data: LineBuf::from_slice(&mem.read_bytes(req.addr, req.size as usize)),
                         ts: None,
                     },
                     ReqKind::Write => {
@@ -463,12 +470,13 @@ mod tests {
                             kind: ReqKind::Write,
                             addr: req.addr,
                             dst: req.src,
-                            data: vec![],
+                            data: LineBuf::empty(),
                             ts: None,
                         }
                     }
                 };
-                ctx.schedule(self.lat, req.src, Msg::Rsp(Box::new(rsp)));
+                let msg = ctx.rsp_msg(rsp);
+                ctx.schedule(self.lat, req.src, msg);
             }
         }
     }

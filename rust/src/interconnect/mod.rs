@@ -100,6 +100,7 @@ impl Component for Switch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::LineBuf;
     use crate::sim::msg::{MemReq, MemRsp, ReqKind};
     use crate::sim::{Engine, Link};
 
@@ -130,7 +131,7 @@ mod tests {
             size: 64,
             src: CompId(0),
             dst,
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         }))
     }
@@ -203,7 +204,7 @@ mod tests {
                 kind: ReqKind::Read,
                 addr: 0,
                 dst: a_id,
-                data: vec![0; 64],
+                data: LineBuf::zeroed(64),
                 ts: None,
             })),
         );

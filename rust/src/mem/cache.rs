@@ -5,7 +5,16 @@
 //! protocol FSMs on top. Lines carry real data bytes so the simulator is
 //! functionally correct, not just timing-correct — the final memory image
 //! is checked against the XLA golden model (DESIGN.md S19).
+//!
+//! Layout: a tag/metadata array (`slots`) over **one flat byte backing**
+//! (`data`, `sets * ways * line` bytes). The per-line `Box<[u8]>` of the
+//! original layout cost an allocation per fill and scattered line bytes
+//! across the heap; the flat backing allocates once at construction and
+//! keeps a set's lines contiguous (§Perf log). Accessors hand out
+//! [`LineRef`]/[`LineView`] views that pair a slot's metadata with its
+//! slice of the backing.
 
+use crate::mem::linebuf::LineBuf;
 use crate::mem::LINE;
 
 /// Geometry of a cache array.
@@ -26,23 +35,37 @@ impl CacheParams {
     }
 }
 
-/// One resident cache line.
+/// Tag + metadata of one resident line (data lives in the flat backing).
 #[derive(Clone, Debug)]
-pub struct Line<M> {
-    pub tag: u64,
-    pub dirty: bool,
+struct Slot<M> {
+    tag: u64,
     /// LRU stamp: larger = more recently used.
     lru: u64,
-    pub data: Box<[u8]>,
-    pub meta: M,
+    dirty: bool,
+    meta: M,
 }
 
-/// Why `insert` displaced a line (metrics: capacity/conflict vs coherency).
+/// Mutable view of a resident line: slot metadata + its backing slice.
+pub struct LineRef<'a, M> {
+    pub dirty: &'a mut bool,
+    pub meta: &'a mut M,
+    pub data: &'a mut [u8],
+}
+
+/// Shared view of a resident line.
+pub struct LineView<'a, M> {
+    pub dirty: bool,
+    pub meta: &'a M,
+    pub data: &'a [u8],
+}
+
+/// Why `insert` displaced a line (metrics: capacity/conflict vs
+/// coherency). Carries the victim's bytes inline — no allocation.
 #[derive(Clone, Debug)]
 pub struct Eviction<M> {
     pub addr: u64,
     pub dirty: bool,
-    pub data: Box<[u8]>,
+    pub data: LineBuf,
     pub meta: M,
 }
 
@@ -52,7 +75,9 @@ pub struct CacheArray<M> {
     params: CacheParams,
     sets: u64,
     /// `sets * ways` slots, row-major by set.
-    slots: Vec<Option<Line<M>>>,
+    slots: Vec<Option<Slot<M>>>,
+    /// Flat data backing: slot `i` owns bytes `[i*line, (i+1)*line)`.
+    data: Vec<u8>,
     /// Global LRU counter.
     clock: u64,
     /// Accesses that hit (metrics).
@@ -66,9 +91,18 @@ impl<M> CacheArray<M> {
         let sets = params.sets();
         assert!(sets > 0, "cache too small for geometry: {params:?}");
         assert!(sets.is_power_of_two(), "set count must be a power of two, got {sets}");
+        let n_slots = (sets * params.ways as u64) as usize;
         let mut slots = Vec::new();
-        slots.resize_with((sets * params.ways as u64) as usize, || None);
-        CacheArray { params, sets, slots, clock: 0, hits: 0, misses: 0 }
+        slots.resize_with(n_slots, || None);
+        CacheArray {
+            params,
+            sets,
+            slots,
+            data: vec![0u8; n_slots * params.line as usize],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
     }
 
     pub fn params(&self) -> &CacheParams {
@@ -93,27 +127,46 @@ impl<M> CacheArray<M> {
         (tag * self.sets + set) * self.params.line
     }
 
-    /// Look up `addr`; on hit, touch LRU and return the line.
-    pub fn lookup(&mut self, addr: u64) -> Option<&mut Line<M>> {
+    /// Byte range of slot `i` in the flat backing.
+    #[inline]
+    fn data_range(&self, i: usize) -> std::ops::Range<usize> {
+        let line = self.params.line as usize;
+        i * line..(i + 1) * line
+    }
+
+    /// Slot index of `addr` within its set, if resident.
+    #[inline]
+    fn index_of(&self, addr: u64) -> Option<usize> {
         let (set, tag) = (self.set_of(addr), self.tag_of(addr));
-        let range = self.set_range(set);
+        self.set_range(set)
+            .find(|&i| self.slots[i].as_ref().is_some_and(|l| l.tag == tag))
+    }
+
+    /// Look up `addr`; on hit, touch LRU and return the line. (Misses no
+    /// longer advance the LRU clock — only touches stamp lines, and
+    /// victim choice depends only on the stamps' relative order.)
+    pub fn lookup(&mut self, addr: u64) -> Option<LineRef<'_, M>> {
+        let idx = self.index_of(addr)?;
         self.clock += 1;
-        let clock = self.clock;
-        let slot = self.slots[range]
-            .iter_mut()
-            .find(|s| s.as_ref().is_some_and(|l| l.tag == tag))?;
-        let line = slot.as_mut().unwrap();
-        line.lru = clock;
-        Some(line)
+        let range = self.data_range(idx);
+        let slot = self.slots[idx].as_mut().unwrap();
+        slot.lru = self.clock;
+        Some(LineRef {
+            dirty: &mut slot.dirty,
+            meta: &mut slot.meta,
+            data: &mut self.data[range],
+        })
     }
 
     /// Look up without touching LRU or counters (controller peeks).
-    pub fn peek(&self, addr: u64) -> Option<&Line<M>> {
-        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
-        self.slots[self.set_range(set)]
-            .iter()
-            .flatten()
-            .find(|l| l.tag == tag)
+    pub fn peek(&self, addr: u64) -> Option<LineView<'_, M>> {
+        let idx = self.index_of(addr)?;
+        let slot = self.slots[idx].as_ref().unwrap();
+        Some(LineView {
+            dirty: slot.dirty,
+            meta: &slot.meta,
+            data: &self.data[self.data_range(idx)],
+        })
     }
 
     /// Record a hit/miss for metrics (controllers decide what counts:
@@ -126,48 +179,70 @@ impl<M> CacheArray<M> {
         }
     }
 
-    /// Insert a line for `addr`, evicting the set's LRU victim if full.
-    /// Returns the eviction (with its line-aligned address) if one occurred.
-    pub fn insert(&mut self, addr: u64, data: Box<[u8]>, dirty: bool, meta: M) -> Option<Eviction<M>> {
+    /// Insert a line for `addr` (copying `data` into the flat backing),
+    /// evicting the set's LRU victim if full. Returns the eviction (with
+    /// its line-aligned address) if one occurred.
+    pub fn insert(&mut self, addr: u64, data: &[u8], dirty: bool, meta: M) -> Option<Eviction<M>> {
         debug_assert_eq!(addr % self.params.line, 0, "insert wants line-aligned addr");
         debug_assert_eq!(data.len() as u64, self.params.line);
         let (set, tag) = (self.set_of(addr), self.tag_of(addr));
         self.clock += 1;
         let clock = self.clock;
-        let range = self.set_range(set);
 
-        // Same-tag replacement (refill of an existing line).
-        if let Some(slot) = self.slots[range.clone()]
-            .iter_mut()
-            .find(|s| s.as_ref().is_some_and(|l| l.tag == tag))
-        {
-            let line = slot.as_mut().unwrap();
-            line.data = data;
-            line.dirty = dirty;
-            line.meta = meta;
-            line.lru = clock;
+        // One scan resolves same-tag refill, first free slot and LRU
+        // victim together.
+        let mut free: Option<usize> = None;
+        let mut victim: Option<usize> = None;
+        let mut same: Option<usize> = None;
+        for i in self.set_range(set) {
+            match &self.slots[i] {
+                None => {
+                    if free.is_none() {
+                        free = Some(i);
+                    }
+                }
+                Some(l) if l.tag == tag => {
+                    same = Some(i);
+                    break;
+                }
+                Some(l) => {
+                    if victim.is_none_or(|v| l.lru < self.slots[v].as_ref().unwrap().lru) {
+                        victim = Some(i);
+                    }
+                }
+            }
+        }
+
+        if let Some(i) = same {
+            // Refill of an existing line, in place.
+            let range = self.data_range(i);
+            let slot = self.slots[i].as_mut().unwrap();
+            slot.dirty = dirty;
+            slot.meta = meta;
+            slot.lru = clock;
+            self.data[range].copy_from_slice(data);
             return None;
         }
 
-        // Free slot?
-        if let Some(slot) = self.slots[range.clone()].iter_mut().find(|s| s.is_none()) {
-            *slot = Some(Line { tag, dirty, lru: clock, data, meta });
+        if let Some(i) = free {
+            self.slots[i] = Some(Slot { tag, lru: clock, dirty, meta });
+            let range = self.data_range(i);
+            self.data[range].copy_from_slice(data);
             return None;
         }
 
-        // Evict LRU.
-        let victim_idx = range
-            .clone()
-            .min_by_key(|&i| self.slots[i].as_ref().unwrap().lru)
-            .unwrap();
-        let victim = self.slots[victim_idx].take().unwrap();
-        self.slots[victim_idx] = Some(Line { tag, dirty, lru: clock, data, meta });
-        Some(Eviction {
-            addr: self.addr_of(set, victim.tag),
-            dirty: victim.dirty,
-            data: victim.data,
-            meta: victim.meta,
-        })
+        let vi = victim.expect("a full set must yield a victim");
+        let old = self.slots[vi].take().unwrap();
+        let range = self.data_range(vi);
+        let ev = Eviction {
+            addr: self.addr_of(set, old.tag),
+            dirty: old.dirty,
+            data: LineBuf::from_slice(&self.data[range.clone()]),
+            meta: old.meta,
+        };
+        self.slots[vi] = Some(Slot { tag, lru: clock, dirty, meta });
+        self.data[range].copy_from_slice(data);
+        Some(ev)
     }
 
     /// Would inserting `addr` evict a line? Returns the victim's
@@ -177,32 +252,64 @@ impl<M> CacheArray<M> {
     /// L2 can service the pending read or write transactions").
     pub fn would_evict(&self, addr: u64) -> Option<(u64, bool)> {
         let (set, tag) = (self.set_of(addr), self.tag_of(addr));
-        let range = self.set_range(set);
-        let mut lru_best: Option<(u64, u64, bool)> = None; // (lru, addr, dirty)
-        for i in range {
+        let mut best: Option<(u64, u64, bool)> = None; // (lru, addr, dirty)
+        for i in self.set_range(set) {
             match &self.slots[i] {
-                None => return None, // free slot: no eviction
+                None => return None,                    // free slot: no eviction
                 Some(l) if l.tag == tag => return None, // in-place refill
                 Some(l) => {
-                    let cand = (l.lru, self.addr_of(set, l.tag), l.dirty);
-                    if lru_best.is_none_or(|(lru, _, _)| cand.0 < lru) {
-                        lru_best = Some(cand);
+                    if best.is_none_or(|(lru, _, _)| l.lru < lru) {
+                        best = Some((l.lru, self.addr_of(set, l.tag), l.dirty));
                     }
                 }
             }
         }
-        lru_best.map(|(_, a, d)| (a, d))
+        best.map(|(_, a, d)| (a, d))
+    }
+
+    /// Single-scan replacement for the `would_evict` + `invalidate` pair:
+    /// if inserting `addr` would evict a *dirty* victim, remove and return
+    /// it. Clean victims stay resident until the actual `insert` — the
+    /// same timing contract the two-call sequence implemented, without
+    /// scanning the set twice.
+    pub fn take_dirty_victim(&mut self, addr: u64) -> Option<Eviction<M>> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        let mut victim: Option<usize> = None;
+        for i in self.set_range(set) {
+            match &self.slots[i] {
+                None => return None,
+                Some(l) if l.tag == tag => return None,
+                Some(l) => {
+                    if victim.is_none_or(|v| l.lru < self.slots[v].as_ref().unwrap().lru) {
+                        victim = Some(i);
+                    }
+                }
+            }
+        }
+        let vi = victim?;
+        if !self.slots[vi].as_ref().unwrap().dirty {
+            return None;
+        }
+        let old = self.slots[vi].take().unwrap();
+        Some(Eviction {
+            addr: self.addr_of(set, old.tag),
+            dirty: true,
+            data: LineBuf::from_slice(&self.data[self.data_range(vi)]),
+            meta: old.meta,
+        })
     }
 
     /// Drop `addr`'s line if resident; returns it.
     pub fn invalidate(&mut self, addr: u64) -> Option<Eviction<M>> {
-        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
-        let range = self.set_range(set);
-        let idx = range.filter(|&i| {
-            self.slots[i].as_ref().is_some_and(|l| l.tag == tag)
-        }).next()?;
+        let idx = self.index_of(addr)?;
+        let set = idx as u64 / self.params.ways as u64;
         let line = self.slots[idx].take().unwrap();
-        Some(Eviction { addr: self.addr_of(set, line.tag), dirty: line.dirty, data: line.data, meta: line.meta })
+        Some(Eviction {
+            addr: self.addr_of(set, line.tag),
+            dirty: line.dirty,
+            data: LineBuf::from_slice(&self.data[self.data_range(idx)]),
+            meta: line.meta,
+        })
     }
 
     /// Drain every resident line (fence flushes); preserves nothing.
@@ -214,7 +321,7 @@ impl<M> CacheArray<M> {
                     out.push(Eviction {
                         addr: self.addr_of(set, line.tag),
                         dirty: line.dirty,
-                        data: line.data,
+                        data: LineBuf::from_slice(&self.data[self.data_range(i)]),
                         meta: line.meta,
                     });
                 }
@@ -223,13 +330,29 @@ impl<M> CacheArray<M> {
         out
     }
 
+    /// Drop every resident line without materializing evictions
+    /// (write-through fences: all lines are clean by construction).
+    pub fn clear(&mut self) {
+        for s in &mut self.slots {
+            *s = None;
+        }
+    }
+
     /// Visit every resident line (fence cts updates, WB scans).
-    pub fn for_each_mut(&mut self, mut f: impl FnMut(u64, &mut Line<M>)) {
+    pub fn for_each_mut(&mut self, mut f: impl FnMut(u64, LineRef<'_, M>)) {
+        let line = self.params.line as usize;
         for set in 0..self.sets {
             for i in self.set_range(set) {
-                if let Some(line) = self.slots[i].as_mut() {
-                    let addr = (line.tag * self.sets + set) * self.params.line;
-                    f(addr, line);
+                if let Some(slot) = self.slots[i].as_mut() {
+                    let addr = (slot.tag * self.sets + set) * self.params.line;
+                    f(
+                        addr,
+                        LineRef {
+                            dirty: &mut slot.dirty,
+                            meta: &mut slot.meta,
+                            data: &mut self.data[i * line..(i + 1) * line],
+                        },
+                    );
                 }
             }
         }
@@ -249,8 +372,8 @@ mod tests {
         CacheArray::new(CacheParams::new(size, ways))
     }
 
-    fn line_data(fill: u8) -> Box<[u8]> {
-        vec![fill; 64].into_boxed_slice()
+    fn line_data(fill: u8) -> [u8; 64] {
+        [fill; 64]
     }
 
     #[test]
@@ -264,10 +387,10 @@ mod tests {
     fn hit_after_insert() {
         let mut a = arr(4096, 4);
         assert!(a.lookup(0x40).is_none());
-        a.insert(0x40, line_data(7), false, 1);
+        a.insert(0x40, &line_data(7), false, 1);
         let line = a.lookup(0x40).expect("hit");
         assert_eq!(line.data[0], 7);
-        assert_eq!(line.meta, 1);
+        assert_eq!(*line.meta, 1);
         // Different offset within the same line also hits via line_base
         // handled by controllers; the array expects aligned addrs for
         // insert but lookup masks internally through set/tag math.
@@ -278,11 +401,12 @@ mod tests {
     fn lru_eviction_order() {
         // 1 set, 2 ways: 128-byte cache.
         let mut a = arr(128, 2);
-        a.insert(0, line_data(1), false, 0);
-        a.insert(64, line_data(2), false, 0);
+        a.insert(0, &line_data(1), false, 0);
+        a.insert(64, &line_data(2), false, 0);
         a.lookup(0); // touch line 0 -> line 64 becomes LRU
-        let ev = a.insert(128, line_data(3), true, 0).expect("eviction");
+        let ev = a.insert(128, &line_data(3), true, 0).expect("eviction");
         assert_eq!(ev.addr, 64);
+        assert_eq!(ev.data[0], 2);
         assert!(a.peek(0).is_some());
         assert!(a.peek(64).is_none());
         assert!(a.peek(128).is_some());
@@ -292,30 +416,31 @@ mod tests {
     fn conflict_misses_within_one_set() {
         // 4 sets x 1 way; lines 0, 256 (4 sets * 64) collide in set 0.
         let mut a = arr(256, 1);
-        a.insert(0, line_data(1), false, 0);
-        let ev = a.insert(256, line_data(2), false, 0).expect("conflict eviction");
+        a.insert(0, &line_data(1), false, 0);
+        let ev = a.insert(256, &line_data(2), false, 0).expect("conflict eviction");
         assert_eq!(ev.addr, 0);
     }
 
     #[test]
     fn same_tag_insert_replaces_in_place() {
         let mut a = arr(4096, 4);
-        a.insert(0x80, line_data(1), false, 9);
-        assert!(a.insert(0x80, line_data(2), true, 10).is_none());
+        a.insert(0x80, &line_data(1), false, 9);
+        assert!(a.insert(0x80, &line_data(2), true, 10).is_none());
         let l = a.peek(0x80).unwrap();
         assert_eq!(l.data[0], 2);
         assert!(l.dirty);
-        assert_eq!(l.meta, 10);
+        assert_eq!(*l.meta, 10);
         assert_eq!(a.occupancy(), 1);
     }
 
     #[test]
     fn invalidate_removes() {
         let mut a = arr(4096, 4);
-        a.insert(0x100, line_data(5), true, 0);
+        a.insert(0x100, &line_data(5), true, 0);
         let ev = a.invalidate(0x100).expect("was resident");
         assert!(ev.dirty);
         assert_eq!(ev.addr, 0x100);
+        assert_eq!(ev.data[0], 5);
         assert!(a.peek(0x100).is_none());
         assert!(a.invalidate(0x100).is_none());
     }
@@ -324,7 +449,7 @@ mod tests {
     fn drain_returns_everything_with_addresses() {
         let mut a = arr(1024, 2);
         for i in 0..8u64 {
-            a.insert(i * 64, line_data(i as u8), i % 2 == 0, 0);
+            a.insert(i * 64, &line_data(i as u8), i % 2 == 0, 0);
         }
         let mut drained = a.drain();
         drained.sort_by_key(|e| e.addr);
@@ -332,8 +457,20 @@ mod tests {
         for (i, e) in drained.iter().enumerate() {
             assert_eq!(e.addr, i as u64 * 64);
             assert_eq!(e.data[0], i as u8);
+            assert_eq!(e.data.len(), 64);
         }
         assert_eq!(a.occupancy(), 0);
+    }
+
+    #[test]
+    fn clear_drops_everything() {
+        let mut a = arr(1024, 2);
+        for i in 0..8u64 {
+            a.insert(i * 64, &line_data(1), false, 0);
+        }
+        a.clear();
+        assert_eq!(a.occupancy(), 0);
+        assert!(a.peek(0).is_none());
     }
 
     #[test]
@@ -341,12 +478,68 @@ mod tests {
         let mut a = arr(16 << 10, 4);
         // Large tags: address beyond 1 GB.
         let addr = (1u64 << 30) + 0x1fc0;
-        a.insert(addr, line_data(3), true, 0);
+        a.insert(addr, &line_data(3), true, 0);
         let mut seen = None;
         a.for_each_mut(|la, l| {
-            assert!(l.dirty);
+            assert!(*l.dirty);
+            assert_eq!(l.data[0], 3);
             seen = Some(la);
         });
         assert_eq!(seen, Some(addr));
+    }
+
+    #[test]
+    fn take_dirty_victim_matches_would_evict() {
+        // 1 set, 2 ways; fill with one clean and one dirty line.
+        let mut a = arr(128, 2);
+        a.insert(0, &line_data(1), true, 0); // dirty, LRU after next touch
+        a.insert(64, &line_data(2), false, 0);
+        a.lookup(64); // line 0 is now the LRU victim
+        assert_eq!(a.would_evict(128), Some((0, true)));
+        let ev = a.take_dirty_victim(128).expect("dirty victim");
+        assert_eq!((ev.addr, ev.dirty, ev.data[0]), (0, true, 1));
+        // Victim removed: next insert fills the free slot, no eviction.
+        assert!(a.insert(128, &line_data(3), false, 0).is_none());
+        assert_eq!(a.occupancy(), 2);
+    }
+
+    #[test]
+    fn take_dirty_victim_leaves_clean_victims_resident() {
+        let mut a = arr(128, 2);
+        a.insert(0, &line_data(1), false, 0);
+        a.insert(64, &line_data(2), true, 0);
+        a.lookup(64); // clean line 0 is the LRU victim
+        assert_eq!(a.would_evict(128), Some((0, false)));
+        assert!(a.take_dirty_victim(128).is_none());
+        assert_eq!(a.occupancy(), 2, "clean victim must stay until insert");
+        // A same-tag or free-slot situation also returns None.
+        assert!(a.take_dirty_victim(0).is_none());
+    }
+
+    #[test]
+    fn lru_untouched_by_misses() {
+        // A miss between two touches must not perturb victim choice.
+        let mut a = arr(128, 2);
+        a.insert(0, &line_data(1), false, 0);
+        a.insert(64, &line_data(2), false, 0);
+        a.lookup(0);
+        for _ in 0..10 {
+            assert!(a.lookup(0x4000).is_none()); // misses
+        }
+        let ev = a.insert(128, &line_data(3), false, 0).unwrap();
+        assert_eq!(ev.addr, 64);
+    }
+
+    #[test]
+    fn flat_backing_keeps_lines_separate() {
+        let mut a = arr(4096, 4);
+        a.insert(0x00, &line_data(0xAA), false, 0);
+        a.insert(0x40, &line_data(0xBB), false, 0);
+        {
+            let l = a.lookup(0x00).unwrap();
+            l.data[3] = 0x11;
+        }
+        assert_eq!(a.peek(0x00).unwrap().data[3], 0x11);
+        assert!(a.peek(0x40).unwrap().data.iter().all(|&b| b == 0xBB));
     }
 }

@@ -1,0 +1,165 @@
+//! Fixed-capacity inline byte buffer for message payloads.
+//!
+//! Every memory transaction payload in the system is at most one cache
+//! line (64 B): word-granularity CU accesses carry `size <= LINE`, fills
+//! and write-backs carry exactly `LINE`. [`LineBuf`] stores those bytes
+//! inline — `Copy`, no heap — so recycling a pooled `Box<MemReq>` never
+//! frees or reallocates payload storage (§Perf: the two `Vec<u8>`
+//! allocations per memory transaction dominated the event hot loop).
+//!
+//! The type dereferences to `[u8]`, so slicing, indexing, `len()` and
+//! `to_vec()` all work exactly as they did on the `Vec<u8>` it replaces.
+
+use crate::mem::LINE;
+
+/// Inline payload buffer: up to one cache line of bytes plus a length.
+#[derive(Clone, Copy)]
+pub struct LineBuf {
+    len: u8,
+    bytes: [u8; LINE as usize],
+}
+
+impl LineBuf {
+    /// Maximum payload size (one cache line).
+    pub const CAP: usize = LINE as usize;
+
+    /// Zero-length buffer (read requests, write acks).
+    pub const fn empty() -> Self {
+        LineBuf { len: 0, bytes: [0; Self::CAP] }
+    }
+
+    /// `len` zero bytes. Panics if `len > CAP` (a wiring bug).
+    pub fn zeroed(len: usize) -> Self {
+        assert!(len <= Self::CAP, "LineBuf::zeroed({len}) exceeds capacity");
+        LineBuf { len: len as u8, bytes: [0; Self::CAP] }
+    }
+
+    /// Copy `src` into a fresh buffer. Panics if it exceeds one line.
+    pub fn from_slice(src: &[u8]) -> Self {
+        assert!(src.len() <= Self::CAP, "LineBuf::from_slice: {} bytes", src.len());
+        let mut bytes = [0u8; Self::CAP];
+        bytes[..src.len()].copy_from_slice(src);
+        LineBuf { len: src.len() as u8, bytes }
+    }
+
+    /// Append `src`; panics if the result exceeds one line.
+    pub fn extend_from_slice(&mut self, src: &[u8]) {
+        let start = self.len as usize;
+        let end = start + src.len();
+        assert!(end <= Self::CAP, "LineBuf::extend_from_slice overflows");
+        self.bytes[start..end].copy_from_slice(src);
+        self.len = end as u8;
+    }
+
+    /// Grow (zero/`fill`-extending) or shrink to `new_len`, like
+    /// `Vec::resize`. Panics if `new_len > CAP`.
+    pub fn resize(&mut self, new_len: usize, fill: u8) {
+        assert!(new_len <= Self::CAP, "LineBuf::resize({new_len}) exceeds capacity");
+        let old = self.len as usize;
+        if new_len > old {
+            self.bytes[old..new_len].fill(fill);
+        }
+        self.len = new_len as u8;
+    }
+
+}
+
+impl Default for LineBuf {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl std::ops::Deref for LineBuf {
+    type Target = [u8];
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        &self.bytes[..self.len as usize]
+    }
+}
+
+impl std::ops::DerefMut for LineBuf {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [u8] {
+        &mut self.bytes[..self.len as usize]
+    }
+}
+
+impl PartialEq for LineBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+impl Eq for LineBuf {}
+
+impl std::fmt::Debug for LineBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Payload bytes are rarely interesting in event dumps; keep
+        // panics readable.
+        write!(f, "LineBuf[{}B]", self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_has_no_bytes() {
+        let b = LineBuf::empty();
+        assert_eq!(b.len(), 0);
+        assert!(b.is_empty());
+        assert_eq!(&b[..], &[] as &[u8]);
+    }
+
+    #[test]
+    fn from_slice_roundtrips() {
+        let b = LineBuf::from_slice(&[1, 2, 3, 4]);
+        assert_eq!(b.len(), 4);
+        assert_eq!(&b[..], &[1, 2, 3, 4]);
+        assert_eq!(b.to_vec(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn full_line_fits() {
+        let b = LineBuf::from_slice(&[7u8; LineBuf::CAP]);
+        assert_eq!(b.len(), LineBuf::CAP);
+        assert!(b.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn extend_and_resize_match_vec_semantics() {
+        let mut b = LineBuf::empty();
+        b.extend_from_slice(&[1, 2]);
+        b.extend_from_slice(&[3]);
+        assert_eq!(&b[..], &[1, 2, 3]);
+        b.resize(6, 0);
+        assert_eq!(&b[..], &[1, 2, 3, 0, 0, 0]);
+        b.resize(2, 0);
+        assert_eq!(&b[..], &[1, 2]);
+        // Regrowing after a shrink re-zeroes the exposed tail.
+        b.resize(3, 9);
+        assert_eq!(&b[..], &[1, 2, 9]);
+    }
+
+    #[test]
+    fn deref_mut_allows_in_place_writes() {
+        let mut b = LineBuf::zeroed(8);
+        b[2..6].copy_from_slice(&[5, 6, 7, 8]);
+        assert_eq!(&b[..], &[0, 0, 5, 6, 7, 8, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds capacity")]
+    fn oversized_zeroed_panics() {
+        LineBuf::zeroed(LineBuf::CAP + 1);
+    }
+
+    #[test]
+    fn equality_ignores_stale_tail_bytes() {
+        let mut a = LineBuf::from_slice(&[1, 2, 3]);
+        a.resize(2, 0);
+        let b = LineBuf::from_slice(&[1, 2]);
+        assert_eq!(a, b);
+    }
+}

@@ -1,14 +1,21 @@
 //! Memory-system building blocks shared by every cache level and protocol:
 //! address mapping (page interleave across HBM stacks, bank interleave
-//! across L2 banks, RDMA partitioning), the set-associative cache array,
-//! and the miss-status-holding-register (MSHR) file.
+//! across L2 banks, RDMA partitioning), the set-associative cache array
+//! (tag/metadata array over one flat data backing), the
+//! miss-status-holding-register (MSHR) file, the inline line-payload
+//! buffer ([`LineBuf`]) and the dependency-free [`fxhash`] hasher used by
+//! every address-keyed map on the hot path.
 
 pub mod addr;
 pub mod cache;
+pub mod fxhash;
+pub mod linebuf;
 pub mod mshr;
 
 pub use addr::AddrMap;
-pub use cache::{CacheArray, CacheParams, Line};
+pub use cache::{CacheArray, CacheParams, Eviction, LineRef, LineView};
+pub use fxhash::{FxHashMap, FxHashSet};
+pub use linebuf::LineBuf;
 pub use mshr::{Mshr, MshrEntry};
 
 /// Cache line size in bytes (paper §3.2.6 assumes 64 B blocks).

@@ -6,8 +6,7 @@
 //! for a line with an active entry are queued on it and replayed when the
 //! entry retires; same-line fills are merged into one downstream request.
 
-use std::collections::HashMap;
-
+use crate::mem::fxhash::FxHashMap;
 use crate::sim::msg::MemReq;
 
 /// Why the entry was allocated (controllers replay differently).
@@ -29,10 +28,12 @@ pub struct MshrEntry {
     pub waiters: Vec<MemReq>,
 }
 
-/// The MSHR file for one cache controller.
+/// The MSHR file for one cache controller. Entries are keyed by line
+/// address through the Fx hasher (`mem::fxhash`) — this map sits on the
+/// per-request hot path of every cache level.
 #[derive(Debug, Default)]
 pub struct Mshr {
-    entries: HashMap<u64, MshrEntry>,
+    entries: FxHashMap<u64, MshrEntry>,
     capacity: usize,
     /// Peak simultaneous entries (metrics).
     pub peak: usize,
@@ -42,7 +43,7 @@ pub struct Mshr {
 
 impl Mshr {
     pub fn new(capacity: usize) -> Self {
-        Mshr { entries: HashMap::new(), capacity, peak: 0, merges: 0 }
+        Mshr { entries: FxHashMap::default(), capacity, peak: 0, merges: 0 }
     }
 
     /// Whether a new entry can be allocated.
@@ -112,7 +113,7 @@ mod tests {
             size: 4,
             src: CompId(0),
             dst: CompId(1),
-            data: vec![],
+            data: crate::mem::LineBuf::empty(),
             warpts: None,
         }
     }

@@ -74,6 +74,11 @@ pub struct RunMetrics {
     pub events: u64,
     /// Wall-clock seconds the simulation took (simulator perf).
     pub host_seconds: f64,
+    /// Engine throughput, `events / host_seconds` (simulator perf; 0 when
+    /// timing was not captured). Host-dependent: excluded from canonical
+    /// artifacts, recorded in full ones so the perf trajectory
+    /// accumulates (docs/PERF.md).
+    pub events_per_sec: f64,
     /// CU-issued loads / stores (per-op throughput denominators for
     /// campaign artifacts).
     pub cu_loads: u64,
@@ -128,6 +133,16 @@ impl RunMetrics {
         }
         Some(baseline.cycles as f64 / self.cycles as f64)
     }
+
+    /// Fill `events_per_sec` from `events` and `host_seconds` (guarding
+    /// the degenerate zero-time case).
+    pub fn finalize_host_perf(&mut self) {
+        self.events_per_sec = if self.host_seconds > 0.0 {
+            self.events as f64 / self.host_seconds
+        } else {
+            0.0
+        };
+    }
 }
 
 /// Geometric mean (the paper's "Mean" bars).
@@ -173,6 +188,16 @@ mod tests {
         assert_eq!(some.speedup_vs(&zero), None);
         assert_eq!(zero.speedup_vs(&some), None);
         assert_eq!(zero.speedup_vs(&zero), None);
+    }
+
+    #[test]
+    fn host_perf_finalizes_safely() {
+        let mut m = RunMetrics { events: 1000, host_seconds: 0.5, ..Default::default() };
+        m.finalize_host_perf();
+        assert!((m.events_per_sec - 2000.0).abs() < 1e-9);
+        let mut z = RunMetrics { events: 1000, host_seconds: 0.0, ..Default::default() };
+        z.finalize_host_perf();
+        assert_eq!(z.events_per_sec, 0.0);
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! The event loop: components, scheduling context, and the engine itself.
 
-use std::collections::BinaryHeap;
-
 use crate::sim::link::{Link, LinkId};
-use crate::sim::msg::{Event, Msg};
+use crate::sim::msg::{Event, MemReq, MemRsp, Msg};
+use crate::sim::pool::MsgPool;
+use crate::sim::queue::EventQueue;
 use crate::sim::Cycle;
 
 /// Index of a component registered with the [`Engine`].
@@ -48,12 +48,14 @@ macro_rules! impl_component_any {
 /// Scheduling context handed to [`Component::handle`].
 ///
 /// Borrow discipline: while a component runs, the engine lends out the
-/// event queue and link table (never other components), so a component can
-/// freely mutate itself and schedule traffic without aliasing.
+/// event queue, message pool and link table (never other components), so
+/// a component can freely mutate itself and schedule traffic without
+/// aliasing.
 pub struct Ctx<'a> {
     now: Cycle,
     seq: &'a mut u64,
-    queue: &'a mut BinaryHeap<Event>,
+    queue: &'a mut EventQueue,
+    pool: &'a mut MsgPool,
     links: &'a mut [Link],
     /// Id of the component currently executing.
     pub self_id: CompId,
@@ -98,6 +100,28 @@ impl Ctx<'_> {
         self.queue.push(Event { time: deliver, seq, target, msg });
     }
 
+    /// Box `req` as a [`Msg::Req`], recycling a pooled box when one is
+    /// available (the allocation-free send path).
+    pub fn req_msg(&mut self, req: MemReq) -> Msg {
+        self.pool.req(req)
+    }
+
+    /// Box `rsp` as a [`Msg::Rsp`] through the pool.
+    pub fn rsp_msg(&mut self, rsp: MemRsp) -> Msg {
+        self.pool.rsp(rsp)
+    }
+
+    /// Move a received request out of its box, returning the box to the
+    /// pool (the allocation-free receive path).
+    pub fn reclaim_req(&mut self, b: Box<MemReq>) -> MemReq {
+        self.pool.reclaim_req(b)
+    }
+
+    /// Move a received response out of its box, returning the box.
+    pub fn reclaim_rsp(&mut self, b: Box<MemRsp>) -> MemRsp {
+        self.pool.reclaim_rsp(b)
+    }
+
     /// Inspect a link (e.g. for backpressure decisions).
     pub fn link(&self, link: LinkId) -> &Link {
         &self.links[link.0 as usize]
@@ -108,7 +132,8 @@ impl Ctx<'_> {
 pub struct Engine {
     comps: Vec<Option<Box<dyn Component>>>,
     links: Vec<Link>,
-    queue: BinaryHeap<Event>,
+    queue: EventQueue,
+    pool: MsgPool,
     seq: u64,
     now: Cycle,
     events_processed: u64,
@@ -125,7 +150,8 @@ impl Engine {
         Engine {
             comps: Vec::new(),
             links: Vec::new(),
-            queue: BinaryHeap::with_capacity(1 << 16),
+            queue: EventQueue::new(),
+            pool: MsgPool::new(),
             seq: 0,
             now: 0,
             events_processed: 0,
@@ -158,13 +184,14 @@ impl Engine {
     /// Returns the final simulation time. Panics if an event targets an
     /// unknown component (a wiring bug, not a runtime condition).
     pub fn run(&mut self, limit: Cycle) -> Cycle {
-        while let Some(ev) = self.queue.pop() {
-            if ev.time > limit {
-                // Put it back: callers may resume with a higher limit.
-                self.queue.push(ev);
+        // Peek before popping: pausing at `limit` must leave the queue
+        // untouched so pause/resume cycles do no queue churn.
+        while let Some(t) = self.queue.next_time() {
+            if t > limit {
                 self.now = limit;
                 return self.now;
             }
+            let ev = self.queue.pop().expect("peeked event vanished");
             debug_assert!(ev.time >= self.now, "time went backwards");
             self.now = ev.time;
             self.events_processed += 1;
@@ -176,6 +203,7 @@ impl Engine {
                 now: self.now,
                 seq: &mut self.seq,
                 queue: &mut self.queue,
+                pool: &mut self.pool,
                 links: &mut self.links,
                 self_id: ev.target,
             };
@@ -203,6 +231,11 @@ impl Engine {
     /// Whether any events remain queued.
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    /// Message-pool counters (perf diagnostics / allocation tests).
+    pub fn pool(&self) -> &MsgPool {
+        &self.pool
     }
 
     /// Immutable access to a component (downcast by the caller).
@@ -338,5 +371,80 @@ mod tests {
             (end, e.events_processed(), e.link(l).bytes_sent)
         };
         assert_eq!(build_and_run(), build_and_run());
+    }
+
+    /// Requester/responder pair exercising the pooled Req/Rsp path.
+    struct Requester {
+        name: String,
+        responder: CompId,
+        remaining: u32,
+    }
+    impl Component for Requester {
+        crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            if let Msg::Rsp(b) = msg {
+                let rsp = ctx.reclaim_rsp(b);
+                assert_eq!(rsp.data.len(), 64);
+            }
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                let req = MemReq {
+                    id: self.remaining as u64,
+                    addr: 0x40,
+                    size: 4,
+                    src: ctx.self_id,
+                    dst: self.responder,
+                    ..MemReq::default()
+                };
+                let target = self.responder;
+                let msg = ctx.req_msg(req);
+                ctx.schedule(3, target, msg);
+            }
+        }
+    }
+    struct Responder {
+        name: String,
+    }
+    impl Component for Responder {
+        crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            let Msg::Req(b) = msg else { unreachable!() };
+            let req = ctx.reclaim_req(b);
+            let rsp = MemRsp {
+                id: req.id,
+                kind: req.kind,
+                addr: req.addr,
+                dst: req.src,
+                data: crate::mem::LineBuf::zeroed(64),
+                ts: None,
+            };
+            let target = req.src;
+            let msg = ctx.rsp_msg(rsp);
+            ctx.schedule(5, target, msg);
+        }
+    }
+
+    #[test]
+    fn pooled_boxes_recycle_across_transactions() {
+        let mut e = Engine::new();
+        let req_id = CompId(0);
+        let rsp_id = CompId(1);
+        e.add(Box::new(Requester { name: "rq".into(), responder: rsp_id, remaining: 1000 }));
+        e.add(Box::new(Responder { name: "rs".into() }));
+        e.post(0, req_id, Msg::Tick);
+        e.run_to_completion();
+        let p = e.pool();
+        // One transaction in flight at a time: one box of each kind,
+        // reused for every subsequent round trip.
+        assert_eq!(p.fresh_reqs, 1, "req boxes must recycle: {}", p.fresh_reqs);
+        assert_eq!(p.fresh_rsps, 1, "rsp boxes must recycle: {}", p.fresh_rsps);
+        assert_eq!(p.reused_reqs, 999);
+        assert_eq!(p.reused_rsps, 999);
     }
 }

@@ -9,15 +9,22 @@
 //! sequence number is assigned at scheduling time. Two runs of the same
 //! configuration produce identical event interleavings, cycle counts and
 //! memory images — a requirement for the paper's relative-timing
-//! experiments and for reproducible CI.
+//! experiments and for reproducible CI. The scheduler behind the contract
+//! is a bucketed calendar queue ([`queue`]) with O(1) amortized dispatch;
+//! message boxes recycle through a free-list pool ([`pool`]) so the event
+//! hot loop performs no allocation.
 
 pub mod engine;
 pub mod link;
 pub mod msg;
+pub mod pool;
+pub mod queue;
 
 pub use engine::{CompId, Component, Ctx, Engine};
 pub use link::{Link, LinkId};
 pub use msg::{MemReq, MemRsp, Msg, ReqId, ReqKind, TsPair};
+pub use pool::MsgPool;
+pub use queue::EventQueue;
 
 /// Simulation time in core clock cycles (1 GHz in the paper's Table 2).
 pub type Cycle = u64;

@@ -2,8 +2,12 @@
 //!
 //! One crate-wide enum keeps dispatch monomorphic and allocation-free on
 //! the hot path (no `Box<dyn Any>`); protocol-specific payloads (HALCONE
-//! timestamps, HMG invalidations) are inline variants/fields.
+//! timestamps, HMG invalidations) are inline variants/fields. Payload
+//! bytes live in a fixed inline [`LineBuf`] (word accesses carry `size`,
+//! the buffer is always line-capacity), so `MemReq`/`MemRsp` own no heap
+//! and their boxes recycle cleanly through the engine's `MsgPool`.
 
+use crate::mem::LineBuf;
 use crate::sim::engine::CompId;
 use crate::sim::Cycle;
 
@@ -29,7 +33,7 @@ pub struct TsPair {
 /// `src` is the component to respond to; `id` is echoed in the response.
 /// Word-granularity accesses (from CUs) carry `size <= line`; cache-line
 /// fills use the full line size. `data` carries write payloads.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct MemReq {
     pub id: ReqId,
     pub kind: ReqKind,
@@ -39,15 +43,30 @@ pub struct MemReq {
     /// Final destination component; switches route on this.
     pub dst: CompId,
     /// Write payload (`size` bytes), empty for reads.
-    pub data: Vec<u8>,
+    pub data: LineBuf,
     /// G-TSC ablation: logical timestamp carried with the request
     /// (HALCONE eliminates this field; it exists to account the traffic
     /// delta of CU-level counters, DESIGN.md E10).
     pub warpts: Option<u64>,
 }
 
+impl Default for MemReq {
+    fn default() -> Self {
+        MemReq {
+            id: 0,
+            kind: ReqKind::Read,
+            addr: 0,
+            size: 0,
+            src: CompId::NONE,
+            dst: CompId::NONE,
+            data: LineBuf::empty(),
+            warpts: None,
+        }
+    }
+}
+
 /// A memory response travelling *up* the hierarchy.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct MemRsp {
     pub id: ReqId,
     pub kind: ReqKind,
@@ -55,17 +74,31 @@ pub struct MemRsp {
     /// Final destination component (the original requester).
     pub dst: CompId,
     /// Read payload (line or word), empty for write acks.
-    pub data: Vec<u8>,
+    pub data: LineBuf,
     /// HALCONE: block timestamps assigned by the level below.
     pub ts: Option<TsPair>,
+}
+
+impl Default for MemRsp {
+    fn default() -> Self {
+        MemRsp {
+            id: 0,
+            kind: ReqKind::Read,
+            addr: 0,
+            dst: CompId::NONE,
+            data: LineBuf::empty(),
+            ts: None,
+        }
+    }
 }
 
 /// All messages understood by simulated components.
 #[derive(Clone, Debug)]
 pub enum Msg {
     /// Memory request (downward). Boxed: `Event`s live in the scheduler's
-    /// binary heap, and sift operations move the whole struct — keeping
-    /// `Msg` at pointer size nearly halved heap time (§Perf log).
+    /// buckets, and moves copy the whole struct — keeping `Msg` at
+    /// pointer size nearly halved scheduler time (§Perf log). The boxes
+    /// recycle through the engine's `MsgPool`.
     Req(Box<MemReq>),
     /// Memory response (upward).
     Rsp(Box<MemRsp>),
@@ -132,7 +165,9 @@ impl PartialOrd for Event {
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // BinaryHeap is a max-heap; invert for earliest-first. Ties broken
-        // by sequence number => deterministic FIFO among same-cycle events.
+        // by sequence number => deterministic FIFO among same-cycle
+        // events. The calendar queue (`sim/queue.rs`) preserves exactly
+        // this order and uses the inversion for its overflow heap.
         (other.time, other.seq).cmp(&(self.time, self.seq))
     }
 }
@@ -165,7 +200,7 @@ mod tests {
             size: 64,
             src: CompId(0),
             dst: CompId(1),
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         };
         let rsp_nc = MemRsp {
@@ -173,12 +208,12 @@ mod tests {
             kind: ReqKind::Read,
             addr: 0,
             dst: CompId(0),
-            data: vec![0; 64],
+            data: LineBuf::zeroed(64),
             ts: None,
         };
         let rsp_c = MemRsp {
             ts: Some(TsPair::default()),
-            ..rsp_nc.clone()
+            ..rsp_nc
         };
         let nc = read_req.wire_bytes() + rsp_nc.wire_bytes();
         let c = read_req.wire_bytes() + rsp_c.wire_bytes();
@@ -195,11 +230,20 @@ mod tests {
             size: 64,
             src: CompId(0),
             dst: CompId(1),
-            data: vec![],
+            data: LineBuf::empty(),
             warpts: None,
         };
         let without = req.wire_bytes();
         req.warpts = Some(7);
         assert_eq!(req.wire_bytes(), without + 2);
+    }
+
+    #[test]
+    fn messages_carry_no_heap_payload() {
+        // The pooling contract: recycling a box must never free or
+        // allocate payload storage, so the structs must be `Copy`.
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<MemReq>();
+        assert_copy::<MemRsp>();
     }
 }

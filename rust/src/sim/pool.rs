@@ -1,0 +1,139 @@
+//! Free-list recycling for boxed memory-transaction messages.
+//!
+//! `Msg::Req`/`Msg::Rsp` stay boxed so `Msg` remains pointer-sized in the
+//! scheduler (see `sim/msg.rs`), but the boxes themselves are recycled
+//! through this engine-owned pool instead of hitting the allocator twice
+//! per transaction. Combined with the inline [`LineBuf`] payloads
+//! (`mem/linebuf.rs`), a steady-state run performs no allocation in the
+//! event hot loop (asserted by `tests/alloc_discipline.rs`).
+//!
+//! Protocol: senders build messages with [`Ctx::req_msg`]/[`Ctx::rsp_msg`]
+//! (which fill a pooled box); receivers move the value out with
+//! [`Ctx::reclaim_req`]/[`Ctx::reclaim_rsp`] (which return the box to the
+//! pool). Plain `Msg::Req(Box::new(..))` still works everywhere — tests
+//! and one-shot setup paths simply bypass recycling.
+//!
+//! [`Ctx::req_msg`]: crate::sim::engine::Ctx::req_msg
+//! [`Ctx::rsp_msg`]: crate::sim::engine::Ctx::rsp_msg
+//! [`Ctx::reclaim_req`]: crate::sim::engine::Ctx::reclaim_req
+//! [`Ctx::reclaim_rsp`]: crate::sim::engine::Ctx::reclaim_rsp
+//! [`LineBuf`]: crate::mem::LineBuf
+
+use crate::sim::msg::{MemReq, MemRsp, Msg};
+
+/// Free-list cap per message kind; beyond this, reclaimed boxes are
+/// simply dropped (bounds pool memory if a phase bursts).
+const POOL_CAP: usize = 4096;
+
+/// Engine-owned free lists for `Box<MemReq>` / `Box<MemRsp>`.
+#[derive(Default)]
+pub struct MsgPool {
+    reqs: Vec<Box<MemReq>>,
+    rsps: Vec<Box<MemRsp>>,
+    /// Boxes taken from the allocator (perf diagnostics; a healthy
+    /// steady state stops growing these).
+    pub fresh_reqs: u64,
+    pub fresh_rsps: u64,
+    /// Boxes served from the free list.
+    pub reused_reqs: u64,
+    pub reused_rsps: u64,
+}
+
+impl MsgPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Box `req` (recycling a pooled box when available) as a `Msg`.
+    #[inline]
+    pub fn req(&mut self, req: MemReq) -> Msg {
+        match self.reqs.pop() {
+            Some(mut b) => {
+                self.reused_reqs += 1;
+                *b = req;
+                Msg::Req(b)
+            }
+            None => {
+                self.fresh_reqs += 1;
+                Msg::Req(Box::new(req))
+            }
+        }
+    }
+
+    /// Box `rsp` (recycling a pooled box when available) as a `Msg`.
+    #[inline]
+    pub fn rsp(&mut self, rsp: MemRsp) -> Msg {
+        match self.rsps.pop() {
+            Some(mut b) => {
+                self.reused_rsps += 1;
+                *b = rsp;
+                Msg::Rsp(b)
+            }
+            None => {
+                self.fresh_rsps += 1;
+                Msg::Rsp(Box::new(rsp))
+            }
+        }
+    }
+
+    /// Copy the request out of its box and return the box to the pool.
+    /// (`MemReq` is `Copy`, so the deref reads without consuming the box.)
+    #[inline]
+    pub fn reclaim_req(&mut self, b: Box<MemReq>) -> MemReq {
+        let v = *b;
+        if self.reqs.len() < POOL_CAP {
+            self.reqs.push(b);
+        }
+        v
+    }
+
+    /// Copy the response out of its box and return the box to the pool.
+    #[inline]
+    pub fn reclaim_rsp(&mut self, b: Box<MemRsp>) -> MemRsp {
+        let v = *b;
+        if self.rsps.len() < POOL_CAP {
+            self.rsps.push(b);
+        }
+        v
+    }
+
+    /// Free boxes currently pooled (tests/diagnostics).
+    pub fn idle(&self) -> (usize, usize) {
+        (self.reqs.len(), self.rsps.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn some_req(id: u64) -> MemReq {
+        MemReq { id, ..MemReq::default() }
+    }
+
+    #[test]
+    fn reclaimed_boxes_are_reused() {
+        let mut p = MsgPool::new();
+        let m = p.req(some_req(1));
+        assert_eq!(p.fresh_reqs, 1);
+        let Msg::Req(b) = m else { panic!() };
+        let v = p.reclaim_req(b);
+        assert_eq!(v.id, 1);
+        assert_eq!(p.idle(), (1, 0));
+        let m2 = p.req(some_req(2));
+        assert_eq!(p.fresh_reqs, 1, "second box must come from the pool");
+        assert_eq!(p.reused_reqs, 1);
+        let Msg::Req(b2) = m2 else { panic!() };
+        assert_eq!(b2.id, 2);
+    }
+
+    #[test]
+    fn rsp_pool_is_independent() {
+        let mut p = MsgPool::new();
+        let m = p.rsp(MemRsp::default());
+        let Msg::Rsp(b) = m else { panic!() };
+        p.reclaim_rsp(b);
+        assert_eq!(p.idle(), (0, 1));
+        assert_eq!((p.fresh_reqs, p.fresh_rsps), (0, 1));
+    }
+}

@@ -1,0 +1,272 @@
+//! Two-level bucketed calendar queue: the event scheduler.
+//!
+//! The global `BinaryHeap<Event>` paid an O(log n) sift per push *and*
+//! per pop, moving whole `Event` structs each level (§Perf log). Almost
+//! every event in this simulator is scheduled a short, bounded distance
+//! into the future (link latencies, cache latencies, the 100-cycle MC
+//! access), so a calendar layout makes both operations O(1) amortized:
+//!
+//! * a **near-future ring** of [`RING`] per-cycle FIFO buckets covering
+//!   `[cur, cur + RING)` — push appends to `bucket[time % RING]`, pop
+//!   reads the front of `bucket[cur % RING]`;
+//! * a **sorted overflow** heap for the rare far-future event (fence
+//!   posts, RDMA copy-phase delays). As `cur` advances, overflow events
+//!   whose time enters the window migrate into their ring bucket
+//!   *before* any new same-cycle push can land there.
+//!
+//! # Ordering contract
+//!
+//! Pops occur in exactly the `(time, seq)` order of [`Event::cmp`] — the
+//! same order the reference `BinaryHeap` produced (property-tested in
+//! `tests/unit_properties.rs`). The argument: sequence numbers are
+//! assigned monotonically at push time, so within one bucket, events
+//! migrated from the overflow heap (already `(time, seq)`-sorted, and all
+//! pushed before the window reached their cycle) precede direct pushes
+//! (all pushed after), and each group is FIFO — hence seq-sorted.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::sim::msg::Event;
+use crate::sim::Cycle;
+
+/// Ring span in cycles (power of two for cheap modulo). Covers every
+/// latency in the system model (max ~300-cycle PCIe hop) with two orders
+/// of magnitude to spare.
+const RING: usize = 1 << 12;
+
+/// The engine's event queue. See the module docs for the layout.
+pub struct EventQueue {
+    /// `RING` per-cycle FIFO buckets; `buckets[t % RING]` holds only
+    /// events for the single cycle `t` within the current window.
+    buckets: Vec<VecDeque<Event>>,
+    /// Events currently resident in the ring.
+    ring_len: usize,
+    /// Window start: no un-popped event precedes this cycle (except
+    /// misuse, see `next_time`).
+    cur: Cycle,
+    /// Far-future events (`time >= cur + RING`), earliest on top.
+    overflow: BinaryHeap<Event>,
+    /// Total events queued.
+    len: usize,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue {
+            // Seed each bucket with a little capacity so the steady state
+            // allocates nothing (the zero-alloc contract in
+            // `tests/alloc_discipline.rs`).
+            buckets: (0..RING).map(|_| VecDeque::with_capacity(2)).collect(),
+            ring_len: 0,
+            cur: 0,
+            overflow: BinaryHeap::with_capacity(64),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(time: Cycle) -> usize {
+        (time & (RING as u64 - 1)) as usize
+    }
+
+    /// Enqueue; O(1) for the in-window common case.
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        self.len += 1;
+        if ev.time >= self.cur && ev.time - self.cur < RING as u64 {
+            self.ring_len += 1;
+            self.buckets[Self::bucket_of(ev.time)].push_back(ev);
+        } else {
+            // Far future — or behind `cur` (scheduler misuse; the heap
+            // keeps reference ordering and `Engine::run` debug-asserts).
+            self.overflow.push(ev);
+        }
+    }
+
+    /// Time of the earliest queued event, positioning the window on it.
+    /// Mutates internal cursors/migration state but never the dequeue
+    /// order — `run(limit)` peeks with this and pauses without the
+    /// pop/push churn the heap version paid.
+    pub fn next_time(&mut self) -> Option<Cycle> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            // An event scheduled into the past (misuse) is the global
+            // minimum; serve it straight from the overflow heap.
+            if let Some(top) = self.overflow.peek() {
+                if top.time < self.cur {
+                    return Some(top.time);
+                }
+            }
+            // Migrate overflow events whose cycle entered the window.
+            // This runs before any direct push could target those cycles,
+            // preserving within-bucket seq order (module docs).
+            while let Some(top) = self.overflow.peek() {
+                if top.time - self.cur >= RING as u64 {
+                    break;
+                }
+                let ev = self.overflow.pop().unwrap();
+                self.ring_len += 1;
+                self.buckets[Self::bucket_of(ev.time)].push_back(ev);
+            }
+            if !self.buckets[Self::bucket_of(self.cur)].is_empty() {
+                return Some(self.cur);
+            }
+            if self.ring_len > 0 {
+                // Some bucket ahead is non-empty; it is at most RING-1
+                // cycles away (all ring events lie inside the window).
+                self.cur += 1;
+            } else {
+                match self.overflow.peek() {
+                    // Empty ring: jump straight to the next far event.
+                    Some(top) => self.cur = top.time,
+                    None => return None,
+                }
+            }
+        }
+    }
+
+    /// Dequeue the earliest event (`(time, seq)` order).
+    pub fn pop(&mut self) -> Option<Event> {
+        // Fast path: the engine's run loop peeks with `next_time()`
+        // right before popping, so the window is usually already
+        // positioned on a non-empty bucket. `next_time` migrates every
+        // in-window overflow event before returning, so a non-empty
+        // current bucket holds the global minimum — unless a (misuse)
+        // behind-window event sits in the overflow heap, which the guard
+        // preserves in reference-heap order.
+        if self.overflow.peek().is_none_or(|top| top.time >= self.cur) {
+            if let Some(ev) = self.buckets[Self::bucket_of(self.cur)].pop_front() {
+                self.ring_len -= 1;
+                self.len -= 1;
+                return Some(ev);
+            }
+        }
+        let t = self.next_time()?;
+        self.len -= 1;
+        if t < self.cur {
+            return self.overflow.pop();
+        }
+        let ev = self.buckets[Self::bucket_of(self.cur)].pop_front();
+        debug_assert!(ev.is_some(), "next_time pointed at an empty bucket");
+        self.ring_len -= 1;
+        ev
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::CompId;
+    use crate::sim::msg::Msg;
+
+    fn ev(time: Cycle, seq: u64) -> Event {
+        Event { time, seq, target: CompId(0), msg: Msg::Tick }
+    }
+
+    fn drain(q: &mut EventQueue) -> Vec<(Cycle, u64)> {
+        std::iter::from_fn(|| q.pop().map(|e| (e.time, e.seq))).collect()
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(5, 0));
+        q.push(ev(3, 2));
+        q.push(ev(3, 1));
+        q.push(ev(7, 3));
+        assert_eq!(drain(&mut q), vec![(3, 1), (3, 2), (5, 0), (7, 3)]);
+    }
+
+    #[test]
+    fn far_future_overflow_merges_with_ring_events() {
+        let mut q = EventQueue::new();
+        q.push(ev(1_000_000, 0)); // overflow
+        q.push(ev(10, 1)); // ring
+        q.push(ev(1_000_000, 2)); // overflow, same cycle as seq 0
+        assert_eq!(q.len(), 3);
+        assert_eq!(drain(&mut q), vec![(10, 1), (1_000_000, 0), (1_000_000, 2)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_cycle_push_during_drain_pops_after() {
+        let mut q = EventQueue::new();
+        q.push(ev(4, 0));
+        assert_eq!(q.next_time(), Some(4));
+        let first = q.pop().unwrap();
+        assert_eq!((first.time, first.seq), (4, 0));
+        // A handler scheduling at delay 0 lands behind the cursor.
+        q.push(ev(4, 1));
+        q.push(ev(4, 2));
+        assert_eq!(drain(&mut q), vec![(4, 1), (4, 2)]);
+    }
+
+    #[test]
+    fn overflow_migrates_before_direct_pushes_same_cycle() {
+        let mut q = EventQueue::new();
+        let far = RING as u64 + 50;
+        q.push(ev(far, 0)); // beyond the initial window -> overflow
+        q.push(ev(100, 1));
+        // Popping (100, 1) slides the window past cycle 50, so `far`
+        // enters it and seq 0 migrates into its bucket.
+        let first = q.pop().unwrap();
+        assert_eq!((first.time, first.seq), (100, 1));
+        // A direct push to the same (now in-window) cycle lands behind
+        // the migrated event despite arriving later.
+        q.push(ev(far, 2));
+        assert_eq!(drain(&mut q), vec![(far, 0), (far, 2)]);
+    }
+
+    #[test]
+    fn peek_is_stable_and_does_not_reorder() {
+        let mut q = EventQueue::new();
+        q.push(ev(9, 0));
+        q.push(ev(2, 1));
+        assert_eq!(q.next_time(), Some(2));
+        assert_eq!(q.next_time(), Some(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(drain(&mut q), vec![(2, 1), (9, 0)]);
+    }
+
+    #[test]
+    fn empty_queue_reports_none() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.next_time(), None);
+        assert!(q.pop().is_none());
+        q.push(ev(1, 0));
+        q.pop();
+        assert_eq!(q.next_time(), None);
+    }
+
+    #[test]
+    fn sparse_long_gaps_jump_instead_of_scanning() {
+        let mut q = EventQueue::new();
+        let mut seq = 0;
+        let mut t = 0u64;
+        for _ in 0..100 {
+            t += 123_456; // far beyond the ring every time
+            q.push(ev(t, seq));
+            seq += 1;
+        }
+        let order = drain(&mut q);
+        assert_eq!(order.len(), 100);
+        assert!(order.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+}

@@ -187,7 +187,10 @@ fn metrics_json(m: &RunMetrics, include_host: bool) -> Value {
         ("events".into(), Value::u64(m.events)),
     ];
     if include_host {
+        // Host-dependent pair: dropped from the canonical form so the
+        // determinism/gate comparisons stay byte-stable.
         o.push(("host_seconds".into(), Value::f64(m.host_seconds)));
+        o.push(("events_per_sec".into(), Value::f64(m.events_per_sec)));
     }
     o.extend([
         ("cu_loads".into(), Value::u64(m.cu_loads)),
@@ -274,11 +277,13 @@ mod tests {
             let m = cell.get("metrics").unwrap();
             assert!(m.get("cycles").unwrap().as_f64().unwrap() > 0.0);
             assert!(m.get("host_seconds").is_some());
+            assert!(m.get("events_per_sec").is_some());
             assert!(m.get("cu_loads").unwrap().as_f64().is_some());
         }
         // Canonical form drops host timing and nothing else.
         let canon = to_json_canonical(&res);
         assert!(!canon.contains("host_seconds"));
+        assert!(!canon.contains("events_per_sec"));
         json::parse(&canon).unwrap();
     }
 

@@ -1,0 +1,148 @@
+//! The zero-allocation contract of the event hot loop (ISSUE 2 /
+//! docs/PERF.md): once the engine, calendar-queue buckets and message
+//! pool are warm, a steady-state run of memory transactions performs no
+//! heap allocation — boxes recycle through the pool, payloads are inline
+//! `LineBuf`s, and queue buckets reuse their capacity.
+//!
+//! A counting global allocator measures the steady-state window. This
+//! file holds exactly one `#[test]` so no concurrent test thread can
+//! pollute the counters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use halcone::mem::LineBuf;
+use halcone::sim::{CompId, Component, Ctx, Cycle, Engine, MemReq, MemRsp, Msg};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static FREES: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        FREES.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        FREES.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn counters() -> (u64, u64) {
+    (ALLOCS.load(Ordering::SeqCst), FREES.load(Ordering::SeqCst))
+}
+
+/// Issues a pooled request every time it is poked; consumes responses.
+struct Requester {
+    name: String,
+    responder: CompId,
+    remaining: u64,
+}
+impl Component for Requester {
+    halcone::impl_component_any!();
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        if let Msg::Rsp(b) = msg {
+            let rsp = ctx.reclaim_rsp(b);
+            assert_eq!(rsp.data.len(), 64);
+        }
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            let req = MemReq {
+                id: self.remaining,
+                addr: (self.remaining % 64) * 64,
+                size: 4,
+                src: ctx.self_id,
+                dst: self.responder,
+                data: LineBuf::from_slice(&[1, 2, 3, 4]),
+                ..MemReq::default()
+            };
+            let target = self.responder;
+            let msg = ctx.req_msg(req);
+            ctx.schedule(3, target, msg);
+        }
+    }
+}
+
+/// Answers every request with a full-line pooled response.
+struct Responder {
+    name: String,
+}
+impl Component for Responder {
+    halcone::impl_component_any!();
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        let Msg::Req(b) = msg else { unreachable!() };
+        let req = ctx.reclaim_req(b);
+        let rsp = MemRsp {
+            id: req.id,
+            kind: req.kind,
+            addr: req.addr,
+            dst: req.src,
+            data: LineBuf::zeroed(64),
+            ts: None,
+        };
+        let target = req.src;
+        let msg = ctx.rsp_msg(rsp);
+        ctx.schedule(5, target, msg);
+    }
+}
+
+#[test]
+fn steady_state_event_loop_is_allocation_free() {
+    let mut e = Engine::new();
+    let rq = CompId(0);
+    let rs = CompId(1);
+    e.add(Box::new(Requester {
+        name: "rq".into(),
+        responder: rs,
+        remaining: 2_000_000,
+    }));
+    e.add(Box::new(Responder { name: "rs".into() }));
+    e.post(0, rq, Msg::Tick);
+
+    // Warm-up: populate the message pool and bucket capacities. One
+    // round trip is 8 cycles, so this drives ~12.5k transactions.
+    e.run(100_000);
+    assert!(!e.is_idle(), "warm-up must pause mid-run");
+
+    // Steady state: every transaction must reuse pooled boxes and
+    // pre-sized queue buckets — zero net allocations across the window.
+    let (a0, f0) = counters();
+    let evs0 = e.events_processed();
+    e.run(4_100_000);
+    let (a1, f1) = counters();
+    let events = e.events_processed() - evs0;
+    assert!(events > 500_000, "measured window too small: {events} events");
+
+    let allocs = a1 - a0;
+    let frees = f1 - f0;
+    assert_eq!(
+        allocs, 0,
+        "event hot loop allocated {allocs} times over {events} events"
+    );
+    assert_eq!(frees, 0, "event hot loop freed {frees} times (churn)");
+
+    // Pool accounting: exactly one box of each kind was ever taken from
+    // the allocator; every other transaction reused it.
+    e.run_to_completion();
+    let p = e.pool();
+    assert_eq!(p.fresh_reqs, 1, "req boxes must recycle ({})", p.fresh_reqs);
+    assert_eq!(p.fresh_rsps, 1, "rsp boxes must recycle ({})", p.fresh_rsps);
+    assert!(p.reused_reqs >= 1_000_000, "reuse counter: {}", p.reused_reqs);
+    assert_eq!(p.idle(), (1, 1), "both boxes parked in the pool at drain");
+}

@@ -23,10 +23,13 @@ fn campaign_json_is_byte_identical_across_jobs_levels() {
     let b = report::to_json_canonical(&parallel);
     assert_eq!(a, b, "campaign.json differs between --jobs 1 and --jobs 8");
 
-    // The full artifacts differ only on host_seconds lines.
+    // The full artifacts differ only on the host-dependent lines
+    // (host_seconds and the events_per_sec derived from it).
     let strip = |s: &str| {
         s.lines()
-            .filter(|l| !l.contains("\"host_seconds\""))
+            .filter(|l| {
+                !l.contains("\"host_seconds\"") && !l.contains("\"events_per_sec\"")
+            })
             .collect::<Vec<_>>()
             .join("\n")
     };
@@ -70,6 +73,7 @@ fn artifact_is_wellformed_json_with_expected_shape() {
             "cycles",
             "events",
             "host_seconds",
+            "events_per_sec",
             "cu_loads",
             "cu_stores",
             "l1_l2_transactions",
