@@ -3,8 +3,9 @@
 //! from here, and every run appends a machine-readable snapshot to
 //! `BENCH_perf.json` so the perf trajectory accumulates (docs/PERF.md).
 //!
-//!     cargo bench --bench perf_engine            # full suite
-//!     cargo bench --bench perf_engine -- rl fir  # workload subset (CI smoke)
+//!     cargo bench --bench perf_engine                       # full suite
+//!     cargo bench --bench perf_engine -- rl fir             # workload subset (CI smoke)
+//!     cargo bench --bench perf_engine -- rl --shards 1,4    # sharded-engine axis
 
 use halcone::config::SystemConfig;
 use halcone::coordinator::runner::run_workload;
@@ -49,12 +50,32 @@ const ALL_WORKLOADS: [&str; 5] = ["rl", "fir", "bfs", "mm", "xtreme1"];
 
 fn main() {
     // `cargo bench -- rl fir` restricts the full-system rows (the CI
-    // perf-smoke step runs a fast subset); cargo may also pass harness
-    // flags like `--bench`, which we ignore.
-    let selected: Vec<String> = std::env::args()
-        .skip(1)
-        .filter(|a| !a.starts_with('-'))
-        .collect();
+    // perf-smoke step runs a fast subset) and `--shards 1,4` adds a
+    // sharded-engine axis; cargo may also pass harness flags like
+    // `--bench`, which we ignore.
+    let mut selected: Vec<String> = Vec::new();
+    let mut shards_axis: Vec<u32> = vec![1];
+    let mut argv = std::env::args().skip(1);
+    while let Some(arg) = argv.next() {
+        if arg == "--shards" {
+            let list = argv.next().unwrap_or_else(|| {
+                eprintln!("error: --shards wants a comma-separated list, e.g. 1,4");
+                std::process::exit(2)
+            });
+            shards_axis = list
+                .split(',')
+                .map(|s| match s.trim().parse::<u32>() {
+                    Ok(n) if n >= 1 => n,
+                    _ => {
+                        eprintln!("error: --shards {list}: '{s}' is not a thread count >= 1");
+                        std::process::exit(2)
+                    }
+                })
+                .collect();
+        } else if !arg.starts_with('-') {
+            selected.push(arg);
+        }
+    }
     for s in &selected {
         if !ALL_WORKLOADS.contains(&s.as_str()) {
             eprintln!(
@@ -79,38 +100,43 @@ fn main() {
     println!("raw event loop (ping-pong): {:.1} M events/s\n", ping_pong / 1e6);
 
     let t = Table::new(
-        &["workload", "events", "sim cycles", "host s", "Mev/s", "sim-ops/s"],
-        &[9, 11, 12, 8, 8, 11],
+        &["workload", "shards", "events", "sim cycles", "host s", "Mev/s", "sim-ops/s"],
+        &[9, 6, 11, 12, 8, 8, 11],
     );
     let mut rows: Vec<Value> = Vec::new();
     for wl in &workloads {
-        let cfg = SystemConfig::preset("SM-WT-C-HALCONE");
-        // Timed externally of run_workload's own clock for a median of 3.
-        let mut last = None;
-        let m = measure(0, 3, || {
-            let res = run_workload(&cfg, wl, None);
-            let r = (res.metrics.events, res.metrics.cycles, res.metrics.l1.reqs_in);
-            last = Some(r);
-            r
-        });
-        let (events, cycles, ops) = last.unwrap();
-        let mev_s = events as f64 / m.median_s / 1e6;
-        t.row(&[
-            (*wl).into(),
-            events.to_string(),
-            cycles.to_string(),
-            format!("{:.3}", m.median_s),
-            format!("{:.1}", mev_s),
-            format!("{:.1}M", ops as f64 / m.median_s / 1e6),
-        ]);
-        rows.push(Value::Obj(vec![
-            ("workload".into(), Value::str(*wl)),
-            ("events".into(), Value::u64(events)),
-            ("cycles".into(), Value::u64(cycles)),
-            ("host_seconds".into(), Value::f64(m.median_s)),
-            ("mev_per_s".into(), Value::f64(mev_s)),
-            ("events_per_sec".into(), Value::f64(events as f64 / m.median_s)),
-        ]));
+        for &shards in &shards_axis {
+            let mut cfg = SystemConfig::preset("SM-WT-C-HALCONE");
+            cfg.shards = shards;
+            // Timed externally of run_workload's own clock for a median of 3.
+            let mut last = None;
+            let m = measure(0, 3, || {
+                let res = run_workload(&cfg, wl, None);
+                let r = (res.metrics.events, res.metrics.cycles, res.metrics.l1.reqs_in);
+                last = Some(r);
+                r
+            });
+            let (events, cycles, ops) = last.unwrap();
+            let mev_s = events as f64 / m.median_s / 1e6;
+            t.row(&[
+                (*wl).into(),
+                shards.to_string(),
+                events.to_string(),
+                cycles.to_string(),
+                format!("{:.3}", m.median_s),
+                format!("{:.1}", mev_s),
+                format!("{:.1}M", ops as f64 / m.median_s / 1e6),
+            ]);
+            rows.push(Value::Obj(vec![
+                ("workload".into(), Value::str(*wl)),
+                ("shards".into(), Value::u64(shards as u64)),
+                ("events".into(), Value::u64(events)),
+                ("cycles".into(), Value::u64(cycles)),
+                ("host_seconds".into(), Value::f64(m.median_s)),
+                ("mev_per_s".into(), Value::f64(mev_s)),
+                ("events_per_sec".into(), Value::f64(events as f64 / m.median_s)),
+            ]));
+        }
     }
 
     // Machine-readable artifact for the perf log (appended-to by each
@@ -118,6 +144,10 @@ fn main() {
     let doc = Value::Obj(vec![
         ("bench".into(), Value::str("perf_engine")),
         ("ping_pong_events_per_sec".into(), Value::f64(ping_pong)),
+        (
+            "shards_axis".into(),
+            Value::Arr(shards_axis.iter().map(|&s| Value::u64(s as u64)).collect()),
+        ),
         ("workloads".into(), Value::Arr(rows)),
     ]);
     let mut out = doc.to_pretty();

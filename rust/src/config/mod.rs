@@ -65,6 +65,12 @@ pub struct SystemConfig {
 
     /// Workload problem-size scale (DESIGN.md scaling note).
     pub scale: f64,
+
+    /// Host worker threads for the sharded parallel engine (`--shards`).
+    /// Purely an execution knob: the logical partition (one shard per
+    /// GPU plus a hub) is fixed by the topology, so every value produces
+    /// byte-identical results — see `sim::shard`.
+    pub shards: u32,
 }
 
 impl Default for SystemConfig {
@@ -98,6 +104,7 @@ impl Default for SystemConfig {
             mshr_l2: 1024,
             tsu_entries: 1 << 16,
             scale: 1.0,
+            shards: 1,
         }
     }
 }
@@ -251,6 +258,13 @@ impl SystemConfig {
             "mshr_l2" => num!(self.mshr_l2, usize),
             "tsu_entries" => num!(self.tsu_entries, u64),
             "scale" => num!(self.scale, f64),
+            "shards" => {
+                let v: u32 = value.parse().map_err(|e| uerr(&e))?;
+                if v == 0 {
+                    return Err("shards=0: need at least one engine worker thread".into());
+                }
+                self.shards = v;
+            }
             other => return Err(format!("unknown config key '{other}'")),
         }
         Ok(())
@@ -469,6 +483,16 @@ mod tests {
     fn lease_override_requires_halcone() {
         let mut c = SystemConfig::preset("SM-WT-NC");
         assert!(c.set("rd_lease", "5").is_err());
+    }
+
+    #[test]
+    fn shards_key_requires_at_least_one_thread() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.shards, 1);
+        c.set("shards", "4").unwrap();
+        assert_eq!(c.shards, 4);
+        assert!(c.set("shards", "0").is_err());
+        assert!(c.set("shards", "x").is_err());
     }
 
     #[test]

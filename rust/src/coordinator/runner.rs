@@ -84,10 +84,15 @@ fn l2_stats_of(engine: &Engine, id: CompId) -> CacheCtrlStats {
 pub fn collect_metrics(sys: &System, host_seconds: f64) -> RunMetrics {
     let engine = &sys.engine;
     let driver = engine.downcast::<Driver>(sys.driver);
+    let pool = engine.pool_counters();
     let mut m = RunMetrics {
         cycles: driver.done_at.unwrap_or(engine.now()),
+        // Summed across the engine's logical shards, so throughput stays
+        // correct under parallel (`shards > 1`) runs.
         events: engine.events_processed(),
         host_seconds,
+        pool_fresh_boxes: pool.fresh(),
+        pool_reused_boxes: pool.reused(),
         ..Default::default()
     };
     m.finalize_host_perf();
@@ -153,6 +158,9 @@ pub fn run_built(
         topology::copy_delay(cfg, &probe)
     };
     let mut sys = topology::build_with_delay(cfg, wl, delay);
+    // Execution knob only: any thread count produces identical results
+    // (the logical partition is fixed by the topology).
+    sys.engine.set_threads(cfg.shards as usize);
 
     // Initial memory image + input snapshots for verification.
     {

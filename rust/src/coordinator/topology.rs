@@ -115,8 +115,23 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
 
     let all_banks: Vec<Vec<CompId>> = l2_ids.clone();
 
-    // ---- Engine, links.
-    let mut engine = Engine::new();
+    // ---- Engine: one logical shard per GPU plus a hub shard.
+    //
+    // GPU shard `gi` owns that GPU's CUs, L1s and L2 banks (RDMA: plus
+    // its local memory switch and HBM stacks); the hub shard owns the
+    // driver and the central fabric (SM: switch complex + every MC/TSU;
+    // RDMA: the PCIe switch). All cross-shard traffic then funnels over
+    // the inter-GPU links with a fixed minimum latency — the conservative
+    // lookahead — while the driver's linkless kernel-launch/fence hops
+    // quantize to window barriers (see `sim::shard`). The partition
+    // depends only on the configuration, so every `shards` thread count
+    // reproduces the identical event order (campaign byte-identity).
+    let hub = g as u32;
+    let lookahead = if rdma { cfg.pcie_lat + 1 } else { cfg.swc_lat + 1 };
+    let mut engine = Engine::sharded(g as u32 + 1, lookahead);
+    // A stack's shard: its owner GPU under RDMA, the hub under SM.
+    let stack_shard =
+        |s: usize| if rdma { (s / cfg.stacks_per_gpu as usize) as u32 } else { hub };
     let mem = GlobalMemory::new_shared();
     let mut pcie_links = Vec::new();
     let mut mem_links = Vec::new();
@@ -135,42 +150,49 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
     let mut mc_rx = vec![LinkId(u32::MAX); stacks];
     let mut mc_tx = vec![LinkId(u32::MAX); stacks];
 
+    // Every link is registered to the shard of its *senders* (link state
+    // mutates on each send): uplinks with the GPU shard, downlinks with
+    // the switch that drives them.
     for gi in 0..g {
+        let gs = gi as u32;
         for ci in 0..c {
             l1_tx[gi][ci] =
-                engine.add_link(Link::wire(format!("g{gi}.l1_{ci}.tx"), cfg.onchip_lat));
+                engine.add_link_to(gs, Link::wire(format!("g{gi}.l1_{ci}.tx"), cfg.onchip_lat));
         }
         for bi in 0..b {
             l2_up_tx[gi][bi] =
-                engine.add_link(Link::wire(format!("g{gi}.l2_{bi}.up"), cfg.onchip_lat));
+                engine.add_link_to(gs, Link::wire(format!("g{gi}.l2_{bi}.up"), cfg.onchip_lat));
         }
-        gpu_up[gi] = engine.add_link(Link::new(
-            format!("g{gi}.mmnet.up"),
-            cfg.swc_lat,
-            cfg.gpu_uplink_bw,
-        ));
-        gpu_down[gi] = engine.add_link(Link::new(
-            format!("g{gi}.mmnet.down"),
-            cfg.swc_lat,
-            cfg.gpu_uplink_bw,
-        ));
+        gpu_up[gi] = engine.add_link_to(
+            gs,
+            Link::new(format!("g{gi}.mmnet.up"), cfg.swc_lat, cfg.gpu_uplink_bw),
+        );
+        // SM: driven by the hub switch complex; RDMA: by the GPU-local
+        // memory switch.
+        gpu_down[gi] = engine.add_link_to(
+            if rdma { gs } else { hub },
+            Link::new(format!("g{gi}.mmnet.down"), cfg.swc_lat, cfg.gpu_uplink_bw),
+        );
         mem_links.push(gpu_up[gi]);
         mem_links.push(gpu_down[gi]);
         if rdma {
-            pcie_up[gi] =
-                engine.add_link(Link::new(format!("g{gi}.pcie.up"), cfg.pcie_lat, cfg.pcie_bw));
-            pcie_down[gi] = engine.add_link(Link::new(
-                format!("g{gi}.pcie.down"),
-                cfg.pcie_lat,
-                cfg.pcie_bw,
-            ));
+            pcie_up[gi] = engine
+                .add_link_to(gs, Link::new(format!("g{gi}.pcie.up"), cfg.pcie_lat, cfg.pcie_bw));
+            pcie_down[gi] = engine.add_link_to(
+                hub,
+                Link::new(format!("g{gi}.pcie.down"), cfg.pcie_lat, cfg.pcie_bw),
+            );
             pcie_links.push(pcie_up[gi]);
             pcie_links.push(pcie_down[gi]);
         }
     }
     for s in 0..stacks {
-        mc_rx[s] = engine.add_link(Link::new(format!("mm{s}.rx"), cfg.swc_lat, cfg.hbm_bw));
-        mc_tx[s] = engine.add_link(Link::new(format!("mm{s}.tx"), cfg.swc_lat, cfg.hbm_bw));
+        // rx is driven by the switch in front of the stack, tx by the MC;
+        // both live in the stack's shard.
+        mc_rx[s] =
+            engine.add_link_to(stack_shard(s), Link::new(format!("mm{s}.rx"), cfg.swc_lat, cfg.hbm_bw));
+        mc_tx[s] =
+            engine.add_link_to(stack_shard(s), Link::new(format!("mm{s}.tx"), cfg.swc_lat, cfg.hbm_bw));
         mem_links.push(mc_rx[s]);
         mem_links.push(mc_tx[s]);
     }
@@ -182,13 +204,16 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
     let mut caches = flat_l1s.clone();
     caches.extend(&flat_l2s);
 
-    let id = engine.add(Box::new(Driver::new(
-        "driver",
-        flat_cus.clone(),
-        caches,
-        wl.phases.len() as u32,
-        initial_delay,
-    )));
+    let id = engine.add_to(
+        hub,
+        Box::new(Driver::new(
+            "driver",
+            flat_cus.clone(),
+            caches,
+            wl.phases.len() as u32,
+            initial_delay,
+        )),
+    );
     assert_eq!(id, driver);
 
     for gi in 0..g {
@@ -199,13 +224,16 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
                 .iter_mut()
                 .map(|ph| std::mem::take(&mut ph.work[gi][ci]))
                 .collect();
-            let id = engine.add(Box::new(Cu::new(
-                format!("g{gi}.cu{ci}"),
-                l1_ids[gi][ci],
-                driver,
-                program,
-                cfg.alu_lat,
-            )));
+            let id = engine.add_to(
+                gi as u32,
+                Box::new(Cu::new(
+                    format!("g{gi}.cu{ci}"),
+                    l1_ids[gi][ci],
+                    driver,
+                    program,
+                    cfg.alu_lat,
+                )),
+            );
             assert_eq!(id, cu_ids[gi][ci]);
         }
         // L1s.
@@ -224,21 +252,21 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
             let params = CacheParams::new(cfg.l1_bytes, cfg.l1_ways);
             let name = format!("g{gi}.l1_{ci}");
             let id = match cfg.coherence {
-                Coherence::Halcone { carry_warpts, .. } => engine.add(Box::new(HalconeL1::new(
-                    name,
-                    routes,
-                    params,
-                    cfg.mshr_l1,
-                    cfg.l1_lat,
-                    carry_warpts,
-                ))),
-                _ => engine.add(Box::new(PlainL1::new(
-                    name,
-                    routes,
-                    params,
-                    cfg.mshr_l1,
-                    cfg.l1_lat,
-                ))),
+                Coherence::Halcone { carry_warpts, .. } => engine.add_to(
+                    gi as u32,
+                    Box::new(HalconeL1::new(
+                        name,
+                        routes,
+                        params,
+                        cfg.mshr_l1,
+                        cfg.l1_lat,
+                        carry_warpts,
+                    )),
+                ),
+                _ => engine.add_to(
+                    gi as u32,
+                    Box::new(PlainL1::new(name, routes, params, cfg.mshr_l1, cfg.l1_lat)),
+                ),
             };
             assert_eq!(id, l1_ids[gi][ci]);
         }
@@ -262,31 +290,40 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
             let params = CacheParams::new(cfg.l2_bank_bytes, cfg.l2_ways);
             let name = format!("g{gi}.l2_{bi}");
             let id = match cfg.coherence {
-                Coherence::Halcone { carry_warpts, .. } => engine.add(Box::new(HalconeL2::new(
-                    name,
-                    routes,
-                    params,
-                    cfg.mshr_l2,
-                    cfg.l2_lat,
-                    carry_warpts,
-                ))),
-                Coherence::None => engine.add(Box::new(PlainL2::new(
-                    name,
-                    routes,
-                    cfg.l2_policy,
-                    params,
-                    cfg.mshr_l2,
-                    cfg.l2_lat,
-                ))),
-                Coherence::Hmg => engine.add(Box::new(HmgL2::new(
-                    name,
-                    routes,
+                Coherence::Halcone { carry_warpts, .. } => engine.add_to(
                     gi as u32,
-                    bi as u32,
-                    params,
-                    cfg.mshr_l2,
-                    cfg.l2_lat,
-                ))),
+                    Box::new(HalconeL2::new(
+                        name,
+                        routes,
+                        params,
+                        cfg.mshr_l2,
+                        cfg.l2_lat,
+                        carry_warpts,
+                    )),
+                ),
+                Coherence::None => engine.add_to(
+                    gi as u32,
+                    Box::new(PlainL2::new(
+                        name,
+                        routes,
+                        cfg.l2_policy,
+                        params,
+                        cfg.mshr_l2,
+                        cfg.l2_lat,
+                    )),
+                ),
+                Coherence::Hmg => engine.add_to(
+                    gi as u32,
+                    Box::new(HmgL2::new(
+                        name,
+                        routes,
+                        gi as u32,
+                        bi as u32,
+                        params,
+                        cfg.mshr_l2,
+                        cfg.l2_lat,
+                    )),
+                ),
             };
             assert_eq!(id, l2_ids[gi][bi]);
         }
@@ -304,7 +341,7 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
             for bi in 0..b {
                 lsw.add_route(l2_ids[gi][bi], (gpu_down[gi], l2_ids[gi][bi]));
             }
-            let id = engine.add(Box::new(lsw));
+            let id = engine.add_to(gi as u32, Box::new(lsw));
             assert_eq!(id, lsw_ids[gi]);
         }
         let mut p = Switch::new("pcie_sw");
@@ -316,7 +353,7 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
                 p.add_route(l1_ids[gi][ci], (pcie_down[gi], l1_ids[gi][ci]));
             }
         }
-        let id = engine.add(Box::new(p));
+        let id = engine.add_to(hub, Box::new(p));
         assert_eq!(id, psw);
     } else {
         let mut s = Switch::new("switch_complex");
@@ -328,7 +365,7 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
                 s.add_route(l2_ids[gi][bi], (gpu_down[gi], l2_ids[gi][bi]));
             }
         }
-        let id = engine.add(Box::new(s));
+        let id = engine.add_to(hub, Box::new(s));
         assert_eq!(id, swc);
     }
 
@@ -344,13 +381,10 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
             Coherence::Halcone { leases, .. } => Some(Tsu::new(cfg.tsu_entries, leases)),
             _ => None,
         };
-        let id = engine.add(Box::new(MemCtrl::new(
-            format!("mm{si}"),
-            mem.clone(),
-            up,
-            cfg.mc_lat,
-            tsu,
-        )));
+        let id = engine.add_to(
+            stack_shard(si),
+            Box::new(MemCtrl::new(format!("mm{si}"), mem.clone(), up, cfg.mc_lat, tsu)),
+        );
         assert_eq!(id, mc);
     }
 
@@ -400,6 +434,15 @@ mod tests {
             assert_eq!(sys.l1s.len(), 4);
             assert_eq!(sys.l2s.len(), 4);
             assert_eq!(sys.mcs.len(), 4);
+        }
+    }
+
+    #[test]
+    fn partition_is_per_gpu_plus_hub() {
+        for preset in SystemConfig::PRESETS {
+            let cfg = small_cfg(preset);
+            let sys = build(&cfg, wl(&cfg, "rl"));
+            assert_eq!(sys.engine.n_shards(), cfg.n_gpus + 1, "{preset}");
         }
     }
 

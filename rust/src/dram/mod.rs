@@ -5,4 +5,4 @@ pub mod memctrl;
 pub mod storage;
 
 pub use memctrl::MemCtrl;
-pub use storage::{GlobalMemory, SharedMemory};
+pub use storage::{GlobalMemory, SharedCell, SharedMemory};

@@ -12,11 +12,15 @@
 //! inline [`LineBuf`] instead of cloning a heap box per access.
 //!
 //! The store is shared between MC components and the coordinator via
-//! `Rc<RefCell<_>>` ([`SharedMemory`]); the engine is single-threaded by
-//! design, so this is safe and cheap.
+//! `Arc<SharedCell>` ([`SharedMemory`]). Under the sharded engine
+//! (`sim::shard`) memory controllers on different shards may access the
+//! store concurrently; accesses are short (one line copy) and — in the
+//! RDMA topologies, the only ones that place MCs outside the hub shard —
+//! touch disjoint per-GPU address partitions, so a plain mutex is both
+//! correct and cheap, and the access counters stay deterministic (only
+//! commutative increments race).
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::mem::fxhash::FxHashMap;
 use crate::mem::linebuf::LineBuf;
@@ -31,8 +35,26 @@ pub struct GlobalMemory {
     pub writes: u64,
 }
 
+/// Lock wrapper keeping the historical `RefCell`-style `borrow_mut()`
+/// call sites intact while making the store shareable across the
+/// engine's worker threads.
+#[derive(Debug, Default)]
+pub struct SharedCell {
+    inner: Mutex<GlobalMemory>,
+}
+
+impl SharedCell {
+    /// Exclusive access to the store (a mutex lock; the name mirrors the
+    /// pre-sharding `RefCell` API). Poisoning is ignored: a panicking
+    /// simulation cell is reported by the engine, and the store's
+    /// line-granular state stays consistent (no multi-line invariants).
+    pub fn borrow_mut(&self) -> MutexGuard<'_, GlobalMemory> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
 /// Shared handle used by memory controllers and the coordinator.
-pub type SharedMemory = Rc<RefCell<GlobalMemory>>;
+pub type SharedMemory = Arc<SharedCell>;
 
 impl GlobalMemory {
     pub fn new() -> Self {
@@ -40,7 +62,7 @@ impl GlobalMemory {
     }
 
     pub fn new_shared() -> SharedMemory {
-        Rc::new(RefCell::new(Self::new()))
+        Arc::new(SharedCell { inner: Mutex::new(Self::new()) })
     }
 
     fn line_base(addr: u64) -> u64 {

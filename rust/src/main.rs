@@ -42,6 +42,8 @@ fn usage() -> ! {
            --preset P        one of {presets:?}\n\
            --config FILE     key=value config file (preset= line allowed)\n\
            --set key=value   override any config key (repeatable)\n\
+           --shards N        engine worker threads per simulation (parallel\n\
+                             sharded engine; any N gives identical results)\n\
            --artifacts DIR   AOT artifact directory (default: artifacts)\n\
          \n\
          sweep/gate options:\n\
@@ -70,6 +72,7 @@ struct Args {
     campaign: Option<String>,
     spec_file: Option<String>,
     jobs: Option<usize>,
+    shards: Option<usize>,
     out: Option<String>,
     baseline: Option<String>,
     current: Option<String>,
@@ -90,6 +93,7 @@ fn parse_args() -> Args {
         campaign: None,
         spec_file: None,
         jobs: None,
+        shards: None,
         out: None,
         baseline: None,
         current: None,
@@ -122,6 +126,20 @@ fn parse_args() -> Args {
                     }
                     Err(e) => {
                         eprintln!("--jobs {v}: {e}");
+                        usage()
+                    }
+                }
+            }
+            "--shards" => {
+                let v = val("--shards");
+                match v.parse::<usize>() {
+                    Ok(n) if n >= 1 => a.shards = Some(n),
+                    Ok(_) => {
+                        eprintln!("--shards must be at least 1");
+                        usage()
+                    }
+                    Err(e) => {
+                        eprintln!("--shards {v}: {e}");
                         usage()
                     }
                 }
@@ -187,6 +205,9 @@ fn build_config(a: &Args) -> SystemConfig {
             eprintln!("--set {k}={v}: {e}");
             std::process::exit(2);
         }
+    }
+    if let Some(s) = a.shards {
+        cfg.shards = s as u32;
     }
     cfg
 }
@@ -325,9 +346,14 @@ fn load_spec(a: &Args, fallback: Option<CampaignSpec>) -> Result<CampaignSpec, S
 fn sweep_to_json(
     spec: &CampaignSpec,
     jobs: Option<usize>,
+    shards: Option<usize>,
     out: Option<&str>,
 ) -> Result<(String, bool), String> {
-    let opts = ExecOptions { jobs: jobs.unwrap_or_else(exec::default_jobs), progress: true };
+    let opts = ExecOptions {
+        jobs: jobs.unwrap_or_else(exec::default_jobs),
+        progress: true,
+        shards,
+    };
     // run_campaign expands + validates the grid itself; the count here
     // is arithmetic so the grid is not built twice.
     let total = spec.config_labels().len() * spec.workloads.len();
@@ -352,7 +378,7 @@ fn cmd_sweep(a: &Args) -> ExitCode {
     };
     // Default artifact path (gate reads it back later).
     let out = a.out.clone().unwrap_or_else(|| "campaign.json".into());
-    match sweep_to_json(&spec, a.jobs, Some(&out)) {
+    match sweep_to_json(&spec, a.jobs, a.shards, Some(&out)) {
         Ok((_, all_passed)) => {
             if all_passed {
                 ExitCode::SUCCESS
@@ -378,10 +404,11 @@ fn cmd_gate(a: &Args) -> ExitCode {
             || a.spec_file.is_some()
             || !a.sets.is_empty()
             || a.jobs.is_some()
+            || a.shards.is_some()
             || a.out.is_some())
     {
         eprintln!(
-            "gate: --current conflicts with --campaign/--spec/--set/--jobs/--out \
+            "gate: --current conflicts with --campaign/--spec/--set/--jobs/--shards/--out \
              (nothing is re-run in --current mode)"
         );
         return ExitCode::FAILURE;
@@ -415,7 +442,7 @@ fn cmd_gate(a: &Args) -> ExitCode {
                 return ExitCode::FAILURE;
             }
         };
-        match sweep_to_json(&spec, a.jobs, a.out.as_deref()) {
+        match sweep_to_json(&spec, a.jobs, a.shards, a.out.as_deref()) {
             Ok((text, _)) => text,
             Err(e) => {
                 eprintln!("gate: {e}");

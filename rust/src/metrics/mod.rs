@@ -79,6 +79,13 @@ pub struct RunMetrics {
     /// artifacts, recorded in full ones so the perf trajectory
     /// accumulates (docs/PERF.md).
     pub events_per_sec: f64,
+    /// Message boxes taken from the allocator / served from the free
+    /// lists, summed over the engine's logical shards (simulator perf:
+    /// the zero-alloc discipline of docs/PERF.md). Deterministic, but
+    /// engine-internal — kept out of the canonical artifact with the
+    /// other host-perf fields.
+    pub pool_fresh_boxes: u64,
+    pub pool_reused_boxes: u64,
     /// CU-issued loads / stores (per-op throughput denominators for
     /// campaign artifacts).
     pub cu_loads: u64,

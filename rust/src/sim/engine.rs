@@ -1,9 +1,18 @@
 //! The event loop: components, scheduling context, and the engine itself.
+//!
+//! The engine is a set of *logical shards* (see [`crate::sim::shard`]):
+//! `Engine::new()` builds the classic single-shard engine with the exact
+//! historical semantics; [`Engine::sharded`] partitions the component
+//! graph so independent partitions can execute on worker threads
+//! ([`Engine::set_threads`]) under conservative time-window
+//! synchronization, with results bit-identical to single-threaded
+//! execution of the same partition.
 
 use crate::sim::link::{Link, LinkId};
 use crate::sim::msg::{Event, MemReq, MemRsp, Msg};
-use crate::sim::pool::MsgPool;
+use crate::sim::pool::{MsgPool, PoolCounters};
 use crate::sim::queue::EventQueue;
+use crate::sim::shard::{self, Loc, Shard, Tables};
 use crate::sim::Cycle;
 
 /// Index of a component registered with the [`Engine`].
@@ -20,7 +29,11 @@ impl CompId {
 /// [`Ctx`]: either scheduling a future event on themselves/others
 /// (`ctx.schedule`) or sending through a bandwidth-modelled link
 /// (`ctx.send`).
-pub trait Component {
+///
+/// `Send` is a supertrait: a component may be executed by whichever
+/// worker thread owns its shard for the current window (never by two
+/// threads at once — shards are exclusive).
+pub trait Component: Send {
     /// Stable diagnostic name ("gpu0.cu3.l1", "mm2", ...).
     fn name(&self) -> &str;
 
@@ -47,16 +60,23 @@ macro_rules! impl_component_any {
 
 /// Scheduling context handed to [`Component::handle`].
 ///
-/// Borrow discipline: while a component runs, the engine lends out the
+/// Borrow discipline: while a component runs, its shard lends out the
 /// event queue, message pool and link table (never other components), so
 /// a component can freely mutate itself and schedule traffic without
-/// aliasing.
+/// aliasing. Traffic aimed at another shard is parked in the shard's
+/// outbox and routed at the next window barrier.
 pub struct Ctx<'a> {
-    now: Cycle,
-    seq: &'a mut u64,
-    queue: &'a mut EventQueue,
-    pool: &'a mut MsgPool,
-    links: &'a mut [Link],
+    pub(crate) now: Cycle,
+    /// Shard executing this handler.
+    pub(crate) shard: u32,
+    /// First cycle of the next window (`Cycle::MAX` single-shard).
+    pub(crate) window_end: Cycle,
+    pub(crate) seq: &'a mut u64,
+    pub(crate) queue: &'a mut EventQueue,
+    pub(crate) pool: &'a mut MsgPool,
+    pub(crate) links: &'a mut Vec<Link>,
+    pub(crate) outbox: &'a mut Vec<shard::OutEvent>,
+    pub(crate) tables: &'a Tables,
     /// Id of the component currently executing.
     pub self_id: CompId,
 }
@@ -67,20 +87,55 @@ impl Ctx<'_> {
         self.now
     }
 
+    fn next_seq(&mut self) -> u64 {
+        let s = *self.seq;
+        *self.seq += 1;
+        s
+    }
+
+    /// Queue an event locally or park it for the barrier router.
+    /// `via_link` deliveries must clear the conservative window — a
+    /// violation means the partition's lookahead exceeds a cross-shard
+    /// link's minimum delivery delta, which would corrupt event order
+    /// silently, so it is a hard error even in release builds.
+    fn push_at(&mut self, time: Cycle, target: CompId, msg: Msg, via_link: bool) {
+        let seq = self.next_seq();
+        let loc = self.tables.comp_loc[target.0 as usize];
+        if loc.shard == self.shard {
+            self.queue.push(Event { time, seq, target, msg });
+            return;
+        }
+        let time = if via_link {
+            assert!(
+                time >= self.window_end,
+                "cross-shard link delivery at {time} inside the window ending {} \
+                 (lookahead larger than the link's latency + 1 — partition bug)",
+                self.window_end
+            );
+            time
+        } else {
+            // Linkless control hop (driver dispatch, fence chatter,
+            // directory acks): deliver at its natural time or the next
+            // window barrier, whichever is later. The receiving shard
+            // has not dispatched anything at or beyond `window_end`, so
+            // this is conservative; the quantization is a deterministic
+            // function of the window sequence (see sim/shard.rs docs).
+            time.max(self.window_end)
+        };
+        self.outbox.push(shard::OutEvent { dst: loc.shard, ev: Event { time, seq, target, msg } });
+    }
+
     /// Deliver `msg` to `target` after `delay` cycles (no link modelled).
     pub fn schedule(&mut self, delay: Cycle, target: CompId, msg: Msg) {
-        let seq = *self.seq;
-        *self.seq += 1;
-        self.queue.push(Event { time: self.now + delay, seq, target, msg });
+        self.push_at(self.now + delay, target, msg, false);
     }
 
     /// Send `msg` of `bytes` to `target` through `link`; delivery time is
     /// determined by the link's serialization + latency model.
     pub fn send(&mut self, link: LinkId, target: CompId, bytes: u64, msg: Msg) {
-        let deliver = self.links[link.0 as usize].accept(self.now, bytes);
-        let seq = *self.seq;
-        *self.seq += 1;
-        self.queue.push(Event { time: deliver, seq, target, msg });
+        let now = self.now;
+        let deliver = self.link_mut(link).accept(now, bytes);
+        self.push_at(deliver, target, msg, true);
     }
 
     /// Like [`Ctx::send`], but the message enters the link only after
@@ -94,10 +149,9 @@ impl Ctx<'_> {
         bytes: u64,
         msg: Msg,
     ) {
-        let deliver = self.links[link.0 as usize].accept(self.now + delay, bytes);
-        let seq = *self.seq;
-        *self.seq += 1;
-        self.queue.push(Event { time: deliver, seq, target, msg });
+        let at = self.now + delay;
+        let deliver = self.link_mut(link).accept(at, bytes);
+        self.push_at(deliver, target, msg, true);
     }
 
     /// Box `req` as a [`Msg::Req`], recycling a pooled box when one is
@@ -122,21 +176,39 @@ impl Ctx<'_> {
         self.pool.reclaim_rsp(b)
     }
 
-    /// Inspect a link (e.g. for backpressure decisions).
+    fn local_link(&self, link: LinkId) -> usize {
+        let loc = self.tables.link_loc[link.0 as usize];
+        assert_eq!(
+            loc.shard, self.shard,
+            "link {:?} is owned by shard {}, used from shard {} (partition bug: \
+             every sender on a link must live in the link's shard)",
+            link, loc.shard, self.shard
+        );
+        loc.idx as usize
+    }
+
+    fn link_mut(&mut self, link: LinkId) -> &mut Link {
+        let idx = self.local_link(link);
+        &mut self.links[idx]
+    }
+
+    /// Inspect a link (e.g. for backpressure decisions). Only links of
+    /// the executing component's shard are visible.
     pub fn link(&self, link: LinkId) -> &Link {
-        &self.links[link.0 as usize]
+        &self.links[self.local_link(link)]
     }
 }
 
-/// The discrete-event engine: owns components, links and the event queue.
+/// The discrete-event engine: owns the logical shards, their components,
+/// links and event queues, plus the global id -> shard routing tables.
 pub struct Engine {
-    comps: Vec<Option<Box<dyn Component>>>,
-    links: Vec<Link>,
-    queue: EventQueue,
-    pool: MsgPool,
-    seq: u64,
+    shards: Vec<Shard>,
+    tables: Tables,
+    /// Conservative window span; `min cross-shard link latency + 1`.
+    lookahead: Cycle,
+    /// Worker threads executing the shards (1 = serial).
+    threads: usize,
     now: Cycle,
-    events_processed: u64,
 }
 
 impl Default for Engine {
@@ -146,74 +218,105 @@ impl Default for Engine {
 }
 
 impl Engine {
+    /// A classic single-shard engine (tests, micro-benches, tools).
     pub fn new() -> Self {
+        Self::sharded(1, 1)
+    }
+
+    /// An engine partitioned into `n_shards` logical shards advancing in
+    /// conservative windows of `lookahead` cycles. `lookahead` must not
+    /// exceed `min(latency) + 1` over the cross-shard links (each send is
+    /// checked at runtime). The partition defines event order, so it must
+    /// depend only on the simulated configuration — never on the host.
+    pub fn sharded(n_shards: u32, lookahead: Cycle) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        assert!(lookahead >= 1, "lookahead must be at least one cycle");
         Engine {
-            comps: Vec::new(),
-            links: Vec::new(),
-            queue: EventQueue::new(),
-            pool: MsgPool::new(),
-            seq: 0,
+            shards: (0..n_shards).map(Shard::new).collect(),
+            tables: Tables::default(),
+            lookahead,
+            threads: 1,
             now: 0,
-            events_processed: 0,
         }
     }
 
-    /// Register a component; returns its id.
+    /// Number of logical shards.
+    pub fn n_shards(&self) -> u32 {
+        self.shards.len() as u32
+    }
+
+    /// Worker threads used by [`Engine::run`] (clamped to the shard
+    /// count at run time). Thread count never changes results.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// Register a component in shard 0; returns its id.
     pub fn add(&mut self, c: Box<dyn Component>) -> CompId {
-        let id = CompId(self.comps.len() as u32);
-        self.comps.push(Some(c));
+        self.add_to(0, c)
+    }
+
+    /// Register a component in `shard`; ids are global and assigned in
+    /// registration order regardless of the shard.
+    pub fn add_to(&mut self, shard: u32, c: Box<dyn Component>) -> CompId {
+        let s = &mut self.shards[shard as usize];
+        let loc = Loc { shard, idx: s.comps.len() as u32 };
+        s.comps.push(Some(c));
+        let id = CompId(self.tables.comp_loc.len() as u32);
+        self.tables.comp_loc.push(loc);
         id
     }
 
-    /// Register a link; returns its id.
+    /// Register a link in shard 0; returns its id.
     pub fn add_link(&mut self, l: Link) -> LinkId {
-        let id = LinkId(self.links.len() as u32);
-        self.links.push(l);
+        self.add_link_to(0, l)
+    }
+
+    /// Register a link owned by `shard`. A link belongs to the shard of
+    /// its *senders* (its state mutates on every `Ctx::send`), which is
+    /// asserted on use.
+    pub fn add_link_to(&mut self, shard: u32, l: Link) -> LinkId {
+        let s = &mut self.shards[shard as usize];
+        let loc = Loc { shard, idx: s.links.len() as u32 };
+        s.links.push(l);
+        let id = LinkId(self.tables.link_loc.len() as u32);
+        self.tables.link_loc.push(loc);
         id
     }
 
     /// Schedule an initial event from outside any component.
     pub fn post(&mut self, time: Cycle, target: CompId, msg: Msg) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.queue.push(Event { time, seq, target, msg });
+        let loc = self.tables.comp_loc[target.0 as usize];
+        let s = &mut self.shards[loc.shard as usize];
+        let seq = s.next_seq();
+        s.queue.push(Event { time, seq, target, msg });
     }
 
-    /// Run until the queue drains or `limit` cycles elapse.
+    /// Run until the queues drain or `limit` cycles elapse.
     ///
     /// Returns the final simulation time. Panics if an event targets an
     /// unknown component (a wiring bug, not a runtime condition).
     pub fn run(&mut self, limit: Cycle) -> Cycle {
-        // Peek before popping: pausing at `limit` must leave the queue
-        // untouched so pause/resume cycles do no queue churn.
-        while let Some(t) = self.queue.next_time() {
-            if t > limit {
-                self.now = limit;
-                return self.now;
-            }
-            let ev = self.queue.pop().expect("peeked event vanished");
-            debug_assert!(ev.time >= self.now, "time went backwards");
-            self.now = ev.time;
-            self.events_processed += 1;
-            let idx = ev.target.0 as usize;
-            let mut comp = self.comps[idx]
-                .take()
-                .unwrap_or_else(|| panic!("event for unregistered component {idx}"));
-            let mut ctx = Ctx {
-                now: self.now,
-                seq: &mut self.seq,
-                queue: &mut self.queue,
-                pool: &mut self.pool,
-                links: &mut self.links,
-                self_id: ev.target,
-            };
-            comp.handle(self.now, ev.msg, &mut ctx);
-            self.comps[idx] = Some(comp);
+        if self.shards.len() == 1 {
+            // Single shard: the historical tight loop — no windows, no
+            // barriers, nothing can cross.
+            self.shards[0].run_window(limit, Cycle::MAX, &self.tables);
+            let s = &self.shards[0];
+            self.now = if s.queue.is_empty() { self.now.max(s.now) } else { limit };
+            return self.now;
         }
+        let shards = std::mem::take(&mut self.shards);
+        let (shards, done) =
+            shard::run_windows(shards, &self.tables, self.lookahead, self.threads, limit);
+        self.shards = shards;
+        self.now = match done {
+            None => limit,
+            Some(t) => self.now.max(t),
+        };
         self.now
     }
 
-    /// Run until the queue is fully drained (no cycle limit).
+    /// Run until the queues are fully drained (no cycle limit).
     pub fn run_to_completion(&mut self) -> Cycle {
         self.run(Cycle::MAX)
     }
@@ -223,30 +326,48 @@ impl Engine {
         self.now
     }
 
-    /// Total events dispatched so far (perf metric).
+    /// Total events dispatched across all shards (perf metric).
     pub fn events_processed(&self) -> u64 {
-        self.events_processed
+        self.shards.iter().map(|s| s.events_processed).sum()
     }
 
-    /// Whether any events remain queued.
+    /// Whether any events remain queued (in any shard or outbox).
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty()
+        self.shards.iter().all(|s| s.queue.is_empty() && s.outbox.is_empty())
     }
 
-    /// Message-pool counters (perf diagnostics / allocation tests).
+    /// Shard-0 message pool (single-shard diagnostics/tests). For the
+    /// aggregate across shards use [`Engine::pool_counters`].
     pub fn pool(&self) -> &MsgPool {
-        &self.pool
+        &self.shards[0].pool
+    }
+
+    /// Message-pool counters summed over every shard's pool.
+    pub fn pool_counters(&self) -> PoolCounters {
+        let mut c = PoolCounters::default();
+        for s in &self.shards {
+            c.add(&s.pool);
+        }
+        c
+    }
+
+    fn comp_slot(&self, id: CompId) -> &Option<Box<dyn Component>> {
+        let loc = self.tables.comp_loc[id.0 as usize];
+        &self.shards[loc.shard as usize].comps[loc.idx as usize]
     }
 
     /// Immutable access to a component (downcast by the caller).
     pub fn component(&self, id: CompId) -> &dyn Component {
-        self.comps[id.0 as usize].as_deref().expect("component checked out")
+        self.comp_slot(id).as_deref().expect("component checked out")
     }
 
     /// Mutable access to a component (setup / result extraction only —
     /// never call from inside `handle`).
     pub fn component_mut(&mut self, id: CompId) -> &mut Box<dyn Component> {
-        self.comps[id.0 as usize].as_mut().expect("component checked out")
+        let loc = self.tables.comp_loc[id.0 as usize];
+        self.shards[loc.shard as usize].comps[loc.idx as usize]
+            .as_mut()
+            .expect("component checked out")
     }
 
     /// Typed access to a component (panics on type mismatch — a test or
@@ -268,12 +389,8 @@ impl Engine {
 
     /// Immutable access to a link's counters.
     pub fn link(&self, id: LinkId) -> &Link {
-        &self.links[id.0 as usize]
-    }
-
-    /// All links (metrics aggregation).
-    pub fn links(&self) -> &[Link] {
-        &self.links
+        let loc = self.tables.link_loc[id.0 as usize];
+        &self.shards[loc.shard as usize].links[loc.idx as usize]
     }
 }
 
@@ -373,6 +490,88 @@ mod tests {
         assert_eq!(build_and_run(), build_and_run());
     }
 
+    /// The same ping-pong wiring split across two shards (link latency
+    /// 10 supports lookahead up to 11) must reproduce the single-shard
+    /// timing exactly: all traffic is link-modelled, so the conservative
+    /// windows are invisible.
+    fn sharded_ping_pong(threads: usize) -> (Cycle, u64, u32, u32) {
+        let mut e = Engine::sharded(2, 11);
+        let l_ab = e.add_link_to(0, Link::new("a->b", 10, 64));
+        let l_ba = e.add_link_to(1, Link::new("b->a", 10, 64));
+        let a_id = CompId(0);
+        let b_id = CompId(1);
+        e.add_to(0, pinger("a", b_id, l_ab, 3));
+        e.add_to(1, pinger("b", a_id, l_ba, 3));
+        e.set_threads(threads);
+        e.post(0, a_id, Msg::Tick);
+        let end = e.run_to_completion();
+        let a = e.downcast::<Pinger>(a_id);
+        let b = e.downcast::<Pinger>(b_id);
+        (end, e.events_processed(), a.received, b.received)
+    }
+
+    #[test]
+    fn cross_shard_link_traffic_matches_single_shard_timing() {
+        for threads in [1, 2, 4] {
+            assert_eq!(sharded_ping_pong(threads), (66, 7, 4, 3), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cross_shard_control_message_quantizes_to_window_barrier() {
+        /// Schedules a zero-delay hop to a peer in another shard.
+        struct Teleporter {
+            name: String,
+            peer: CompId,
+            fire: bool,
+            pub got_at: Option<Cycle>,
+        }
+        impl Component for Teleporter {
+            crate::impl_component_any!();
+            fn name(&self) -> &str {
+                &self.name
+            }
+            fn handle(&mut self, now: Cycle, _msg: Msg, ctx: &mut Ctx) {
+                self.got_at = Some(now);
+                if self.fire {
+                    self.fire = false;
+                    let peer = self.peer;
+                    ctx.schedule(0, peer, Msg::Tick);
+                }
+            }
+        }
+        let run = |threads: usize| {
+            let mut e = Engine::sharded(2, 8);
+            let a = CompId(0);
+            let b = CompId(1);
+            e.add_to(0, Box::new(Teleporter { name: "a".into(), peer: b, fire: true, got_at: None }));
+            e.add_to(1, Box::new(Teleporter { name: "b".into(), peer: a, fire: false, got_at: None }));
+            e.set_threads(threads);
+            e.post(3, a, Msg::Tick);
+            e.run_to_completion();
+            (e.downcast::<Teleporter>(a).got_at, e.downcast::<Teleporter>(b).got_at)
+        };
+        // The window opens at T=3 and spans 8 cycles; the zero-delay
+        // cross-shard hop lands at the barrier, cycle 11.
+        for threads in [1, 2] {
+            assert_eq!(run(threads), (Some(3), Some(11)), "threads={threads}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cross-shard link delivery")]
+    fn lookahead_wider_than_a_cross_link_is_rejected() {
+        // Link latency 2 (delivery delta 3) under lookahead 10: the
+        // first cross-shard send must trip the conservative-window check.
+        let mut e = Engine::sharded(2, 10);
+        let l = e.add_link_to(0, Link::new("bad", 2, 64));
+        let b = CompId(1);
+        e.add_to(0, pinger("a", b, l, 1));
+        e.add_to(1, pinger("b", CompId(0), l, 0));
+        e.post(0, CompId(0), Msg::Tick);
+        e.run_to_completion();
+    }
+
     /// Requester/responder pair exercising the pooled Req/Rsp path.
     struct Requester {
         name: String,
@@ -446,5 +645,26 @@ mod tests {
         assert_eq!(p.fresh_rsps, 1, "rsp boxes must recycle: {}", p.fresh_rsps);
         assert_eq!(p.reused_reqs, 999);
         assert_eq!(p.reused_rsps, 999);
+    }
+
+    #[test]
+    fn pool_counters_aggregate_across_shards() {
+        // Requester/responder in different shards: boxes are pooled at
+        // the sender and reclaimed at the receiver, and the barrier
+        // rebalancer walks them back — after a short warm-up every
+        // transaction reuses boxes instead of allocating.
+        let mut e = Engine::sharded(2, 1);
+        let req_id = CompId(0);
+        let rsp_id = CompId(1);
+        e.add_to(0, Box::new(Requester { name: "rq".into(), responder: rsp_id, remaining: 10 }));
+        e.add_to(1, Box::new(Responder { name: "rs".into() }));
+        e.post(0, req_id, Msg::Tick);
+        e.run_to_completion();
+        let c = e.pool_counters();
+        // 10 requests + 10 responses were boxed in total.
+        assert_eq!(c.fresh() + c.reused(), 20);
+        assert!(c.fresh() <= 4, "cross-shard boxes must recycle: {c:?}");
+        assert!(c.reused() >= 16, "cross-shard boxes must recycle: {c:?}");
+        assert_eq!(e.events_processed(), 21);
     }
 }

@@ -1,30 +1,41 @@
 //! Deterministic discrete-event simulation engine.
 //!
 //! This is the substrate replacing MGPUSim's Akita engine (DESIGN.md S1/S2):
-//! a single-threaded, fully deterministic event loop over *components*
-//! (caches, memory controllers, CUs, switches) connected by
-//! bandwidth-modelled *links*.
+//! a fully deterministic event loop over *components* (caches, memory
+//! controllers, CUs, switches) connected by bandwidth-modelled *links*.
 //!
-//! Determinism contract: events fire in `(time, sequence)` order, where the
-//! sequence number is assigned at scheduling time. Two runs of the same
-//! configuration produce identical event interleavings, cycle counts and
-//! memory images — a requirement for the paper's relative-timing
-//! experiments and for reproducible CI. The scheduler behind the contract
-//! is a bucketed calendar queue ([`queue`]) with O(1) amortized dispatch;
-//! message boxes recycle through a free-list pool ([`pool`]) so the event
-//! hot loop performs no allocation.
+//! The component graph is partitioned into *logical shards* ([`shard`];
+//! the coordinator uses one per GPU plus a hub) that advance in
+//! conservative lock-step time windows sized by the minimum cross-shard
+//! link latency, so independent partitions can execute on worker threads
+//! ([`Engine::set_threads`]). A single-shard engine ([`Engine::new`]) is
+//! the classic sequential event loop.
+//!
+//! Determinism contract: events fire in `(time, src_shard, seq)` order,
+//! encoded in a single sequence number assigned at scheduling time
+//! (`seq = shard << SEQ_SHARD_BITS | counter`). The partition is a
+//! function of the simulated configuration — never of the thread count —
+//! so any `--shards` level produces identical event interleavings, cycle
+//! counts and memory images: a requirement for the paper's
+//! relative-timing experiments and for reproducible CI. The scheduler
+//! behind the contract is a bucketed calendar queue ([`queue`]) with O(1)
+//! amortized dispatch; message boxes recycle through per-shard free-list
+//! pools ([`pool`], rebalanced at window barriers) so the event hot loop
+//! performs no allocation.
 
 pub mod engine;
 pub mod link;
 pub mod msg;
 pub mod pool;
 pub mod queue;
+pub mod shard;
 
 pub use engine::{CompId, Component, Ctx, Engine};
 pub use link::{Link, LinkId};
 pub use msg::{MemReq, MemRsp, Msg, ReqId, ReqKind, TsPair};
-pub use pool::MsgPool;
+pub use pool::{MsgPool, PoolCounters};
 pub use queue::EventQueue;
+pub use shard::SEQ_SHARD_BITS;
 
 /// Simulation time in core clock cycles (1 GHz in the paper's Table 2).
 pub type Cycle = u64;

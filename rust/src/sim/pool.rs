@@ -2,8 +2,10 @@
 //!
 //! `Msg::Req`/`Msg::Rsp` stay boxed so `Msg` remains pointer-sized in the
 //! scheduler (see `sim/msg.rs`), but the boxes themselves are recycled
-//! through this engine-owned pool instead of hitting the allocator twice
-//! per transaction. Combined with the inline [`LineBuf`] payloads
+//! through per-shard pools instead of hitting the allocator twice per
+//! transaction; the window planner evens the pools out at each barrier
+//! so boxes reclaimed on another shard flow back to their senders
+//! (`sim/shard.rs`). Combined with the inline [`LineBuf`] payloads
 //! (`mem/linebuf.rs`), a steady-state run performs no allocation in the
 //! event hot loop (asserted by `tests/alloc_discipline.rs`).
 //!
@@ -100,6 +102,73 @@ impl MsgPool {
     /// Free boxes currently pooled (tests/diagnostics).
     pub fn idle(&self) -> (usize, usize) {
         (self.reqs.len(), self.rsps.len())
+    }
+
+    // ---- Barrier rebalancing (sharded engine).
+    //
+    // Cross-shard transactions box a message in the sender's pool and
+    // reclaim it into the receiver's: request boxes drift toward
+    // responders, response boxes toward requesters. The window planner
+    // moves idle boxes back between pools at each barrier
+    // (`sim::shard`), keeping the steady state allocation-free. The
+    // raw box moves below bypass the fresh/reused counters — they are
+    // transfers, not (re)uses.
+
+    pub(crate) fn idle_reqs(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub(crate) fn idle_rsps(&self) -> usize {
+        self.rsps.len()
+    }
+
+    pub(crate) fn pop_req_box(&mut self) -> Option<Box<MemReq>> {
+        self.reqs.pop()
+    }
+
+    pub(crate) fn pop_rsp_box(&mut self) -> Option<Box<MemRsp>> {
+        self.rsps.pop()
+    }
+
+    pub(crate) fn push_req_box(&mut self, b: Box<MemReq>) {
+        if self.reqs.len() < POOL_CAP {
+            self.reqs.push(b);
+        }
+    }
+
+    pub(crate) fn push_rsp_box(&mut self, b: Box<MemRsp>) {
+        if self.rsps.len() < POOL_CAP {
+            self.rsps.push(b);
+        }
+    }
+}
+
+/// Pool counters summed across the engine's shards
+/// ([`crate::sim::Engine::pool_counters`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    pub fresh_reqs: u64,
+    pub fresh_rsps: u64,
+    pub reused_reqs: u64,
+    pub reused_rsps: u64,
+}
+
+impl PoolCounters {
+    pub fn add(&mut self, p: &MsgPool) {
+        self.fresh_reqs += p.fresh_reqs;
+        self.fresh_rsps += p.fresh_rsps;
+        self.reused_reqs += p.reused_reqs;
+        self.reused_rsps += p.reused_rsps;
+    }
+
+    /// Boxes taken from the allocator (both kinds).
+    pub fn fresh(&self) -> u64 {
+        self.fresh_reqs + self.fresh_rsps
+    }
+
+    /// Boxes served from a free list (both kinds).
+    pub fn reused(&self) -> u64 {
+        self.reused_reqs + self.reused_rsps
     }
 }
 

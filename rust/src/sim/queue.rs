@@ -18,11 +18,14 @@
 //!
 //! Pops occur in exactly the `(time, seq)` order of [`Event::cmp`] — the
 //! same order the reference `BinaryHeap` produced (property-tested in
-//! `tests/unit_properties.rs`). The argument: sequence numbers are
-//! assigned monotonically at push time, so within one bucket, events
-//! migrated from the overflow heap (already `(time, seq)`-sorted, and all
-//! pushed before the window reached their cycle) precede direct pushes
-//! (all pushed after), and each group is FIFO — hence seq-sorted.
+//! `tests/unit_properties.rs`). Each per-cycle bucket is kept seq-sorted
+//! on insert: a push appends when its seq exceeds the bucket tail (the
+//! overwhelmingly common case — a shard assigns its sequence numbers
+//! monotonically, so local pushes and overflow migrations arrive in seq
+//! order) and otherwise binary-searches its slot. The out-of-order path
+//! exists for the sharded engine (`sim/shard.rs`): events merged in at a
+//! window barrier carry their *origin* shard's seq tag, which can order
+//! before same-cycle events already queued locally.
 
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -75,16 +78,33 @@ impl EventQueue {
         (time & (RING as u64 - 1)) as usize
     }
 
+    /// Place an in-window event into its per-cycle bucket, keeping the
+    /// bucket seq-sorted. Append is the fast path; the sorted insert
+    /// only triggers for cross-shard barrier deliveries whose origin
+    /// shard tag orders before already-queued same-cycle events.
+    #[inline]
+    fn ring_insert(&mut self, ev: Event) {
+        self.ring_len += 1;
+        let b = &mut self.buckets[Self::bucket_of(ev.time)];
+        match b.back() {
+            Some(last) if last.seq > ev.seq => {
+                let pos = b.partition_point(|e| e.seq < ev.seq);
+                b.insert(pos, ev);
+            }
+            _ => b.push_back(ev),
+        }
+    }
+
     /// Enqueue; O(1) for the in-window common case.
     #[inline]
     pub fn push(&mut self, ev: Event) {
         self.len += 1;
         if ev.time >= self.cur && ev.time - self.cur < RING as u64 {
-            self.ring_len += 1;
-            self.buckets[Self::bucket_of(ev.time)].push_back(ev);
+            self.ring_insert(ev);
         } else {
-            // Far future — or behind `cur` (scheduler misuse; the heap
-            // keeps reference ordering and `Engine::run` debug-asserts).
+            // Far future — or behind `cur` (a cross-shard delivery into a
+            // cycle the local cursor already overshot, or scheduler
+            // misuse; the heap keeps reference `(time, seq)` ordering).
             self.overflow.push(ev);
         }
     }
@@ -106,15 +126,14 @@ impl EventQueue {
                 }
             }
             // Migrate overflow events whose cycle entered the window.
-            // This runs before any direct push could target those cycles,
-            // preserving within-bucket seq order (module docs).
+            // `ring_insert` keeps each bucket seq-sorted, so migrations
+            // and direct pushes interleave in any order.
             while let Some(top) = self.overflow.peek() {
                 if top.time - self.cur >= RING as u64 {
                     break;
                 }
                 let ev = self.overflow.pop().unwrap();
-                self.ring_len += 1;
-                self.buckets[Self::bucket_of(ev.time)].push_back(ev);
+                self.ring_insert(ev);
             }
             if !self.buckets[Self::bucket_of(self.cur)].is_empty() {
                 return Some(self.cur);
@@ -139,9 +158,10 @@ impl EventQueue {
         // right before popping, so the window is usually already
         // positioned on a non-empty bucket. `next_time` migrates every
         // in-window overflow event before returning, so a non-empty
-        // current bucket holds the global minimum — unless a (misuse)
-        // behind-window event sits in the overflow heap, which the guard
-        // preserves in reference-heap order.
+        // current bucket holds the global minimum — unless a
+        // behind-window event sits in the overflow heap (a cross-shard
+        // barrier delivery behind an overshot cursor, or misuse), which
+        // the guard preserves in reference-heap order.
         if self.overflow.peek().is_none_or(|top| top.time >= self.cur) {
             if let Some(ev) = self.buckets[Self::bucket_of(self.cur)].pop_front() {
                 self.ring_len -= 1;
@@ -242,6 +262,48 @@ mod tests {
         assert_eq!(q.next_time(), Some(2));
         assert_eq!(q.len(), 2);
         assert_eq!(drain(&mut q), vec![(2, 1), (9, 0)]);
+    }
+
+    #[test]
+    fn out_of_order_seq_within_a_cycle_sorts_on_insert() {
+        // Cross-shard barrier deliveries carry foreign shard tags in the
+        // high seq bits, so same-cycle pushes are not seq-monotone.
+        let mut q = EventQueue::new();
+        let tag = |shard: u64, ctr: u64| (shard << 40) | ctr;
+        q.push(ev(10, tag(2, 0)));
+        q.push(ev(10, tag(0, 5))); // lower shard tag arrives later
+        q.push(ev(10, tag(2, 1)));
+        q.push(ev(10, tag(1, 0)));
+        q.push(ev(9, tag(3, 0))); // different cycle unaffected
+        assert_eq!(
+            drain(&mut q),
+            vec![
+                (9, tag(3, 0)),
+                (10, tag(0, 5)),
+                (10, tag(1, 0)),
+                (10, tag(2, 0)),
+                (10, tag(2, 1)),
+            ]
+        );
+    }
+
+    #[test]
+    fn delivery_behind_an_overshot_cursor_still_pops_in_order() {
+        // A shard's window cursor can run ahead to its next local event
+        // (say t=500) before a barrier delivers a cross-shard event for
+        // an earlier cycle (t=120 >= the window end). The late arrival
+        // must pop first, in exact (time, seq) order.
+        let mut q = EventQueue::new();
+        q.push(ev(10, 0));
+        q.push(ev(500, 1));
+        let first = q.pop().unwrap();
+        assert_eq!((first.time, first.seq), (10, 0));
+        // Peeking positions the cursor on the t=500 event...
+        assert_eq!(q.next_time(), Some(500));
+        // ...and only then do the barrier deliveries land behind it.
+        q.push(ev(120, 3));
+        q.push(ev(120, 2));
+        assert_eq!(drain(&mut q), vec![(120, 2), (120, 3), (500, 1)]);
     }
 
     #[test]

@@ -1,0 +1,423 @@
+//! Logical shards and the conservative time-window runner.
+//!
+//! The component graph is partitioned into *logical shards* (the
+//! coordinator uses one per GPU plus a hub for the switch complex, TSU
+//! stacks and driver — see `coordinator::topology`). Each shard owns its
+//! own [`EventQueue`], [`MsgPool`], link table and sequence counter; the
+//! engine advances all shards in lock-step windows of
+//! `lookahead = min cross-shard link latency + 1` cycles:
+//!
+//! 1. **plan** — route the previous window's cross-shard traffic from
+//!    per-shard outboxes into the destination queues, then position the
+//!    next window at `T = min` next event time across shards,
+//!    `[T, T + lookahead)`;
+//! 2. **run** — every shard independently dispatches its local events
+//!    inside the window. Cross-shard sends land in the outbox: link
+//!    traffic keeps its exact delivery time (guaranteed `>= T +
+//!    lookahead` because every cross-shard link serializes for at least
+//!    one cycle before its flight latency); linkless control traffic
+//!    (`Ctx::schedule` to another shard, e.g. the driver's kernel-launch
+//!    and fence chatter) is quantized up to the window barrier;
+//! 3. **barrier** — repeat.
+//!
+//! # Determinism
+//!
+//! Event order is `(time, src_shard, seq)`, encoded as a single `u64`
+//! (`seq = shard << SEQ_SHARD_BITS | counter`), and the partition is a
+//! function of the *configuration*, never of the thread count: `--shards
+//! N` only chooses how many OS threads execute the fixed logical shards.
+//! Within a window shards cannot interact (conservative lookahead), so
+//! any thread schedule dispatches the same per-shard event sequences and
+//! produces bit-identical state — the byte-identity contract of
+//! `tests/shard_determinism.rs`.
+//!
+//! The one semantic knob is control-message quantization (step 2): it
+//! shifts driver/fence hops to window boundaries by up to `lookahead`
+//! cycles. The shift is itself deterministic (window positions depend
+//! only on event times), applies identically at every shard/thread
+//! count, and only touches linkless cross-shard hops — never the
+//! link-modelled memory traffic the paper's figures count.
+//!
+//! # Pause/resume caveat
+//!
+//! `Engine::run(limit)` pausing mid-window truncates that window at
+//! `limit` while quantization still targets the untruncated barrier, so
+//! interleaving different `limit`s with multi-shard engines can shift
+//! control hops relative to an uninterrupted `run_to_completion`. All
+//! campaign/runner paths run to completion in one call; the
+//! single-shard fast path (plain `Engine::new`) is unaffected.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex, MutexGuard};
+
+use crate::sim::engine::{Component, Ctx};
+use crate::sim::link::Link;
+use crate::sim::msg::{Event, Msg};
+use crate::sim::pool::MsgPool;
+use crate::sim::queue::EventQueue;
+use crate::sim::Cycle;
+
+/// Low bits of an event sequence number hold the per-shard counter; the
+/// bits above hold the origin shard id, making `(time, seq)` order
+/// equivalent to `(time, src_shard, per_shard_seq)` with globally unique
+/// sequence numbers. 2^40 events per shard per run is two orders of
+/// magnitude beyond the largest paper-grid cell.
+pub const SEQ_SHARD_BITS: u32 = 40;
+
+/// Where a globally-numbered component or link lives.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Loc {
+    pub shard: u32,
+    pub idx: u32,
+}
+
+/// Shared read-only routing tables: global `CompId`/`LinkId` -> [`Loc`].
+#[derive(Default)]
+pub(crate) struct Tables {
+    pub comp_loc: Vec<Loc>,
+    pub link_loc: Vec<Loc>,
+}
+
+/// A cross-shard event parked until the window barrier.
+pub(crate) struct OutEvent {
+    pub dst: u32,
+    pub ev: Event,
+}
+
+/// One partition of the component graph with its private scheduler state.
+pub struct Shard {
+    pub(crate) id: u32,
+    pub(crate) queue: EventQueue,
+    pub(crate) pool: MsgPool,
+    pub(crate) comps: Vec<Option<Box<dyn Component>>>,
+    pub(crate) links: Vec<Link>,
+    /// Next sequence number; initialized to `id << SEQ_SHARD_BITS`.
+    pub(crate) seq: u64,
+    /// Time of the last event this shard dispatched.
+    pub(crate) now: Cycle,
+    pub(crate) events_processed: u64,
+    pub(crate) outbox: Vec<OutEvent>,
+}
+
+impl Shard {
+    pub(crate) fn new(id: u32) -> Self {
+        Shard {
+            id,
+            queue: EventQueue::new(),
+            pool: MsgPool::new(),
+            comps: Vec::new(),
+            links: Vec::new(),
+            seq: (id as u64) << SEQ_SHARD_BITS,
+            now: 0,
+            events_processed: 0,
+            outbox: Vec::new(),
+        }
+    }
+
+    pub(crate) fn next_seq(&mut self) -> u64 {
+        let s = self.seq;
+        self.seq += 1;
+        debug_assert_eq!(
+            s >> SEQ_SHARD_BITS,
+            self.id as u64,
+            "per-shard sequence counter overflowed its tag"
+        );
+        s
+    }
+
+    /// Dispatch every queued event with `time <= bound`.
+    ///
+    /// `window_end` is the first cycle of the *next* window: cross-shard
+    /// link deliveries must land at or after it (asserted in
+    /// [`Ctx::send`]) and cross-shard control messages are quantized up
+    /// to it. The single-shard fast path passes `Cycle::MAX` (nothing
+    /// can cross).
+    pub(crate) fn run_window(&mut self, bound: Cycle, window_end: Cycle, tables: &Tables) {
+        while let Some(t) = self.queue.next_time() {
+            if t > bound {
+                return;
+            }
+            let ev = self.queue.pop().expect("peeked event vanished");
+            debug_assert!(ev.time >= self.now, "time went backwards");
+            self.now = ev.time;
+            self.events_processed += 1;
+            let loc = tables.comp_loc[ev.target.0 as usize];
+            debug_assert_eq!(loc.shard, self.id, "event routed to the wrong shard");
+            let idx = loc.idx as usize;
+            let mut comp = self.comps[idx]
+                .take()
+                .unwrap_or_else(|| panic!("event for unregistered component {:?}", ev.target));
+            let mut ctx = Ctx {
+                now: self.now,
+                shard: self.id,
+                window_end,
+                seq: &mut self.seq,
+                queue: &mut self.queue,
+                pool: &mut self.pool,
+                links: &mut self.links,
+                outbox: &mut self.outbox,
+                tables,
+                self_id: ev.target,
+            };
+            comp.handle(self.now, ev.msg, &mut ctx);
+            self.comps[idx] = Some(comp);
+        }
+    }
+}
+
+/// What the planner decided for the next window.
+enum Plan {
+    /// Every queue is empty — the run is complete.
+    Idle,
+    /// The earliest event lies beyond `limit` — pause.
+    Paused,
+    /// Execute `[T, end)` clipped to `bound = min(end - 1, limit)`.
+    Window { bound: Cycle, end: Cycle },
+}
+
+/// Poison-tolerant lock: a panicking cell is reported through the panic
+/// replay below, not hidden behind a poisoned-mutex panic here.
+fn lock(m: &Mutex<Shard>) -> MutexGuard<'_, Shard> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Route every shard's outbox into the destination queues. Runs on the
+/// serialized planner path between barriers, so it locks each
+/// destination shard once per (src, dst) pair rather than once per
+/// event. Neither the source order (ascending shard id) nor the
+/// in-place unstable sort affects the result: queue buckets order by
+/// the globally-unique seq tag on insert.
+///
+/// Returns whether any pooled message box (`Msg::Req`/`Msg::Rsp`)
+/// crossed shards — the only way pool occupancy can become uneven, and
+/// therefore the only windows whose barrier needs a rebalance sweep.
+fn drain_outboxes(cells: &[Mutex<Shard>]) -> bool {
+    let mut boxes_crossed = false;
+    for (src, cell) in cells.iter().enumerate() {
+        let mut buf = {
+            let mut s = lock(cell);
+            if s.outbox.is_empty() {
+                continue;
+            }
+            std::mem::take(&mut s.outbox)
+        };
+        buf.sort_unstable_by_key(|oe| oe.dst);
+        let mut it = buf.drain(..).peekable();
+        while let Some(first) = it.next() {
+            let dst = first.dst;
+            debug_assert_ne!(dst as usize, src, "outbox holds a same-shard event");
+            let mut d = lock(&cells[dst as usize]);
+            boxes_crossed |= matches!(first.ev.msg, Msg::Req(_) | Msg::Rsp(_));
+            d.queue.push(first.ev);
+            while let Some(oe) = it.next_if(|oe| oe.dst == dst) {
+                boxes_crossed |= matches!(oe.ev.msg, Msg::Req(_) | Msg::Rsp(_));
+                d.queue.push(oe.ev);
+            }
+        }
+        drop(it);
+        // Hand the emptied buffer back so its capacity is reused.
+        lock(cell).outbox = buf;
+    }
+    boxes_crossed
+}
+
+/// Even out idle message boxes across the shard pools.
+///
+/// Cross-shard transactions pool a box at the sender and reclaim it at
+/// the receiver, so boxes drift one way (request boxes toward memory,
+/// response boxes toward the GPUs) and each sender would hit the
+/// allocator on every transaction once its pool ran dry. Redistributing
+/// to an even share at the barrier closes the cycle: the steady state
+/// moves a handful of pointers per window and allocates nothing. The
+/// rule is a function of pool occupancy only, so it is identical at
+/// every thread count.
+fn rebalance_pools(cells: &[Mutex<Shard>]) {
+    let n = cells.len();
+    let (mut req_total, mut rsp_total) = (0usize, 0usize);
+    for c in cells {
+        let s = lock(c);
+        req_total += s.pool.idle_reqs();
+        rsp_total += s.pool.idle_rsps();
+    }
+    // Shards 0..rem keep one extra so the totals are conserved.
+    let (req_share, req_rem) = (req_total / n, req_total % n);
+    let (rsp_share, rsp_rem) = (rsp_total / n, rsp_total % n);
+    let mut spare_reqs = Vec::new();
+    let mut spare_rsps = Vec::new();
+    for (i, c) in cells.iter().enumerate() {
+        let mut s = lock(c);
+        let req_keep = req_share + usize::from(i < req_rem);
+        while s.pool.idle_reqs() > req_keep {
+            spare_reqs.push(s.pool.pop_req_box().expect("counted box missing"));
+        }
+        let rsp_keep = rsp_share + usize::from(i < rsp_rem);
+        while s.pool.idle_rsps() > rsp_keep {
+            spare_rsps.push(s.pool.pop_rsp_box().expect("counted box missing"));
+        }
+    }
+    for (i, c) in cells.iter().enumerate() {
+        if spare_reqs.is_empty() && spare_rsps.is_empty() {
+            break;
+        }
+        let mut s = lock(c);
+        let req_keep = req_share + usize::from(i < req_rem);
+        while s.pool.idle_reqs() < req_keep {
+            match spare_reqs.pop() {
+                Some(b) => s.pool.push_req_box(b),
+                None => break,
+            }
+        }
+        let rsp_keep = rsp_share + usize::from(i < rsp_rem);
+        while s.pool.idle_rsps() < rsp_keep {
+            match spare_rsps.pop() {
+                Some(b) => s.pool.push_rsp_box(b),
+                None => break,
+            }
+        }
+    }
+    debug_assert!(spare_reqs.is_empty() && spare_rsps.is_empty(), "rebalance lost boxes");
+}
+
+fn plan_window(cells: &[Mutex<Shard>], limit: Cycle, lookahead: Cycle) -> Plan {
+    // Rebalance only when a box actually changed shards: occupancy is
+    // untouched by local traffic (boxes return to their own pool), so
+    // skipping quiet barriers loses nothing. The condition is a
+    // deterministic function of the routed events — identical at every
+    // thread count.
+    if drain_outboxes(cells) {
+        rebalance_pools(cells);
+    }
+    let mut t_min: Option<Cycle> = None;
+    for c in cells {
+        if let Some(t) = lock(c).queue.next_time() {
+            t_min = Some(t_min.map_or(t, |m: Cycle| m.min(t)));
+        }
+    }
+    match t_min {
+        None => Plan::Idle,
+        Some(t) if t > limit => Plan::Paused,
+        Some(t) => {
+            let end = t.saturating_add(lookahead);
+            // `.max(t)` guards the saturated edge (an event at
+            // Cycle::MAX would otherwise sit above bound forever);
+            // t <= limit here, so the clamp order keeps bound <= limit.
+            Plan::Window { bound: (end - 1).min(limit).max(t), end }
+        }
+    }
+}
+
+const ST_RUN: u64 = 0;
+const ST_PAUSED: u64 = 1;
+const ST_DONE: u64 = 2;
+
+/// Run the windowed loop over `shards` on up to `threads` OS threads
+/// until the queues drain or `limit` is reached.
+///
+/// Returns the shards plus `None` when paused at `limit`, or
+/// `Some(final_time)` (max dispatch time across shards) when drained.
+/// The result is identical for every `threads` value: worker count only
+/// changes which thread executes a shard's window, never the window
+/// sequence or any shard's event order.
+pub(crate) fn run_windows(
+    shards: Vec<Shard>,
+    tables: &Tables,
+    lookahead: Cycle,
+    threads: usize,
+    limit: Cycle,
+) -> (Vec<Shard>, Option<Cycle>) {
+    let n = shards.len();
+    let workers = threads.clamp(1, n);
+    let cells: Vec<Mutex<Shard>> = shards.into_iter().map(Mutex::new).collect();
+    let barrier = Barrier::new(workers);
+    let state = AtomicU64::new(ST_RUN);
+    let bound = AtomicU64::new(0);
+    let end = AtomicU64::new(0);
+    let panicked = AtomicBool::new(false);
+    let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+
+    // Record a worker panic and keep the barrier protocol alive so the
+    // other workers can exit cleanly; the payload is re-thrown below.
+    let record = |r: std::thread::Result<()>| {
+        if let Err(p) = r {
+            let mut slot = payload.lock().unwrap_or_else(|e| e.into_inner());
+            slot.get_or_insert(p);
+            panicked.store(true, Ordering::SeqCst);
+        }
+    };
+
+    let worker = |w: usize| {
+        loop {
+            if w == 0 {
+                // Planner: worker 0 routes cross-shard traffic and
+                // positions the window while everyone else waits at the
+                // barrier (all shard locks are uncontended here).
+                let r = panic::catch_unwind(AssertUnwindSafe(|| {
+                    if panicked.load(Ordering::SeqCst) {
+                        return ST_DONE;
+                    }
+                    match plan_window(&cells, limit, lookahead) {
+                        Plan::Idle => ST_DONE,
+                        Plan::Paused => ST_PAUSED,
+                        Plan::Window { bound: b, end: e } => {
+                            bound.store(b, Ordering::SeqCst);
+                            end.store(e, Ordering::SeqCst);
+                            ST_RUN
+                        }
+                    }
+                }));
+                match r {
+                    Ok(st) => state.store(st, Ordering::SeqCst),
+                    Err(p) => {
+                        record(Err(p));
+                        state.store(ST_DONE, Ordering::SeqCst);
+                    }
+                }
+            }
+            barrier.wait();
+            if state.load(Ordering::SeqCst) != ST_RUN {
+                return;
+            }
+            let (b, e) = (bound.load(Ordering::SeqCst), end.load(Ordering::SeqCst));
+            record(panic::catch_unwind(AssertUnwindSafe(|| {
+                let mut i = w;
+                while i < n {
+                    lock(&cells[i]).run_window(b, e, tables);
+                    i += workers;
+                }
+            })));
+            barrier.wait();
+        }
+    };
+
+    if workers == 1 {
+        worker(0);
+    } else {
+        std::thread::scope(|scope| {
+            let worker = &worker;
+            for w in 1..workers {
+                scope.spawn(move || worker(w));
+            }
+            worker(0);
+        });
+    }
+
+    if panicked.load(Ordering::SeqCst) {
+        let p = payload
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .expect("panic flagged without payload");
+        panic::resume_unwind(p);
+    }
+
+    let shards: Vec<Shard> = cells
+        .into_iter()
+        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+        .collect();
+    let done = match state.load(Ordering::SeqCst) {
+        ST_PAUSED => None,
+        _ => Some(shards.iter().map(|s| s.now).max().unwrap_or(0)),
+    };
+    (shards, done)
+}

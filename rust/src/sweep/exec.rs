@@ -84,11 +84,17 @@ pub struct ExecOptions {
     pub jobs: usize,
     /// Stream one line per finished cell to stderr.
     pub progress: bool,
+    /// Engine worker threads per cell (`--shards`): overrides every
+    /// cell's `shards` config key without touching the spec, so the
+    /// campaign artifact stays byte-identical across `--shards` levels
+    /// (`tests/shard_determinism.rs`). `None` keeps the cells' own
+    /// settings.
+    pub shards: Option<usize>,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { jobs: default_jobs(), progress: true }
+        ExecOptions { jobs: default_jobs(), progress: true, shards: None }
     }
 }
 
@@ -132,7 +138,26 @@ impl CampaignResult {
 pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignResult, String> {
     let cells = spec.cells()?;
     let total = cells.len();
-    let jobs = opts.jobs.max(1).min(total.max(1));
+    let mut jobs = opts.jobs.max(1).min(total.max(1));
+    // When cells run multi-shard, every job spawns that many engine
+    // threads: cap jobs x shards at the host parallelism instead of
+    // oversubscribing (8 jobs x 4 shards on an 8-core box would
+    // thrash). Both knobs clamp — shards down to the core count (thread
+    // count never changes results), then jobs to cores / shards.
+    let cores = default_jobs();
+    let shards_per_cell = opts
+        .shards
+        .unwrap_or_else(|| {
+            cells
+                .iter()
+                .map(|c| c.config().map_or(1, |cfg| cfg.shards as usize))
+                .max()
+                .unwrap_or(1)
+        })
+        .clamp(1, cores);
+    if shards_per_cell > 1 {
+        jobs = jobs.min((cores / shards_per_cell).max(1));
+    }
     let next = AtomicUsize::new(0);
     let done = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<CellOutcome>>> = (0..total).map(|_| Mutex::new(None)).collect();
@@ -145,7 +170,7 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
                     break;
                 }
                 let cell = &cells[i];
-                let outcome = run_cell(cell);
+                let outcome = run_cell(cell, opts.shards, cores);
                 if opts.progress {
                     let n = done.fetch_add(1, Ordering::Relaxed) + 1;
                     progress_line(n, total, cell, &outcome);
@@ -169,11 +194,17 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
     Ok(CampaignResult { spec: spec.clone(), jobs, cells: results })
 }
 
-fn run_cell(cell: &Cell) -> CellOutcome {
-    let cfg = match cell.config() {
+fn run_cell(cell: &Cell, shards: Option<usize>, host_cores: usize) -> CellOutcome {
+    let mut cfg = match cell.config() {
         Ok(c) => c,
         Err(e) => return CellOutcome::Failed { error: e },
     };
+    // Executor-level thread clamp: apply the --shards override and cap
+    // at the host cores. Never recorded in the spec/artifact — thread
+    // count cannot change results, only wall-clock.
+    cfg.shards = shards
+        .unwrap_or(cfg.shards as usize)
+        .clamp(1, host_cores.max(1)) as u32;
     // The simulator runs artifact-free here (the PJRT runtime is not
     // thread-shareable); Rust reference checks still verify every cell.
     // The default panic hook stays installed, so a failing cell also
@@ -236,7 +267,7 @@ mod tests {
     #[test]
     fn runs_cells_and_indexes_results_in_spec_order() {
         let spec = tiny_spec("rl,fir");
-        let res = run_campaign(&spec, &ExecOptions { jobs: 4, progress: false }).unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 4, progress: false, ..Default::default() }).unwrap();
         assert_eq!(res.cells.len(), 2);
         assert!(res.all_passed(), "smoke cells failed");
         for (i, c) in res.cells.iter().enumerate() {
@@ -267,7 +298,7 @@ mod tests {
              set.scale = 0.05\n",
         )
         .unwrap();
-        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false }).unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false, ..Default::default() }).unwrap();
         assert_eq!(res.cells.len(), 2);
         let broken = res.get("SM-WT-C-HALCONE+gpu_mem_bytes=4096", "rl").unwrap();
         assert_eq!(broken.status(), "error");
@@ -280,7 +311,7 @@ mod tests {
     #[test]
     fn jobs_larger_than_grid_is_fine() {
         let spec = tiny_spec("rl");
-        let res = run_campaign(&spec, &ExecOptions { jobs: 64, progress: false }).unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 64, progress: false, ..Default::default() }).unwrap();
         assert_eq!(res.cells.len(), 1);
         assert!(res.all_passed());
     }

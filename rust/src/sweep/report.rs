@@ -188,9 +188,13 @@ fn metrics_json(m: &RunMetrics, include_host: bool) -> Value {
     ];
     if include_host {
         // Host-dependent pair: dropped from the canonical form so the
-        // determinism/gate comparisons stay byte-stable.
+        // determinism/gate comparisons stay byte-stable. The pool
+        // counters ride along — deterministic but engine-internal, they
+        // belong to the perf trajectory, not the paper metrics.
         o.push(("host_seconds".into(), Value::f64(m.host_seconds)));
         o.push(("events_per_sec".into(), Value::f64(m.events_per_sec)));
+        o.push(("pool_fresh_boxes".into(), Value::u64(m.pool_fresh_boxes)));
+        o.push(("pool_reused_boxes".into(), Value::u64(m.pool_reused_boxes)));
     }
     o.extend([
         ("cu_loads".into(), Value::u64(m.cu_loads)),
@@ -262,7 +266,7 @@ mod tests {
     #[test]
     fn artifact_parses_and_carries_the_grid() {
         let spec = CampaignSpec::builtin("smoke").unwrap();
-        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false }).unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false, ..Default::default() }).unwrap();
         let text = to_json(&res);
         let doc = json::parse(&text).unwrap();
         assert_eq!(doc.get("campaign").unwrap().as_str(), Some("smoke"));
@@ -308,7 +312,7 @@ mod tests {
         // grid-defining field must survive the round trip.
         let mut spec = CampaignSpec::builtin("smoke").unwrap();
         spec.fixed.push(("l1_bytes".into(), "8192".into())); // like --set
-        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false }).unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false, ..Default::default() }).unwrap();
         let doc = json::parse(&to_json(&res)).unwrap();
         let rebuilt = CampaignSpec::from_artifact(&doc).unwrap();
         assert_eq!(rebuilt.name, spec.name);
@@ -322,7 +326,7 @@ mod tests {
     #[test]
     fn baseline_cells_report_speedup_one() {
         let spec = CampaignSpec::builtin("smoke").unwrap();
-        let res = run_campaign(&spec, &ExecOptions { jobs: 1, progress: false }).unwrap();
+        let res = run_campaign(&spec, &ExecOptions { jobs: 1, progress: false, ..Default::default() }).unwrap();
         let base = baseline_label(&res);
         assert_eq!(base, "SM-WT-NC");
         for wl in &res.spec.workloads {

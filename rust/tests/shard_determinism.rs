@@ -1,0 +1,169 @@
+//! The sharded-engine determinism contract (ISSUE 3): the logical
+//! partition — not the thread count — defines event order, so any
+//! `shards` level must reproduce the sequential engine bit for bit.
+//!
+//! Three layers:
+//! * campaign level: canonical `campaign.json` byte-identity between
+//!   `shards=1` and `shards=4` on the smoke grid and on a shrunken
+//!   fig7-shaped grid (all five §4.1 presets — SM, RDMA and HMG
+//!   partitions all cross shards differently);
+//! * engine level: a toy multi-shard system's per-component delivery
+//!   traces (including window-quantized control hops) are identical
+//!   across worker-thread counts;
+//! * queue level: the ordering property lives in
+//!   `tests/unit_properties.rs` (`calendar_queue_orders_shard_tagged_seqs`).
+
+use halcone::sim::{CompId, Component, Ctx, Cycle, Engine, Link, LinkId, Msg};
+use halcone::sweep::exec::{run_campaign, ExecOptions};
+use halcone::sweep::report;
+use halcone::sweep::spec::CampaignSpec;
+
+fn canonical_with_shards(spec: &CampaignSpec, shards: usize) -> String {
+    let opts = ExecOptions { jobs: 2, progress: false, shards: Some(shards) };
+    let res = run_campaign(spec, &opts).unwrap();
+    assert!(res.all_passed(), "campaign {} failed under shards={shards}", spec.name);
+    report::to_json_canonical(&res)
+}
+
+#[test]
+fn smoke_campaign_is_byte_identical_across_shards() {
+    let spec = CampaignSpec::builtin("smoke").unwrap();
+    let serial = canonical_with_shards(&spec, 1);
+    let parallel = canonical_with_shards(&spec, 4);
+    assert_eq!(serial, parallel, "canonical campaign.json differs between shards=1 and shards=4");
+}
+
+#[test]
+fn fig7_grid_is_byte_identical_across_shards() {
+    // The fig7 grid shape (all five §4.1 presets) at CI-friendly
+    // geometry: the SM partitions cross shards at the switch complex,
+    // the RDMA/HMG ones at the PCIe switch, with per-GPU memory stacks
+    // inside the GPU shards — every partition flavor in one grid.
+    let mut spec = CampaignSpec::builtin("fig7").unwrap();
+    spec.workloads = vec!["rl".into(), "fir".into()];
+    spec.fixed.extend(
+        [
+            ("n_gpus", "2"),
+            ("cus_per_gpu", "2"),
+            ("wavefronts_per_cu", "2"),
+            ("l2_banks", "2"),
+            ("stacks_per_gpu", "2"),
+            ("gpu_mem_bytes", "67108864"),
+            ("scale", "0.05"),
+        ]
+        .map(|(k, v)| (k.to_string(), v.to_string())),
+    );
+    let serial = canonical_with_shards(&spec, 1);
+    let parallel = canonical_with_shards(&spec, 4);
+    assert_eq!(serial, parallel, "fig7-shaped canonical artifact differs across shards");
+}
+
+/// Ring node: forwards link traffic to the next shard, emits a
+/// zero-delay control hop every third forward (exercising barrier
+/// quantization) and keeps its own shard busy with local echo events.
+struct Node {
+    name: String,
+    next: CompId,
+    link: LinkId,
+    hops: u32,
+    pub trace: Vec<(Cycle, u64)>,
+}
+
+impl Component for Node {
+    halcone::impl_component_any!();
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            Msg::Tick => {
+                self.trace.push((now, 0));
+                if self.hops > 0 {
+                    self.hops -= 1;
+                    let next = self.next;
+                    ctx.send(self.link, next, 64, Msg::Tick);
+                    if self.hops % 3 == 0 {
+                        // Linkless cross-shard hop: lands at the window
+                        // barrier, deterministically.
+                        ctx.schedule(0, next, Msg::DmaDone { bytes: self.hops as u64 });
+                    }
+                    ctx.schedule(2, ctx.self_id, Msg::StartPhase { phase: self.hops });
+                }
+            }
+            Msg::DmaDone { bytes } => self.trace.push((now, 1000 + bytes)),
+            Msg::StartPhase { phase } => self.trace.push((now, 2000 + phase as u64)),
+            other => panic!("{}: unexpected {other:?}", self.name),
+        }
+    }
+}
+
+fn run_ring(threads: usize) -> (Cycle, u64, Vec<Vec<(Cycle, u64)>>) {
+    const N: u32 = 3;
+    // Ring links: latency 9 + 1 serialization cycle = the lookahead 10.
+    let mut e = Engine::sharded(N, 10);
+    let links: Vec<LinkId> =
+        (0..N).map(|i| e.add_link_to(i, Link::new(format!("l{i}"), 9, 64))).collect();
+    for i in 0..N {
+        let next = CompId((i + 1) % N);
+        e.add_to(
+            i,
+            Box::new(Node {
+                name: format!("n{i}"),
+                next,
+                link: links[i as usize],
+                hops: 40,
+                trace: Vec::new(),
+            }),
+        );
+    }
+    e.set_threads(threads);
+    e.post(0, CompId(0), Msg::Tick);
+    let end = e.run_to_completion();
+    let traces = (0..N).map(|i| e.downcast::<Node>(CompId(i)).trace.clone()).collect();
+    (end, e.events_processed(), traces)
+}
+
+#[test]
+fn windowed_merge_is_invariant_to_worker_threads() {
+    let reference = run_ring(1);
+    assert!(reference.1 > 100, "ring must generate real traffic: {} events", reference.1);
+    for threads in [2, 3, 8] {
+        let got = run_ring(threads);
+        assert_eq!(got.0, reference.0, "end time differs at threads={threads}");
+        assert_eq!(got.1, reference.1, "event count differs at threads={threads}");
+        assert_eq!(got.2, reference.2, "delivery traces differ at threads={threads}");
+    }
+}
+
+#[test]
+fn single_run_metrics_are_identical_across_shards_setting() {
+    // Full-system single cell: the runner path (not the sweep executor)
+    // honors `cfg.shards` the same way.
+    use halcone::config::SystemConfig;
+    use halcone::coordinator::runner::run_workload;
+    let run = |shards: u32| {
+        let mut cfg = SystemConfig::preset("SM-WT-C-HALCONE");
+        cfg.n_gpus = 2;
+        cfg.cus_per_gpu = 2;
+        cfg.wavefronts_per_cu = 2;
+        cfg.l2_banks = 2;
+        cfg.stacks_per_gpu = 2;
+        cfg.gpu_mem_bytes = 64 << 20;
+        cfg.scale = 0.05;
+        cfg.shards = shards;
+        let res = run_workload(&cfg, "fir", None);
+        assert!(res.all_passed(), "shards={shards}: {:?}", res.checks);
+        (
+            res.metrics.cycles,
+            res.metrics.events,
+            res.metrics.l1_l2_transactions(),
+            res.metrics.l2_mm_transactions(),
+            res.metrics.mem_bytes,
+            res.metrics.pool_fresh_boxes,
+            res.metrics.pool_reused_boxes,
+        )
+    };
+    let a = run(1);
+    let b = run(3);
+    assert_eq!(a, b, "metrics differ between shards=1 and shards=3");
+}

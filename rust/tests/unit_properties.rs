@@ -324,6 +324,66 @@ fn calendar_queue_matches_reference_heap_order() {
 }
 
 #[test]
+fn calendar_queue_orders_shard_tagged_seqs() {
+    // The sharded engine tags sequence numbers with the origin shard
+    // (`seq = shard << SEQ_SHARD_BITS | counter`), so same-cycle pushes
+    // are no longer seq-monotone: a window barrier can merge in a
+    // lower-tagged event after higher-tagged local pushes, and a shard
+    // whose cursor overshot can receive deliveries behind it. The queue
+    // must still dequeue in exact `(time, seq)` reference-heap order.
+    use halcone::sim::msg::{Event, Msg};
+    use halcone::sim::{CompId, EventQueue, SEQ_SHARD_BITS};
+    use std::collections::BinaryHeap;
+
+    let ev = |time: u64, seq: u64| Event { time, seq, target: CompId(0), msg: Msg::Tick };
+    check("calendar queue vs heap (shard tags)", 0x5A9D, |rng| {
+        let mut q = EventQueue::new();
+        let mut h: BinaryHeap<Event> = BinaryHeap::new();
+        const SHARDS: u64 = 4;
+        let mut counters = [0u64; SHARDS as usize];
+        let mut now = 0u64;
+        for _ in 0..500 {
+            if rng.below(3) != 2 {
+                let delay = match rng.below(12) {
+                    0..=4 => rng.below(8),
+                    5..=6 => 0,
+                    7..=9 => rng.below(400),
+                    10 => 3000 + rng.below(3000),
+                    _ => 100_000 + rng.below(1_000_000),
+                };
+                for _ in 0..1 + rng.below(3) {
+                    // Random origin shard: seq values interleave out of
+                    // push order, exactly like barrier merges.
+                    let shard = rng.below(SHARDS);
+                    let seq = (shard << SEQ_SHARD_BITS) | counters[shard as usize];
+                    counters[shard as usize] += 1;
+                    q.push(ev(now + delay, seq));
+                    h.push(ev(now + delay, seq));
+                }
+            } else {
+                let a = q.pop().map(|e| (e.time, e.seq));
+                let b = h.pop().map(|e| (e.time, e.seq));
+                prop_assert!(a == b, "pop mismatch: calendar {a:?} vs heap {b:?}");
+                if let Some((t, _)) = a {
+                    now = t; // pushes never schedule into the past
+                }
+            }
+            prop_assert!(q.len() == h.len(), "len drifted: {} vs {}", q.len(), h.len());
+        }
+        loop {
+            let a = q.pop().map(|e| (e.time, e.seq));
+            let b = h.pop().map(|e| (e.time, e.seq));
+            prop_assert!(a == b, "drain mismatch: calendar {a:?} vs heap {b:?}");
+            if a.is_none() {
+                break;
+            }
+        }
+        prop_assert!(q.is_empty(), "queue must report empty after drain");
+        Ok(())
+    });
+}
+
+#[test]
 fn engine_time_never_goes_backwards() {
     use halcone::sim::{CompId, Component, Ctx, Cycle, Engine, Msg};
     struct RandomScheduler {
