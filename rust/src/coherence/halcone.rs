@@ -642,7 +642,12 @@ mod tests {
         f32::from_le_bytes([rsp.data[0], rsp.data[1], rsp.data[2], rsp.data[3]])
     }
 
-    fn build(n_gpus: u32, leases: Leases, carry_warpts: bool, scripts: Vec<Vec<(Cycle, MemReq)>>) -> Rig {
+    fn build(
+        n_gpus: u32,
+        leases: Leases,
+        carry_warpts: bool,
+        scripts: Vec<Vec<(Cycle, MemReq)>>,
+    ) -> Rig {
         let mut e = Engine::new();
         let mem = GlobalMemory::new_shared();
         let map = AddrMap::new(Topology::SharedMem, n_gpus, 1, 1, 1 << 20);

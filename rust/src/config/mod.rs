@@ -157,7 +157,7 @@ impl SystemConfig {
     }
 
     /// All five §4.1 configuration names, in the paper's order.
-    pub const PRESETS: [&'static str; 5] = [
+    pub const PRESETS: [&str; 5] = [
         "RDMA-WB-NC",
         "RDMA-WB-C-HMG",
         "SM-WB-NC",

@@ -14,6 +14,7 @@ use crate::gpu::Cu;
 use crate::metrics::{CacheCtrlStats, RunMetrics};
 use crate::runtime::Runtime;
 use crate::sim::{CompId, Engine, Msg};
+use crate::trace::{Trace, TraceMeta};
 use crate::workloads::{self, Workload};
 
 /// Everything one simulation produced.
@@ -131,18 +132,42 @@ pub fn run_workload(
     workload_name: &str,
     runtime: Option<&mut Runtime>,
 ) -> RunResult {
+    run_workload_traced(cfg, workload_name, runtime, false).0
+}
+
+/// [`run_workload`] with the CU trace tap enabled when `capture` is set:
+/// returns the assembled [`Trace`] alongside the result. The tap buffers
+/// per CU and is assembled here in CompId order, so the trace — like the
+/// simulation itself — is byte-identical at every `--shards` level.
+pub fn run_workload_traced(
+    cfg: &SystemConfig,
+    workload_name: &str,
+    runtime: Option<&mut Runtime>,
+    capture: bool,
+) -> (RunResult, Option<Trace>) {
     let params = cfg.workload_params();
     let wl = workloads::build(workload_name, &params);
-    run_built(cfg, wl, runtime)
+    run_built_traced(cfg, wl, runtime, capture)
 }
 
 /// Run an already-built workload (callers that pre-tweak phases/checks).
 pub fn run_built(
     cfg: &SystemConfig,
-    mut wl: Workload,
+    wl: Workload,
     runtime: Option<&mut Runtime>,
 ) -> RunResult {
+    run_built_traced(cfg, wl, runtime, false).0
+}
+
+/// [`run_built`] with optional trace capture.
+pub fn run_built_traced(
+    cfg: &SystemConfig,
+    mut wl: Workload,
+    runtime: Option<&mut Runtime>,
+    capture: bool,
+) -> (RunResult, Option<Trace>) {
     let name = wl.name.clone();
+    let n_phases = wl.phases.len() as u32;
     let checks = std::mem::take(&mut wl.checks);
     let init = std::mem::take(&mut wl.init);
     let delay = {
@@ -161,6 +186,11 @@ pub fn run_built(
     // Execution knob only: any thread count produces identical results
     // (the logical partition is fixed by the topology).
     sys.engine.set_threads(cfg.shards as usize);
+    if capture {
+        for &id in &sys.cus {
+            sys.engine.downcast_mut::<Cu>(id).enable_trace();
+        }
+    }
 
     // Initial memory image + input snapshots for verification.
     {
@@ -183,8 +213,29 @@ pub fn run_built(
     );
 
     let metrics = collect_metrics(&sys, host);
+    let trace = capture.then(|| {
+        let c = (cfg.cus_per_gpu as usize).max(1);
+        let mut streams = vec![vec![Vec::new(); c]; cfg.n_gpus as usize];
+        for (i, &id) in sys.cus.iter().enumerate() {
+            streams[i / c][i % c] = sys.engine.downcast_mut::<Cu>(id).take_trace();
+        }
+        Trace {
+            meta: TraceMeta {
+                workload: name.clone(),
+                n_gpus: cfg.n_gpus,
+                cus_per_gpu: cfg.cus_per_gpu,
+                wavefronts_per_cu: cfg.wavefronts_per_cu,
+                n_phases,
+                gpu_mem_bytes: cfg.gpu_mem_bytes,
+                cycles: metrics.cycles,
+                events: metrics.events,
+                init: init.iter().map(|(a, v)| (*a, v.len() as u64)).collect(),
+            },
+            streams,
+        }
+    });
     let checks = verify::run_checks(&checks, &snapshots, &sys.mem, runtime);
-    RunResult { config: cfg.name.clone(), workload: name, metrics, checks }
+    (RunResult { config: cfg.name.clone(), workload: name, metrics, checks }, trace)
 }
 
 #[cfg(test)]

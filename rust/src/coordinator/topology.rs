@@ -189,10 +189,10 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
     for s in 0..stacks {
         // rx is driven by the switch in front of the stack, tx by the MC;
         // both live in the stack's shard.
-        mc_rx[s] =
-            engine.add_link_to(stack_shard(s), Link::new(format!("mm{s}.rx"), cfg.swc_lat, cfg.hbm_bw));
-        mc_tx[s] =
-            engine.add_link_to(stack_shard(s), Link::new(format!("mm{s}.tx"), cfg.swc_lat, cfg.hbm_bw));
+        let rx = Link::new(format!("mm{s}.rx"), cfg.swc_lat, cfg.hbm_bw);
+        let tx = Link::new(format!("mm{s}.tx"), cfg.swc_lat, cfg.hbm_bw);
+        mc_rx[s] = engine.add_link_to(stack_shard(s), rx);
+        mc_tx[s] = engine.add_link_to(stack_shard(s), tx);
         mem_links.push(mc_rx[s]);
         mem_links.push(mc_tx[s]);
     }

@@ -18,6 +18,7 @@ use crate::mem::LineBuf;
 use crate::metrics::CacheCtrlStats;
 use crate::sim::msg::{MemReq, MemRsp};
 use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
+use crate::trace::{TraceKind, TraceOp};
 
 /// Lanes per wavefront vector register. A full vector memory op covers
 /// exactly one 64-byte cache line (16 x f32) — the coalesced access
@@ -84,6 +85,11 @@ struct Wavefront {
     pc: usize,
     regs: [VReg; NREGS],
     done: bool,
+    /// Issue-latency cycles accumulated since the last memory op — the
+    /// compute gap the trace recorder consumes (see [`crate::trace`]).
+    /// Maintained unconditionally (one add per ALU op); read only while
+    /// capture is enabled.
+    gap: Cycle,
 }
 
 /// Pending destination of an outstanding memory request.
@@ -121,6 +127,10 @@ pub struct Cu {
     store_credits: u32,
     /// Wavefronts parked waiting for a store credit.
     parked: Vec<usize>,
+    /// Captured memory-op records (`Some` once capture is enabled). The
+    /// buffer is CU-local, so the assembled trace is ordered by the
+    /// simulation alone — identical at every `--shards` level.
+    trace_buf: Option<Vec<TraceOp>>,
     pub stats: CuStats,
 }
 
@@ -149,7 +159,32 @@ impl Cu {
             stores_in_flight: 0,
             store_credits: STORE_CREDITS,
             parked: Vec::new(),
+            trace_buf: None,
             stats: CuStats::default(),
+        }
+    }
+
+    /// Start capturing issued memory operations (trace recording).
+    pub fn enable_trace(&mut self) {
+        self.trace_buf = Some(Vec::new());
+    }
+
+    /// Take the captured records, in this CU's issue order. Empty when
+    /// capture was never enabled.
+    pub fn take_trace(&mut self) -> Vec<TraceOp> {
+        self.trace_buf.take().unwrap_or_default()
+    }
+
+    /// Append one record (no-op unless capture is enabled), consuming
+    /// the wavefront's accumulated compute gap.
+    fn record(&mut self, wf: usize, kind: TraceKind, addr: u64, size: u32, at: Cycle) {
+        if self.trace_buf.is_none() {
+            return;
+        }
+        let gap = std::mem::take(&mut self.wavefronts[wf].gap);
+        let op = TraceOp { phase: self.phase, wf: wf as u32, kind, addr, size, gap, cycle: at };
+        if let Some(buf) = &mut self.trace_buf {
+            buf.push(op);
         }
     }
 
@@ -162,7 +197,7 @@ impl Cu {
         self.phase = phase;
         let n_wfs = self.program.get(phase as usize).map_or(0, |l| l.len());
         self.wavefronts = (0..n_wfs)
-            .map(|_| Wavefront { pc: 0, regs: [[0.0; LANES]; NREGS], done: false })
+            .map(|_| Wavefront { pc: 0, regs: [[0.0; LANES]; NREGS], done: false, gap: 0 })
             .collect();
         self.active = 0;
         for (i, w) in self.wavefronts.iter_mut().enumerate() {
@@ -196,6 +231,7 @@ impl Cu {
             if pc >= ops.len() {
                 self.wavefronts[wf].done = true;
                 self.active -= 1;
+                self.record(wf, TraceKind::End, 0, 0, ctx.now() + delay);
                 if self.phase_complete() {
                     let driver = self.driver;
                     ctx.schedule(delay, driver, Msg::PhaseDone { cu: ctx.self_id });
@@ -217,6 +253,7 @@ impl Cu {
                 CuOp::MovImm { dst, imm } => {
                     w.regs[dst as usize] = [imm; LANES];
                     self.stats.alu += 1;
+                    w.gap += self.alu_lat;
                     delay += self.alu_lat;
                 }
                 CuOp::Add { dst, a, b } => {
@@ -225,6 +262,7 @@ impl Cu {
                         *d = a[l] + b[l];
                     }
                     self.stats.alu += 1;
+                    w.gap += self.alu_lat;
                     delay += self.alu_lat;
                 }
                 CuOp::Sub { dst, a, b } => {
@@ -233,6 +271,7 @@ impl Cu {
                         *d = a[l] - b[l];
                     }
                     self.stats.alu += 1;
+                    w.gap += self.alu_lat;
                     delay += self.alu_lat;
                 }
                 CuOp::Mul { dst, a, b } => {
@@ -241,6 +280,7 @@ impl Cu {
                         *d = a[l] * b[l];
                     }
                     self.stats.alu += 1;
+                    w.gap += self.alu_lat;
                     delay += self.alu_lat;
                 }
                 CuOp::Min { dst, a, b } => {
@@ -249,6 +289,7 @@ impl Cu {
                         *d = a[l].min(b[l]);
                     }
                     self.stats.alu += 1;
+                    w.gap += self.alu_lat;
                     delay += self.alu_lat;
                 }
                 CuOp::Max { dst, a, b } => {
@@ -257,22 +298,26 @@ impl Cu {
                         *d = a[l].max(b[l]);
                     }
                     self.stats.alu += 1;
+                    w.gap += self.alu_lat;
                     delay += self.alu_lat;
                 }
                 CuOp::Red { dst, src } => {
                     let s: f32 = w.regs[src as usize].iter().sum();
                     w.regs[dst as usize] = [s; LANES];
                     self.stats.alu += 1;
+                    w.gap += self.alu_lat;
                     delay += self.alu_lat;
                 }
                 CuOp::Pack { dst, lane, src } => {
                     let v = w.regs[src as usize][0];
                     w.regs[dst as usize][lane as usize] = v;
                     self.stats.alu += 1;
+                    w.gap += self.alu_lat;
                     delay += self.alu_lat;
                 }
                 CuOp::Delay { cycles } => {
                     self.stats.delay_cycles += cycles as u64;
+                    w.gap += cycles as Cycle;
                     delay += cycles as Cycle;
                 }
                 CuOp::Ld { reg, addr } => {
@@ -322,6 +367,7 @@ impl Cu {
         ctx: &mut Ctx,
     ) {
         self.stats.loads += 1;
+        self.record(wf, TraceKind::Load, addr, size, ctx.now() + delay);
         let id = self.next_id;
         self.next_id += 1;
         self.outstanding.push((id, wf, dest));
@@ -344,6 +390,7 @@ impl Cu {
         // Fire-and-forget under weak consistency: issue and keep
         // executing; the ack returns a credit.
         self.stats.stores += 1;
+        self.record(wf, TraceKind::Store, addr, data.len() as u32, ctx.now() + delay);
         self.store_credits -= 1;
         self.stores_in_flight += 1;
         let id = self.next_id;
@@ -589,6 +636,42 @@ mod tests {
         let (_, t, _, reqs) = run_program(vec![vec![]], &[]);
         assert_eq!(reqs, 0);
         assert_eq!(t, 0);
+    }
+
+    #[test]
+    fn trace_capture_records_ops_gaps_and_end_markers() {
+        use crate::trace::{TraceKind, TraceOp};
+        let ops = vec![
+            CuOp::MovImm { dst: 0, imm: 1.0 },
+            CuOp::Add { dst: 1, a: 0, b: 0 },
+            CuOp::Ld { reg: 2, addr: 0x40 },
+            CuOp::Delay { cycles: 7 },
+            CuOp::StV { addr: 0x80, reg: 1, n: 4 },
+            CuOp::Mul { dst: 3, a: 1, b: 1 },
+        ];
+        let mut e = crate::sim::Engine::new();
+        let mem = GlobalMemory::new_shared();
+        let cu_id = CompId(0);
+        e.add(Box::new(Cu::new("cu0", CompId(1), CompId(2), vec![vec![ops]], 1)));
+        e.add(Box::new(FakeL1 { name: "l1".into(), mem, lat: 10, reqs: 0 }));
+        e.add(Box::new(FakeDriver { name: "drv".into(), done_at: vec![] }));
+        e.downcast_mut::<Cu>(cu_id).enable_trace();
+        e.post(0, cu_id, Msg::StartPhase { phase: 0 });
+        e.run_to_completion();
+        let rec = e.downcast_mut::<Cu>(cu_id).take_trace();
+        let key = |o: &TraceOp| (o.kind, o.addr, o.size, o.gap);
+        assert_eq!(
+            rec.iter().map(key).collect::<Vec<_>>(),
+            vec![
+                (TraceKind::Load, 0x40, 4, 2),   // MovImm + Add = 2 cycles
+                (TraceKind::Store, 0x80, 16, 7), // the explicit Delay
+                (TraceKind::End, 0, 0, 1),       // trailing Mul
+            ]
+        );
+        // Issue cycles are monotone within the wavefront.
+        assert!(rec[0].cycle <= rec[1].cycle && rec[1].cycle <= rec[2].cycle);
+        // Capture off => no records.
+        assert!(e.downcast_mut::<Cu>(cu_id).take_trace().is_empty());
     }
 
     #[test]

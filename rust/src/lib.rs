@@ -13,7 +13,10 @@
 //! - the experiment coordinator, config system and metrics
 //!   ([`coordinator`], [`config`], [`metrics`]),
 //! - the campaign engine: declarative experiment grids, a parallel
-//!   executor, JSON artifacts and a perf regression gate ([`sweep`]).
+//!   executor, JSON artifacts and a perf regression gate ([`sweep`]),
+//! - deterministic trace capture, replay and synthesis: record CU memory
+//!   streams, re-inject them on any protocol, generate sharing patterns
+//!   ([`trace`], divergence oracle in [`metrics::divergence`]).
 
 pub mod coherence;
 pub mod config;
@@ -27,5 +30,6 @@ pub mod proptools;
 pub mod runtime;
 pub mod sim;
 pub mod sweep;
+pub mod trace;
 pub mod tsu;
 pub mod workloads;

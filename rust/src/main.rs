@@ -9,6 +9,9 @@
 //!                campaign.json baseline (perf regression gate)
 //!   verify       run workloads under HALCONE and check against the
 //!                XLA/Pallas golden artifacts + Rust references
+//!   replay       re-inject a recorded trace and report divergence
+//!                against the recording (docs/TRACE.md)
+//!   trace-gen    generate a synthetic sharing-pattern trace
 //!   print-config show the Table 2 configuration (E2)
 //!   list         available workloads, presets, campaigns and artifacts
 //!
@@ -17,11 +20,13 @@
 use std::process::ExitCode;
 
 use halcone::config::SystemConfig;
-use halcone::coordinator::runner::run_workload;
+use halcone::coordinator::runner::{run_built_traced, run_workload};
+use halcone::metrics::divergence;
 use halcone::runtime::Runtime;
 use halcone::sweep::exec::{self, run_campaign, ExecOptions};
 use halcone::sweep::spec::CampaignSpec;
 use halcone::sweep::{gate, json, report};
+use halcone::trace::{self, SharingPattern, SynthSpec};
 use halcone::workloads::{STANDARD, XTREME};
 
 fn usage() -> ! {
@@ -29,14 +34,21 @@ fn usage() -> ! {
         "usage: halcone <command> [options]\n\
          \n\
          commands:\n\
-           run          --workload NAME [--preset P] [--set k=v ...]\n\
+           run          --workload NAME [--preset P] [--set k=v ...] [--trace-out FILE]\n\
            compare      --workload NAME [--presets A,B,...] [--set k=v ...]\n\
            sweep        --campaign NAME | --spec FILE  [--jobs N] [--out FILE] [--set k=v ...]\n\
            gate         --baseline FILE [--current FILE] [--campaign NAME|--spec FILE]\n\
                         [--tolerance FRAC] [--jobs N] [--out FILE]\n\
            verify       [--workload NAME|all] [--artifacts DIR] [--set k=v ...]\n\
+           replay       --trace FILE [--preset P] [--set k=v ...] [--strict]\n\
+                        [--trace-out FILE]\n\
+           trace-gen    --pattern P --out FILE [--ops N] [--lines N] [--gap N]\n\
+                        [--phases N] [--seed N] [--preset P] [--set k=v ...]\n\
            print-config [--preset P] [--set k=v ...]\n\
            list\n\
+         \n\
+         a workload NAME may also be the replay form 'trace:<file>';\n\
+         trace-gen patterns: {patterns:?}\n\
          \n\
          common options:\n\
            --preset P        one of {presets:?}\n\
@@ -54,9 +66,21 @@ fn usage() -> ! {
                              gate writes one only when --out is given)\n\
            --baseline FILE   committed campaign.json to gate against\n\
            --current FILE    pre-generated campaign.json (skip re-running)\n\
-           --tolerance FRAC  allowed relative cycle drift (default: 0.05)\n",
+           --tolerance FRAC  allowed relative cycle drift (default: 0.05)\n\
+         \n\
+         trace options:\n\
+           --trace FILE      trace to replay (replay)\n\
+           --trace-out FILE  write the captured trace here (run, replay)\n\
+           --strict          replay: exit nonzero on any divergence\n\
+           --pattern P       trace-gen sharing pattern\n\
+           --ops N           trace-gen: memory ops per wavefront (default 64)\n\
+           --lines N         trace-gen: working-set cache lines (default 64)\n\
+           --gap N           trace-gen: compute cycles between ops (default 0)\n\
+           --phases N        trace-gen: kernel phases (default 1)\n\
+           --seed N          trace-gen: generator seed\n",
         presets = SystemConfig::PRESETS,
         campaigns = CampaignSpec::BUILTINS,
+        patterns = SharingPattern::NAMES,
     );
     std::process::exit(2)
 }
@@ -77,6 +101,26 @@ struct Args {
     baseline: Option<String>,
     current: Option<String>,
     tolerance: Option<f64>,
+    trace_file: Option<String>,
+    trace_out: Option<String>,
+    strict: bool,
+    pattern: Option<String>,
+    ops: Option<u32>,
+    lines: Option<u32>,
+    gap: Option<u32>,
+    phases: Option<u32>,
+    seed: Option<u64>,
+}
+
+/// Parse a numeric flag value or die with a usage message.
+fn parse_num<T: std::str::FromStr>(flag: &str, v: &str) -> T
+where
+    T::Err: std::fmt::Display,
+{
+    v.parse::<T>().unwrap_or_else(|e| {
+        eprintln!("{flag} {v}: {e}");
+        usage()
+    })
 }
 
 fn parse_args() -> Args {
@@ -98,6 +142,15 @@ fn parse_args() -> Args {
         baseline: None,
         current: None,
         tolerance: None,
+        trace_file: None,
+        trace_out: None,
+        strict: false,
+        pattern: None,
+        ops: None,
+        lines: None,
+        gap: None,
+        phases: None,
+        seed: None,
     };
     while let Some(flag) = argv.next() {
         let mut val = |name: &str| {
@@ -145,6 +198,15 @@ fn parse_args() -> Args {
                 }
             }
             "--out" | "-o" => a.out = Some(val("--out")),
+            "--trace" => a.trace_file = Some(val("--trace")),
+            "--trace-out" => a.trace_out = Some(val("--trace-out")),
+            "--strict" => a.strict = true,
+            "--pattern" => a.pattern = Some(val("--pattern")),
+            "--ops" => a.ops = Some(parse_num("--ops", &val("--ops"))),
+            "--lines" => a.lines = Some(parse_num("--lines", &val("--lines"))),
+            "--gap" => a.gap = Some(parse_num("--gap", &val("--gap"))),
+            "--phases" => a.phases = Some(parse_num("--phases", &val("--phases"))),
+            "--seed" => a.seed = Some(parse_num("--seed", &val("--seed"))),
             "--baseline" => a.baseline = Some(val("--baseline")),
             "--current" => a.current = Some(val("--current")),
             "--tolerance" => {
@@ -228,8 +290,18 @@ fn cmd_run(a: &Args) -> ExitCode {
         usage()
     };
     let cfg = build_config(a);
+    // try_build so a typoed name or bad trace file is a clean error,
+    // not a panic.
+    let wl = match halcone::workloads::try_build(workload, &cfg.workload_params()) {
+        Ok(wl) => wl,
+        Err(e) => {
+            eprintln!("run: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
     let mut rt = open_runtime(a);
-    let res = run_workload(&cfg, workload, rt.as_mut());
+    let capture = a.trace_out.is_some();
+    let (res, captured) = run_built_traced(&cfg, wl, rt.as_mut(), capture);
     println!("{}", res.summary());
     println!(
         "  cu loads/stores: {}/{}  mm reads/writes: {}/{}  pcie bytes: {}  mem-net bytes: {}  host: {:.3}s ({:.1}M events/s)",
@@ -251,11 +323,124 @@ fn cmd_run(a: &Args) -> ExitCode {
             c.desc
         );
     }
+    if let (Some(out), Some(t)) = (&a.trace_out, &captured) {
+        if let Err(e) = trace::save(t, out) {
+            eprintln!("run: {e}");
+            return ExitCode::FAILURE;
+        }
+        eprintln!(
+            "wrote trace {out}: {} records ({} memory ops) over {} GPUs x {} CUs",
+            t.total_records(),
+            t.total_ops(),
+            t.meta.n_gpus,
+            t.meta.cus_per_gpu,
+        );
+    }
     if res.all_passed() {
         ExitCode::SUCCESS
     } else {
         ExitCode::FAILURE
     }
+}
+
+/// Replay a trace through the current configuration, re-record it, and
+/// report per-access divergence against the input (docs/TRACE.md). With
+/// `--strict`, any divergence fails the command — the CI golden-trace
+/// oracle (structure-only for synthetic inputs, which carry no timing).
+fn cmd_replay(a: &Args) -> ExitCode {
+    let Some(path) = &a.trace_file else {
+        eprintln!("replay: --trace FILE required");
+        usage()
+    };
+    let baseline = match trace::load(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("replay: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let cfg = build_config(a);
+    let name = format!("trace:{path}");
+    // Build from the trace already in memory (a second `trace:` load
+    // could observe a rewritten file and diff against the wrong stream).
+    let wl = match trace::replay_workload(&name, &baseline, &cfg.workload_params()) {
+        Ok(wl) => wl,
+        Err(e) => {
+            eprintln!("replay: workload '{name}': {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let (res, rec) = run_built_traced(&cfg, wl, None, true);
+    let rec = rec.expect("replay always captures");
+    println!("{}", res.summary());
+    let rep = divergence::diff_traces(&baseline, &rec);
+    println!("{}", rep.describe());
+    if let Some(out) = &a.trace_out {
+        if let Err(e) = trace::save(&rec, out) {
+            eprintln!("replay: {e}");
+            return ExitCode::FAILURE;
+        }
+        eprintln!("wrote re-recorded trace {out}");
+    }
+    let synthetic = baseline.meta.cycles == 0;
+    let ok = if synthetic { rep.structural_identical() } else { rep.identical() };
+    if a.strict && !ok {
+        eprintln!("replay: divergence detected (--strict)");
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}
+
+/// Generate a synthetic sharing-pattern trace (geometry from the
+/// configuration flags, pattern knobs from the trace options).
+fn cmd_trace_gen(a: &Args) -> ExitCode {
+    let Some(pat) = &a.pattern else {
+        eprintln!("trace-gen: --pattern required, one of {:?}", SharingPattern::NAMES);
+        usage()
+    };
+    let pattern = match SharingPattern::parse(pat) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("trace-gen: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let cfg = build_config(a);
+    let spec = SynthSpec {
+        pattern,
+        n_gpus: cfg.n_gpus,
+        cus_per_gpu: cfg.cus_per_gpu,
+        wavefronts_per_cu: cfg.wavefronts_per_cu,
+        gpu_mem_bytes: cfg.gpu_mem_bytes,
+        ops_per_wavefront: a.ops.unwrap_or(64),
+        lines: a.lines.unwrap_or(64),
+        gap: a.gap.unwrap_or(0),
+        phases: a.phases.unwrap_or(1),
+        seed: a.seed.unwrap_or(0xA11CE),
+    };
+    let out = a.out.clone().unwrap_or_else(|| format!("{pat}.trc"));
+    let t = match trace::generate(&spec) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if let Err(e) = trace::save(&t, &out) {
+        eprintln!("trace-gen: {e}");
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "wrote {out}: pattern {}, {} memory ops over {} GPUs x {} CUs x {} wavefronts \
+         ({} phases); replay with `halcone run --workload trace:{out}`",
+        pattern.name(),
+        t.total_ops(),
+        t.meta.n_gpus,
+        t.meta.cus_per_gpu,
+        t.meta.wavefronts_per_cu,
+        t.meta.n_phases,
+    );
+    ExitCode::SUCCESS
 }
 
 fn cmd_compare(a: &Args) -> ExitCode {
@@ -472,6 +657,12 @@ fn cmd_verify(a: &Args) -> ExitCode {
         Some(w) => vec![w],
     };
     let cfg = build_config(a);
+    for name in &names {
+        if let Err(e) = halcone::workloads::validate_name(name) {
+            eprintln!("verify: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
     let mut rt = open_runtime(a);
     let mut ok = true;
     for name in names {
@@ -490,6 +681,8 @@ fn cmd_verify(a: &Args) -> ExitCode {
 fn cmd_list(a: &Args) -> ExitCode {
     println!("workloads (standard): {STANDARD:?}");
     println!("workloads (xtreme):   {XTREME:?}");
+    println!("workloads (replay):   trace:<file> (recorded via --trace-out or trace-gen)");
+    println!("trace-gen patterns:   {:?}", SharingPattern::NAMES);
     println!("presets:              {:?}", SystemConfig::PRESETS);
     println!("campaigns:            {:?}", CampaignSpec::BUILTINS);
     match Runtime::open(&a.artifacts) {
@@ -507,6 +700,8 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&args),
         "gate" => cmd_gate(&args),
         "verify" => cmd_verify(&args),
+        "replay" => cmd_replay(&args),
+        "trace-gen" => cmd_trace_gen(&args),
         "print-config" => {
             println!("{}", build_config(&args).describe());
             ExitCode::SUCCESS

@@ -1,0 +1,312 @@
+//! Replay divergence report: the per-access regression oracle.
+//!
+//! Aggregate cycle counts can agree by accident; two traces of the same
+//! logical run cannot. [`diff_traces`] compares a recording against a
+//! replay's re-recording (or any two traces) at three severities:
+//!
+//! * **shape** — stream geometry (GPU/CU counts, per-wavefront record
+//!   counts);
+//! * **structural** — per-record (phase, kind, addr, size, gap), aligned
+//!   **per wavefront**: a wavefront's records are in program order on
+//!   both sides, while the CU-level interleaving *across* wavefronts is
+//!   a scheduling artifact (synthetic traces are written in program
+//!   order, re-recordings in execution order). Any mismatch means the
+//!   replayed access stream is not the recorded one;
+//! * **timing** — per-record issue cycles plus the recorded run totals:
+//!   mismatches mean the stream was re-injected but scheduled
+//!   differently (a faithful-stream interleaving change always shows up
+//!   here).
+//!
+//! The CI golden-trace gate records at `--shards 1`, replays at
+//! `--shards 4` and fails on *any* divergence ([`DivergenceReport::identical`]).
+
+use std::collections::BTreeMap;
+
+use crate::trace::{Trace, TraceOp};
+
+/// Outcome of comparing two traces (`a` = baseline, `b` = candidate).
+#[derive(Debug, Default)]
+pub struct DivergenceReport {
+    /// Geometry/record-count mismatch, if any (first one found).
+    pub shape_mismatch: Option<String>,
+    /// Total records in the baseline / candidate.
+    pub records_a: u64,
+    pub records_b: u64,
+    /// Records compared pairwise (the overlap on shape mismatch).
+    pub compared: u64,
+    /// Records whose (phase, kind, addr, size, gap) differ within their
+    /// wavefront-aligned position.
+    pub structural_mismatches: u64,
+    pub first_structural: Option<String>,
+    /// Structurally equal records whose issue cycle differs.
+    pub cycle_mismatches: u64,
+    pub max_cycle_delta: u64,
+    pub first_cycle: Option<String>,
+    /// Recorded end-to-end cycles (0 = unknown, e.g. synthetic traces).
+    pub cycles: (u64, u64),
+    /// Recorded engine event totals (0 = unknown).
+    pub events: (u64, u64),
+}
+
+impl DivergenceReport {
+    /// The candidate re-issued exactly the baseline's access stream
+    /// (shape + structure), ignoring timing.
+    pub fn structural_identical(&self) -> bool {
+        self.shape_mismatch.is_none() && self.structural_mismatches == 0
+    }
+
+    /// Zero divergence: identical streams, identical per-access issue
+    /// cycles, and identical run totals where both sides recorded them.
+    pub fn identical(&self) -> bool {
+        self.structural_identical()
+            && self.cycle_mismatches == 0
+            && (self.cycles.0 == 0 || self.cycles.1 == 0 || self.cycles.0 == self.cycles.1)
+            && (self.events.0 == 0 || self.events.1 == 0 || self.events.0 == self.events.1)
+    }
+
+    /// Multi-line human rendering.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        if let Some(s) = &self.shape_mismatch {
+            out.push_str(&format!("SHAPE: {s}\n"));
+        }
+        if let Some(s) = &self.first_structural {
+            out.push_str(&format!(
+                "STRUCTURE: {} of {} records diverge; first at {s}\n",
+                self.structural_mismatches, self.compared
+            ));
+        }
+        if let Some(s) = &self.first_cycle {
+            out.push_str(&format!(
+                "TIMING: {} records issue at different cycles (max delta {}); first at {s}\n",
+                self.cycle_mismatches, self.max_cycle_delta
+            ));
+        }
+        if self.cycles.0 != 0 && self.cycles.1 != 0 && self.cycles.0 != self.cycles.1 {
+            out.push_str(&format!(
+                "TOTALS: end-to-end cycles {} -> {}\n",
+                self.cycles.0, self.cycles.1
+            ));
+        }
+        if self.events.0 != 0 && self.events.1 != 0 && self.events.0 != self.events.1 {
+            out.push_str(&format!(
+                "TOTALS: engine events {} -> {}\n",
+                self.events.0, self.events.1
+            ));
+        }
+        let verdict = if self.identical() {
+            "IDENTICAL".to_string()
+        } else if self.structural_identical() {
+            "STREAM OK, TIMING DIVERGED".to_string()
+        } else {
+            "DIVERGED".to_string()
+        };
+        out.push_str(&format!(
+            "divergence: {verdict} ({} baseline / {} candidate records, {} compared)",
+            self.records_a, self.records_b, self.compared
+        ));
+        out
+    }
+}
+
+fn structural_key(op: &TraceOp) -> (u32, crate::trace::TraceKind, u64, u32, u64) {
+    (op.phase, op.kind, op.addr, op.size, op.gap)
+}
+
+/// Bucket a CU stream by wavefront, preserving each wavefront's record
+/// order (program order on both sides).
+fn by_wavefront(ops: &[TraceOp]) -> BTreeMap<u32, Vec<&TraceOp>> {
+    let mut out: BTreeMap<u32, Vec<&TraceOp>> = BTreeMap::new();
+    for op in ops {
+        out.entry(op.wf).or_default().push(op);
+    }
+    out
+}
+
+/// Compare two traces record by record, aligned per wavefront.
+pub fn diff_traces(a: &Trace, b: &Trace) -> DivergenceReport {
+    let mut rep = DivergenceReport {
+        records_a: a.total_records(),
+        records_b: b.total_records(),
+        cycles: (a.meta.cycles, b.meta.cycles),
+        events: (a.meta.events, b.meta.events),
+        ..Default::default()
+    };
+    if a.streams.len() != b.streams.len() {
+        rep.shape_mismatch =
+            Some(format!("{} vs {} GPU streams", a.streams.len(), b.streams.len()));
+    }
+    let shape = |msg: &mut Option<String>, text: String| {
+        if msg.is_none() {
+            *msg = Some(text);
+        }
+    };
+    for (g, (ga, gb)) in a.streams.iter().zip(&b.streams).enumerate() {
+        if ga.len() != gb.len() {
+            shape(
+                &mut rep.shape_mismatch,
+                format!("gpu{g}: {} vs {} CU streams", ga.len(), gb.len()),
+            );
+        }
+        for (c, (ca, cb)) in ga.iter().zip(gb).enumerate() {
+            let (wa, wb) = (by_wavefront(ca), by_wavefront(cb));
+            let wfs: std::collections::BTreeSet<u32> =
+                wa.keys().chain(wb.keys()).copied().collect();
+            for wf in wfs {
+                let empty = Vec::new();
+                let la = wa.get(&wf).unwrap_or(&empty);
+                let lb = wb.get(&wf).unwrap_or(&empty);
+                if la.len() != lb.len() {
+                    shape(
+                        &mut rep.shape_mismatch,
+                        format!(
+                            "gpu{g}.cu{c} wf{wf}: {} vs {} records",
+                            la.len(),
+                            lb.len()
+                        ),
+                    );
+                }
+                for (i, (oa, ob)) in la.iter().copied().zip(lb.iter().copied()).enumerate() {
+                    rep.compared += 1;
+                    if structural_key(oa) != structural_key(ob) {
+                        rep.structural_mismatches += 1;
+                        if rep.first_structural.is_none() {
+                            rep.first_structural = Some(format!(
+                                "gpu{g}.cu{c} wf{wf} record {i}: {oa:?} vs {ob:?}"
+                            ));
+                        }
+                    } else if oa.cycle != ob.cycle {
+                        rep.cycle_mismatches += 1;
+                        let delta = oa.cycle.abs_diff(ob.cycle);
+                        rep.max_cycle_delta = rep.max_cycle_delta.max(delta);
+                        if rep.first_cycle.is_none() {
+                            rep.first_cycle = Some(format!(
+                                "gpu{g}.cu{c} wf{wf} record {i}: cycle {} vs {}",
+                                oa.cycle, ob.cycle
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{TraceKind, TraceMeta, TraceOp};
+
+    fn trace(cycle0: u64, cycles: u64) -> Trace {
+        Trace {
+            meta: TraceMeta {
+                workload: "t".into(),
+                n_gpus: 1,
+                cus_per_gpu: 1,
+                wavefronts_per_cu: 1,
+                n_phases: 1,
+                gpu_mem_bytes: 1 << 20,
+                cycles,
+                events: 10,
+                init: vec![],
+            },
+            streams: vec![vec![vec![
+                TraceOp {
+                    phase: 0,
+                    wf: 0,
+                    kind: TraceKind::Load,
+                    addr: 0x40,
+                    size: 64,
+                    gap: 1,
+                    cycle: cycle0,
+                },
+                TraceOp {
+                    phase: 0,
+                    wf: 0,
+                    kind: TraceKind::End,
+                    addr: 0,
+                    size: 0,
+                    gap: 0,
+                    cycle: cycle0 + 5,
+                },
+            ]]],
+        }
+    }
+
+    #[test]
+    fn identical_traces_report_identical() {
+        let a = trace(3, 100);
+        let rep = diff_traces(&a, &a.clone());
+        assert!(rep.identical());
+        assert_eq!(rep.compared, 2);
+        assert!(rep.describe().contains("IDENTICAL"));
+    }
+
+    #[test]
+    fn cycle_shift_is_timing_divergence_not_structural() {
+        let rep = diff_traces(&trace(3, 100), &trace(4, 100));
+        assert!(rep.structural_identical());
+        assert!(!rep.identical());
+        assert_eq!(rep.cycle_mismatches, 2);
+        assert_eq!(rep.max_cycle_delta, 1);
+        assert!(rep.describe().contains("TIMING"));
+    }
+
+    #[test]
+    fn address_change_is_structural() {
+        let a = trace(3, 100);
+        let mut b = a.clone();
+        b.streams[0][0][0].addr = 0x80;
+        let rep = diff_traces(&a, &b);
+        assert!(!rep.structural_identical());
+        assert_eq!(rep.structural_mismatches, 1);
+        assert!(rep.first_structural.as_deref().unwrap().contains("record 0"));
+    }
+
+    #[test]
+    fn total_cycle_drift_fails_unless_unknown() {
+        let rep = diff_traces(&trace(3, 100), &trace(3, 101));
+        assert!(!rep.identical());
+        assert!(rep.describe().contains("TOTALS"));
+        // Synthetic baselines (cycles = 0) skip the totals comparison.
+        let rep = diff_traces(&trace(3, 0), &trace(3, 101));
+        assert!(rep.identical());
+    }
+
+    #[test]
+    fn wavefront_interleaving_is_not_structural_divergence() {
+        // Program-ordered (synthetic) vs execution-ordered (re-recorded)
+        // CU streams: same per-wavefront sequences, different CU-level
+        // interleaving. The per-wavefront alignment must see through it.
+        let op = |wf: u32, addr: u64, cycle: u64| TraceOp {
+            phase: 0,
+            wf,
+            kind: TraceKind::Load,
+            addr,
+            size: 64,
+            gap: 0,
+            cycle,
+        };
+        let mut a = trace(0, 0);
+        a.streams[0][0] = vec![op(0, 0x40, 0), op(0, 0x80, 0), op(1, 0xc0, 0), op(1, 0x100, 0)];
+        let mut b = trace(0, 0);
+        b.streams[0][0] = vec![op(0, 0x40, 1), op(1, 0xc0, 2), op(0, 0x80, 3), op(1, 0x100, 4)];
+        let rep = diff_traces(&a, &b);
+        assert!(rep.structural_identical(), "{}", rep.describe());
+        assert_eq!(rep.compared, 4);
+        // Timing still differs record by record (synthetic side is 0).
+        assert_eq!(rep.cycle_mismatches, 4);
+    }
+
+    #[test]
+    fn shape_mismatch_is_reported() {
+        let a = trace(3, 100);
+        let mut b = a.clone();
+        b.streams[0][0].pop();
+        let rep = diff_traces(&a, &b);
+        assert!(rep.shape_mismatch.is_some());
+        assert!(!rep.identical());
+        assert_eq!(rep.compared, 1);
+    }
+}

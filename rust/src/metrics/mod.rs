@@ -7,6 +7,7 @@
 //! coordinator sweeps them into a [`RunMetrics`] after the run.
 
 pub mod bench;
+pub mod divergence;
 
 /// Counters kept by every cache controller (L1 and L2, all protocols).
 #[derive(Clone, Copy, Debug, Default)]

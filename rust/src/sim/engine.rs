@@ -409,7 +409,7 @@ mod tests {
     }
 
     impl Component for Pinger {
-    crate::impl_component_any!();
+        crate::impl_component_any!();
         fn name(&self) -> &str {
             &self.name
         }
@@ -544,8 +544,10 @@ mod tests {
             let mut e = Engine::sharded(2, 8);
             let a = CompId(0);
             let b = CompId(1);
-            e.add_to(0, Box::new(Teleporter { name: "a".into(), peer: b, fire: true, got_at: None }));
-            e.add_to(1, Box::new(Teleporter { name: "b".into(), peer: a, fire: false, got_at: None }));
+            let ta = Teleporter { name: "a".into(), peer: b, fire: true, got_at: None };
+            let tb = Teleporter { name: "b".into(), peer: a, fire: false, got_at: None };
+            e.add_to(0, Box::new(ta));
+            e.add_to(1, Box::new(tb));
             e.set_threads(threads);
             e.post(3, a, Msg::Tick);
             e.run_to_completion();

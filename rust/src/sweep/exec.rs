@@ -267,7 +267,8 @@ mod tests {
     #[test]
     fn runs_cells_and_indexes_results_in_spec_order() {
         let spec = tiny_spec("rl,fir");
-        let res = run_campaign(&spec, &ExecOptions { jobs: 4, progress: false, ..Default::default() }).unwrap();
+        let opts = ExecOptions { jobs: 4, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
         assert_eq!(res.cells.len(), 2);
         assert!(res.all_passed(), "smoke cells failed");
         for (i, c) in res.cells.iter().enumerate() {
@@ -298,7 +299,8 @@ mod tests {
              set.scale = 0.05\n",
         )
         .unwrap();
-        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false, ..Default::default() }).unwrap();
+        let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
         assert_eq!(res.cells.len(), 2);
         let broken = res.get("SM-WT-C-HALCONE+gpu_mem_bytes=4096", "rl").unwrap();
         assert_eq!(broken.status(), "error");
@@ -311,7 +313,8 @@ mod tests {
     #[test]
     fn jobs_larger_than_grid_is_fine() {
         let spec = tiny_spec("rl");
-        let res = run_campaign(&spec, &ExecOptions { jobs: 64, progress: false, ..Default::default() }).unwrap();
+        let opts = ExecOptions { jobs: 64, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
         assert_eq!(res.cells.len(), 1);
         assert!(res.all_passed());
     }

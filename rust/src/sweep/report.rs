@@ -266,7 +266,8 @@ mod tests {
     #[test]
     fn artifact_parses_and_carries_the_grid() {
         let spec = CampaignSpec::builtin("smoke").unwrap();
-        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false, ..Default::default() }).unwrap();
+        let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
         let text = to_json(&res);
         let doc = json::parse(&text).unwrap();
         assert_eq!(doc.get("campaign").unwrap().as_str(), Some("smoke"));
@@ -312,7 +313,8 @@ mod tests {
         // grid-defining field must survive the round trip.
         let mut spec = CampaignSpec::builtin("smoke").unwrap();
         spec.fixed.push(("l1_bytes".into(), "8192".into())); // like --set
-        let res = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false, ..Default::default() }).unwrap();
+        let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
         let doc = json::parse(&to_json(&res)).unwrap();
         let rebuilt = CampaignSpec::from_artifact(&doc).unwrap();
         assert_eq!(rebuilt.name, spec.name);
@@ -326,7 +328,8 @@ mod tests {
     #[test]
     fn baseline_cells_report_speedup_one() {
         let spec = CampaignSpec::builtin("smoke").unwrap();
-        let res = run_campaign(&spec, &ExecOptions { jobs: 1, progress: false, ..Default::default() }).unwrap();
+        let opts = ExecOptions { jobs: 1, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
         let base = baseline_label(&res);
         assert_eq!(base, "SM-WT-NC");
         for wl in &res.spec.workloads {

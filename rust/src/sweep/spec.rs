@@ -67,28 +67,52 @@ pub struct CampaignSpec {
 }
 
 impl CampaignSpec {
-    /// Built-in campaign names.
-    pub const BUILTINS: [&'static str; 5] = ["smoke", "fig7", "fig8", "fig8cu", "tab4"];
+    /// Built-in campaign names. The `smoke-*` variants isolate one
+    /// coherence protocol each at the smoke geometry — the CI protocol
+    /// matrix runs its zero-tolerance gate round-trip per variant.
+    pub const BUILTINS: [&str; 8] =
+        ["smoke", "smoke-halcone", "smoke-hmg", "smoke-none", "fig7", "fig8", "fig8cu", "tab4"];
+
+    /// The smoke geometry: tiny enough that a whole campaign runs in
+    /// seconds on CI (the runner tests' "small" configs).
+    const SMOKE_GEOMETRY: &str = "set.n_gpus = 2\n\
+         set.cus_per_gpu = 2\n\
+         set.wavefronts_per_cu = 2\n\
+         set.l2_banks = 2\n\
+         set.stacks_per_gpu = 2\n\
+         set.gpu_mem_bytes = 67108864\n\
+         set.scale = 0.05\n";
 
     /// Look up a built-in campaign.
     pub fn builtin(name: &str) -> Result<CampaignSpec, String> {
         let standard = workloads::STANDARD.join(",");
         let presets = SystemConfig::PRESETS.join(",");
         let text = match name {
-            // Tiny geometry (the runner tests' "small" configs) so CI can
-            // exercise the whole pipeline in seconds.
-            "smoke" => "name = smoke\n\
+            "smoke" => format!(
+                "name = smoke\n\
                  presets = SM-WT-NC,SM-WT-C-HALCONE\n\
                  workloads = rl,fir\n\
-                 set.n_gpus = 2\n\
-                 set.cus_per_gpu = 2\n\
-                 set.wavefronts_per_cu = 2\n\
-                 set.l2_banks = 2\n\
-                 set.stacks_per_gpu = 2\n\
-                 set.gpu_mem_bytes = 67108864\n\
-                 set.scale = 0.05\n\
-                 baseline = SM-WT-NC\n"
-                .to_string(),
+                 baseline = SM-WT-NC\n{}",
+                Self::SMOKE_GEOMETRY
+            ),
+            "smoke-halcone" => format!(
+                "name = smoke-halcone\n\
+                 presets = SM-WT-C-HALCONE\n\
+                 workloads = rl,fir\n{}",
+                Self::SMOKE_GEOMETRY
+            ),
+            "smoke-hmg" => format!(
+                "name = smoke-hmg\n\
+                 presets = RDMA-WB-C-HMG\n\
+                 workloads = rl,fir\n{}",
+                Self::SMOKE_GEOMETRY
+            ),
+            "smoke-none" => format!(
+                "name = smoke-none\n\
+                 presets = SM-WT-NC,SM-WB-NC,RDMA-WB-NC\n\
+                 workloads = rl,fir\n{}",
+                Self::SMOKE_GEOMETRY
+            ),
             "fig7" => format!(
                 "name = fig7\npresets = {presets}\nworkloads = {standard}\nbaseline = RDMA-WB-NC\n"
             ),
@@ -309,11 +333,11 @@ impl CampaignSpec {
             SystemConfig::try_preset(p)?;
         }
         for w in &self.workloads {
-            if !workloads::is_known(w) {
-                return Err(format!(
-                    "unknown workload '{w}' (see `halcone list`)"
-                ));
-            }
+            // Deep validation: registry membership, and for the
+            // `trace:<file>` form that the file exists and its header
+            // parses — a bad trace path fails the spec here instead of
+            // panicking mid-campaign.
+            workloads::validate_name(w)?;
         }
         for (k, vs) in &self.axes {
             if vs.is_empty() {
@@ -494,6 +518,28 @@ mod tests {
         assert_eq!(CampaignSpec::builtin("fig8").unwrap().cells().unwrap().len(), 55);
         assert_eq!(CampaignSpec::builtin("smoke").unwrap().cells().unwrap().len(), 4);
         assert!(CampaignSpec::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn protocol_smoke_variants_cover_one_protocol_each() {
+        let hc = CampaignSpec::builtin("smoke-halcone").unwrap();
+        assert_eq!(hc.presets, ["SM-WT-C-HALCONE"]);
+        assert_eq!(hc.cells().unwrap().len(), 2);
+        let hmg = CampaignSpec::builtin("smoke-hmg").unwrap();
+        assert_eq!(hmg.presets, ["RDMA-WB-C-HMG"]);
+        assert_eq!(hmg.cells().unwrap().len(), 2);
+        let none = CampaignSpec::builtin("smoke-none").unwrap();
+        assert_eq!(none.cells().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn bad_trace_workload_fails_spec_validation_with_a_clear_error() {
+        let e = CampaignSpec::parse("workloads = trace:/no/such/file.trc\n").unwrap_err();
+        assert!(e.contains("file.trc"), "{e}");
+        // Still an error (not a panic) when it sneaks in via a filter-free
+        // single-workload spec.
+        let e = CampaignSpec::parse("workloads = rl,trace:missing.trc\n").unwrap_err();
+        assert!(e.contains("missing.trc"), "{e}");
     }
 
     #[test]

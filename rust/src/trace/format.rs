@@ -1,0 +1,381 @@
+//! The on-disk trace format: dependency-free, compact, versioned.
+//!
+//! Layout (all integers are LEB128 varints unless noted):
+//!
+//! ```text
+//! magic      8 raw bytes  "HALCTRC\0"
+//! version    varint       FORMAT_VERSION (readers reject anything else)
+//! workload   varint len + UTF-8 bytes
+//! geometry   n_gpus, cus_per_gpu, wavefronts_per_cu, n_phases
+//! space      gpu_mem_bytes
+//! totals     cycles, events          (0 = unknown, e.g. synthetic)
+//! init       count, then (addr, f32 count) pairs
+//! streams    n_gpus x { cus_per_gpu x { count, then records } }
+//! record     tag byte (0 load / 1 store / 2 end),
+//!            phase, wf, gap, cycle, then addr + size for load/store
+//! ```
+//!
+//! Compatibility rules: the version is bumped on *any* layout change —
+//! there are no in-band extensions — and readers reject unknown versions
+//! with a regenerate hint rather than guessing (docs/TRACE.md).
+
+use crate::trace::{Trace, TraceKind, TraceMeta, TraceOp};
+
+/// Current (and only) format version.
+pub const FORMAT_VERSION: u64 = 1;
+
+const MAGIC: &[u8; 8] = b"HALCTRC\0";
+
+fn put(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn tag(kind: TraceKind) -> u8 {
+    match kind {
+        TraceKind::Load => 0,
+        TraceKind::Store => 1,
+        TraceKind::End => 2,
+    }
+}
+
+/// Serialize a trace (the writer assumes a [`Trace::validate`]-clean
+/// input; the recorder and generator only produce such traces).
+pub fn encode(t: &Trace) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 8 * t.total_records() as usize);
+    out.extend_from_slice(MAGIC);
+    put(&mut out, FORMAT_VERSION);
+    let m = &t.meta;
+    put_str(&mut out, &m.workload);
+    put(&mut out, m.n_gpus as u64);
+    put(&mut out, m.cus_per_gpu as u64);
+    put(&mut out, m.wavefronts_per_cu as u64);
+    put(&mut out, m.n_phases as u64);
+    put(&mut out, m.gpu_mem_bytes);
+    put(&mut out, m.cycles);
+    put(&mut out, m.events);
+    put(&mut out, m.init.len() as u64);
+    for &(addr, n) in &m.init {
+        put(&mut out, addr);
+        put(&mut out, n);
+    }
+    for gpu in &t.streams {
+        for ops in gpu {
+            put(&mut out, ops.len() as u64);
+            for op in ops {
+                out.push(tag(op.kind));
+                put(&mut out, op.phase as u64);
+                put(&mut out, op.wf as u64);
+                put(&mut out, op.gap);
+                put(&mut out, op.cycle);
+                if op.kind != TraceKind::End {
+                    put(&mut out, op.addr);
+                    put(&mut out, op.size as u64);
+                }
+            }
+        }
+    }
+    out
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Cur<'_> {
+    fn byte(&mut self, what: &str) -> Result<u8, String> {
+        let v = *self
+            .b
+            .get(self.i)
+            .ok_or_else(|| format!("truncated trace: EOF reading {what} at byte {}", self.i))?;
+        self.i += 1;
+        Ok(v)
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.byte(what)?;
+            if shift >= 64 || (shift == 63 && byte > 1) {
+                return Err(format!("varint overflow reading {what} at byte {}", self.i));
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let v = self.u64(what)?;
+        u32::try_from(v).map_err(|_| format!("{what} value {v} exceeds 32 bits"))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String, String> {
+        let n = self.u64(what)? as usize;
+        if n > 4096 {
+            return Err(format!("{what} string length {n} is absurd"));
+        }
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| format!("truncated trace: EOF in {what} string"))?;
+        let s = std::str::from_utf8(&self.b[self.i..end])
+            .map_err(|e| format!("{what} is not UTF-8: {e}"))?
+            .to_string();
+        self.i = end;
+        Ok(s)
+    }
+}
+
+/// Parse just the header of a serialized trace (cheap existence /
+/// compatibility probe for campaign-spec validation).
+pub fn decode_meta(bytes: &[u8]) -> Result<TraceMeta, String> {
+    let mut c = Cur { b: bytes, i: 0 };
+    read_meta(&mut c)
+}
+
+fn read_meta(c: &mut Cur) -> Result<TraceMeta, String> {
+    if c.b.len() < MAGIC.len() || &c.b[..MAGIC.len()] != MAGIC {
+        return Err("not a HALCONE trace (bad magic)".into());
+    }
+    c.i = MAGIC.len();
+    let version = c.u64("version")?;
+    if version != FORMAT_VERSION {
+        return Err(format!(
+            "trace format version {version} is not the supported {FORMAT_VERSION}; \
+             regenerate the trace with this binary"
+        ));
+    }
+    let workload = c.str("workload")?;
+    let n_gpus = c.u32("n_gpus")?;
+    let cus_per_gpu = c.u32("cus_per_gpu")?;
+    let wavefronts_per_cu = c.u32("wavefronts_per_cu")?;
+    let n_phases = c.u32("n_phases")?;
+    let gpu_mem_bytes = c.u64("gpu_mem_bytes")?;
+    let cycles = c.u64("cycles")?;
+    let events = c.u64("events")?;
+    let n_init = c.u64("init count")? as usize;
+    if n_init > 1 << 24 {
+        return Err(format!("init slice count {n_init} is absurd"));
+    }
+    let mut init = Vec::with_capacity(n_init);
+    for _ in 0..n_init {
+        let addr = c.u64("init addr")?;
+        let n = c.u64("init len")?;
+        init.push((addr, n));
+    }
+    Ok(TraceMeta {
+        workload,
+        n_gpus,
+        cus_per_gpu,
+        wavefronts_per_cu,
+        n_phases,
+        gpu_mem_bytes,
+        cycles,
+        events,
+        init,
+    })
+}
+
+/// Parse a full serialized trace, validating structure on the way in.
+pub fn decode(bytes: &[u8]) -> Result<Trace, String> {
+    let mut c = Cur { b: bytes, i: 0 };
+    let meta = read_meta(&mut c)?;
+    meta.check_bounds()?;
+    let mut streams = Vec::with_capacity(meta.n_gpus as usize);
+    for g in 0..meta.n_gpus {
+        let mut gpu = Vec::with_capacity(meta.cus_per_gpu as usize);
+        for cu in 0..meta.cus_per_gpu {
+            let what = format!("gpu{g}.cu{cu}");
+            let n = c.u64(&format!("{what} record count"))? as usize;
+            if n > bytes.len() {
+                // Each record is at least 5 bytes; a count beyond the
+                // input size is corruption, not a big trace.
+                return Err(format!("{what}: record count {n} exceeds the input size"));
+            }
+            let mut ops = Vec::with_capacity(n);
+            for i in 0..n {
+                let what = format!("{what} record {i}");
+                let kind = match c.byte(&what)? {
+                    0 => TraceKind::Load,
+                    1 => TraceKind::Store,
+                    2 => TraceKind::End,
+                    t => return Err(format!("{what}: unknown record tag {t}")),
+                };
+                let phase = c.u32(&what)?;
+                let wf = c.u32(&what)?;
+                let gap = c.u64(&what)?;
+                let cycle = c.u64(&what)?;
+                let (addr, size) = if kind == TraceKind::End {
+                    (0, 0)
+                } else {
+                    (c.u64(&what)?, c.u32(&what)?)
+                };
+                ops.push(TraceOp { phase, wf, kind, addr, size, gap, cycle });
+            }
+            gpu.push(ops);
+        }
+        streams.push(gpu);
+    }
+    if c.i != c.b.len() {
+        return Err(format!("trailing garbage after the trace at byte {}", c.i));
+    }
+    let t = Trace { meta, streams };
+    t.validate()?;
+    Ok(t)
+}
+
+/// Write a trace to `path`.
+pub fn save(t: &Trace, path: &str) -> Result<(), String> {
+    std::fs::write(path, encode(t)).map_err(|e| format!("writing trace {path}: {e}"))
+}
+
+/// Read and parse a trace file.
+pub fn load(path: &str) -> Result<Trace, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("reading trace {path}: {e}"))?;
+    decode(&bytes).map_err(|e| format!("trace {path}: {e}"))
+}
+
+/// Read and parse just a trace file's header.
+pub fn load_meta(path: &str) -> Result<TraceMeta, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("reading trace {path}: {e}"))?;
+    decode_meta(&bytes).map_err(|e| format!("trace {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Rng;
+
+    fn arbitrary_trace(seed: u64, gpus: u32, cus: u32) -> Trace {
+        let mut rng = Rng(seed);
+        let gmb = 1u64 << 22;
+        let n_phases = 2;
+        let streams = (0..gpus)
+            .map(|_| {
+                (0..cus)
+                    .map(|_| {
+                        let mut ops = Vec::new();
+                        for wf in 0..2u32 {
+                            for phase in 0..n_phases {
+                                for _ in 0..rng.below(6) {
+                                    let line = rng.below(gpus as u64 * gmb / 64 - 1);
+                                    let size = 4 * (1 + rng.below(16)) as u32;
+                                    let kind = if rng.below(2) == 0 {
+                                        TraceKind::Load
+                                    } else {
+                                        TraceKind::Store
+                                    };
+                                    ops.push(TraceOp {
+                                        phase,
+                                        wf,
+                                        kind,
+                                        addr: line * 64 + (64 - size as u64),
+                                        size,
+                                        gap: rng.below(1000),
+                                        cycle: rng.below(1 << 40),
+                                    });
+                                }
+                                ops.push(TraceOp {
+                                    phase,
+                                    wf,
+                                    kind: TraceKind::End,
+                                    addr: 0,
+                                    size: 0,
+                                    gap: rng.below(10),
+                                    cycle: rng.below(1 << 40),
+                                });
+                            }
+                        }
+                        ops
+                    })
+                    .collect()
+            })
+            .collect();
+        Trace {
+            meta: TraceMeta {
+                workload: format!("arb{seed}"),
+                n_gpus: gpus,
+                cus_per_gpu: cus,
+                wavefronts_per_cu: 2,
+                n_phases,
+                gpu_mem_bytes: gmb,
+                cycles: rng.below(1 << 50),
+                events: rng.below(1 << 50),
+                init: vec![(0x1000, 64), (gmb + 0x1000, 17)],
+            },
+            streams,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_arbitrary_traces() {
+        for seed in [1u64, 7, 0xDEAD, 0x5EED] {
+            let t = arbitrary_trace(seed, 2, 3);
+            t.validate().unwrap();
+            let bytes = encode(&t);
+            let back = decode(&bytes).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(back, t, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn meta_decodes_without_streams() {
+        let t = arbitrary_trace(3, 1, 2);
+        let bytes = encode(&t);
+        assert_eq!(decode_meta(&bytes).unwrap(), t.meta);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_trailing() {
+        let t = arbitrary_trace(9, 1, 1);
+        let good = encode(&t);
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).unwrap_err().contains("magic"));
+
+        let mut bad = good.clone();
+        bad[8] = 99; // version varint
+        assert!(decode(&bad).unwrap_err().contains("version 99"));
+
+        for cut in [4, 12, good.len() / 2, good.len() - 1] {
+            assert!(decode(&good[..cut]).is_err(), "cut at {cut} must fail");
+        }
+
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode(&bad).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn varint_boundaries_roundtrip() {
+        let mut out = Vec::new();
+        let vals = [0, 1, 127, 128, 16383, 16384, u64::MAX - 1, u64::MAX];
+        for &v in &vals {
+            put(&mut out, v);
+        }
+        let mut c = Cur { b: &out, i: 0 };
+        for &v in &vals {
+            assert_eq!(c.u64("v").unwrap(), v);
+        }
+        assert_eq!(c.i, out.len());
+    }
+}

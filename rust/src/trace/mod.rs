@@ -1,0 +1,341 @@
+//! Deterministic trace capture & replay (ISSUE 5).
+//!
+//! HALCONE's evaluation replays identical memory-access streams across
+//! protocols and topologies; MGSim/MGMark showed a multi-GPU framework
+//! becomes far more useful once workload *execution* is decoupled from
+//! *traffic generation*. This module is that decoupling layer:
+//!
+//! * **Record** — `halcone run --trace-out FILE` captures every CU-issued
+//!   memory operation (phase, wavefront, kind, address, size, issue cycle
+//!   and the compute *gap* since the wavefront's previous memory op) into
+//!   a compact dependency-free binary format ([`format`]) with a
+//!   versioned header and per-GPU/per-CU streams. The tap lives in the
+//!   CU issue path and buffers per component, so the assembled trace is
+//!   a pure function of the simulated configuration — byte-identical at
+//!   every `--shards` level, exactly like the simulation itself.
+//! * **Replay** — the `trace:<file>` pseudo-workload
+//!   ([`replay`]) reconstructs per-wavefront register programs from the
+//!   stream (compute gaps become [`crate::gpu::CuOp::Delay`] ops, which
+//!   contribute identical issue latency and zero events) and re-injects
+//!   them through the unmodified coherence/cache/TSU stack, on any
+//!   protocol and — partition sizes permitting — a folded GPU/CU count.
+//!   Replaying a trace under its recording configuration reproduces the
+//!   original cycle count and event count *exactly*: timing in this
+//!   simulator depends on addresses, sizes, ordering and issue gaps,
+//!   never on data values.
+//! * **Synthesize** — `halcone trace-gen` ([`synth`]) emits parameterized
+//!   sharing patterns (private, read-mostly, migratory, false-sharing,
+//!   all-to-all) that the hand-written workload models cannot express,
+//!   opening protocol stress scenarios without writing Rust.
+//!
+//! Divergence between two traces (e.g. a recording and its replay) is
+//! quantified by [`crate::metrics::divergence`] — the per-access
+//! regression oracle behind the CI golden-trace gate.
+
+pub mod format;
+pub mod replay;
+pub mod synth;
+
+pub use format::{decode, encode, load, load_meta, save, FORMAT_VERSION};
+pub use replay::replay_workload;
+pub use synth::{generate, SharingPattern, SynthSpec};
+
+/// What kind of record a [`TraceOp`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// CU load (scalar or coalesced vector; `size` distinguishes).
+    Load,
+    /// CU store.
+    Store,
+    /// Wavefront retirement marker: carries the trailing compute gap and
+    /// flags that the wavefront had a (possibly compute-only) program.
+    End,
+}
+
+/// One captured CU event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceOp {
+    /// Kernel-launch phase the op was issued in.
+    pub phase: u32,
+    /// Wavefront slot within the issuing CU.
+    pub wf: u32,
+    pub kind: TraceKind,
+    /// Byte address (0 for `End`).
+    pub addr: u64,
+    /// Access bytes: 4 for scalar ops, `4*n` for coalesced vector ops
+    /// (0 for `End`).
+    pub size: u32,
+    /// Issue-latency cycles the wavefront accumulated (ALU ops, explicit
+    /// delays) since its previous memory op in the same phase. Replay
+    /// re-inserts this as a `Delay` op, reproducing issue timing exactly.
+    pub gap: u64,
+    /// CU-local issue cycle in the recorded run. Pure metadata for the
+    /// divergence report — replay timing derives from `gap`, never from
+    /// this field.
+    pub cycle: u64,
+}
+
+/// Trace-wide header: recording geometry plus recorded-run totals.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceMeta {
+    /// Workload the trace was recorded from (or `synth-<pattern>`).
+    pub workload: String,
+    pub n_gpus: u32,
+    pub cus_per_gpu: u32,
+    pub wavefronts_per_cu: u32,
+    pub n_phases: u32,
+    /// Bytes per GPU partition at recording time. Replay requires the
+    /// same partition size (addresses are rehomed partition-relative on
+    /// GPU-count folds).
+    pub gpu_mem_bytes: u64,
+    /// End-to-end cycles of the recording run (0 = unknown/synthetic).
+    pub cycles: u64,
+    /// Engine events of the recording run (0 = unknown/synthetic).
+    pub events: u64,
+    /// Initial-image layout as (address, f32 count). Values are not
+    /// recorded — they never affect timing — but the layout reproduces
+    /// the RDMA host-copy delay, which is charged per homed byte.
+    pub init: Vec<(u64, u64)>,
+}
+
+/// A complete trace: header plus `[gpu][cu]` record streams, each in
+/// that CU's local issue order (deterministic at every shard count).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub streams: Vec<Vec<Vec<TraceOp>>>,
+}
+
+impl TraceMeta {
+    /// Cheap header sanity: bounds every count that sizes an allocation,
+    /// so a corrupt header fails before the decoder reserves anything.
+    pub fn check_bounds(&self) -> Result<(), String> {
+        if self.n_gpus == 0 || self.cus_per_gpu == 0 {
+            return Err("trace header has a zero GPU or CU count".into());
+        }
+        if self.gpu_mem_bytes == 0 {
+            return Err("trace header has gpu_mem_bytes = 0".into());
+        }
+        if self.n_gpus > MAX_GEOMETRY
+            || self.cus_per_gpu > MAX_GEOMETRY
+            || self.wavefronts_per_cu > MAX_GEOMETRY
+            || self.n_phases > MAX_GEOMETRY
+        {
+            return Err(format!(
+                "trace header geometry {}x{}x{} / {} phases is absurd",
+                self.n_gpus, self.cus_per_gpu, self.wavefronts_per_cu, self.n_phases
+            ));
+        }
+        // Bound the partition size so `gpu_mem_bytes * n_gpus` (the
+        // address-space extent every access is validated against) cannot
+        // overflow on a crafted header.
+        if self.gpu_mem_bytes > MAX_PARTITION_BYTES {
+            return Err(format!(
+                "trace header gpu_mem_bytes {} is absurd",
+                self.gpu_mem_bytes
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Trace {
+    /// Total records across all streams (including `End` markers).
+    pub fn total_records(&self) -> u64 {
+        self.streams
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|cu| cu.len() as u64)
+            .sum()
+    }
+
+    /// Total memory operations (loads + stores, excluding `End`).
+    pub fn total_ops(&self) -> u64 {
+        self.streams
+            .iter()
+            .flat_map(|g| g.iter())
+            .flat_map(|cu| cu.iter())
+            .filter(|op| op.kind != TraceKind::End)
+            .count() as u64
+    }
+
+    /// Structural sanity shared by the decoder and the replayer (synthetic
+    /// traces are built in memory and never pass through `decode`).
+    pub fn validate(&self) -> Result<(), String> {
+        let m = &self.meta;
+        m.check_bounds()?;
+        if self.streams.len() != m.n_gpus as usize {
+            return Err(format!(
+                "trace has {} GPU streams but the header says {}",
+                self.streams.len(),
+                m.n_gpus
+            ));
+        }
+        let total = m.gpu_mem_bytes * m.n_gpus as u64;
+        for (g, gpu) in self.streams.iter().enumerate() {
+            if gpu.len() != m.cus_per_gpu as usize {
+                return Err(format!(
+                    "gpu {g} has {} CU streams but the header says {}",
+                    gpu.len(),
+                    m.cus_per_gpu
+                ));
+            }
+            for (c, ops) in gpu.iter().enumerate() {
+                for (i, op) in ops.iter().enumerate() {
+                    let at = format!("gpu{g}.cu{c} record {i}");
+                    if op.phase >= m.n_phases {
+                        return Err(format!(
+                            "{at}: phase {} out of range (header has {} phases)",
+                            op.phase, m.n_phases
+                        ));
+                    }
+                    if op.wf >= MAX_WAVEFRONT {
+                        return Err(format!("{at}: wavefront {} is absurd", op.wf));
+                    }
+                    match op.kind {
+                        TraceKind::End => {
+                            if op.addr != 0 || op.size != 0 {
+                                return Err(format!("{at}: End record carries addr/size"));
+                            }
+                        }
+                        TraceKind::Load | TraceKind::Store => {
+                            if op.size == 0 || op.size > 64 || op.size % 4 != 0 {
+                                return Err(format!("{at}: bad access size {}", op.size));
+                            }
+                            let end = match op.addr.checked_add(op.size as u64) {
+                                Some(end) if end <= total => end,
+                                _ => {
+                                    return Err(format!(
+                                        "{at}: address {:#x} is outside the recorded \
+                                         {} x {} B space",
+                                        op.addr, m.n_gpus, m.gpu_mem_bytes
+                                    ))
+                                }
+                            };
+                            if op.addr / 64 != (end - 1) / 64 {
+                                return Err(format!(
+                                    "{at}: access at {:#x}+{} crosses a cache line",
+                                    op.addr, op.size
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for (i, &(addr, n)) in m.init.iter().enumerate() {
+            if n > MAX_INIT_F32 {
+                return Err(format!("init slice {i}: {n} f32s is absurd"));
+            }
+            match addr.checked_add(4 * n) {
+                Some(end) if end <= total => {}
+                _ => {
+                    return Err(format!(
+                        "init slice {i} at {addr:#x}+{n} f32s is outside the address space"
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Upper bound on a sane wavefront index (guards slot-grid allocation).
+pub const MAX_WAVEFRONT: u32 = 1 << 16;
+
+/// Upper bound on any header geometry count (guards decoder allocation).
+pub const MAX_GEOMETRY: u32 = 1 << 12;
+
+/// Upper bound on one GPU partition (256 TB — keeps the address-space
+/// extent `gpu_mem_bytes * n_gpus` far from u64 overflow).
+pub const MAX_PARTITION_BYTES: u64 = 1 << 48;
+
+/// Upper bound on one init slice (guards replay's zero-fill allocation).
+pub const MAX_INIT_F32: u64 = 1 << 28;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Trace {
+        Trace {
+            meta: TraceMeta {
+                workload: "t".into(),
+                n_gpus: 1,
+                cus_per_gpu: 1,
+                wavefronts_per_cu: 1,
+                n_phases: 1,
+                gpu_mem_bytes: 1 << 20,
+                cycles: 10,
+                events: 5,
+                init: vec![(0x1000, 4)],
+            },
+            streams: vec![vec![vec![
+                TraceOp {
+                    phase: 0,
+                    wf: 0,
+                    kind: TraceKind::Load,
+                    addr: 0x1000,
+                    size: 64,
+                    gap: 2,
+                    cycle: 3,
+                },
+                TraceOp {
+                    phase: 0,
+                    wf: 0,
+                    kind: TraceKind::End,
+                    addr: 0,
+                    size: 0,
+                    gap: 0,
+                    cycle: 9,
+                },
+            ]]],
+        }
+    }
+
+    #[test]
+    fn valid_trace_passes_and_counts_ops() {
+        let t = tiny();
+        t.validate().unwrap();
+        assert_eq!(t.total_records(), 2);
+        assert_eq!(t.total_ops(), 1);
+    }
+
+    #[test]
+    fn validate_rejects_structural_corruption() {
+        let mut t = tiny();
+        t.streams[0][0][0].phase = 7;
+        assert!(t.validate().unwrap_err().contains("phase"));
+
+        let mut t = tiny();
+        t.streams[0][0][0].size = 6;
+        assert!(t.validate().unwrap_err().contains("size"));
+
+        let mut t = tiny();
+        t.streams[0][0][0].addr = 0x1020; // 64B starting mid-line
+        assert!(t.validate().unwrap_err().contains("crosses"));
+
+        let mut t = tiny();
+        t.streams[0][0][0].addr = (1 << 20) - 4;
+        t.streams[0][0][0].size = 64;
+        assert!(t.validate().is_err());
+
+        let mut t = tiny();
+        t.streams.push(Vec::new());
+        assert!(t.validate().unwrap_err().contains("GPU streams"));
+
+        let mut t = tiny();
+        t.meta.init[0] = (0, MAX_INIT_F32 + 1);
+        assert!(t.validate().unwrap_err().contains("init"));
+
+        let mut t = tiny();
+        t.streams[0][0][1].size = 4; // End with payload
+        assert!(t.validate().unwrap_err().contains("End"));
+
+        // A crafted partition size must be a clean error, not an
+        // address-space-extent overflow.
+        let mut t = tiny();
+        t.meta.gpu_mem_bytes = u64::MAX / 2;
+        assert!(t.validate().unwrap_err().contains("gpu_mem_bytes"));
+    }
+}

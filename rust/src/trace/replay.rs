@@ -1,0 +1,255 @@
+//! Trace replay: reconstruct per-wavefront register programs from a
+//! recorded stream and re-inject them through the unmodified
+//! coherence/cache/TSU stack.
+//!
+//! # Exactness
+//!
+//! Under the recording geometry, replay reproduces the original run's
+//! cycle count, event count and cache/MM counters *exactly*: every
+//! memory op keeps its address, size, wavefront slot and program order,
+//! and the compute between ops is re-inserted as a single
+//! [`CuOp::Delay`] carrying the recorded issue-latency gap — which
+//! contributes the identical issue delay and, like the ALU ops it
+//! replaces, zero engine events. Store payloads are replayed as zeros
+//! (data values never influence timing anywhere in the hierarchy), so
+//! replayed runs carry no functional checks.
+//!
+//! # Remap
+//!
+//! Replaying on fewer GPUs/CUs than recorded *folds* the streams:
+//! source GPU `g` maps to `g % n_gpus`, source CU `c` to
+//! `c % cus_per_gpu`, and each folded source CU gets its own disjoint
+//! block of wavefront slots on the target CU (stagger offsets shift, so
+//! folded replays are deterministic but not cycle-comparable to the
+//! recording). Addresses homed beyond the new GPU count are rehomed
+//! partition-relative, which requires equal `gpu_mem_bytes`; extra
+//! GPUs/CUs on the target simply idle.
+
+use crate::gpu::CuOp;
+use crate::trace::{Trace, TraceKind};
+use crate::workloads::{Phase, Workload, WorkloadParams};
+
+/// Fold `addr` into the first `n_gpus` partitions of `gmb` bytes each,
+/// preserving the partition-relative offset.
+fn rehome(addr: u64, gmb: u64, n_gpus: u64) -> u64 {
+    let home = addr / gmb;
+    if home < n_gpus {
+        addr
+    } else {
+        (home % n_gpus) * gmb + addr % gmb
+    }
+}
+
+/// Append `gap` cycles of compute as `Delay` ops (split only in the
+/// absurd case of a gap beyond `u32::MAX`).
+fn push_gap(list: &mut Vec<CuOp>, mut gap: u64) {
+    while gap > u32::MAX as u64 {
+        list.push(CuOp::Delay { cycles: u32::MAX });
+        gap -= u32::MAX as u64;
+    }
+    if gap > 0 {
+        list.push(CuOp::Delay { cycles: gap as u32 });
+    }
+}
+
+/// Build the replay pseudo-workload for `t` under the target geometry in
+/// `p`. `name` becomes the workload's reported name (the CLI passes the
+/// `trace:<file>` form through).
+pub fn replay_workload(name: &str, t: &Trace, p: &WorkloadParams) -> Result<Workload, String> {
+    t.validate()?;
+    let gmb = t.meta.gpu_mem_bytes;
+    if p.map.gpu_mem_bytes != gmb {
+        return Err(format!(
+            "recorded with gpu_mem_bytes={gmb} but the config has {}; the \
+             partition-preserving GPU remap needs equal partition sizes",
+            p.map.gpu_mem_bytes
+        ));
+    }
+    let (tg, tc) = (t.meta.n_gpus as usize, t.meta.cus_per_gpu as usize);
+    let (g2, c2) = (p.n_gpus as usize, p.cus_per_gpu as usize);
+    if g2 == 0 || c2 == 0 {
+        return Err("replay target has no GPUs or no CUs".into());
+    }
+
+    // Wavefront-slot layout: each (source gpu fold, source cu fold) rank
+    // owns a disjoint block of `stride` slots on its target CU.
+    let folds_c = tc.div_ceil(c2);
+    let max_wf = t
+        .streams
+        .iter()
+        .flat_map(|g| g.iter())
+        .flat_map(|cu| cu.iter())
+        .map(|op| op.wf)
+        .max()
+        .unwrap_or(0) as usize;
+    let stride = (max_wf + 1).max(t.meta.wavefronts_per_cu.max(1) as usize);
+    let n_slots = tg.div_ceil(g2) * folds_c * stride;
+
+    let n_phases = t.meta.n_phases as usize;
+    let mut phases: Vec<Phase> = (0..n_phases)
+        .map(|i| Phase {
+            name: format!("replay{i}"),
+            work: (0..g2)
+                .map(|_| (0..c2).map(|_| vec![Vec::new(); n_slots]).collect())
+                .collect(),
+        })
+        .collect();
+
+    for (g, gstream) in t.streams.iter().enumerate() {
+        for (c, ops) in gstream.iter().enumerate() {
+            let rank = (g / g2) * folds_c + c / c2;
+            for op in ops {
+                let slot = rank * stride + op.wf as usize;
+                let list = &mut phases[op.phase as usize].work[g % g2][c % c2][slot];
+                push_gap(list, op.gap);
+                match op.kind {
+                    TraceKind::End => {
+                        // Zero-cost marker: keeps a compute-only wavefront
+                        // non-empty so the CU's active count (and with it
+                        // the phase-completion timing) matches the
+                        // recording.
+                        list.push(CuOp::Delay { cycles: 0 });
+                    }
+                    TraceKind::Load => {
+                        let addr = rehome(op.addr, gmb, g2 as u64);
+                        if op.size == 4 {
+                            list.push(CuOp::Ld { reg: 0, addr });
+                        } else {
+                            list.push(CuOp::LdV { reg: 0, addr, n: (op.size / 4) as u8 });
+                        }
+                    }
+                    TraceKind::Store => {
+                        let addr = rehome(op.addr, gmb, g2 as u64);
+                        if op.size == 4 {
+                            list.push(CuOp::St { addr, reg: 0 });
+                        } else {
+                            list.push(CuOp::StV { addr, reg: 0, n: (op.size / 4) as u8 });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let init = t
+        .meta
+        .init
+        .iter()
+        .map(|&(addr, n)| (rehome(addr, gmb, g2 as u64), vec![0.0f32; n as usize]))
+        .collect();
+
+    Ok(Workload { name: name.to_string(), init, phases, checks: Vec::new(), kind: "Replay" })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::addr::Topology;
+    use crate::mem::AddrMap;
+    use crate::trace::{TraceMeta, TraceOp};
+
+    fn params(n_gpus: u32, cus: u32) -> WorkloadParams {
+        WorkloadParams {
+            n_gpus,
+            cus_per_gpu: cus,
+            wavefronts_per_cu: 2,
+            map: AddrMap::new(Topology::SharedMem, n_gpus, 2, 2, 1 << 22),
+            scale: 1.0,
+        }
+    }
+
+    fn op(phase: u32, wf: u32, kind: TraceKind, addr: u64, size: u32, gap: u64) -> TraceOp {
+        TraceOp { phase, wf, kind, addr, size, gap, cycle: 0 }
+    }
+
+    fn two_gpu_trace() -> Trace {
+        let gmb = 1u64 << 22;
+        Trace {
+            meta: TraceMeta {
+                workload: "t".into(),
+                n_gpus: 2,
+                cus_per_gpu: 1,
+                wavefronts_per_cu: 2,
+                n_phases: 1,
+                gpu_mem_bytes: gmb,
+                cycles: 0,
+                events: 0,
+                init: vec![(0x1000, 8), (gmb + 0x1000, 8)],
+            },
+            streams: vec![
+                vec![vec![
+                    op(0, 0, TraceKind::Load, 0x1000, 64, 3),
+                    op(0, 0, TraceKind::Store, 0x1040, 4, 0),
+                    op(0, 0, TraceKind::End, 0, 0, 7),
+                    op(0, 1, TraceKind::End, 0, 0, 0),
+                ]],
+                vec![vec![
+                    op(0, 0, TraceKind::Load, gmb + 0x1000, 8, 0),
+                    op(0, 0, TraceKind::End, 0, 0, 0),
+                ]],
+            ],
+        }
+    }
+
+    #[test]
+    fn programs_rebuild_with_gaps_and_end_markers() {
+        let t = two_gpu_trace();
+        let wl = replay_workload("trace:x", &t, &params(2, 1)).unwrap();
+        assert_eq!(wl.name, "trace:x");
+        assert_eq!(wl.phases.len(), 1);
+        assert!(wl.checks.is_empty());
+        let wf0 = &wl.phases[0].work[0][0][0];
+        assert_eq!(
+            *wf0,
+            vec![
+                CuOp::Delay { cycles: 3 },
+                CuOp::LdV { reg: 0, addr: 0x1000, n: 16 },
+                CuOp::St { addr: 0x1040, reg: 0 },
+                CuOp::Delay { cycles: 7 },
+                CuOp::Delay { cycles: 0 },
+            ]
+        );
+        // Compute-only wavefront stays non-empty via the End marker.
+        assert_eq!(wl.phases[0].work[0][0][1], vec![CuOp::Delay { cycles: 0 }]);
+        // GPU 1's scalar-sized load is too small for a full line: LdV n=2.
+        let g1 = &wl.phases[0].work[1][0][0];
+        assert_eq!(g1[0], CuOp::LdV { reg: 0, addr: (1 << 22) + 0x1000, n: 2 });
+        // Init layout survives as zero images of the recorded lengths.
+        assert_eq!(wl.init.len(), 2);
+        assert_eq!(wl.init[0].1.len(), 8);
+    }
+
+    #[test]
+    fn gpu_fold_rehomes_addresses_and_separates_slots() {
+        let t = two_gpu_trace();
+        let wl = replay_workload("trace:x", &t, &params(1, 1)).unwrap();
+        // GPU 1's stream folds onto GPU 0 in its own slot block.
+        let work = &wl.phases[0].work[0][0];
+        assert_eq!(work.len(), 4, "2 folds x stride 2");
+        let folded = &work[2]; // rank 1, wf 0
+        assert_eq!(folded[0], CuOp::LdV { reg: 0, addr: 0x1000, n: 2 });
+        // Folded init slice rehomed into partition 0.
+        assert_eq!(wl.init[1].0, 0x1000);
+    }
+
+    #[test]
+    fn partition_size_mismatch_is_a_clear_error() {
+        let t = two_gpu_trace();
+        let mut p = params(2, 1);
+        p.map.gpu_mem_bytes = 1 << 20;
+        let e = replay_workload("trace:x", &t, &p).unwrap_err();
+        assert!(e.contains("gpu_mem_bytes"), "{e}");
+    }
+
+    #[test]
+    fn push_gap_splits_oversized_gaps() {
+        let mut list = Vec::new();
+        push_gap(&mut list, u32::MAX as u64 + 5);
+        assert_eq!(
+            list,
+            vec![CuOp::Delay { cycles: u32::MAX }, CuOp::Delay { cycles: 5 }]
+        );
+        push_gap(&mut list, 0);
+        assert_eq!(list.len(), 2, "zero gap pushes nothing");
+    }
+}

@@ -1,0 +1,334 @@
+//! Synthetic trace generation: parameterized sharing patterns the
+//! hand-written workload models cannot express.
+//!
+//! Each pattern emits per-wavefront streams over a shared working set of
+//! `lines` cache lines per GPU partition (base [`SHARED_BASE`]) plus
+//! per-wavefront private regions, with a configurable compute `gap`
+//! between consecutive ops. Generation is a pure function of
+//! [`SynthSpec`] (splitmix64-seeded), so a spec is as reproducible as a
+//! recorded trace.
+//!
+//! Patterns:
+//! * **private** — every wavefront streams over its own lines; no
+//!   sharing, the coherence-free baseline.
+//! * **read-mostly** — all wavefronts read GPU 0's shared region; a
+//!   single writer wavefront occasionally updates it (lease-friendly).
+//! * **migratory** — wavefronts take turns read-modify-writing the same
+//!   lines in bursts, so exclusive ownership migrates rank to rank.
+//! * **false-sharing** — each wavefront hammers its own 4-byte word of
+//!   the *same* lines (word-disjoint, line-shared).
+//! * **all-to-all** — every wavefront reads every GPU's region in
+//!   rotation and writes its own (the NUMA stress case).
+
+use crate::trace::{Trace, TraceKind, TraceMeta, TraceOp};
+use crate::workloads::Rng;
+
+/// Base of each GPU partition's shared region (past the unmapped page 0).
+pub const SHARED_BASE: u64 = 0x1000;
+
+/// Which sharing structure to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SharingPattern {
+    Private,
+    ReadMostly,
+    Migratory,
+    FalseSharing,
+    AllToAll,
+}
+
+impl SharingPattern {
+    /// CLI names, in presentation order.
+    pub const NAMES: [&str; 5] =
+        ["private", "read-mostly", "migratory", "false-sharing", "all-to-all"];
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "private" => Ok(SharingPattern::Private),
+            "read-mostly" => Ok(SharingPattern::ReadMostly),
+            "migratory" => Ok(SharingPattern::Migratory),
+            "false-sharing" => Ok(SharingPattern::FalseSharing),
+            "all-to-all" => Ok(SharingPattern::AllToAll),
+            other => Err(format!("unknown pattern '{other}' (one of {:?})", Self::NAMES)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SharingPattern::Private => "private",
+            SharingPattern::ReadMostly => "read-mostly",
+            SharingPattern::Migratory => "migratory",
+            SharingPattern::FalseSharing => "false-sharing",
+            SharingPattern::AllToAll => "all-to-all",
+        }
+    }
+}
+
+/// Generator parameters (geometry usually copied from a `SystemConfig`).
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub pattern: SharingPattern,
+    pub n_gpus: u32,
+    pub cus_per_gpu: u32,
+    pub wavefronts_per_cu: u32,
+    pub gpu_mem_bytes: u64,
+    /// Memory ops per wavefront per phase.
+    pub ops_per_wavefront: u32,
+    /// Shared working-set size in 64 B cache lines (per GPU region).
+    pub lines: u32,
+    /// Compute cycles between consecutive memory ops.
+    pub gap: u32,
+    pub phases: u32,
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            pattern: SharingPattern::Private,
+            n_gpus: 2,
+            cus_per_gpu: 2,
+            wavefronts_per_cu: 2,
+            gpu_mem_bytes: 64 << 20,
+            ops_per_wavefront: 64,
+            lines: 64,
+            gap: 0,
+            phases: 1,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// One wavefront's op list for one phase.
+fn wavefront_ops(
+    s: &SynthSpec,
+    phase: u32,
+    g: u32,
+    c: u32,
+    wf: u32,
+    rank: u64,
+    rng: &mut Rng,
+) -> Vec<TraceOp> {
+    let lines = s.lines.max(1) as u64;
+    let shared = |gpu: u64, line: u64| gpu * s.gpu_mem_bytes + SHARED_BASE + line * 64;
+    // Private region: disjoint per rank, homed on the issuing GPU, placed
+    // past every GPU's shared region.
+    let private_base = g as u64 * s.gpu_mem_bytes
+        + SHARED_BASE
+        + lines * 64
+        + (c as u64 * s.wavefronts_per_cu as u64 + wf as u64) * lines * 64;
+    let mut ops = Vec::with_capacity(s.ops_per_wavefront as usize + 1);
+    let mut emit = |kind: TraceKind, addr: u64, size: u32| {
+        ops.push(TraceOp { phase, wf, kind, addr, size, gap: s.gap as u64, cycle: 0 });
+    };
+    for i in 0..s.ops_per_wavefront as u64 {
+        match s.pattern {
+            SharingPattern::Private => {
+                let addr = private_base + (i % lines) * 64;
+                let kind = if i % 2 == 0 { TraceKind::Load } else { TraceKind::Store };
+                emit(kind, addr, 64);
+            }
+            SharingPattern::ReadMostly => {
+                let addr = shared(0, rng.below(lines));
+                // One designated writer rank refreshes a line every 16th
+                // op; everyone else only reads.
+                if rank == 0 && i % 16 == 15 {
+                    emit(TraceKind::Store, addr, 64);
+                } else {
+                    emit(TraceKind::Load, addr, 64);
+                }
+            }
+            SharingPattern::Migratory => {
+                // Bursts of read-modify-write on a line set whose owner
+                // rotates with the burst index: ownership migrates.
+                let burst = 4;
+                let line = (rank + i / burst) % lines;
+                let addr = shared(0, line);
+                let kind = if i % 2 == 0 { TraceKind::Load } else { TraceKind::Store };
+                emit(kind, addr, 64);
+            }
+            SharingPattern::FalseSharing => {
+                // Word-disjoint, line-shared: each rank owns word
+                // `rank % 16` of every shared line.
+                let addr = shared(0, i % lines) + (rank % 16) * 4;
+                let kind = if i % 4 == 0 { TraceKind::Load } else { TraceKind::Store };
+                emit(kind, addr, 4);
+            }
+            SharingPattern::AllToAll => {
+                if i % 4 == 3 {
+                    // Write back into the issuing GPU's own region.
+                    emit(TraceKind::Store, shared(g as u64, (rank + i) % lines), 64);
+                } else {
+                    // Read a rotating remote (or local) GPU's region.
+                    let peer = (g as u64 + 1 + i) % s.n_gpus as u64;
+                    emit(TraceKind::Load, shared(peer, (rank * 7 + i) % lines), 64);
+                }
+            }
+        }
+    }
+    ops.push(TraceOp {
+        phase,
+        wf,
+        kind: TraceKind::End,
+        addr: 0,
+        size: 0,
+        gap: 0,
+        cycle: 0,
+    });
+    ops
+}
+
+/// Generate a synthetic trace. Errors on geometry that cannot hold the
+/// requested working set.
+pub fn generate(s: &SynthSpec) -> Result<Trace, String> {
+    if s.n_gpus == 0 || s.cus_per_gpu == 0 || s.wavefronts_per_cu == 0 {
+        return Err("trace-gen: geometry must have at least one GPU/CU/wavefront".into());
+    }
+    if s.phases == 0 || s.ops_per_wavefront == 0 {
+        return Err("trace-gen: need at least one phase and one op per wavefront".into());
+    }
+    if s.gpu_mem_bytes % 64 != 0 {
+        return Err("trace-gen: gpu_mem_bytes must be a multiple of the 64 B line".into());
+    }
+    let lines = s.lines.max(1) as u64;
+    let ranks_per_gpu = s.cus_per_gpu as u64 * s.wavefronts_per_cu as u64;
+    let footprint = SHARED_BASE + lines * 64 * (1 + ranks_per_gpu);
+    if footprint > s.gpu_mem_bytes {
+        return Err(format!(
+            "trace-gen: {lines} lines x {ranks_per_gpu} wavefronts need {footprint} B \
+             per GPU partition, but gpu_mem_bytes is {}",
+            s.gpu_mem_bytes
+        ));
+    }
+    let mut streams = Vec::with_capacity(s.n_gpus as usize);
+    for g in 0..s.n_gpus {
+        let mut gpu = Vec::with_capacity(s.cus_per_gpu as usize);
+        for c in 0..s.cus_per_gpu {
+            let mut ops = Vec::new();
+            for phase in 0..s.phases {
+                for wf in 0..s.wavefronts_per_cu {
+                    let rank = (g as u64 * s.cus_per_gpu as u64 + c as u64)
+                        * s.wavefronts_per_cu as u64
+                        + wf as u64;
+                    // Per-wavefront generator stream: records stay
+                    // reproducible under any emission order.
+                    let mut rng = Rng(s.seed ^ (rank << 20) ^ (phase as u64));
+                    ops.extend(wavefront_ops(s, phase, g, c, wf, rank, &mut rng));
+                }
+            }
+            gpu.push(ops);
+        }
+        streams.push(gpu);
+    }
+    // Initial image: every GPU's shared region, so RDMA replays charge a
+    // realistic host-copy delay.
+    let init = (0..s.n_gpus as u64)
+        .map(|g| (g * s.gpu_mem_bytes + SHARED_BASE, lines * 16))
+        .collect();
+    let t = Trace {
+        meta: TraceMeta {
+            workload: format!("synth-{}", s.pattern.name()),
+            n_gpus: s.n_gpus,
+            cus_per_gpu: s.cus_per_gpu,
+            wavefronts_per_cu: s.wavefronts_per_cu,
+            n_phases: s.phases,
+            gpu_mem_bytes: s.gpu_mem_bytes,
+            cycles: 0,
+            events: 0,
+            init,
+        },
+        streams,
+    };
+    t.validate()?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(pattern: SharingPattern) -> SynthSpec {
+        SynthSpec { pattern, ops_per_wavefront: 32, lines: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn every_pattern_generates_a_valid_deterministic_trace() {
+        for name in SharingPattern::NAMES {
+            let s = spec(SharingPattern::parse(name).unwrap());
+            let a = generate(&s).unwrap();
+            let b = generate(&s).unwrap();
+            assert_eq!(a, b, "{name}: generation must be deterministic");
+            a.validate().unwrap();
+            // 2 GPUs x 2 CUs x 2 wavefronts x 32 ops.
+            assert_eq!(a.total_ops(), 8 * 32, "{name}");
+            assert_eq!(a.meta.workload, format!("synth-{name}"));
+            assert_eq!(a.meta.cycles, 0, "{name}: synthetic totals are unknown");
+        }
+    }
+
+    #[test]
+    fn private_never_shares_lines_false_sharing_always_does() {
+        let lines_of = |t: &Trace| {
+            let mut per_rank: Vec<std::collections::HashSet<u64>> = Vec::new();
+            for gpu in &t.streams {
+                for cu in gpu {
+                    for wf in 0..2 {
+                        let set = cu
+                            .iter()
+                            .filter(|o| o.wf == wf && o.kind != TraceKind::End)
+                            .map(|o| o.addr / 64)
+                            .collect();
+                        per_rank.push(set);
+                    }
+                }
+            }
+            per_rank
+        };
+        let private = lines_of(&generate(&spec(SharingPattern::Private)).unwrap());
+        for (i, a) in private.iter().enumerate() {
+            for b in &private[i + 1..] {
+                assert!(a.is_disjoint(b), "private ranks must not share lines");
+            }
+        }
+        let fs = lines_of(&generate(&spec(SharingPattern::FalseSharing)).unwrap());
+        assert!(
+            fs.iter().skip(1).all(|s| s == &fs[0]),
+            "false-sharing ranks must touch the same lines"
+        );
+    }
+
+    #[test]
+    fn read_mostly_has_a_single_writer() {
+        let t = generate(&spec(SharingPattern::ReadMostly)).unwrap();
+        let mut writers = std::collections::HashSet::new();
+        for (g, gpu) in t.streams.iter().enumerate() {
+            for (c, cu) in gpu.iter().enumerate() {
+                for o in cu.iter().filter(|o| o.kind == TraceKind::Store) {
+                    writers.insert((g, c, o.wf));
+                }
+            }
+        }
+        assert_eq!(writers.len(), 1, "exactly one writer rank: {writers:?}");
+    }
+
+    #[test]
+    fn all_to_all_touches_every_gpu_partition() {
+        let t = generate(&spec(SharingPattern::AllToAll)).unwrap();
+        let gmb = t.meta.gpu_mem_bytes;
+        let homes: std::collections::HashSet<u64> = t.streams[0][0]
+            .iter()
+            .filter(|o| o.kind != TraceKind::End)
+            .map(|o| o.addr / gmb)
+            .collect();
+        assert_eq!(homes.len(), 2, "one CU's stream must reach both partitions");
+    }
+
+    #[test]
+    fn oversized_working_sets_and_bad_names_error() {
+        let mut s = spec(SharingPattern::Private);
+        s.gpu_mem_bytes = 4096;
+        assert!(generate(&s).unwrap_err().contains("partition"));
+        assert!(SharingPattern::parse("mesi").is_err());
+        let zero = SynthSpec { n_gpus: 0, ..Default::default() };
+        assert!(generate(&zero).is_err());
+    }
+}

@@ -267,9 +267,30 @@ impl Rng {
     }
 }
 
-/// Registry: build a workload by its paper abbreviation.
+/// Prefix of the trace-replay pseudo-workload form: `trace:<file>`
+/// replays a recorded or synthetic trace (see `crate::trace`).
+pub const TRACE_PREFIX: &str = "trace:";
+
+/// Registry: build a workload by its paper abbreviation or the
+/// `trace:<file>` replay form. Panics with the full valid-name list on
+/// unknown names (campaign specs validate with [`validate_name`] first,
+/// so sweeps fail fast instead of mid-campaign).
 pub fn build(name: &str, p: &WorkloadParams) -> Workload {
-    match name {
+    try_build(name, p).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Non-panicking [`build`].
+pub fn try_build(name: &str, p: &WorkloadParams) -> Result<Workload, String> {
+    if let Some(path) = name.strip_prefix(TRACE_PREFIX) {
+        // Loaded per call on purpose: campaign cells are independent,
+        // panic-isolated simulations sharing no state, and a re-read per
+        // cell keeps that contract (smoke-scale traces decode in
+        // milliseconds).
+        let t = crate::trace::load(path)?;
+        return crate::trace::replay_workload(name, &t, p)
+            .map_err(|e| format!("workload '{name}': {e}"));
+    }
+    Ok(match name {
         "aes" => elementwise::aes(p),
         "atax" => linalg::atax(p),
         "bfs" => graph::bfs_gather(p),
@@ -284,8 +305,16 @@ pub fn build(name: &str, p: &WorkloadParams) -> Workload {
         "xtreme1" => xtreme::xtreme(p, 1),
         "xtreme2" => xtreme::xtreme(p, 2),
         "xtreme3" => xtreme::xtreme(p, 3),
-        other => panic!("unknown workload '{other}'"),
-    }
+        other => return Err(unknown_name_error(other)),
+    })
+}
+
+fn unknown_name_error(name: &str) -> String {
+    format!(
+        "unknown workload '{name}': valid names are {STANDARD:?} (standard), \
+         {XTREME:?} (xtreme), or the replay form 'trace:<file>' for a \
+         recorded/synthetic trace (docs/TRACE.md)"
+    )
 }
 
 /// The paper's Table 3 standard suite.
@@ -295,10 +324,27 @@ pub const STANDARD: [&str; 11] =
 /// The Xtreme synthetic suite (§4.3.2).
 pub const XTREME: [&str; 3] = ["xtreme1", "xtreme2", "xtreme3"];
 
-/// Whether `name` is in the registry ([`build`] panics on unknowns;
-/// campaign specs validate with this first).
+/// Whether `name` is *syntactically* a workload: a registry member or
+/// the `trace:<file>` form (whose file is not probed here — use
+/// [`validate_name`] for that).
 pub fn is_known(name: &str) -> bool {
-    STANDARD.contains(&name) || XTREME.contains(&name)
+    STANDARD.contains(&name) || XTREME.contains(&name) || name.starts_with(TRACE_PREFIX)
+}
+
+/// Deep name validation: registry membership, or — for `trace:<file>` —
+/// that the file exists and its header parses under a supported format
+/// version. Campaign specs call this so a bad trace path fails at spec
+/// time with a clear error instead of panicking mid-campaign.
+pub fn validate_name(name: &str) -> Result<(), String> {
+    if let Some(path) = name.strip_prefix(TRACE_PREFIX) {
+        crate::trace::load_meta(path)
+            .map(|_| ())
+            .map_err(|e| format!("workload '{name}': {e}"))
+    } else if STANDARD.contains(&name) || XTREME.contains(&name) {
+        Ok(())
+    } else {
+        Err(unknown_name_error(name))
+    }
 }
 
 #[cfg(test)]
@@ -392,6 +438,20 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn name_validation_knows_the_trace_form() {
+        assert!(is_known("fir"));
+        assert!(is_known("trace:whatever.trc"));
+        assert!(!is_known("nope"));
+        validate_name("xtreme1").unwrap();
+        let e = validate_name("nope").unwrap_err();
+        assert!(e.contains("fir") && e.contains("trace:<file>"), "{e}");
+        let e = validate_name("trace:/definitely/missing.trc").unwrap_err();
+        assert!(e.contains("missing.trc"), "{e}");
+        let e = try_build("nope", &params()).unwrap_err();
+        assert!(e.contains("trace:<file>"), "{e}");
     }
 
     #[test]

@@ -13,8 +13,10 @@ use halcone::sweep::{gate, json, report};
 #[test]
 fn campaign_json_is_byte_identical_across_jobs_levels() {
     let spec = CampaignSpec::builtin("smoke").unwrap();
-    let serial = run_campaign(&spec, &ExecOptions { jobs: 1, progress: false, ..Default::default() }).unwrap();
-    let parallel = run_campaign(&spec, &ExecOptions { jobs: 8, progress: false, ..Default::default() }).unwrap();
+    let opts = ExecOptions { jobs: 1, progress: false, ..Default::default() };
+    let serial = run_campaign(&spec, &opts).unwrap();
+    let opts = ExecOptions { jobs: 8, progress: false, ..Default::default() };
+    let parallel = run_campaign(&spec, &opts).unwrap();
     assert!(serial.all_passed(), "smoke campaign failed serially");
     assert!(parallel.all_passed(), "smoke campaign failed in parallel");
 
@@ -43,11 +45,13 @@ fn campaign_json_is_byte_identical_across_jobs_levels() {
 #[test]
 fn same_commit_gate_round_trip_passes_at_zero_tolerance() {
     let spec = CampaignSpec::builtin("smoke").unwrap();
-    let run = run_campaign(&spec, &ExecOptions { jobs: 4, progress: false, ..Default::default() }).unwrap();
+    let opts = ExecOptions { jobs: 4, progress: false, ..Default::default() };
+    let run = run_campaign(&spec, &opts).unwrap();
     let baseline = report::to_json(&run);
     // A fresh artifact from the same commit must gate cleanly even with
     // zero tolerance (cycles are deterministic).
-    let rerun = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false, ..Default::default() }).unwrap();
+    let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+    let rerun = run_campaign(&spec, &opts).unwrap();
     let current = report::to_json(&rerun);
     let rep = gate::diff(&baseline, &current, 0.0).unwrap();
     assert!(rep.passed(), "{}", rep.describe());
@@ -57,7 +61,8 @@ fn same_commit_gate_round_trip_passes_at_zero_tolerance() {
 #[test]
 fn artifact_is_wellformed_json_with_expected_shape() {
     let spec = CampaignSpec::builtin("smoke").unwrap();
-    let run = run_campaign(&spec, &ExecOptions { jobs: 2, progress: false, ..Default::default() }).unwrap();
+    let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+    let run = run_campaign(&spec, &opts).unwrap();
     let doc = json::parse(&report::to_json(&run)).unwrap();
     assert_eq!(doc.get("campaign").unwrap().as_str(), Some("smoke"));
     let spec_obj = doc.get("spec").unwrap();

@@ -18,7 +18,7 @@ use halcone::tsu::{Leases, Tsu};
 fn cache_array_matches_shadow_model() {
     check("cache vs shadow", 0xCACE, |rng| {
         let mut cache = CacheArray::<u32>::new(CacheParams::new(1 << 10, 2)); // 8 sets
-        let mut shadow: HashMap<u64, (u8, bool, u32)> = HashMap::new(); // addr -> (fill, dirty, meta)
+        let mut shadow: HashMap<u64, (u8, bool, u32)> = HashMap::new(); // (fill, dirty, meta)
         for step in 0..300u32 {
             let addr = rng.below(64) * 64; // 64 distinct lines over 8 sets
             match rng.below(4) {
