@@ -65,6 +65,9 @@ pub struct HalconeL1 {
     /// Coalesced requests awaiting their flush's completion.
     pending_acks: FxHashMap<u64, Vec<MemReq>>,
     pub stats: CacheCtrlStats,
+    /// Per-tenant mirror of the CU-request hit/miss/coherency-miss bumps
+    /// (mix runs; single-tenant traffic lands in slot 0).
+    pub tstats: crate::metrics::tenancy::TenantTraffic,
     line: u64,
 }
 
@@ -112,6 +115,7 @@ impl HalconeL1 {
             coalesce: FxHashMap::default(),
             pending_acks: FxHashMap::default(),
             stats: CacheCtrlStats::default(),
+            tstats: crate::metrics::tenancy::TenantTraffic::default(),
             line,
         }
     }
@@ -198,13 +202,16 @@ impl HalconeL1 {
                     } else {
                         // Tag hit, lease expired: coherency miss (Alg. 1).
                         self.stats.coherency_misses += 1;
+                        self.tstats.slot(req.tenant).coherency_misses += 1;
                     }
                 } else {
                     self.stats.misses += 1;
+                    self.tstats.slot(req.tenant).misses += 1;
                 }
                 if let Some(data) = hit_data {
                     self.cache.record(true);
                     self.stats.hits += 1;
+                    self.tstats.slot(req.tenant).hits += 1;
                     self.respond_sliced(&req, data, ctx);
                     return;
                 }
@@ -218,6 +225,7 @@ impl HalconeL1 {
                     dst: self.routes.route(la).2,
                     data: LineBuf::empty(),
                     warpts: self.carry_warpts.then_some(self.cts),
+                    tenant: req.tenant,
                 };
                 self.mshr.allocate(la, MshrKind::Fill, req);
                 self.send_down(fill, ctx);
@@ -243,12 +251,15 @@ impl HalconeL1 {
                     // it so the retire path cannot revalidate stale bytes.
                     self.cache.invalidate(la);
                     self.stats.coherency_misses += 1;
+                    self.tstats.slot(req.tenant).coherency_misses += 1;
                 }
                 self.cache.record(hit);
                 if hit {
                     self.stats.hits += 1;
+                    self.tstats.slot(req.tenant).hits += 1;
                 } else {
                     self.stats.misses += 1;
+                    self.tstats.slot(req.tenant).misses += 1;
                 }
                 let down = MemReq {
                     id: req.id,
@@ -259,6 +270,7 @@ impl HalconeL1 {
                     dst: self.routes.route(req.addr).2,
                     data: req.data,
                     warpts: self.carry_warpts.then_some(self.cts),
+                    tenant: req.tenant,
                 };
                 // Lock the block until timestamps return (Alg. 4).
                 self.mshr.allocate(la, MshrKind::WriteLock, req);
@@ -309,6 +321,7 @@ impl HalconeL1 {
                         dst: self.routes.route(addr).2,
                         data,
                         warpts: self.carry_warpts.then_some(self.cts),
+                        tenant: primary.tenant,
                     };
                     let synthetic = MemReq { src: CompId::NONE, ..down };
                     self.mshr.allocate(la, MshrKind::WriteLock, synthetic);
@@ -465,6 +478,7 @@ impl HalconeL2 {
                     dst: self.routes.route_mm(la).2,
                     data: LineBuf::empty(),
                     warpts: self.carry_warpts.then_some(self.cts),
+                    tenant: req.tenant,
                 };
                 self.mshr.allocate(la, MshrKind::Fill, req);
                 self.send_mm(fill, ctx);
@@ -494,6 +508,7 @@ impl HalconeL2 {
                     dst: self.routes.route_mm(req.addr).2,
                     data: req.data,
                     warpts: self.carry_warpts.then_some(self.cts),
+                    tenant: req.tenant,
                 };
                 self.mshr.allocate(la, MshrKind::WriteLock, req);
                 self.send_mm(down, ctx);
@@ -622,6 +637,7 @@ mod tests {
             dst: CompId::NONE,
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         }
     }
 
@@ -635,6 +651,7 @@ mod tests {
             dst: CompId::NONE,
             data: LineBuf::from_slice(&v.to_le_bytes()),
             warpts: None,
+            tenant: 0,
         }
     }
 

@@ -176,6 +176,7 @@ impl HmgL2 {
             dst: self.routes.route_mm(addr).2,
             data,
             warpts: None,
+            tenant: 0,
         };
         self.send_mm(wb, ctx);
         id
@@ -191,6 +192,7 @@ impl HmgL2 {
             dst: self.routes.route_mm(la).2,
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         };
         self.send_mm(fill, ctx);
     }
@@ -352,6 +354,7 @@ impl HmgL2 {
                     dst: CompId::NONE, // set by send_home
                     data: LineBuf::empty(),
                     warpts: None,
+                    tenant: req.tenant,
                 };
                 self.mshr.allocate(la, MshrKind::Fill, req);
                 self.send_home(fill, ctx);
@@ -368,6 +371,7 @@ impl HmgL2 {
                     dst: CompId::NONE,
                     data: req.data,
                     warpts: None,
+                    tenant: req.tenant,
                 };
                 self.mshr.allocate(la, MshrKind::WriteLock, req);
                 self.send_home(down, ctx);
@@ -588,6 +592,7 @@ mod tests {
             dst: CompId::NONE,
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         }
     }
 
@@ -601,6 +606,7 @@ mod tests {
             dst: CompId::NONE,
             data: LineBuf::from_slice(&v.to_le_bytes()),
             warpts: None,
+            tenant: 0,
         }
     }
 

@@ -36,6 +36,9 @@ pub struct PlainL1 {
     /// Coalesced requests awaiting their flush's completion.
     pending_acks: FxHashMap<u64, Vec<MemReq>>,
     pub stats: CacheCtrlStats,
+    /// Per-tenant mirror of the CU-request hit/miss bumps (mix runs;
+    /// single-tenant traffic lands in slot 0).
+    pub tstats: crate::metrics::tenancy::TenantTraffic,
     line: u64,
 }
 
@@ -57,6 +60,7 @@ impl PlainL1 {
             coalesce: FxHashMap::default(),
             pending_acks: FxHashMap::default(),
             stats: CacheCtrlStats::default(),
+            tstats: crate::metrics::tenancy::TenantTraffic::default(),
             line,
         }
     }
@@ -138,11 +142,13 @@ impl PlainL1 {
                 if let Some(data) = hit_data {
                     self.cache.record(true);
                     self.stats.hits += 1;
+                    self.tstats.slot(req.tenant).hits += 1;
                     self.respond_sliced(&req, data, ctx);
                     return;
                 }
                 self.cache.record(false);
                 self.stats.misses += 1;
+                self.tstats.slot(req.tenant).misses += 1;
                 let fill = MemReq {
                     id: req.id,
                     kind: ReqKind::Read,
@@ -152,6 +158,7 @@ impl PlainL1 {
                     dst: self.routes.route(la).2,
                     data: LineBuf::empty(),
                     warpts: None,
+                    tenant: req.tenant,
                 };
                 self.mshr.allocate(la, MshrKind::Fill, req);
                 self.send_down(fill, ctx);
@@ -167,8 +174,10 @@ impl PlainL1 {
                 self.cache.record(hit);
                 if hit {
                     self.stats.hits += 1;
+                    self.tstats.slot(req.tenant).hits += 1;
                 } else {
                     self.stats.misses += 1;
+                    self.tstats.slot(req.tenant).misses += 1;
                 }
                 let down = MemReq {
                     id: req.id,
@@ -179,6 +188,7 @@ impl PlainL1 {
                     dst: self.routes.route(req.addr).2,
                     data: req.data,
                     warpts: None,
+                    tenant: req.tenant,
                 };
                 self.mshr.allocate(la, MshrKind::WriteLock, req);
                 self.send_down(down, ctx);
@@ -227,6 +237,7 @@ impl PlainL1 {
                         dst: self.routes.route(addr).2,
                         data,
                         warpts: None,
+                        tenant: primary.tenant,
                     };
                     let synthetic = MemReq { src: CompId::NONE, ..down };
                     self.mshr.allocate(la, MshrKind::WriteLock, synthetic);
@@ -385,6 +396,7 @@ impl PlainL2 {
             dst: self.routes.route_mm(addr).2,
             data,
             warpts: None,
+            tenant: 0,
         };
         self.send_mm(wb, ctx);
         id
@@ -400,6 +412,7 @@ impl PlainL2 {
             dst: self.routes.route_mm(la).2,
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         };
         self.send_mm(fill, ctx);
     }
@@ -479,6 +492,7 @@ impl PlainL2 {
                         dst: self.routes.route_mm(req.addr).2,
                         data: req.data,
                         warpts: None,
+                        tenant: req.tenant,
                     };
                     self.mshr.allocate(la, MshrKind::WriteLock, req);
                     self.send_mm(down, ctx);
@@ -676,6 +690,7 @@ mod tests {
             dst: CompId::NONE,
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         }
     }
 
@@ -689,6 +704,7 @@ mod tests {
             dst: CompId::NONE,
             data: LineBuf::from_slice(&v.to_le_bytes()),
             warpts: None,
+            tenant: 0,
         }
     }
 

@@ -4,10 +4,12 @@
 
 pub mod driver;
 pub mod runner;
+pub mod scheduler;
 pub mod topology;
 pub mod verify;
 
 pub use driver::Driver;
+pub use scheduler::KernelScheduler;
 pub use runner::{run_workload, RunResult};
 pub use topology::{build, System};
 pub use verify::CheckOutcome;

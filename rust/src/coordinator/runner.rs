@@ -7,13 +7,16 @@ use crate::coherence::hmg::HmgL2;
 use crate::coherence::none::{PlainL1, PlainL2};
 use crate::config::SystemConfig;
 use crate::coordinator::driver::Driver;
+use crate::coordinator::scheduler::KernelScheduler;
 use crate::coordinator::topology::{self, System};
 use crate::coordinator::verify::{self, CheckOutcome};
 use crate::dram::MemCtrl;
 use crate::gpu::Cu;
+use crate::metrics::tenancy::{p99_sorted, TenancyReport, TenantMetrics, TenantTraffic};
 use crate::metrics::{CacheCtrlStats, RunMetrics};
 use crate::runtime::Runtime;
-use crate::sim::{CompId, Engine, Msg};
+use crate::sim::{CompId, Cycle, Engine, Msg};
+use crate::tenancy::{self, MixPlan};
 use crate::trace::{Trace, TraceMeta};
 use crate::workloads::{self, Workload};
 
@@ -56,6 +59,20 @@ impl RunResult {
     }
 }
 
+/// Completion time of the root component, whichever kind the topology
+/// installed at `CompId(0)` (barrier [`Driver`] or mix
+/// [`KernelScheduler`]).
+fn root_done_at(engine: &Engine, id: CompId) -> Option<Cycle> {
+    let any = engine.component(id).as_any();
+    if let Some(d) = any.downcast_ref::<Driver>() {
+        return d.done_at;
+    }
+    if let Some(s) = any.downcast_ref::<KernelScheduler>() {
+        return s.done_at;
+    }
+    panic!("component {id:?} is neither a driver nor a kernel scheduler");
+}
+
 fn l1_stats_of(engine: &Engine, id: CompId) -> CacheCtrlStats {
     let any = engine.component(id).as_any();
     if let Some(h) = any.downcast_ref::<HalconeL1>() {
@@ -65,6 +82,65 @@ fn l1_stats_of(engine: &Engine, id: CompId) -> CacheCtrlStats {
         return p.stats;
     }
     panic!("component {id:?} is not an L1 controller");
+}
+
+fn l1_tenant_traffic(engine: &Engine, id: CompId) -> &TenantTraffic {
+    let any = engine.component(id).as_any();
+    if let Some(h) = any.downcast_ref::<HalconeL1>() {
+        return &h.tstats;
+    }
+    if let Some(p) = any.downcast_ref::<PlainL1>() {
+        return &p.tstats;
+    }
+    panic!("component {id:?} is not an L1 controller");
+}
+
+/// Assemble the per-tenant report for a finished mix run: kernel
+/// turnarounds from the scheduler's records, issue counters from the CUs
+/// and lookup outcomes from the L1s (the attribution tables sum to the
+/// untagged totals by construction — see [`crate::metrics::tenancy`]).
+fn collect_tenancy(sys: &System) -> TenancyReport {
+    let engine = &sys.engine;
+    let sched = engine.downcast::<KernelScheduler>(sys.driver);
+    let n = sched.n_tenants as usize;
+    let mut tenants: Vec<TenantMetrics> = (0..n)
+        .map(|t| TenantMetrics {
+            tenant: t as u32,
+            name: sched.tenant_names.get(t).cloned().unwrap_or_default(),
+            ..TenantMetrics::default()
+        })
+        .collect();
+    let mut turnarounds: Vec<Vec<Cycle>> = vec![Vec::new(); n];
+    for r in &sched.records {
+        turnarounds[r.tenant as usize].push(r.turnaround());
+    }
+    for (t, ts) in turnarounds.iter_mut().enumerate() {
+        ts.sort_unstable();
+        tenants[t].jobs = ts.len() as u64;
+        tenants[t].turnaround_sum = ts.iter().sum();
+        tenants[t].turnaround_p99 = p99_sorted(ts);
+    }
+    for &id in &sys.cus {
+        let cu = engine.downcast::<Cu>(id);
+        for (t, s) in cu.tenant_stats.iter().enumerate() {
+            if t < n {
+                tenants[t].loads += s.loads;
+                tenants[t].stores += s.stores;
+                tenants[t].cu_bytes += s.bytes;
+            }
+        }
+    }
+    let mut l1 = TenantTraffic::default();
+    for &id in &sys.l1s {
+        l1.accumulate(l1_tenant_traffic(engine, id));
+    }
+    for (t, tm) in tenants.iter_mut().enumerate() {
+        let s = l1.get(t as u32);
+        tm.l1_hits = s.hits;
+        tm.l1_misses = s.misses;
+        tm.l1_coherency_misses = s.coherency_misses;
+    }
+    TenancyReport { scheduler: sched.policy_name().to_string(), tenants }
 }
 
 fn l2_stats_of(engine: &Engine, id: CompId) -> CacheCtrlStats {
@@ -84,10 +160,10 @@ fn l2_stats_of(engine: &Engine, id: CompId) -> CacheCtrlStats {
 /// Sweep stats from a finished system into [`RunMetrics`].
 pub fn collect_metrics(sys: &System, host_seconds: f64) -> RunMetrics {
     let engine = &sys.engine;
-    let driver = engine.downcast::<Driver>(sys.driver);
+    let done_at = root_done_at(engine, sys.driver);
     let pool = engine.pool_counters();
     let mut m = RunMetrics {
-        cycles: driver.done_at.unwrap_or(engine.now()),
+        cycles: done_at.unwrap_or(engine.now()),
         // Summed across the engine's logical shards, so throughput stays
         // correct under parallel (`shards > 1`) runs.
         events: engine.events_processed(),
@@ -145,9 +221,28 @@ pub fn run_workload_traced(
     runtime: Option<&mut Runtime>,
     capture: bool,
 ) -> (RunResult, Option<Trace>) {
+    try_run_workload_traced(cfg, workload_name, runtime, capture)
+        .unwrap_or_else(|e| panic!("workload '{workload_name}': {e}"))
+}
+
+/// [`run_workload_traced`] with error reporting instead of panics: a bad
+/// `trace:`/`mix:` spec (or unknown name) is a clean `Err`. Multi-tenant
+/// `mix:` names route through [`run_with_plan`], everything else through
+/// the ordinary barrier-driver path.
+pub fn try_run_workload_traced(
+    cfg: &SystemConfig,
+    workload_name: &str,
+    runtime: Option<&mut Runtime>,
+    capture: bool,
+) -> Result<(RunResult, Option<Trace>), String> {
     let params = cfg.workload_params();
-    let wl = workloads::build(workload_name, &params);
-    run_built_traced(cfg, wl, runtime, capture)
+    if tenancy::is_mix(workload_name) {
+        let (wl, plan) = tenancy::compose(workload_name, &params)
+            .map_err(|e| format!("workload '{workload_name}': {e}"))?;
+        return Ok(run_with_plan(cfg, wl, Some(plan), runtime, capture));
+    }
+    let wl = workloads::try_build(workload_name, &params)?;
+    Ok(run_with_plan(cfg, wl, None, runtime, capture))
 }
 
 /// Run an already-built workload (callers that pre-tweak phases/checks).
@@ -162,7 +257,20 @@ pub fn run_built(
 /// [`run_built`] with optional trace capture.
 pub fn run_built_traced(
     cfg: &SystemConfig,
+    wl: Workload,
+    runtime: Option<&mut Runtime>,
+    capture: bool,
+) -> (RunResult, Option<Trace>) {
+    run_with_plan(cfg, wl, None, runtime, capture)
+}
+
+/// The shared run core. With a [`MixPlan`] the system is built around the
+/// inter-kernel scheduler and the result carries a per-tenant
+/// [`TenancyReport`]; without one this is the classic barrier-driver run.
+pub fn run_with_plan(
+    cfg: &SystemConfig,
     mut wl: Workload,
+    plan: Option<MixPlan>,
     runtime: Option<&mut Runtime>,
     capture: bool,
 ) -> (RunResult, Option<Trace>) {
@@ -182,7 +290,10 @@ pub fn run_built_traced(
         };
         topology::copy_delay(cfg, &probe)
     };
-    let mut sys = topology::build_with_delay(cfg, wl, delay);
+    let mut sys = match &plan {
+        Some(p) => topology::build_mix(cfg, wl, p, delay),
+        None => topology::build_with_delay(cfg, wl, delay),
+    };
     // Execution knob only: any thread count produces identical results
     // (the logical partition is fixed by the topology).
     sys.engine.set_threads(cfg.shards as usize);
@@ -206,13 +317,15 @@ pub fn run_built_traced(
     sys.engine.run_to_completion();
     let host = t0.elapsed().as_secs_f64();
 
-    let driver = sys.engine.downcast::<Driver>(sys.driver);
     assert!(
-        driver.done_at.is_some(),
+        root_done_at(&sys.engine, sys.driver).is_some(),
         "simulation drained without finishing all phases (deadlock?)"
     );
 
-    let metrics = collect_metrics(&sys, host);
+    let mut metrics = collect_metrics(&sys, host);
+    if plan.is_some() {
+        metrics.tenancy = Some(collect_tenancy(&sys));
+    }
     let trace = capture.then(|| {
         let c = (cfg.cus_per_gpu as usize).max(1);
         let mut streams = vec![vec![Vec::new(); c]; cfg.n_gpus as usize];
@@ -327,6 +440,28 @@ mod tests {
         assert!(res.metrics.cu_loads > 0, "fir issues loads");
         assert!(res.metrics.cu_stores > 0, "fir issues stores");
         assert!(res.metrics.cycles_per_op().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn mix_runs_end_to_end_with_a_tenancy_report() {
+        let cfg = small("SM-WT-C-HALCONE");
+        let (res, _) =
+            run_workload_traced(&cfg, "mix:read-mostly+false-sharing@64", None, false);
+        assert!(res.all_passed(), "{:?}", res.checks);
+        let t = res.metrics.tenancy.as_ref().expect("mix run carries a tenancy report");
+        assert_eq!(t.tenants.len(), 2);
+        assert_eq!(t.scheduler, "fifo");
+        assert!(t.tenants.iter().all(|tm| tm.jobs == 1), "{t:?}");
+        // Attribution conserves the untagged totals.
+        assert_eq!(res.metrics.cu_loads, t.tenants.iter().map(|tm| tm.loads).sum::<u64>());
+        assert_eq!(res.metrics.cu_stores, t.tenants.iter().map(|tm| tm.stores).sum::<u64>());
+    }
+
+    #[test]
+    fn ordinary_runs_carry_no_tenancy_section() {
+        let cfg = small("SM-WT-NC");
+        let res = run_workload(&cfg, "rl", None);
+        assert!(res.metrics.tenancy.is_none());
     }
 
     #[test]

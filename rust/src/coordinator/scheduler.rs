@@ -1,0 +1,413 @@
+//! The inter-kernel scheduler: the mix-run replacement for the
+//! phase-sequential [`super::Driver`].
+//!
+//! Where the driver runs one application's phases back to back with a
+//! fence between each, the scheduler serves a *queue* of tenant kernels
+//! ([`JobSpec`]s from the mix composer) onto CU **slots** as they free
+//! up: admit a job -> `StartPhase { template * n_slots + slot }` to the
+//! slot's CUs -> count their `PhaseDone`s -> record turnaround, free the
+//! slot, admit the next. Which job is next is the pluggable
+//! [`SchedPolicy`] (FIFO or tenant round-robin).
+//!
+//! Mix runs are fence-free by construction: tenants own disjoint
+//! address windows (see `tenancy/compose.rs`), so there is no
+//! cross-kernel visibility to order, and a kernel-boundary fence while
+//! other slots are mid-kernel would be meaningless anyway. Admission is
+//! eager and happens inside `PhaseDone`/`Tick` handling; since event
+//! order over the fixed logical shard partition is identical at every
+//! `--shards`/jobs level, so is every scheduling decision.
+
+use crate::mem::FxHashMap;
+use crate::sim::{CompId, Component, Ctx, Cycle, Msg};
+use crate::tenancy::{JobSpec, MixPlan, Policy};
+
+/// Admission policy: pick the next job among the eligible set.
+/// `eligible` is non-empty, ascending, and indexes the composer-sorted
+/// job list (arrival, then tenant, then spec order).
+pub trait SchedPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn pick(&mut self, eligible: &[usize], jobs: &[JobSpec]) -> usize;
+}
+
+/// Earliest arrival first — the composer's sort order makes this simply
+/// the lowest eligible index.
+struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, eligible: &[usize], _jobs: &[JobSpec]) -> usize {
+        eligible[0]
+    }
+}
+
+/// Rotate across tenants: each admission starts scanning from the
+/// tenant after the last one served, so a backlogged tenant cannot
+/// starve the others (the noisy-neighbor countermeasure).
+struct RoundRobin {
+    next: u32,
+    n: u32,
+}
+
+impl SchedPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn pick(&mut self, eligible: &[usize], jobs: &[JobSpec]) -> usize {
+        for off in 0..self.n {
+            let tenant = (self.next + off) % self.n;
+            if let Some(&j) = eligible.iter().find(|&&j| jobs[j].tenant == tenant) {
+                self.next = (tenant + 1) % self.n;
+                return j;
+            }
+        }
+        eligible[0] // unreachable while tenants cover all jobs
+    }
+}
+
+fn make_policy(p: Policy, n_tenants: u32) -> Box<dyn SchedPolicy> {
+    match p {
+        Policy::Fifo => Box::new(Fifo),
+        Policy::RoundRobin => Box::new(RoundRobin { next: 0, n: n_tenants.max(1) }),
+    }
+}
+
+/// Per-job outcome, indexed like the plan's job list. All cycles are
+/// absolute (the RDMA host-copy delay shifts arrivals like it shifts
+/// the driver's first dispatch).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobRecord {
+    pub tenant: u32,
+    pub arrival: Cycle,
+    pub admitted: Cycle,
+    pub finished: Cycle,
+}
+
+impl JobRecord {
+    /// Queueing + service time — the per-tenant latency metric.
+    pub fn turnaround(&self) -> Cycle {
+        self.finished - self.arrival
+    }
+}
+
+/// The scheduler component. Sits at the driver's `CompId` slot in a mix
+/// topology and speaks the same CU protocol (`StartPhase`/`PhaseDone`).
+pub struct KernelScheduler {
+    name: String,
+    /// All CUs, flat gpu-major; slot `s` owns `[s*W, (s+1)*W)`.
+    cus: Vec<CompId>,
+    slot_width: usize,
+    n_slots: usize,
+    jobs: Vec<JobSpec>,
+    policy: Box<dyn SchedPolicy>,
+    initial_delay: Cycle,
+    cu_slot: FxHashMap<CompId, usize>,
+    started: Vec<bool>,
+    finished: Vec<bool>,
+    /// Free slot indices, ascending (lowest slot admits first).
+    free_slots: Vec<usize>,
+    /// Job currently running on each slot.
+    running: Vec<Option<usize>>,
+    /// Outstanding `PhaseDone`s per slot.
+    pending: Vec<usize>,
+    n_done: usize,
+    ticked: bool,
+    pub records: Vec<JobRecord>,
+    pub done_at: Option<Cycle>,
+    pub tenant_names: Vec<String>,
+    pub n_tenants: u32,
+}
+
+impl KernelScheduler {
+    pub fn new(
+        name: impl Into<String>,
+        cus: Vec<CompId>,
+        plan: &MixPlan,
+        initial_delay: Cycle,
+    ) -> Self {
+        let slot_width = plan.slot_width as usize;
+        let n_slots = plan.n_slots as usize;
+        assert!(
+            n_slots * slot_width <= cus.len(),
+            "plan wants {n_slots} x {slot_width} CUs but the machine has {}",
+            cus.len()
+        );
+        let cu_slot = cus
+            .iter()
+            .take(n_slots * slot_width)
+            .enumerate()
+            .map(|(flat, &id)| (id, flat / slot_width))
+            .collect();
+        let records = plan
+            .jobs
+            .iter()
+            .map(|j| JobRecord {
+                tenant: j.tenant,
+                arrival: initial_delay + j.arrival,
+                ..JobRecord::default()
+            })
+            .collect();
+        KernelScheduler {
+            name: name.into(),
+            cus,
+            slot_width,
+            n_slots,
+            jobs: plan.jobs.clone(),
+            policy: make_policy(plan.policy, plan.n_tenants),
+            initial_delay,
+            cu_slot,
+            started: vec![false; plan.jobs.len()],
+            finished: vec![false; plan.jobs.len()],
+            free_slots: (0..n_slots).collect(),
+            running: vec![None; n_slots],
+            pending: vec![0; n_slots],
+            n_done: 0,
+            ticked: false,
+            records,
+            done_at: None,
+            tenant_names: plan.tenant_names.clone(),
+            n_tenants: plan.n_tenants,
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    fn abs_arrival(&self, j: usize) -> Cycle {
+        self.initial_delay + self.jobs[j].arrival
+    }
+
+    /// Admit eligible jobs onto free slots until either runs out.
+    fn try_admit(&mut self, now: Cycle, ctx: &mut Ctx) {
+        while !self.free_slots.is_empty() {
+            let eligible: Vec<usize> = (0..self.jobs.len())
+                .filter(|&j| {
+                    !self.started[j]
+                        && self.abs_arrival(j) <= now
+                        && self.jobs[j].pred.is_none_or(|p| self.finished[p])
+                })
+                .collect();
+            if eligible.is_empty() {
+                return;
+            }
+            let job = self.policy.pick(&eligible, &self.jobs);
+            let slot = self.free_slots.remove(0);
+            self.started[job] = true;
+            self.records[job].admitted = now;
+            self.running[slot] = Some(job);
+            self.pending[slot] = self.slot_width;
+            let phase = self.jobs[job].template * self.n_slots as u32 + slot as u32;
+            for &cu in &self.cus[slot * self.slot_width..(slot + 1) * self.slot_width] {
+                ctx.schedule(0, cu, Msg::StartPhase { phase });
+            }
+        }
+    }
+}
+
+impl Component for KernelScheduler {
+    crate::impl_component_any!();
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
+        match msg {
+            // The runner's kick-off tick, plus our own arrival wake-ups.
+            Msg::Tick => {
+                if !self.ticked {
+                    self.ticked = true;
+                    if self.jobs.is_empty() {
+                        self.done_at = Some(now);
+                        return;
+                    }
+                    // One wake-up per distinct future arrival cycle.
+                    let mut arrivals: Vec<Cycle> = (0..self.jobs.len())
+                        .map(|j| self.abs_arrival(j))
+                        .filter(|&a| a > now)
+                        .collect();
+                    arrivals.sort_unstable();
+                    arrivals.dedup();
+                    let me = ctx.self_id;
+                    for a in arrivals {
+                        ctx.schedule(a - now, me, Msg::Tick);
+                    }
+                }
+                self.try_admit(now, ctx);
+            }
+            Msg::PhaseDone { cu } => {
+                let slot = *self
+                    .cu_slot
+                    .get(&cu)
+                    .unwrap_or_else(|| panic!("{}: PhaseDone from unknown CU {cu:?}", self.name));
+                self.pending[slot] -= 1;
+                if self.pending[slot] > 0 {
+                    return;
+                }
+                let job = self.running[slot]
+                    .take()
+                    .unwrap_or_else(|| panic!("{}: idle slot {slot} finished", self.name));
+                self.finished[job] = true;
+                self.records[job].finished = now;
+                self.n_done += 1;
+                // Sorted re-insert keeps lowest-slot-first admission.
+                let at = self.free_slots.partition_point(|&s| s < slot);
+                self.free_slots.insert(at, slot);
+                if self.n_done == self.jobs.len() {
+                    self.done_at = Some(now);
+                } else {
+                    self.try_admit(now, ctx);
+                }
+            }
+            m => panic!("{}: unexpected message {m:?}", self.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Engine;
+    use crate::tenancy::Policy;
+
+    /// CU stub: acks each StartPhase after a fixed delay, recording the
+    /// phase indices it saw.
+    struct StubCu {
+        name: String,
+        sched: CompId,
+        delay: Cycle,
+        pub phases_seen: Vec<u32>,
+    }
+    impl Component for StubCu {
+        crate::impl_component_any!();
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+            if let Msg::StartPhase { phase } = msg {
+                self.phases_seen.push(phase);
+                let s = self.sched;
+                ctx.schedule(self.delay, s, Msg::PhaseDone { cu: ctx.self_id });
+            }
+        }
+    }
+
+    fn plan(jobs: Vec<JobSpec>, n_tenants: u32, policy: Policy, n_slots: u32) -> MixPlan {
+        MixPlan {
+            n_tenants,
+            tenant_names: (0..n_tenants).map(|t| format!("t{t}")).collect(),
+            slot_width: 1,
+            n_slots,
+            n_templates: 1,
+            phase_tenants: vec![0; n_slots as usize],
+            jobs,
+            policy,
+        }
+    }
+
+    fn run(plan: &MixPlan, delays: &[Cycle], initial_delay: Cycle) -> (Engine, CompId) {
+        let mut e = Engine::new();
+        let sched = CompId(0);
+        let cus: Vec<CompId> = (1..=delays.len() as u32).map(CompId).collect();
+        e.add(Box::new(KernelScheduler::new("sched", cus.clone(), plan, initial_delay)));
+        for (i, &cu) in cus.iter().enumerate() {
+            e.add(Box::new(StubCu {
+                name: format!("cu{i}"),
+                sched,
+                delay: delays[i],
+                phases_seen: vec![],
+            }));
+        }
+        e.post(0, sched, Msg::Tick);
+        e.run_to_completion();
+        (e, sched)
+    }
+
+    fn job(tenant: u32, arrival: Cycle, pred: Option<usize>) -> JobSpec {
+        JobSpec { tenant, template: 0, arrival, pred }
+    }
+
+    #[test]
+    fn fifo_queues_on_one_slot_and_records_turnaround() {
+        let p = plan(vec![job(0, 0, None), job(1, 0, None)], 2, Policy::Fifo, 1);
+        let (e, sched) = run(&p, &[10], 0);
+        let s = e.downcast::<KernelScheduler>(sched);
+        assert_eq!(s.policy_name(), "fifo");
+        // Job 1 waited for job 0's slot: admitted at 10, finished at 20.
+        assert_eq!(s.records[0], JobRecord { tenant: 0, arrival: 0, admitted: 0, finished: 10 });
+        assert_eq!(s.records[1], JobRecord { tenant: 1, arrival: 0, admitted: 10, finished: 20 });
+        assert_eq!(s.records[1].turnaround(), 20);
+        assert_eq!(s.done_at, Some(20));
+    }
+
+    #[test]
+    fn round_robin_alternates_backlogged_tenants() {
+        // Tenant 0 floods the queue; tenant 1 has two jobs. FIFO order
+        // would run all of tenant 0 first (same arrival, lower tenant).
+        let jobs = vec![
+            job(0, 0, None),
+            job(0, 0, None),
+            job(0, 0, None),
+            job(1, 0, None),
+            job(1, 0, None),
+        ];
+        let p = plan(jobs, 2, Policy::RoundRobin, 1);
+        let (e, sched) = run(&p, &[5], 0);
+        let s = e.downcast::<KernelScheduler>(sched);
+        let mut order: Vec<(Cycle, u32)> =
+            s.records.iter().map(|r| (r.admitted, r.tenant)).collect();
+        order.sort_unstable();
+        let tenants: Vec<u32> = order.iter().map(|&(_, t)| t).collect();
+        assert_eq!(tenants, vec![0, 1, 0, 1, 0], "alternation, then drain");
+    }
+
+    #[test]
+    fn chains_wait_for_predecessors_even_with_free_slots() {
+        // Two slots, but job 1 depends on job 0: it must not overlap.
+        let p = plan(vec![job(0, 0, None), job(0, 0, Some(0))], 1, Policy::Fifo, 2);
+        let (e, sched) = run(&p, &[7, 7], 0);
+        let s = e.downcast::<KernelScheduler>(sched);
+        assert_eq!(s.records[0].finished, 7);
+        assert_eq!(s.records[1].admitted, 7);
+        assert_eq!(s.done_at, Some(14));
+        // Slot 0 freed before the successor was admitted -> reused.
+        assert_eq!(e.downcast::<StubCu>(CompId(1)).phases_seen.len(), 2);
+        assert_eq!(e.downcast::<StubCu>(CompId(2)).phases_seen.len(), 0);
+    }
+
+    #[test]
+    fn arrivals_wake_the_scheduler_and_copy_delay_shifts_them() {
+        let p = plan(vec![job(0, 100, None)], 1, Policy::Fifo, 1);
+        let (e, sched) = run(&p, &[3], 50);
+        let s = e.downcast::<KernelScheduler>(sched);
+        // Absolute arrival = copy delay + spec arrival.
+        assert_eq!(s.records[0].arrival, 150);
+        assert_eq!(s.records[0].admitted, 150);
+        assert_eq!(s.done_at, Some(153));
+    }
+
+    #[test]
+    fn parallel_slots_overlap_independent_jobs() {
+        let jobs = vec![job(0, 0, None), job(1, 0, None)];
+        let p = plan(jobs, 2, Policy::Fifo, 2);
+        let (e, sched) = run(&p, &[9, 9], 0);
+        let s = e.downcast::<KernelScheduler>(sched);
+        assert_eq!(s.records[0].admitted, 0);
+        assert_eq!(s.records[1].admitted, 0, "second slot admits concurrently");
+        assert_eq!(s.done_at, Some(9));
+        // Slot phase encoding: template * n_slots + slot.
+        assert_eq!(e.downcast::<StubCu>(CompId(1)).phases_seen, vec![0]);
+        assert_eq!(e.downcast::<StubCu>(CompId(2)).phases_seen, vec![1]);
+    }
+
+    #[test]
+    fn zero_jobs_finish_on_the_kickoff_tick() {
+        let p = plan(vec![], 1, Policy::Fifo, 1);
+        let (e, sched) = run(&p, &[1], 0);
+        assert_eq!(e.downcast::<KernelScheduler>(sched).done_at, Some(0));
+    }
+}

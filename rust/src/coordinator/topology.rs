@@ -18,7 +18,9 @@ use crate::coherence::none::{PlainL1, PlainL2};
 use crate::coherence::{L1Routes, L2Routes};
 use crate::config::{Coherence, SystemConfig};
 use crate::coordinator::driver::Driver;
+use crate::coordinator::scheduler::KernelScheduler;
 use crate::dram::{GlobalMemory, MemCtrl, SharedMemory};
+use crate::tenancy::MixPlan;
 use crate::gpu::Cu;
 use crate::interconnect::Switch;
 use crate::mem::addr::Topology;
@@ -66,7 +68,29 @@ pub fn build(cfg: &SystemConfig, wl: Workload) -> System {
 }
 
 /// [`build`] with an explicit initial (host-copy) delay.
-pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cycle) -> System {
+pub fn build_with_delay(cfg: &SystemConfig, wl: Workload, initial_delay: Cycle) -> System {
+    build_inner(cfg, wl, initial_delay, None)
+}
+
+/// Build a multi-tenant mix system: the root component (`CompId(0)`) is a
+/// [`KernelScheduler`] admitting the plan's tenant kernels instead of the
+/// barrier [`Driver`], and each CU carries the plan's phase->tenant map so
+/// memory requests are tenant-tagged at issue.
+pub fn build_mix(
+    cfg: &SystemConfig,
+    wl: Workload,
+    plan: &MixPlan,
+    initial_delay: Cycle,
+) -> System {
+    build_inner(cfg, wl, initial_delay, Some(plan))
+}
+
+fn build_inner(
+    cfg: &SystemConfig,
+    mut wl: Workload,
+    initial_delay: Cycle,
+    mix: Option<&MixPlan>,
+) -> System {
     if matches!(cfg.coherence, Coherence::Halcone { .. }) {
         assert_eq!(
             cfg.topology,
@@ -204,16 +228,21 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
     let mut caches = flat_l1s.clone();
     caches.extend(&flat_l2s);
 
-    let id = engine.add_to(
-        hub,
-        Box::new(Driver::new(
+    // Root component: the barrier driver for ordinary workloads, the
+    // inter-kernel scheduler for multi-tenant mixes.
+    let root: Box<dyn crate::sim::Component> = match mix {
+        Some(plan) => {
+            Box::new(KernelScheduler::new("scheduler", flat_cus.clone(), plan, initial_delay))
+        }
+        None => Box::new(Driver::new(
             "driver",
             flat_cus.clone(),
             caches,
             wl.phases.len() as u32,
             initial_delay,
         )),
-    );
+    };
+    let id = engine.add_to(hub, root);
     assert_eq!(id, driver);
 
     for gi in 0..g {
@@ -224,16 +253,12 @@ pub fn build_with_delay(cfg: &SystemConfig, mut wl: Workload, initial_delay: Cyc
                 .iter_mut()
                 .map(|ph| std::mem::take(&mut ph.work[gi][ci]))
                 .collect();
-            let id = engine.add_to(
-                gi as u32,
-                Box::new(Cu::new(
-                    format!("g{gi}.cu{ci}"),
-                    l1_ids[gi][ci],
-                    driver,
-                    program,
-                    cfg.alu_lat,
-                )),
-            );
+            let mut cu =
+                Cu::new(format!("g{gi}.cu{ci}"), l1_ids[gi][ci], driver, program, cfg.alu_lat);
+            if let Some(plan) = mix {
+                cu.set_phase_tenants(plan.phase_tenants.clone());
+            }
+            let id = engine.add_to(gi as u32, Box::new(cu));
             assert_eq!(id, cu_ids[gi][ci]);
         }
         // L1s.

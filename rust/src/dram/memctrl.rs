@@ -159,6 +159,7 @@ mod tests {
             dst,
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         }))
     }
 
@@ -191,6 +192,7 @@ mod tests {
                 dst: mc,
                 data: LineBuf::from_slice(&[1, 2, 3, 4]),
                 warpts: None,
+                tenant: 0,
             })),
         );
         e.run_to_completion();

@@ -132,6 +132,13 @@ pub struct Cu {
     /// simulation alone — identical at every `--shards` level.
     trace_buf: Option<Vec<TraceOp>>,
     pub stats: CuStats,
+    /// Tenant owning each phase of a multi-tenant mix (see
+    /// [`crate::tenancy`]). Empty on ordinary runs — the tenant tag then
+    /// defaults to 0 and per-tenant accounting stays off the hot path.
+    phase_tenants: Vec<u32>,
+    /// Per-tenant issue counters, indexed by tenant id. Populated only
+    /// when `phase_tenants` is set.
+    pub tenant_stats: Vec<crate::metrics::tenancy::TenantCuStats>,
 }
 
 /// Default store-credit cap per CU (must stay below the L1 MSHR size).
@@ -161,7 +168,38 @@ impl Cu {
             parked: Vec::new(),
             trace_buf: None,
             stats: CuStats::default(),
+            phase_tenants: Vec::new(),
+            tenant_stats: Vec::new(),
         }
+    }
+
+    /// Declare which tenant owns each phase (multi-tenant mixes only).
+    /// Turns on per-tenant issue accounting.
+    pub fn set_phase_tenants(&mut self, tenants: Vec<u32>) {
+        self.phase_tenants = tenants;
+    }
+
+    /// Tenant tag for the current phase (0 outside mix runs).
+    fn cur_tenant(&self) -> u32 {
+        self.phase_tenants.get(self.phase as usize).copied().unwrap_or(0)
+    }
+
+    /// Bump this CU's per-tenant counters (mix runs only).
+    fn note_tenant_op(&mut self, tenant: u32, is_store: bool, bytes: u64) {
+        if self.phase_tenants.is_empty() {
+            return;
+        }
+        let slot = tenant as usize;
+        if slot >= self.tenant_stats.len() {
+            self.tenant_stats.resize_with(slot + 1, Default::default);
+        }
+        let s = &mut self.tenant_stats[slot];
+        if is_store {
+            s.stores += 1;
+        } else {
+            s.loads += 1;
+        }
+        s.bytes += bytes;
     }
 
     /// Start capturing issued memory operations (trace recording).
@@ -367,6 +405,8 @@ impl Cu {
         ctx: &mut Ctx,
     ) {
         self.stats.loads += 1;
+        let tenant = self.cur_tenant();
+        self.note_tenant_op(tenant, false, size as u64);
         self.record(wf, TraceKind::Load, addr, size, ctx.now() + delay);
         let id = self.next_id;
         self.next_id += 1;
@@ -380,6 +420,7 @@ impl Cu {
             dst: self.l1,
             data: LineBuf::empty(),
             warpts: None,
+            tenant,
         };
         let l1 = self.l1;
         let msg = ctx.req_msg(req);
@@ -390,6 +431,8 @@ impl Cu {
         // Fire-and-forget under weak consistency: issue and keep
         // executing; the ack returns a credit.
         self.stats.stores += 1;
+        let tenant = self.cur_tenant();
+        self.note_tenant_op(tenant, true, data.len() as u64);
         self.record(wf, TraceKind::Store, addr, data.len() as u32, ctx.now() + delay);
         self.store_credits -= 1;
         self.stores_in_flight += 1;
@@ -405,6 +448,7 @@ impl Cu {
             dst: self.l1,
             data,
             warpts: None,
+            tenant,
         };
         let l1 = self.l1;
         let msg = ctx.req_msg(req);

@@ -133,6 +133,7 @@ mod tests {
             dst,
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         }))
     }
 

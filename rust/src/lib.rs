@@ -16,7 +16,10 @@
 //!   executor, JSON artifacts and a perf regression gate ([`sweep`]),
 //! - deterministic trace capture, replay and synthesis: record CU memory
 //!   streams, re-inject them on any protocol, generate sharing patterns
-//!   ([`trace`], divergence oracle in [`metrics::divergence`]).
+//!   ([`trace`], divergence oracle in [`metrics::divergence`]),
+//! - multi-tenant serving: tenant-tagged requests, the `mix:` composer,
+//!   an inter-kernel scheduler and per-tenant fairness metrics
+//!   ([`tenancy`], [`coordinator::scheduler`], [`metrics::tenancy`]).
 
 pub mod coherence;
 pub mod config;
@@ -30,6 +33,7 @@ pub mod proptools;
 pub mod runtime;
 pub mod sim;
 pub mod sweep;
+pub mod tenancy;
 pub mod trace;
 pub mod tsu;
 pub mod workloads;

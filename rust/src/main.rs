@@ -12,6 +12,7 @@
 //!   replay       re-inject a recorded trace and report divergence
 //!                against the recording (docs/TRACE.md)
 //!   trace-gen    generate a synthetic sharing-pattern trace
+//!   mix-gen      write a multi-tenant mix spec file (docs/TENANCY.md)
 //!   print-config show the Table 2 configuration (E2)
 //!   list         available workloads, presets, campaigns and artifacts
 //!
@@ -20,7 +21,7 @@
 use std::process::ExitCode;
 
 use halcone::config::SystemConfig;
-use halcone::coordinator::runner::{run_built_traced, run_workload};
+use halcone::coordinator::runner::{run_built_traced, run_workload, try_run_workload_traced};
 use halcone::metrics::divergence;
 use halcone::runtime::Runtime;
 use halcone::sweep::exec::{self, run_campaign, ExecOptions};
@@ -44,10 +45,14 @@ fn usage() -> ! {
                         [--trace-out FILE]\n\
            trace-gen    --pattern P --out FILE [--ops N] [--lines N] [--gap N]\n\
                         [--phases N] [--seed N] [--preset P] [--set k=v ...]\n\
+           mix-gen      --tenant T [--tenant T ...] [--policy fifo|rr]\n\
+                        [--width N] [--spacing N] [--out FILE.mix]\n\
            print-config [--preset P] [--set k=v ...]\n\
            list\n\
          \n\
-         a workload NAME may also be the replay form 'trace:<file>';\n\
+         a workload NAME may also be the replay form 'trace:<file>' or the\n\
+         multi-tenant mix form 'mix:<spec>' (inline tenants or a .mix file\n\
+         from mix-gen; docs/TENANCY.md);\n\
          trace-gen patterns: {patterns:?}\n\
          \n\
          common options:\n\
@@ -77,7 +82,14 @@ fn usage() -> ! {
            --lines N         trace-gen: working-set cache lines (default 64)\n\
            --gap N           trace-gen: compute cycles between ops (default 0)\n\
            --phases N        trace-gen: kernel phases (default 1)\n\
-           --seed N          trace-gen: generator seed\n",
+           --seed N          trace-gen: generator seed\n\
+         \n\
+         mix options:\n\
+           --tenant T        tenant stream term '<pattern|trace:FILE>[@arrival][*replicas]'\n\
+                             (repeatable, one per tenant)\n\
+           --policy P        inter-kernel scheduling policy: fifo (default) or rr\n\
+           --width N         CUs per scheduler slot (default: total/tenants)\n\
+           --spacing N       cycles between replica arrivals (all tenants)\n",
         presets = SystemConfig::PRESETS,
         campaigns = CampaignSpec::BUILTINS,
         patterns = SharingPattern::NAMES,
@@ -110,6 +122,10 @@ struct Args {
     gap: Option<u32>,
     phases: Option<u32>,
     seed: Option<u64>,
+    tenants: Vec<String>,
+    policy: Option<String>,
+    width: Option<u32>,
+    spacing: Option<u64>,
 }
 
 /// Parse a numeric flag value or die with a usage message.
@@ -151,6 +167,10 @@ fn parse_args() -> Args {
         gap: None,
         phases: None,
         seed: None,
+        tenants: vec![],
+        policy: None,
+        width: None,
+        spacing: None,
     };
     while let Some(flag) = argv.next() {
         let mut val = |name: &str| {
@@ -207,6 +227,10 @@ fn parse_args() -> Args {
             "--gap" => a.gap = Some(parse_num("--gap", &val("--gap"))),
             "--phases" => a.phases = Some(parse_num("--phases", &val("--phases"))),
             "--seed" => a.seed = Some(parse_num("--seed", &val("--seed"))),
+            "--tenant" => a.tenants.push(val("--tenant")),
+            "--policy" => a.policy = Some(val("--policy")),
+            "--width" => a.width = Some(parse_num("--width", &val("--width"))),
+            "--spacing" => a.spacing = Some(parse_num("--spacing", &val("--spacing"))),
             "--baseline" => a.baseline = Some(val("--baseline")),
             "--current" => a.current = Some(val("--current")),
             "--tolerance" => {
@@ -290,18 +314,19 @@ fn cmd_run(a: &Args) -> ExitCode {
         usage()
     };
     let cfg = build_config(a);
-    // try_build so a typoed name or bad trace file is a clean error,
-    // not a panic.
-    let wl = match halcone::workloads::try_build(workload, &cfg.workload_params()) {
-        Ok(wl) => wl,
-        Err(e) => {
-            eprintln!("run: {e}");
-            return ExitCode::FAILURE;
-        }
-    };
     let mut rt = open_runtime(a);
     let capture = a.trace_out.is_some();
-    let (res, captured) = run_built_traced(&cfg, wl, rt.as_mut(), capture);
+    // The fallible entry keeps a typoed name or bad trace/mix spec a
+    // clean error, not a panic — and routes `mix:` through the
+    // inter-kernel scheduler.
+    let (res, captured) =
+        match try_run_workload_traced(&cfg, workload, rt.as_mut(), capture) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("run: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
     println!("{}", res.summary());
     println!(
         "  cu loads/stores: {}/{}  mm reads/writes: {}/{}  pcie bytes: {}  mem-net bytes: {}  host: {:.3}s ({:.1}M events/s)",
@@ -314,6 +339,26 @@ fn cmd_run(a: &Args) -> ExitCode {
         res.metrics.host_seconds,
         res.metrics.events as f64 / res.metrics.host_seconds.max(1e-9) / 1e6,
     );
+    if let Some(t) = &res.metrics.tenancy {
+        println!(
+            "  tenancy: scheduler {}  jain(turnaround) {:.4}",
+            t.scheduler,
+            t.jain_turnaround()
+        );
+        for tm in &t.tenants {
+            println!(
+                "    t{} {:<20} jobs {:>3}  turnaround mean {:>10.1} p99 {:>8}  \
+                 mem share {:.3}  coherence share {:.3}",
+                tm.tenant,
+                tm.name,
+                tm.jobs,
+                tm.turnaround_mean(),
+                tm.turnaround_p99,
+                t.mem_traffic_share(tm.tenant),
+                t.coherence_traffic_share(tm.tenant),
+            );
+        }
+    }
     for c in &res.checks {
         println!(
             "  check[{}] {} max_err={:.2e} {}",
@@ -439,6 +484,60 @@ fn cmd_trace_gen(a: &Args) -> ExitCode {
         t.meta.cus_per_gpu,
         t.meta.wavefronts_per_cu,
         t.meta.n_phases,
+    );
+    ExitCode::SUCCESS
+}
+
+/// Compose the `--tenant` terms into a [`halcone::tenancy::MixSpec`] and
+/// write it out in the `.mix` file form, ready for `run --workload
+/// mix:<file>.mix` (or for hand-editing per-tenant spacing).
+fn cmd_mix_gen(a: &Args) -> ExitCode {
+    use halcone::tenancy::{MixSpec, Policy};
+    if a.tenants.is_empty() {
+        eprintln!(
+            "mix-gen: at least one --tenant required \
+             (e.g. --tenant read-mostly --tenant 'false-sharing@64*2')"
+        );
+        usage()
+    }
+    let inline = format!("mix:{}", a.tenants.join("+"));
+    let mut spec = match MixSpec::parse(&inline) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("mix-gen: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if let Some(p) = &a.policy {
+        spec.policy = match Policy::parse(p) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("mix-gen: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+    }
+    if a.width.is_some() {
+        spec.width = a.width;
+    }
+    if let Some(s) = a.spacing {
+        for t in &mut spec.tenants {
+            t.spacing = s;
+        }
+    }
+    let out = a.out.clone().unwrap_or_else(|| "mix.mix".into());
+    if !out.ends_with(".mix") {
+        eprintln!("mix-gen: --out must end in .mix (the run form is 'mix:<file>.mix')");
+        return ExitCode::FAILURE;
+    }
+    if let Err(e) = std::fs::write(&out, spec.to_spec_string()) {
+        eprintln!("mix-gen: writing {out}: {e}");
+        return ExitCode::FAILURE;
+    }
+    println!(
+        "wrote {out}: {} tenants, policy {}; run with `halcone run --workload mix:{out}`",
+        spec.tenants.len(),
+        spec.policy.name(),
     );
     ExitCode::SUCCESS
 }
@@ -682,6 +781,7 @@ fn cmd_list(a: &Args) -> ExitCode {
     println!("workloads (standard): {STANDARD:?}");
     println!("workloads (xtreme):   {XTREME:?}");
     println!("workloads (replay):   trace:<file> (recorded via --trace-out or trace-gen)");
+    println!("workloads (mix):      mix:<t0>+<t1>+... or mix:<file>.mix (mix-gen; docs/TENANCY.md)");
     println!("trace-gen patterns:   {:?}", SharingPattern::NAMES);
     println!("presets:              {:?}", SystemConfig::PRESETS);
     println!("campaigns:            {:?}", CampaignSpec::BUILTINS);
@@ -702,6 +802,7 @@ fn main() -> ExitCode {
         "verify" => cmd_verify(&args),
         "replay" => cmd_replay(&args),
         "trace-gen" => cmd_trace_gen(&args),
+        "mix-gen" => cmd_mix_gen(&args),
         "print-config" => {
             println!("{}", build_config(&args).describe());
             ExitCode::SUCCESS

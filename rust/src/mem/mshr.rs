@@ -115,6 +115,7 @@ mod tests {
             dst: CompId(1),
             data: crate::mem::LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         }
     }
 

@@ -8,6 +8,7 @@
 
 pub mod bench;
 pub mod divergence;
+pub mod tenancy;
 
 /// Counters kept by every cache controller (L1 and L2, all protocols).
 #[derive(Clone, Copy, Debug, Default)]
@@ -105,6 +106,9 @@ pub struct RunMetrics {
     pub pcie_bytes: u64,
     /// Bytes moved L2<->MM.
     pub mem_bytes: u64,
+    /// Per-tenant section, populated only for multi-tenant (`mix:`) runs
+    /// — `None` keeps ordinary runs' canonical artifacts byte-stable.
+    pub tenancy: Option<tenancy::TenancyReport>,
 }
 
 impl RunMetrics {

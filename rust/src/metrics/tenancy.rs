@@ -1,0 +1,256 @@
+//! Per-tenant observability (docs/TENANCY.md): tenant-indexed traffic
+//! attribution tables, kernel-turnaround aggregation and the Jain
+//! fairness index.
+//!
+//! Attribution mirrors the untagged counters exactly: every site that
+//! bumps `CuStats::loads/stores` or an L1's
+//! `CacheCtrlStats::hits/misses/coherency_misses` on the CU-request path
+//! also bumps the tenant slot of the request's `TenantId`, so per-tenant
+//! counts always sum to the untagged totals (the fold-conservation
+//! property `rust/tests/tenancy.rs` gates).
+
+/// Per-tenant CU-side issue counters (mirrors the `CuStats` bump sites).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCuStats {
+    pub loads: u64,
+    pub stores: u64,
+    /// Payload bytes the CU requested (loads) or sent (stores).
+    pub bytes: u64,
+}
+
+/// Per-tenant L1 lookup outcomes (mirrors the `CacheCtrlStats`
+/// hit/miss/coherency-miss bump sites at the CU-request entry).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub coherency_misses: u64,
+}
+
+/// Growable tenant-indexed counter table kept by each L1 controller.
+/// Indexing by `TenantId` grows the table on demand, so controllers need
+/// no up-front knowledge of the mix width; single-tenant runs cost one
+/// slot.
+#[derive(Clone, Debug, Default)]
+pub struct TenantTraffic {
+    slots: Vec<TenantCacheStats>,
+}
+
+impl TenantTraffic {
+    pub fn slot(&mut self, tenant: u32) -> &mut TenantCacheStats {
+        let i = tenant as usize;
+        if i >= self.slots.len() {
+            self.slots.resize(i + 1, TenantCacheStats::default());
+        }
+        &mut self.slots[i]
+    }
+
+    pub fn get(&self, tenant: u32) -> TenantCacheStats {
+        self.slots.get(tenant as usize).copied().unwrap_or_default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn accumulate(&mut self, o: &TenantTraffic) {
+        for (t, s) in o.slots.iter().enumerate() {
+            let mine = self.slot(t as u32);
+            mine.hits += s.hits;
+            mine.misses += s.misses;
+            mine.coherency_misses += s.coherency_misses;
+        }
+    }
+}
+
+/// One tenant's aggregated view of a finished mix run.
+#[derive(Clone, Debug, Default)]
+pub struct TenantMetrics {
+    pub tenant: u32,
+    pub name: String,
+    /// Kernels of this tenant that ran to completion.
+    pub jobs: u64,
+    /// Sum of kernel turnarounds (finish - arrival), in cycles.
+    pub turnaround_sum: u64,
+    /// Nearest-rank p99 of the kernel turnarounds, in cycles.
+    pub turnaround_p99: u64,
+    pub loads: u64,
+    pub stores: u64,
+    /// CU-issued payload bytes (the memory-traffic share numerator).
+    pub cu_bytes: u64,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    /// L1 lease-expiry/invalidation refetches (the coherence-traffic
+    /// share numerator).
+    pub l1_coherency_misses: u64,
+}
+
+impl TenantMetrics {
+    /// Mean kernel turnaround in cycles (0.0 for a job-less tenant).
+    pub fn turnaround_mean(&self) -> f64 {
+        if self.jobs == 0 {
+            0.0
+        } else {
+            self.turnaround_sum as f64 / self.jobs as f64
+        }
+    }
+}
+
+/// The per-tenant section of [`super::RunMetrics`]; present only for
+/// mix (`mix:`) runs so canonical artifacts of ordinary runs keep their
+/// exact bytes.
+#[derive(Clone, Debug, Default)]
+pub struct TenancyReport {
+    /// Scheduler policy that produced the run ("fifo" / "rr").
+    pub scheduler: String,
+    pub tenants: Vec<TenantMetrics>,
+}
+
+impl TenancyReport {
+    /// Jain fairness index over the tenants' mean turnarounds.
+    pub fn jain_turnaround(&self) -> f64 {
+        let means: Vec<f64> = self.tenants.iter().map(|t| t.turnaround_mean()).collect();
+        jain(&means)
+    }
+
+    /// `tenant`'s share of CU-issued payload bytes (0.0 if none moved).
+    pub fn mem_traffic_share(&self, tenant: u32) -> f64 {
+        let total: u64 = self.tenants.iter().map(|t| t.cu_bytes).sum();
+        share(self.tenant(tenant).map_or(0, |t| t.cu_bytes), total)
+    }
+
+    /// `tenant`'s share of L1 coherency misses (0.0 if none occurred).
+    pub fn coherence_traffic_share(&self, tenant: u32) -> f64 {
+        let total: u64 = self.tenants.iter().map(|t| t.l1_coherency_misses).sum();
+        share(self.tenant(tenant).map_or(0, |t| t.l1_coherency_misses), total)
+    }
+
+    fn tenant(&self, tenant: u32) -> Option<&TenantMetrics> {
+        self.tenants.iter().find(|t| t.tenant == tenant)
+    }
+}
+
+fn share(part: u64, total: u64) -> f64 {
+    if total == 0 {
+        0.0
+    } else {
+        part as f64 / total as f64
+    }
+}
+
+/// Jain fairness index `(Σx)² / (n·Σx²)`: 1.0 when every tenant gets an
+/// equal allocation, approaching `1/n` when one tenant hogs everything.
+/// Degenerate inputs (empty, or all-zero) read as perfectly fair.
+pub fn jain(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    sum * sum / (xs.len() as f64 * sq)
+}
+
+/// Nearest-rank 99th percentile of an ascending-sorted sample.
+pub fn p99_sorted(sorted: &[u64]) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    // ceil(0.99 * n), 1-based rank; integer arithmetic keeps it exact.
+    let rank = (99 * n).div_ceil(100).max(1);
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_all_equal_is_one() {
+        assert!((jain(&[5.0, 5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        assert!((jain(&[1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_one_hog_approaches_one_over_n() {
+        // One tenant with everything, three with nothing: exactly 1/4.
+        let j = jain(&[100.0, 0.0, 0.0, 0.0]);
+        assert!((j - 0.25).abs() < 1e-12, "{j}");
+        // Mild skew sits strictly between 1/n and 1.
+        let j = jain(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(j > 0.25 && j < 1.0, "{j}");
+    }
+
+    #[test]
+    fn jain_degenerate_inputs_read_fair() {
+        assert_eq!(jain(&[]), 1.0);
+        assert_eq!(jain(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn p99_is_nearest_rank() {
+        assert_eq!(p99_sorted(&[]), 0);
+        assert_eq!(p99_sorted(&[7]), 7);
+        assert_eq!(p99_sorted(&[1, 2]), 2);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(p99_sorted(&v), 99);
+        let v: Vec<u64> = (1..=200).collect();
+        assert_eq!(p99_sorted(&v), 198);
+    }
+
+    #[test]
+    fn traffic_table_grows_and_accumulates() {
+        let mut a = TenantTraffic::default();
+        a.slot(2).hits += 3;
+        a.slot(0).misses += 1;
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.get(2).hits, 3);
+        assert_eq!(a.get(9), TenantCacheStats::default());
+        let mut b = TenantTraffic::default();
+        b.slot(2).hits += 4;
+        b.slot(3).coherency_misses += 5;
+        a.accumulate(&b);
+        assert_eq!(a.get(2).hits, 7);
+        assert_eq!(a.get(3).coherency_misses, 5);
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn report_shares_split_the_totals() {
+        let rep = TenancyReport {
+            scheduler: "fifo".into(),
+            tenants: vec![
+                TenantMetrics {
+                    tenant: 0,
+                    jobs: 2,
+                    turnaround_sum: 200,
+                    cu_bytes: 300,
+                    l1_coherency_misses: 9,
+                    ..Default::default()
+                },
+                TenantMetrics {
+                    tenant: 1,
+                    jobs: 1,
+                    turnaround_sum: 100,
+                    cu_bytes: 100,
+                    l1_coherency_misses: 3,
+                    ..Default::default()
+                },
+            ],
+        };
+        assert!((rep.mem_traffic_share(0) - 0.75).abs() < 1e-12);
+        assert!((rep.mem_traffic_share(1) - 0.25).abs() < 1e-12);
+        assert!((rep.coherence_traffic_share(0) - 0.75).abs() < 1e-12);
+        // Equal mean turnarounds (100 each): perfectly fair.
+        assert!((rep.jain_turnaround() - 1.0).abs() < 1e-12);
+        // Absent tenant shares nothing.
+        assert_eq!(rep.mem_traffic_share(7), 0.0);
+    }
+}

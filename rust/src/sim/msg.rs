@@ -48,6 +48,12 @@ pub struct MemReq {
     /// (HALCONE eliminates this field; it exists to account the traffic
     /// delta of CU-level counters, DESIGN.md E10).
     pub warpts: Option<u64>,
+    /// Originating tenant (0 in single-application runs): per-tenant
+    /// traffic attribution for `mix:` workloads. Rides in spare routing
+    /// metadata bits like `src`/`dst`, so it is *not* part of
+    /// [`MemReq::wire_bytes`] — changing the wire size would shift every
+    /// byte counter the CI gates pin.
+    pub tenant: u32,
 }
 
 impl Default for MemReq {
@@ -61,6 +67,7 @@ impl Default for MemReq {
             dst: CompId::NONE,
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         }
     }
 }
@@ -202,6 +209,7 @@ mod tests {
             dst: CompId(1),
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         };
         let rsp_nc = MemRsp {
             id: 0,
@@ -232,6 +240,7 @@ mod tests {
             dst: CompId(1),
             data: LineBuf::empty(),
             warpts: None,
+            tenant: 0,
         };
         let without = req.wire_bytes();
         req.warpts = Some(7);

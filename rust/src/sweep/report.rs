@@ -210,7 +210,47 @@ fn metrics_json(m: &RunMetrics, include_host: bool) -> Value {
         ("l1".into(), cache_stats_json(&m.l1)),
         ("l2".into(), cache_stats_json(&m.l2)),
     ]);
+    // Per-tenant section, present only for mix runs: ordinary cells keep
+    // their exact canonical bytes. Every value is a pure function of
+    // deterministic counters, so the section is byte-stable across
+    // `--shards`/`--jobs` like the rest of the artifact.
+    if let Some(t) = &m.tenancy {
+        o.push(("tenancy".into(), tenancy_json(t)));
+    }
     Value::Obj(o)
+}
+
+fn tenancy_json(t: &crate::metrics::tenancy::TenancyReport) -> Value {
+    let tenants: Vec<Value> = t
+        .tenants
+        .iter()
+        .map(|tm| {
+            Value::Obj(vec![
+                ("tenant".into(), Value::u64(tm.tenant as u64)),
+                ("name".into(), Value::str(&tm.name)),
+                ("jobs".into(), Value::u64(tm.jobs)),
+                ("turnaround_sum".into(), Value::u64(tm.turnaround_sum)),
+                ("turnaround_mean".into(), Value::f64(tm.turnaround_mean())),
+                ("turnaround_p99".into(), Value::u64(tm.turnaround_p99)),
+                ("loads".into(), Value::u64(tm.loads)),
+                ("stores".into(), Value::u64(tm.stores)),
+                ("cu_bytes".into(), Value::u64(tm.cu_bytes)),
+                ("l1_hits".into(), Value::u64(tm.l1_hits)),
+                ("l1_misses".into(), Value::u64(tm.l1_misses)),
+                ("l1_coherency_misses".into(), Value::u64(tm.l1_coherency_misses)),
+                ("mem_traffic_share".into(), Value::f64(t.mem_traffic_share(tm.tenant))),
+                (
+                    "coherence_traffic_share".into(),
+                    Value::f64(t.coherence_traffic_share(tm.tenant)),
+                ),
+            ])
+        })
+        .collect();
+    Value::Obj(vec![
+        ("scheduler".into(), Value::str(&t.scheduler)),
+        ("jain_turnaround".into(), Value::f64(t.jain_turnaround())),
+        ("tenants".into(), Value::Arr(tenants)),
+    ])
 }
 
 /// Print the paper-style table: workloads × config columns, speed-up vs
@@ -290,6 +330,39 @@ mod tests {
         assert!(!canon.contains("host_seconds"));
         assert!(!canon.contains("events_per_sec"));
         json::parse(&canon).unwrap();
+    }
+
+    #[test]
+    fn mix_cells_carry_a_tenancy_section_in_the_canonical_form() {
+        let spec = CampaignSpec::parse(
+            "name = t\n\
+             presets = SM-WT-NC\n\
+             workloads = mix:private+private\n\
+             set.n_gpus = 2\nset.cus_per_gpu = 2\nset.wavefronts_per_cu = 2\n\
+             set.l2_banks = 2\nset.stacks_per_gpu = 2\n\
+             set.gpu_mem_bytes = 67108864\nset.scale = 0.05\n",
+        )
+        .unwrap();
+        let opts = ExecOptions { jobs: 1, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
+        let doc = json::parse(&to_json_canonical(&res)).unwrap();
+        let cells = doc.get("cells").unwrap().as_arr().unwrap();
+        let t = cells[0].get("metrics").unwrap().get("tenancy").unwrap();
+        assert_eq!(t.get("scheduler").unwrap().as_str(), Some("fifo"));
+        assert!(t.get("jain_turnaround").unwrap().as_f64().unwrap() > 0.0);
+        let tenants = t.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2);
+        for tm in tenants {
+            assert_eq!(tm.get("jobs").unwrap().as_f64(), Some(1.0));
+            assert!(tm.get("turnaround_mean").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // Ordinary cells stay untouched: no tenancy key anywhere else.
+        let smoke = run_campaign(
+            &CampaignSpec::builtin("smoke").unwrap(),
+            &ExecOptions { jobs: 1, progress: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(!to_json_canonical(&smoke).contains("tenancy"));
     }
 
     #[test]

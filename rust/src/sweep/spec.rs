@@ -70,8 +70,17 @@ impl CampaignSpec {
     /// Built-in campaign names. The `smoke-*` variants isolate one
     /// coherence protocol each at the smoke geometry — the CI protocol
     /// matrix runs its zero-tolerance gate round-trip per variant.
-    pub const BUILTINS: [&str; 8] =
-        ["smoke", "smoke-halcone", "smoke-hmg", "smoke-none", "fig7", "fig8", "fig8cu", "tab4"];
+    pub const BUILTINS: [&str; 9] = [
+        "smoke",
+        "smoke-halcone",
+        "smoke-hmg",
+        "smoke-none",
+        "fig7",
+        "fig8",
+        "fig8cu",
+        "tab4",
+        "tab-tenant",
+    ];
 
     /// The smoke geometry: tiny enough that a whole campaign runs in
     /// seconds on CI (the runner tests' "small" configs).
@@ -129,6 +138,16 @@ impl CampaignSpec {
                  workloads = {standard}\n\
                  axis.cus_per_gpu = 32,48,64\n\
                  baseline = SM-WT-C-HALCONE+cus_per_gpu=32\n"
+            ),
+            // Multi-tenant serving grid (docs/TENANCY.md): two-tenant
+            // mixes — a noisy-neighbor pair and a replicated backlog —
+            // under each coherence protocol, at the smoke geometry. Per-
+            // tenant turnaround/traffic/fairness land in campaign.json.
+            "tab-tenant" => format!(
+                "name = tab-tenant\n\
+                 presets = SM-WT-C-HALCONE,RDMA-WB-C-HMG,SM-WT-NC\n\
+                 workloads = mix:read-mostly+false-sharing@64,mix:private*2+migratory\n{}",
+                Self::SMOKE_GEOMETRY
             ),
             "tab4" => "name = tab4\n\
                  presets = SM-WT-C-HALCONE\n\
@@ -540,6 +559,14 @@ mod tests {
         // single-workload spec.
         let e = CampaignSpec::parse("workloads = rl,trace:missing.trc\n").unwrap_err();
         assert!(e.contains("missing.trc"), "{e}");
+    }
+
+    #[test]
+    fn tab_tenant_sweeps_mixes_across_protocols() {
+        let spec = CampaignSpec::builtin("tab-tenant").unwrap();
+        assert_eq!(spec.presets, ["SM-WT-C-HALCONE", "RDMA-WB-C-HMG", "SM-WT-NC"]);
+        assert!(spec.workloads.iter().all(|w| w.starts_with("mix:")), "{:?}", spec.workloads);
+        assert_eq!(spec.cells().unwrap().len(), 2 * 3);
     }
 
     #[test]

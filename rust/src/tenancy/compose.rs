@@ -1,0 +1,488 @@
+//! The mix composer: turn a parsed [`MixSpec`] into an ordinary
+//! [`Workload`] plus the [`MixPlan`] the inter-kernel scheduler executes.
+//!
+//! # Slots and templates
+//!
+//! The machine's `total_cus` CUs are partitioned into `n_slots`
+//! scheduling slots of `slot_width` flat gpu-major CUs each (slot `s` =
+//! flat CUs `[s*W, (s+1)*W)`; a remainder `total_cus % W` idles). Each
+//! tenant's stream is folded to the 1-GPU × `W`-CU slot geometry by the
+//! replay remap (`trace/replay.rs`), yielding one **template** per
+//! stream phase: the register programs a kernel launch runs on whichever
+//! slot it is admitted to. The composed workload has
+//! `n_templates * n_slots` phases — phase `k*n_slots + s` runs template
+//! `k` on slot `s` and leaves every other CU idle — so the scheduler
+//! dispatches any kernel to any slot with the stock
+//! `StartPhase`/`PhaseDone` machinery and zero new message kinds.
+//!
+//! # Tenant windows
+//!
+//! Tenant `t` owns the disjoint window at partition-relative offset
+//! `[t*wsize, (t+1)*wsize)` of GPU partition `t % n_gpus`, where
+//! `wsize = (gpu_mem_bytes / n_tenants)` aligned down to 4 KiB. Folded
+//! stream addresses (all in `[0, gpu_mem_bytes)` after the replay
+//! remap) are shifted by `rehome(t*gmb + t*wsize + addr, gmb, n_gpus)`
+//! — the same partition-relative fold replay uses — which both spreads
+//! tenants across partitions and guarantees streams never alias.
+//! Disjoint windows are also what makes the mix **fence-free**: with no
+//! cross-tenant sharing, inter-kernel visibility is vacuous, and
+//! intra-stream coherence still exercises the protocols (HALCONE lease
+//! expiry against the TSU's per-access `memts` advance) exactly as a
+//! replayed trace does.
+
+use crate::sim::Cycle;
+use crate::tenancy::{MixSpec, Policy, StreamSpec};
+use crate::trace::{generate, replay_workload, SynthSpec, Trace};
+use crate::workloads::{Phase, Workload, WorkloadParams};
+
+/// Tenant-window alignment (one page).
+const WINDOW_ALIGN: u64 = 4096;
+
+/// Backstop against replica-count typos: a mix enqueueing more kernel
+/// launches than this is almost certainly a mistake.
+const MAX_JOBS: usize = 1 << 20;
+
+/// One queued kernel launch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobSpec {
+    pub tenant: u32,
+    /// Template to run (composed phase = `template * n_slots + slot`).
+    pub template: u32,
+    /// Cycle at which the job becomes eligible for admission.
+    pub arrival: Cycle,
+    /// Index (into the plan's job list) of the same replica's previous
+    /// kernel: stream phases run in order, so a job is eligible only
+    /// once its predecessor finished. Always precedes the job in the
+    /// sorted list.
+    pub pred: Option<usize>,
+}
+
+/// Everything the scheduler and the metrics sweep need beyond the
+/// [`Workload`] itself. The `Workload` struct is untouched — mix-aware
+/// callers carry the plan alongside it.
+#[derive(Clone, Debug)]
+pub struct MixPlan {
+    pub n_tenants: u32,
+    pub tenant_names: Vec<String>,
+    /// CUs per scheduling slot.
+    pub slot_width: u32,
+    pub n_slots: u32,
+    pub n_templates: u32,
+    /// Owning tenant of each composed phase (`n_templates * n_slots`
+    /// entries) — the CU issue path tags requests with this.
+    pub phase_tenants: Vec<u32>,
+    /// Queued kernels sorted by (arrival, tenant, spec order); `pred`
+    /// indices refer to this order.
+    pub jobs: Vec<JobSpec>,
+    pub policy: Policy,
+}
+
+/// Compose the `mix:` workload `name` under geometry `p`. Returns the
+/// schedulable workload plus its plan; all validation (spec grammar,
+/// stream probing, window-fit) happens here, never mid-run.
+pub fn compose(name: &str, p: &WorkloadParams) -> Result<(Workload, MixPlan), String> {
+    let spec = MixSpec::parse(name)?;
+    let n_tenants = spec.tenants.len();
+    let total = p.total_cus();
+
+    let width = spec.width.unwrap_or(((total / n_tenants).max(1)) as u32);
+    let w = width as usize;
+    if w > total {
+        return Err(format!(
+            "mix slot width {w} exceeds the machine's {total} CUs \
+             ({} GPUs x {} CUs)",
+            p.n_gpus, p.cus_per_gpu
+        ));
+    }
+    let n_slots = total / w;
+
+    let gmb = p.map.gpu_mem_bytes;
+    let wsize = (gmb / n_tenants as u64) / WINDOW_ALIGN * WINDOW_ALIGN;
+    if wsize < WINDOW_ALIGN {
+        return Err(format!(
+            "{n_tenants} tenants leave under {WINDOW_ALIGN} B of private window \
+             per tenant in a {gmb} B GPU partition; use fewer tenants or a \
+             larger gpu_mem_bytes"
+        ));
+    }
+
+    // Fold every tenant's stream to the slot geometry: 1 GPU x `w` CUs
+    // over the same partition size, so folded addresses land in
+    // [0, gmb) and the window shift below can place them.
+    let slot_params = WorkloadParams {
+        n_gpus: 1,
+        cus_per_gpu: width,
+        wavefronts_per_cu: p.wavefronts_per_cu,
+        map: crate::mem::AddrMap::new(
+            crate::mem::addr::Topology::SharedMem,
+            1,
+            p.map.stacks_per_gpu,
+            p.map.l2_banks,
+            gmb,
+        ),
+        scale: p.scale,
+    };
+
+    // Templates across all tenants, each `w` per-CU wavefront-program
+    // lists, plus the composed init image.
+    let mut templates: Vec<Vec<Vec<Vec<crate::gpu::CuOp>>>> = Vec::new();
+    let mut template_tenant: Vec<u32> = Vec::new();
+    let mut tenant_template_base: Vec<u32> = Vec::new();
+    let mut init: Vec<(u64, Vec<f32>)> = Vec::new();
+
+    for (ti, t) in spec.tenants.iter().enumerate() {
+        let terr = |e: String| format!("mix tenant '{}' (t{ti}): {e}", t.name);
+        let trace = tenant_trace(&t.stream, ti, &slot_params)?;
+        let mut folded = replay_workload(&format!("{name}#{}", t.name), &trace, &slot_params)
+            .map_err(&terr)?;
+
+        let window = TenantWindow { tenant: ti as u64, gmb, wsize, n_gpus: p.n_gpus as u64 };
+        tenant_template_base.push(templates.len() as u32);
+        for ph in &mut folded.phases {
+            let cus = std::mem::take(&mut ph.work[0]);
+            let mut remapped = Vec::with_capacity(cus.len());
+            for wfs in cus {
+                let wfs = wfs
+                    .into_iter()
+                    .map(|ops| window.remap_ops(ops).map_err(&terr))
+                    .collect::<Result<Vec<_>, _>>()?;
+                remapped.push(wfs);
+            }
+            templates.push(remapped);
+            template_tenant.push(ti as u32);
+        }
+        for (addr, vals) in folded.init {
+            let at = window.remap(addr, 4 * vals.len() as u64).map_err(&terr)?;
+            init.push((at, vals));
+        }
+    }
+
+    let n_templates = templates.len() as u32;
+
+    // Composed phase grid: phase `k * n_slots + s` runs template `k` on
+    // slot `s` (flat gpu-major CUs [s*w, (s+1)*w)); every other CU gets
+    // an empty program and reports PhaseDone immediately.
+    let mut phases = Vec::with_capacity(templates.len() * n_slots);
+    let mut phase_tenants = Vec::with_capacity(templates.len() * n_slots);
+    for (k, tmpl) in templates.iter().enumerate() {
+        for s in 0..n_slots {
+            let mut work: Vec<Vec<Vec<Vec<crate::gpu::CuOp>>>> = (0..p.n_gpus)
+                .map(|_| vec![Vec::new(); p.cus_per_gpu as usize])
+                .collect();
+            for (j, cu_prog) in tmpl.iter().enumerate() {
+                let flat = s * w + j;
+                work[flat / p.cus_per_gpu as usize][flat % p.cus_per_gpu as usize] =
+                    cu_prog.clone();
+            }
+            let ti = template_tenant[k] as usize;
+            phases.push(Phase {
+                name: format!("{}.k{k}@slot{s}", spec.tenants[ti].name),
+                work,
+            });
+            phase_tenants.push(template_tenant[k]);
+        }
+    }
+
+    // Queued kernels: each replica of a tenant's stream is a chain of
+    // its templates in order, arriving `spacing` cycles after the
+    // previous replica.
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    for (ti, t) in spec.tenants.iter().enumerate() {
+        let base = tenant_template_base[ti];
+        let n_ph = if (ti + 1) < tenant_template_base.len() {
+            tenant_template_base[ti + 1] - base
+        } else {
+            n_templates - base
+        };
+        for r in 0..t.replicas {
+            let arrival = t.arrival + r as Cycle * t.spacing;
+            for j in 0..n_ph {
+                let pred = (j > 0).then(|| jobs.len() - 1);
+                jobs.push(JobSpec { tenant: ti as u32, template: base + j, arrival, pred });
+            }
+        }
+    }
+    if jobs.len() > MAX_JOBS {
+        return Err(format!(
+            "mix enqueues {} kernel launches (cap {MAX_JOBS}); lower the \
+             replica counts",
+            jobs.len()
+        ));
+    }
+
+    // Admission order: (arrival, tenant, spec order). The stable sort
+    // keeps chain predecessors ahead of their successors (same arrival
+    // and tenant, earlier spec order), so `pred` always points backward.
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| (jobs[i].arrival, jobs[i].tenant));
+    let mut new_index = vec![0usize; jobs.len()];
+    for (pos, &old) in order.iter().enumerate() {
+        new_index[old] = pos;
+    }
+    let jobs: Vec<JobSpec> = order
+        .iter()
+        .map(|&old| JobSpec { pred: jobs[old].pred.map(|p| new_index[p]), ..jobs[old] })
+        .collect();
+
+    let wl = Workload {
+        name: name.to_string(),
+        init,
+        phases,
+        checks: Vec::new(),
+        kind: "Mix",
+    };
+    let plan = MixPlan {
+        n_tenants: n_tenants as u32,
+        tenant_names: spec.tenants.iter().map(|t| t.name.clone()).collect(),
+        slot_width: width,
+        n_slots: n_slots as u32,
+        n_templates,
+        phase_tenants,
+        jobs,
+        policy: spec.policy,
+    };
+    Ok((wl, plan))
+}
+
+/// Produce tenant `ti`'s trace: generate the synthetic pattern directly
+/// at the slot geometry, or load a recorded file (folded later).
+fn tenant_trace(stream: &StreamSpec, ti: usize, slot: &WorkloadParams) -> Result<Trace, String> {
+    match stream {
+        StreamSpec::Synth(pat) => {
+            let spec = SynthSpec {
+                pattern: *pat,
+                n_gpus: 1,
+                cus_per_gpu: slot.cus_per_gpu,
+                wavefronts_per_cu: slot.wavefronts_per_cu.max(1),
+                gpu_mem_bytes: slot.map.gpu_mem_bytes,
+                // Same ops scaling as `halcone trace-gen --scale`.
+                ops_per_wavefront: ((64.0 * slot.scale).ceil() as u32).max(4),
+                // Tenant-salted seed: replicas of one tenant share a
+                // stream; different tenants get decorrelated ones.
+                seed: SynthSpec::default().seed ^ ti as u64,
+                ..SynthSpec::default()
+            };
+            generate(&spec)
+        }
+        StreamSpec::Trace(path) => crate::trace::load(path),
+    }
+}
+
+/// Tenant `t`'s private window: partition `t % n_gpus`, offsets
+/// `[t*wsize, (t+1)*wsize)` — applied via replay's partition-relative
+/// `rehome`, of which this is a pure shift for in-window addresses.
+struct TenantWindow {
+    tenant: u64,
+    gmb: u64,
+    wsize: u64,
+    n_gpus: u64,
+}
+
+impl TenantWindow {
+    fn remap(&self, addr: u64, size: u64) -> Result<u64, String> {
+        if addr + size > self.wsize {
+            return Err(format!(
+                "folded stream touches {addr:#x}+{size} B, beyond the tenant's \
+                 {} B window (gpu_mem_bytes {} / {} tenants, {WINDOW_ALIGN} B \
+                 aligned); use fewer tenants, a smaller stream, or a larger \
+                 gpu_mem_bytes",
+                self.wsize,
+                self.gmb,
+                self.gmb / self.wsize.max(1)
+            ));
+        }
+        Ok(crate::trace::replay::rehome(
+            self.tenant * self.gmb + self.tenant * self.wsize + addr,
+            self.gmb,
+            self.n_gpus,
+        ))
+    }
+
+    fn remap_ops(
+        &self,
+        ops: Vec<crate::gpu::CuOp>,
+    ) -> Result<Vec<crate::gpu::CuOp>, String> {
+        use crate::gpu::CuOp;
+        ops.into_iter()
+            .map(|op| {
+                Ok(match op {
+                    CuOp::Ld { reg, addr } => CuOp::Ld { reg, addr: self.remap(addr, 4)? },
+                    CuOp::LdV { reg, addr, n } => {
+                        CuOp::LdV { reg, addr: self.remap(addr, 4 * n as u64)?, n }
+                    }
+                    CuOp::St { addr, reg } => CuOp::St { addr: self.remap(addr, 4)?, reg },
+                    CuOp::StV { addr, reg, n } => {
+                        CuOp::StV { addr: self.remap(addr, 4 * n as u64)?, reg, n }
+                    }
+                    other => other,
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::CuOp;
+    use crate::mem::addr::Topology;
+    use crate::mem::AddrMap;
+
+    const GMB: u64 = 1 << 22;
+
+    fn params() -> WorkloadParams {
+        WorkloadParams {
+            n_gpus: 2,
+            cus_per_gpu: 2,
+            wavefronts_per_cu: 2,
+            map: AddrMap::new(Topology::SharedMem, 2, 2, 2, GMB),
+            scale: 0.1,
+        }
+    }
+
+    fn op_extents(ops: &[CuOp]) -> Vec<(u64, u64)> {
+        ops.iter()
+            .filter_map(|op| match *op {
+                CuOp::Ld { addr, .. } => Some((addr, 4)),
+                CuOp::LdV { addr, n, .. } => Some((addr, 4 * n as u64)),
+                CuOp::St { addr, .. } => Some((addr, 4)),
+                CuOp::StV { addr, n, .. } => Some((addr, 4 * n as u64)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn two_tenant_mix_composes_slots_and_windows() {
+        let p = params();
+        let (wl, plan) = compose("mix:read-mostly+false-sharing@64", &p).unwrap();
+        assert_eq!(wl.kind, "Mix");
+        assert!(wl.checks.is_empty(), "mix runs are replay-style: no checks");
+        // Default width: 4 CUs / 2 tenants = 2; two slots.
+        assert_eq!(plan.slot_width, 2);
+        assert_eq!(plan.n_slots, 2);
+        assert_eq!(plan.n_templates, 2, "one phase per synth tenant");
+        assert_eq!(wl.phases.len(), 4, "templates x slots");
+        assert_eq!(plan.phase_tenants, vec![0, 0, 1, 1]);
+        // Phase k*n_slots+s populates exactly slot s's CUs.
+        let ph = &wl.phases[1]; // template 0, slot 1 = flat CUs 2..4
+        assert!(ph.work[0][0].is_empty() && ph.work[0][1].is_empty());
+        assert!(!ph.work[1][0].is_empty() && !ph.work[1][1].is_empty());
+        // Tenant windows: wsize = GMB/2 (4 KiB aligned); tenant 0 in
+        // partition 0 offsets [0, wsize), tenant 1 in partition 1
+        // offsets [wsize, 2*wsize).
+        let wsize = (GMB / 2) / 4096 * 4096;
+        for (k, tmpl_phase) in [(0usize, 0usize), (2, 0)] {
+            let _ = tmpl_phase;
+            let tenant = plan.phase_tenants[k] as u64;
+            let lo = (tenant % 2) * GMB + tenant * wsize;
+            for gpu in &wl.phases[k].work {
+                for cu in gpu {
+                    for wf in cu {
+                        for (a, sz) in op_extents(wf) {
+                            assert!(
+                                a >= lo && a + sz <= lo + wsize,
+                                "tenant {tenant} op at {a:#x} outside window"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // Init slices land in the windows too.
+        for (addr, vals) in &wl.init {
+            let end = addr + 4 * vals.len() as u64;
+            let in_t0 = *addr < wsize;
+            let in_t1 = *addr >= GMB + wsize && end <= GMB + 2 * wsize;
+            assert!(in_t0 && end <= wsize || in_t1, "init at {addr:#x} stray");
+        }
+        // Jobs: tenant 0 arrives at 0, tenant 1 at 64.
+        assert_eq!(plan.jobs.len(), 2);
+        assert_eq!(plan.jobs[0], JobSpec { tenant: 0, template: 0, arrival: 0, pred: None });
+        assert_eq!(plan.jobs[1], JobSpec { tenant: 1, template: 1, arrival: 64, pred: None });
+    }
+
+    #[test]
+    fn replicas_chain_and_sort_keeps_preds_backward() {
+        let p = params();
+        let (_, plan) = compose("mix:private*3+read-mostly@5", &p).unwrap();
+        assert_eq!(plan.jobs.len(), 4);
+        // Burst replicas of tenant 0 chain in order at arrival 0.
+        assert_eq!(plan.jobs[0].pred, None);
+        assert_eq!(plan.jobs[1], JobSpec { tenant: 0, template: 0, arrival: 0, pred: None });
+        // Single-template replicas have no intra-chain pred, but spec
+        // order is preserved among equal keys (stable sort).
+        assert!(plan.jobs[..3].iter().all(|j| j.tenant == 0));
+        assert_eq!(plan.jobs[3].tenant, 1);
+        assert_eq!(plan.jobs[3].arrival, 5);
+        for (i, j) in plan.jobs.iter().enumerate() {
+            if let Some(pr) = j.pred {
+                assert!(pr < i, "pred points backward");
+            }
+        }
+    }
+
+    #[test]
+    fn file_spec_spacing_spreads_replica_arrivals() {
+        let dir = std::env::temp_dir().join("halcone_mix_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("two.mix");
+        std::fs::write(
+            &path,
+            "policy = rr\nwidth = 2\n\
+             tenant.victim.stream = read-mostly\n\
+             tenant.noisy.stream = false-sharing\n\
+             tenant.noisy.replicas = 3\n\
+             tenant.noisy.spacing = 10\n",
+        )
+        .unwrap();
+        let (_, plan) = compose(&format!("mix:{}", path.display()), &params()).unwrap();
+        assert_eq!(plan.policy, Policy::RoundRobin);
+        assert_eq!(plan.tenant_names, vec!["victim", "noisy"]);
+        let noisy: Vec<Cycle> =
+            plan.jobs.iter().filter(|j| j.tenant == 1).map(|j| j.arrival).collect();
+        assert_eq!(noisy, vec![0, 10, 20]);
+    }
+
+    #[test]
+    fn oversized_width_and_shattered_windows_are_compose_errors() {
+        let p = params();
+        let e = compose("mix:private+private", &{
+            let mut q = p.clone();
+            q.map.gpu_mem_bytes = 4096;
+            q
+        })
+        .unwrap_err();
+        assert!(e.contains("tenants"), "{e}");
+
+        let dir = std::env::temp_dir().join("halcone_mix_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wide.mix");
+        std::fs::write(&path, "width = 64\ntenant.a.stream = private\n").unwrap();
+        let e = compose(&format!("mix:{}", path.display()), &p).unwrap_err();
+        assert!(e.contains("exceeds"), "{e}");
+    }
+
+    #[test]
+    fn footprint_past_the_window_names_the_tenant() {
+        // 512 tenants in a 4 MiB partition -> 4 KiB windows, far below
+        // the synth footprint.
+        let spec = "mix:".to_string() + &vec!["private"; 512].join("+");
+        let e = compose(&spec, &params()).unwrap_err();
+        assert!(e.contains("window") || e.contains("tenants"), "{e}");
+    }
+
+    #[test]
+    fn composition_is_deterministic() {
+        let p = params();
+        let (a, pa) = compose("mix:read-mostly+false-sharing@64", &p).unwrap();
+        let (b, pb) = compose("mix:read-mostly+false-sharing@64", &p).unwrap();
+        assert_eq!(pa.jobs, pb.jobs);
+        assert_eq!(pa.phase_tenants, pb.phase_tenants);
+        assert_eq!(a.phases.len(), b.phases.len());
+        for (x, y) in a.phases.iter().zip(&b.phases) {
+            assert_eq!(x.work, y.work);
+        }
+        assert_eq!(a.init, b.init);
+    }
+}

@@ -1,0 +1,409 @@
+//! Multi-tenant serving: the tenant model, mix-spec parsing and the mix
+//! composer (docs/TENANCY.md).
+//!
+//! A **tenant** is one user's stream of kernels — recorded
+//! (`trace:<file>`) or synthetic (`trace/synth.rs` sharing patterns) —
+//! rehomed into a private, disjoint window of every GPU partition. The
+//! `mix:` pseudo-workload composes N tenant streams into one deterministic
+//! multi-tenant serving scenario: kernels queue with per-tenant arrival
+//! offsets and replication counts, and the inter-kernel scheduler
+//! (`coordinator/scheduler.rs`) admits them onto CU slots as capacity
+//! frees up. Like every workload, a mix is byte-identical at any
+//! `--shards`/jobs level.
+//!
+//! Two spec forms exist behind the `mix:` prefix:
+//!
+//! * **Inline**: `mix:<pattern>[@<arrival>][*<replicas>]+<tenant2>+...`
+//!   where `<pattern>` is a synthetic sharing pattern
+//!   (`trace/synth.rs`), `@<arrival>` a queue-arrival cycle (default 0)
+//!   and `*<replicas>` a replication count (default 1). Example:
+//!   `mix:read-mostly@0*4+false-sharing@512`.
+//! * **File**: `mix:<path>` where the path contains a separator or ends
+//!   in `.mix` — a key=value spec (written by `halcone mix-gen`) that
+//!   additionally supports recorded-trace tenants, arrival spacing, a
+//!   scheduler policy and a slot width. See [`MixSpec::to_spec_string`].
+
+pub mod compose;
+
+pub use compose::{compose, JobSpec, MixPlan};
+
+use crate::sim::Cycle;
+use crate::trace::SharingPattern;
+
+/// Tenant identifier: the index of the tenant in its mix spec. Ordinary
+/// (single-application) runs use tenant 0 implicitly.
+pub type TenantId = u32;
+
+/// Prefix of the multi-tenant mix pseudo-workload form.
+pub const MIX_PREFIX: &str = "mix:";
+
+/// Whether `name` is syntactically a mix workload.
+pub fn is_mix(name: &str) -> bool {
+    name.starts_with(MIX_PREFIX)
+}
+
+/// Inter-kernel scheduling policy (see `coordinator/scheduler.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Policy {
+    /// Earliest arrival first (ties: lowest tenant, then spec order).
+    #[default]
+    Fifo,
+    /// Rotate admission across tenants with eligible kernels.
+    RoundRobin,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s {
+            "fifo" => Ok(Policy::Fifo),
+            "rr" | "round-robin" => Ok(Policy::RoundRobin),
+            other => Err(format!("unknown scheduler policy '{other}': use 'fifo' or 'rr'")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::RoundRobin => "rr",
+        }
+    }
+}
+
+/// Where a tenant's kernel stream comes from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamSpec {
+    /// Generated sharing pattern (`trace/synth.rs`), sized to the slot
+    /// geometry at compose time.
+    Synth(SharingPattern),
+    /// Recorded or pre-generated trace file, folded to the slot geometry
+    /// by the replay remap (`trace/replay.rs`).
+    Trace(String),
+}
+
+impl StreamSpec {
+    fn parse(s: &str) -> Result<StreamSpec, String> {
+        if let Some(path) = s.strip_prefix("trace:") {
+            if path.is_empty() {
+                return Err("empty trace path in tenant stream".into());
+            }
+            return Ok(StreamSpec::Trace(path.to_string()));
+        }
+        let pat = s.strip_prefix("synth:").unwrap_or(s);
+        SharingPattern::parse(pat).map(StreamSpec::Synth)
+    }
+
+    fn spec_string(&self) -> String {
+        match self {
+            StreamSpec::Synth(p) => format!("synth:{}", p.name()),
+            StreamSpec::Trace(path) => format!("trace:{path}"),
+        }
+    }
+}
+
+/// One tenant's row in a mix spec.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    pub stream: StreamSpec,
+    /// Cycle at which the tenant's kernels join the queue.
+    pub arrival: Cycle,
+    /// How many copies of the stream's kernel chain to enqueue.
+    pub replicas: u32,
+    /// Arrival gap between consecutive replicas (0 = burst arrival).
+    pub spacing: Cycle,
+}
+
+/// A parsed mix spec (inline or file form).
+#[derive(Clone, Debug)]
+pub struct MixSpec {
+    pub tenants: Vec<TenantSpec>,
+    pub policy: Policy,
+    /// CUs per scheduling slot; defaults to `total_cus / n_tenants`.
+    pub width: Option<u32>,
+}
+
+fn form_error(detail: &str) -> String {
+    format!(
+        "{detail}; valid mix forms are \
+         'mix:<pattern>[@<arrival>][*<replicas>]+<tenant2>+...' with \
+         patterns {:?}, or 'mix:<file>.mix' for a spec file \
+         (docs/TENANCY.md)",
+        SharingPattern::NAMES
+    )
+}
+
+impl MixSpec {
+    /// Parse the full `mix:...` workload name (either form).
+    pub fn parse(name: &str) -> Result<MixSpec, String> {
+        let body = name
+            .strip_prefix(MIX_PREFIX)
+            .ok_or_else(|| form_error(&format!("'{name}' lacks the '{MIX_PREFIX}' prefix")))?;
+        if body.is_empty() {
+            return Err(form_error("empty mix spec"));
+        }
+        // Only the `.mix` suffix selects the file form: inline tenant
+        // streams may themselves be `trace:<path>` with separators.
+        if body.ends_with(".mix") {
+            let text = std::fs::read_to_string(body)
+                .map_err(|e| format!("cannot read mix spec '{body}': {e}"))?;
+            Self::parse_file(&text).map_err(|e| format!("mix spec '{body}': {e}"))
+        } else {
+            Self::parse_inline(body)
+        }
+    }
+
+    /// Inline form: `+`-separated `<pattern>[@<arrival>][*<replicas>]`.
+    fn parse_inline(body: &str) -> Result<MixSpec, String> {
+        let mut tenants = Vec::new();
+        for (i, term) in body.split('+').enumerate() {
+            if term.is_empty() {
+                return Err(form_error(&format!("empty tenant term in 'mix:{body}'")));
+            }
+            let (head, replicas) = match term.split_once('*') {
+                Some((h, r)) => (
+                    h,
+                    r.parse::<u32>()
+                        .map_err(|_| form_error(&format!("bad replica count '{r}' in '{term}'")))?,
+                ),
+                None => (term, 1),
+            };
+            let (pat, arrival) = match head.split_once('@') {
+                Some((p, a)) => (
+                    p,
+                    a.parse::<Cycle>()
+                        .map_err(|_| form_error(&format!("bad arrival cycle '{a}' in '{term}'")))?,
+                ),
+                None => (head, 0),
+            };
+            let stream = StreamSpec::parse(pat).map_err(|e| form_error(&e))?;
+            if replicas == 0 {
+                return Err(form_error(&format!("'{term}' asks for zero replicas")));
+            }
+            // '-' separator, not '.': tenant names must survive the file
+            // form's dotted `tenant.<name>.<field>` keys (mix-gen writes
+            // inline-parsed specs out as files).
+            let name = match &stream {
+                StreamSpec::Synth(p) => format!("t{i}-{}", p.name()),
+                StreamSpec::Trace(_) => format!("t{i}-trace"),
+            };
+            tenants.push(TenantSpec { name, stream, arrival, replicas, spacing: 0 });
+        }
+        Ok(MixSpec { tenants, policy: Policy::Fifo, width: None })
+    }
+
+    /// File form: key=value lines, `#` comments. Tenant order is
+    /// first-mention order, which fixes the `TenantId` assignment.
+    fn parse_file(text: &str) -> Result<MixSpec, String> {
+        let mut spec = MixSpec { tenants: Vec::new(), policy: Policy::Fifo, width: None };
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .map(|(k, v)| (k.trim(), v.trim()))
+                .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+            let err = |e: String| format!("line {}: {e}", lineno + 1);
+            match key {
+                "policy" => spec.policy = Policy::parse(value).map_err(err)?,
+                "width" => {
+                    let w: u32 = value
+                        .parse()
+                        .map_err(|_| err(format!("bad slot width '{value}'")))?;
+                    if w == 0 {
+                        return Err(err("slot width must be at least 1".into()));
+                    }
+                    spec.width = Some(w);
+                }
+                _ => {
+                    let mut parts = key.splitn(3, '.');
+                    let (kind, tname, field) =
+                        (parts.next().unwrap_or(""), parts.next(), parts.next());
+                    let (Some(tname), Some(field)) = (tname, field) else {
+                        return Err(err(form_error(&format!("unknown key '{key}'"))));
+                    };
+                    if kind != "tenant" || tname.is_empty() {
+                        return Err(err(form_error(&format!("unknown key '{key}'"))));
+                    }
+                    let t = match spec.tenants.iter_mut().find(|t| t.name == tname) {
+                        Some(t) => t,
+                        None => {
+                            spec.tenants.push(TenantSpec {
+                                name: tname.to_string(),
+                                stream: StreamSpec::Synth(SharingPattern::Private),
+                                arrival: 0,
+                                replicas: 1,
+                                spacing: 0,
+                            });
+                            spec.tenants.last_mut().unwrap()
+                        }
+                    };
+                    match field {
+                        "stream" => t.stream = StreamSpec::parse(value).map_err(err)?,
+                        "arrival" => {
+                            t.arrival = value
+                                .parse()
+                                .map_err(|_| err(format!("bad arrival '{value}'")))?
+                        }
+                        "replicas" => {
+                            t.replicas = value
+                                .parse()
+                                .map_err(|_| err(format!("bad replicas '{value}'")))?;
+                            if t.replicas == 0 {
+                                return Err(err("replicas must be at least 1".into()));
+                            }
+                        }
+                        "spacing" => {
+                            t.spacing = value
+                                .parse()
+                                .map_err(|_| err(format!("bad spacing '{value}'")))?
+                        }
+                        other => {
+                            return Err(err(format!(
+                                "unknown tenant field '{other}' (stream/arrival/replicas/spacing)"
+                            )))
+                        }
+                    }
+                }
+            }
+        }
+        if spec.tenants.is_empty() {
+            return Err(form_error("spec file declares no tenants"));
+        }
+        Ok(spec)
+    }
+
+    /// Serialize to the file form (`halcone mix-gen` output). Parsing the
+    /// result reproduces the spec exactly.
+    pub fn to_spec_string(&self) -> String {
+        let mut out = String::from("# halcone mix spec (docs/TENANCY.md)\n");
+        out.push_str(&format!("policy = {}\n", self.policy.name()));
+        if let Some(w) = self.width {
+            out.push_str(&format!("width = {w}\n"));
+        }
+        for t in &self.tenants {
+            out.push_str(&format!("tenant.{}.stream = {}\n", t.name, t.stream.spec_string()));
+            out.push_str(&format!("tenant.{}.arrival = {}\n", t.name, t.arrival));
+            out.push_str(&format!("tenant.{}.replicas = {}\n", t.name, t.replicas));
+            out.push_str(&format!("tenant.{}.spacing = {}\n", t.name, t.spacing));
+        }
+        out
+    }
+}
+
+/// Deep validation for campaign specs (`workloads::validate_name`):
+/// parse the spec and probe every recorded-trace tenant's header, so a
+/// bad mix fails at spec-parse time, never mid-campaign.
+pub fn validate(name: &str) -> Result<(), String> {
+    let spec = MixSpec::parse(name)?;
+    for t in &spec.tenants {
+        if let StreamSpec::Trace(path) = &t.stream {
+            crate::trace::load_meta(path)
+                .map(|_| ())
+                .map_err(|e| format!("tenant '{}': {e}", t.name))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_form_parses_defaults_and_modifiers() {
+        let s = MixSpec::parse("mix:read-mostly@0*4+false-sharing@512").unwrap();
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[0].stream, StreamSpec::Synth(SharingPattern::ReadMostly));
+        assert_eq!(s.tenants[0].arrival, 0);
+        assert_eq!(s.tenants[0].replicas, 4);
+        assert_eq!(s.tenants[1].arrival, 512);
+        assert_eq!(s.tenants[1].replicas, 1);
+        assert_eq!(s.policy, Policy::Fifo);
+        let one = MixSpec::parse("mix:private").unwrap();
+        assert_eq!(one.tenants.len(), 1);
+        assert_eq!(one.tenants[0].name, "t0-private");
+    }
+
+    #[test]
+    fn inline_form_rejects_malformed_terms_with_the_form_list() {
+        for bad in [
+            "mix:",
+            "mix:notapattern",
+            "mix:read-mostly@x",
+            "mix:read-mostly*0",
+            "mix:read-mostly++private",
+            "mix:read-mostly*many",
+        ] {
+            let e = MixSpec::parse(bad).unwrap_err();
+            assert!(e.contains("mix:<pattern>"), "{bad}: {e}");
+            assert!(e.contains("read-mostly"), "{bad} error lists patterns: {e}");
+        }
+    }
+
+    #[test]
+    fn file_form_round_trips_through_spec_string() {
+        let spec = MixSpec {
+            tenants: vec![
+                TenantSpec {
+                    name: "victim".into(),
+                    stream: StreamSpec::Synth(SharingPattern::ReadMostly),
+                    arrival: 0,
+                    replicas: 2,
+                    spacing: 100,
+                },
+                TenantSpec {
+                    name: "noisy".into(),
+                    stream: StreamSpec::Synth(SharingPattern::FalseSharing),
+                    arrival: 64,
+                    replicas: 5,
+                    spacing: 0,
+                },
+            ],
+            policy: Policy::RoundRobin,
+            width: Some(2),
+        };
+        let text = spec.to_spec_string();
+        let back = MixSpec::parse_file(&text).unwrap();
+        assert_eq!(back.policy, Policy::RoundRobin);
+        assert_eq!(back.width, Some(2));
+        assert_eq!(back.tenants.len(), 2);
+        assert_eq!(back.tenants[0].name, "victim");
+        assert_eq!(back.tenants[0].spacing, 100);
+        assert_eq!(back.tenants[1].arrival, 64);
+        assert_eq!(back.tenants[1].replicas, 5);
+        assert_eq!(back.tenants[1].stream, StreamSpec::Synth(SharingPattern::FalseSharing));
+    }
+
+    #[test]
+    fn file_form_rejects_unknown_keys_and_fields() {
+        let e = MixSpec::parse_file("bogus = 1\n").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+        let e = MixSpec::parse_file("tenant.a.color = red\n").unwrap_err();
+        assert!(e.contains("unknown tenant field"), "{e}");
+        let e = MixSpec::parse_file("policy = lifo\n").unwrap_err();
+        assert!(e.contains("fifo"), "{e}");
+        let e = MixSpec::parse_file("# only comments\n").unwrap_err();
+        assert!(e.contains("no tenants"), "{e}");
+    }
+
+    #[test]
+    fn validate_probes_missing_trace_tenants() {
+        validate("mix:read-mostly+private").unwrap();
+        let e = validate("mix:trace:/definitely/missing.trc+private").unwrap_err();
+        assert!(e.contains("missing.trc"), "{e}");
+        // A missing spec file fails with its path.
+        let e = validate("mix:/no/such/file.mix").unwrap_err();
+        assert!(e.contains("file.mix"), "{e}");
+    }
+
+    #[test]
+    fn policy_parse_and_names() {
+        assert_eq!(Policy::parse("fifo").unwrap(), Policy::Fifo);
+        assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("round-robin").unwrap(), Policy::RoundRobin);
+        assert!(Policy::parse("lifo").is_err());
+        assert_eq!(Policy::RoundRobin.name(), "rr");
+    }
+}

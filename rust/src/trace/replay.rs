@@ -30,8 +30,9 @@ use crate::trace::{Trace, TraceKind};
 use crate::workloads::{Phase, Workload, WorkloadParams};
 
 /// Fold `addr` into the first `n_gpus` partitions of `gmb` bytes each,
-/// preserving the partition-relative offset.
-fn rehome(addr: u64, gmb: u64, n_gpus: u64) -> u64 {
+/// preserving the partition-relative offset. Also the placement
+/// primitive of the tenant-window shift in `tenancy/compose.rs`.
+pub(crate) fn rehome(addr: u64, gmb: u64, n_gpus: u64) -> u64 {
     let home = addr / gmb;
     if home < n_gpus {
         addr
@@ -60,9 +61,12 @@ pub fn replay_workload(name: &str, t: &Trace, p: &WorkloadParams) -> Result<Work
     let gmb = t.meta.gpu_mem_bytes;
     if p.map.gpu_mem_bytes != gmb {
         return Err(format!(
-            "recorded with gpu_mem_bytes={gmb} but the config has {}; the \
-             partition-preserving GPU remap needs equal partition sizes",
-            p.map.gpu_mem_bytes
+            "partition size mismatch: the trace was recorded with \
+             gpu_mem_bytes={gmb} but this config requests {req}; the \
+             partition-preserving GPU remap needs equal partition sizes — \
+             either re-record the trace under the target geometry or set \
+             the config's gpu_mem_bytes to {gmb}",
+            req = p.map.gpu_mem_bytes
         ));
     }
     let (tg, tc) = (t.meta.n_gpus as usize, t.meta.cus_per_gpu as usize);
@@ -233,12 +237,16 @@ mod tests {
     }
 
     #[test]
-    fn partition_size_mismatch_is_a_clear_error() {
+    fn partition_size_mismatch_states_both_values_and_the_fix() {
         let t = two_gpu_trace();
         let mut p = params(2, 1);
         p.map.gpu_mem_bytes = 1 << 20;
         let e = replay_workload("trace:x", &t, &p).unwrap_err();
-        assert!(e.contains("gpu_mem_bytes"), "{e}");
+        // Both the recorded and the requested size, plus remediation.
+        assert!(e.contains("gpu_mem_bytes=4194304"), "recorded value: {e}");
+        assert!(e.contains("requests 1048576"), "requested value: {e}");
+        assert!(e.contains("re-record"), "remediation: {e}");
+        assert!(e.contains("gpu_mem_bytes to 4194304"), "remediation: {e}");
     }
 
     #[test]

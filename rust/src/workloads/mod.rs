@@ -281,6 +281,14 @@ pub fn build(name: &str, p: &WorkloadParams) -> Workload {
 
 /// Non-panicking [`build`].
 pub fn try_build(name: &str, p: &WorkloadParams) -> Result<Workload, String> {
+    if crate::tenancy::is_mix(name) {
+        // The composed mix drops its scheduling plan here; callers that
+        // need the inter-kernel scheduler (the runner) go through
+        // `tenancy::compose` directly and keep the plan.
+        return crate::tenancy::compose(name, p)
+            .map(|(wl, _)| wl)
+            .map_err(|e| format!("workload '{name}': {e}"));
+    }
     if let Some(path) = name.strip_prefix(TRACE_PREFIX) {
         // Loaded per call on purpose: campaign cells are independent,
         // panic-isolated simulations sharing no state, and a re-read per
@@ -312,8 +320,9 @@ pub fn try_build(name: &str, p: &WorkloadParams) -> Result<Workload, String> {
 fn unknown_name_error(name: &str) -> String {
     format!(
         "unknown workload '{name}': valid names are {STANDARD:?} (standard), \
-         {XTREME:?} (xtreme), or the replay form 'trace:<file>' for a \
-         recorded/synthetic trace (docs/TRACE.md)"
+         {XTREME:?} (xtreme), the replay form 'trace:<file>' for a \
+         recorded/synthetic trace (docs/TRACE.md), or the multi-tenant mix \
+         form 'mix:<spec>' (docs/TENANCY.md)"
     )
 }
 
@@ -328,7 +337,10 @@ pub const XTREME: [&str; 3] = ["xtreme1", "xtreme2", "xtreme3"];
 /// the `trace:<file>` form (whose file is not probed here — use
 /// [`validate_name`] for that).
 pub fn is_known(name: &str) -> bool {
-    STANDARD.contains(&name) || XTREME.contains(&name) || name.starts_with(TRACE_PREFIX)
+    STANDARD.contains(&name)
+        || XTREME.contains(&name)
+        || name.starts_with(TRACE_PREFIX)
+        || crate::tenancy::is_mix(name)
 }
 
 /// Deep name validation: registry membership, or — for `trace:<file>` —
@@ -336,7 +348,9 @@ pub fn is_known(name: &str) -> bool {
 /// version. Campaign specs call this so a bad trace path fails at spec
 /// time with a clear error instead of panicking mid-campaign.
 pub fn validate_name(name: &str) -> Result<(), String> {
-    if let Some(path) = name.strip_prefix(TRACE_PREFIX) {
+    if crate::tenancy::is_mix(name) {
+        crate::tenancy::validate(name).map_err(|e| format!("workload '{name}': {e}"))
+    } else if let Some(path) = name.strip_prefix(TRACE_PREFIX) {
         crate::trace::load_meta(path)
             .map(|_| ())
             .map_err(|e| format!("workload '{name}': {e}"))
@@ -448,10 +462,25 @@ mod tests {
         validate_name("xtreme1").unwrap();
         let e = validate_name("nope").unwrap_err();
         assert!(e.contains("fir") && e.contains("trace:<file>"), "{e}");
+        assert!(e.contains("mix:<spec>"), "{e}");
         let e = validate_name("trace:/definitely/missing.trc").unwrap_err();
         assert!(e.contains("missing.trc"), "{e}");
         let e = try_build("nope", &params()).unwrap_err();
         assert!(e.contains("trace:<file>"), "{e}");
+    }
+
+    #[test]
+    fn name_validation_knows_the_mix_form() {
+        assert!(is_known("mix:private+private"));
+        validate_name("mix:read-mostly+false-sharing@64").unwrap();
+        // Spec errors surface at validation time, never mid-campaign.
+        let e = validate_name("mix:").unwrap_err();
+        assert!(e.contains("mix:<pattern>") && e.contains("mix:<file>.mix"), "{e}");
+        let e = validate_name("mix:trace:/definitely/missing.trc+private").unwrap_err();
+        assert!(e.contains("missing.trc"), "{e}");
+        // A valid mix composes through the ordinary registry path too.
+        let wl = try_build("mix:private+private", &params()).unwrap();
+        assert_eq!(wl.kind, "Mix");
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Multi-tenant mix properties (docs/TENANCY.md).
+//!
+//! The three pillars the subsystem guarantees:
+//!
+//! 1. **Determinism** — a mix campaign's canonical `campaign.json` is
+//!    byte-identical at every `--shards` and `--jobs` level, because the
+//!    scheduler's admission decisions depend only on simulated time and
+//!    the logical shard partition is fixed by the topology.
+//! 2. **Fold conservation** — per-tenant attribution tables sum exactly
+//!    to the untagged counters (the tenant tag rides the same bump
+//!    sites, so nothing is double-counted or dropped).
+//! 3. **Fairness metrics** — the Jain index behaves per its definition
+//!    at the boundary cases the per-tenant report exercises.
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_workload;
+use halcone::metrics::tenancy::jain;
+use halcone::sweep::exec::{run_campaign, ExecOptions};
+use halcone::sweep::spec::CampaignSpec;
+use halcone::sweep::{gate, report};
+
+/// The CI mix cell: a read-mostly tenant sharing the machine with a
+/// false-sharing tenant that arrives 64 cycles late — under HALCONE and
+/// with coherence off, at the smoke geometry.
+const MIX_CAMPAIGN: &str = "name = tenancy-ci\n\
+     presets = SM-WT-C-HALCONE,SM-WT-NC\n\
+     workloads = mix:read-mostly+false-sharing@64\n\
+     set.n_gpus = 2\n\
+     set.cus_per_gpu = 2\n\
+     set.wavefronts_per_cu = 2\n\
+     set.l2_banks = 2\n\
+     set.stacks_per_gpu = 2\n\
+     set.gpu_mem_bytes = 67108864\n\
+     set.scale = 0.05\n";
+
+fn mix_spec() -> CampaignSpec {
+    CampaignSpec::parse(MIX_CAMPAIGN).unwrap()
+}
+
+fn small(preset: &str) -> SystemConfig {
+    let mut cfg = SystemConfig::preset(preset);
+    cfg.n_gpus = 2;
+    cfg.cus_per_gpu = 2;
+    cfg.wavefronts_per_cu = 2;
+    cfg.l2_banks = 2;
+    cfg.stacks_per_gpu = 2;
+    cfg.gpu_mem_bytes = 64 << 20;
+    cfg.scale = 0.05;
+    cfg
+}
+
+#[test]
+fn mix_campaign_is_byte_identical_across_shards_levels() {
+    let serial = run_campaign(
+        &mix_spec(),
+        &ExecOptions { jobs: 1, progress: false, shards: Some(1) },
+    )
+    .unwrap();
+    let sharded = run_campaign(
+        &mix_spec(),
+        &ExecOptions { jobs: 1, progress: false, shards: Some(4) },
+    )
+    .unwrap();
+    assert!(serial.all_passed() && sharded.all_passed());
+    assert_eq!(
+        report::to_json_canonical(&serial),
+        report::to_json_canonical(&sharded),
+        "mix campaign.json differs between --shards 1 and --shards 4"
+    );
+}
+
+#[test]
+fn mix_campaign_is_byte_identical_across_jobs_levels() {
+    let serial =
+        run_campaign(&mix_spec(), &ExecOptions { jobs: 1, progress: false, shards: None })
+            .unwrap();
+    let parallel =
+        run_campaign(&mix_spec(), &ExecOptions { jobs: 8, progress: false, shards: None })
+            .unwrap();
+    assert_eq!(
+        report::to_json_canonical(&serial),
+        report::to_json_canonical(&parallel),
+        "mix campaign.json differs between --jobs 1 and --jobs 8"
+    );
+}
+
+#[test]
+fn mix_gate_round_trip_passes_at_zero_tolerance() {
+    let opts = ExecOptions { jobs: 2, progress: false, shards: None };
+    let baseline = report::to_json(&run_campaign(&mix_spec(), &opts).unwrap());
+    let current = report::to_json(&run_campaign(&mix_spec(), &opts).unwrap());
+    let rep = gate::diff(&baseline, &current, 0.0).unwrap();
+    assert!(rep.passed(), "{}", rep.describe());
+    assert_eq!(rep.compared, 2);
+}
+
+#[test]
+fn per_tenant_attribution_conserves_the_untagged_totals() {
+    for preset in ["SM-WT-C-HALCONE", "SM-WT-NC"] {
+        let res = run_workload(&small(preset), "mix:read-mostly+false-sharing@64", None);
+        let m = &res.metrics;
+        let t = m.tenancy.as_ref().expect("mix run must carry a tenancy report");
+        assert_eq!(t.tenants.len(), 2, "{preset}");
+        let sum = |f: fn(&halcone::metrics::tenancy::TenantMetrics) -> u64| {
+            t.tenants.iter().map(f).sum::<u64>()
+        };
+        assert_eq!(sum(|tm| tm.loads), m.cu_loads, "{preset}: loads leak");
+        assert_eq!(sum(|tm| tm.stores), m.cu_stores, "{preset}: stores leak");
+        assert_eq!(sum(|tm| tm.l1_hits), m.l1.hits, "{preset}: hits leak");
+        assert_eq!(sum(|tm| tm.l1_misses), m.l1.misses, "{preset}: misses leak");
+        assert_eq!(
+            sum(|tm| tm.l1_coherency_misses),
+            m.l1.coherency_misses,
+            "{preset}: coherency misses leak"
+        );
+        // Both tenants actually ran and finished exactly their one job.
+        assert!(t.tenants.iter().all(|tm| tm.jobs == 1 && tm.turnaround_sum > 0));
+    }
+}
+
+#[test]
+fn tab_tenant_builtin_runs_end_to_end_with_per_tenant_metrics() {
+    let spec = CampaignSpec::builtin("tab-tenant").unwrap();
+    let res = run_campaign(
+        &spec,
+        &ExecOptions { jobs: 4, progress: false, shards: None },
+    )
+    .unwrap();
+    assert!(res.all_passed());
+    let doc = halcone::sweep::json::parse(&report::to_json_canonical(&res)).unwrap();
+    let cells = doc.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 6);
+    for cell in cells {
+        let t = cell.get("metrics").unwrap().get("tenancy").unwrap();
+        let j = t.get("jain_turnaround").unwrap().as_f64().unwrap();
+        assert!(j > 0.0 && j <= 1.0 + 1e-12, "jain out of range: {j}");
+        let tenants = t.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2);
+        for tm in tenants {
+            assert!(tm.get("jobs").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(tm.get("turnaround_mean").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn round_robin_spec_file_runs_and_reports_its_policy() {
+    let dir = std::env::temp_dir()
+        .join(format!("halcone-tenancy-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rr.mix");
+    std::fs::write(
+        &path,
+        "policy = rr\n\
+         tenant.a.stream = synth:private\n\
+         tenant.a.replicas = 3\n\
+         tenant.a.spacing = 32\n\
+         tenant.b.stream = synth:migratory\n\
+         tenant.b.arrival = 16\n\
+         tenant.b.replicas = 2\n",
+    )
+    .unwrap();
+    let name = format!("mix:{}", path.display());
+    let res = run_workload(&small("SM-WT-NC"), &name, None);
+    let t = res.metrics.tenancy.as_ref().unwrap();
+    assert_eq!(t.scheduler, "rr");
+    assert_eq!(t.tenants.len(), 2);
+    assert_eq!(t.tenants[0].jobs, 3);
+    assert_eq!(t.tenants[1].jobs, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn jain_index_boundary_cases() {
+    // Equal allocations are perfectly fair.
+    assert!((jain(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+    // One hog among n tenants approaches 1/n.
+    assert!((jain(&[9.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+    // Degenerate inputs read as fair rather than dividing by zero.
+    assert_eq!(jain(&[]), 1.0);
+    assert_eq!(jain(&[0.0, 0.0]), 1.0);
+    // Always within (0, 1].
+    let j = jain(&[1.0, 2.0, 3.0, 4.0]);
+    assert!(j > 0.0 && j <= 1.0);
+}

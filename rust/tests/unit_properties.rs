@@ -210,6 +210,7 @@ fn mshr_capacity_is_respected_under_load() {
                         dst: CompId(1),
                         data: halcone::mem::LineBuf::empty(),
                         warpts: None,
+                        tenant: 0,
                     },
                 );
                 live.push(addr);
