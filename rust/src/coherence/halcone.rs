@@ -69,6 +69,10 @@ pub struct HalconeL1 {
     /// (mix runs; single-tenant traffic lands in slot 0).
     pub tstats: crate::metrics::tenancy::TenantTraffic,
     line: u64,
+    /// Finite timestamp width (docs/ROBUSTNESS.md); 0 = unbounded.
+    ts_bits: u32,
+    /// Conservative full flushes forced by `cts` epoch crossings.
+    pub rollover_flushes: u64,
 }
 
 /// Merge buffered (addr, bytes) writes into maximal contiguous runs.
@@ -117,6 +121,32 @@ impl HalconeL1 {
             stats: CacheCtrlStats::default(),
             tstats: crate::metrics::tenancy::TenantTraffic::default(),
             line,
+            ts_bits: 0,
+            rollover_flushes: 0,
+        }
+    }
+
+    /// Enable the finite-width timestamp model (see
+    /// [`HalconeL1::advance_cts`]).
+    pub fn set_ts_bits(&mut self, bits: u32) {
+        self.ts_bits = bits;
+    }
+
+    /// Advance the cache clock. Under an N-bit counter, crossing a 2^N
+    /// epoch boundary conservatively flushes the whole array — HALCONE
+    /// caches are write-through, so every resident line is clean and
+    /// the flush can never lose data, only force refetches. Timestamps
+    /// stay monotonic `u64`s so cross-epoch comparisons remain
+    /// well-defined while the rollover's perf cost is charged.
+    fn advance_cts(&mut self, to: u64) {
+        let old = self.cts;
+        self.cts = old.max(to);
+        if self.ts_bits != 0
+            && crate::faults::epoch_of(self.cts, self.ts_bits)
+                != crate::faults::epoch_of(old, self.ts_bits)
+        {
+            self.cache.clear();
+            self.rollover_flushes += 1;
         }
     }
 
@@ -298,7 +328,7 @@ impl HalconeL1 {
                     *line.meta = meta;
                 }
                 // Writes advance the cache's clock (Alg. 4).
-                self.cts = self.cts.max(meta.wts);
+                self.advance_cts(meta.wts);
                 let primary = entry.primary;
                 if primary.src != CompId::NONE {
                     self.respond_write_ack(&primary, ctx);
@@ -368,7 +398,7 @@ impl Component for HalconeL1 {
             }
             Msg::FenceApply { reply_to, logical_max } => {
                 debug_assert!(self.mshr.is_empty(), "fence with in-flight requests");
-                self.cts = self.cts.max(logical_max);
+                self.advance_cts(logical_max);
                 ctx.schedule(0, reply_to, Msg::FenceDone { from: ctx.self_id });
             }
             other => panic!("{}: unexpected {:?}", self.name, other),
@@ -387,6 +417,10 @@ pub struct HalconeL2 {
     carry_warpts: bool,
     pub stats: CacheCtrlStats,
     line: u64,
+    /// Finite timestamp width (docs/ROBUSTNESS.md); 0 = unbounded.
+    ts_bits: u32,
+    /// Conservative full flushes forced by `cts` epoch crossings.
+    pub rollover_flushes: u64,
 }
 
 impl HalconeL2 {
@@ -409,6 +443,29 @@ impl HalconeL2 {
             carry_warpts,
             stats: CacheCtrlStats::default(),
             line,
+            ts_bits: 0,
+            rollover_flushes: 0,
+        }
+    }
+
+    /// Enable the finite-width timestamp model (see
+    /// [`HalconeL2::advance_cts`]).
+    pub fn set_ts_bits(&mut self, bits: u32) {
+        self.ts_bits = bits;
+    }
+
+    /// Advance the bank clock; under an N-bit counter an epoch crossing
+    /// conservatively flushes the (write-through, all-clean) array —
+    /// the same model as [`HalconeL1::advance_cts`].
+    fn advance_cts(&mut self, to: u64) {
+        let old = self.cts;
+        self.cts = old.max(to);
+        if self.ts_bits != 0
+            && crate::faults::epoch_of(self.cts, self.ts_bits)
+                != crate::faults::epoch_of(old, self.ts_bits)
+        {
+            self.cache.clear();
+            self.rollover_flushes += 1;
         }
     }
 
@@ -534,7 +591,7 @@ impl HalconeL2 {
                 // any tag-matched-but-expired stale copy with fresh bytes.
                 debug_assert_eq!(rsp.data.len() as u64, self.line);
                 self.cache.insert(la, &rsp.data, false, meta);
-                self.cts = self.cts.max(meta.wts);
+                self.advance_cts(meta.wts);
                 self.respond_up(&entry.primary, LineBuf::empty(), meta, ctx);
             }
         }
@@ -567,7 +624,7 @@ impl Component for HalconeL2 {
             }
             Msg::FenceApply { reply_to, logical_max } => {
                 debug_assert!(self.mshr.is_empty(), "fence with in-flight requests");
-                self.cts = self.cts.max(logical_max);
+                self.advance_cts(logical_max);
                 ctx.schedule(0, reply_to, Msg::FenceDone { from: ctx.self_id });
             }
             other => panic!("{}: unexpected {:?}", self.name, other),

@@ -7,6 +7,7 @@
 //! everything the experiments need.
 
 use crate::coherence::WritePolicy;
+use crate::faults::FaultSpec;
 use crate::mem::addr::Topology;
 use crate::mem::AddrMap;
 use crate::tsu::Leases;
@@ -71,6 +72,12 @@ pub struct SystemConfig {
     /// GPU plus a hub) is fixed by the topology, so every value produces
     /// byte-identical results — see `sim::shard`.
     pub shards: u32,
+
+    /// Deterministic fault-injection schedule (`faults` key /
+    /// `--faults`; docs/ROBUSTNESS.md). `None` = perfect hardware.
+    /// Part of the simulated configuration — recorded in campaign
+    /// artifacts so gate re-runs replay the exact same faults.
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for SystemConfig {
@@ -105,6 +112,7 @@ impl Default for SystemConfig {
             tsu_entries: 1 << 16,
             scale: 1.0,
             shards: 1,
+            faults: None,
         }
     }
 }
@@ -265,6 +273,7 @@ impl SystemConfig {
                 }
                 self.shards = v;
             }
+            "faults" => self.faults = FaultSpec::parse(value)?,
             other => return Err(format!("unknown config key '{other}'")),
         }
         Ok(())
@@ -346,6 +355,10 @@ impl SystemConfig {
             ),
             Coherence::Hmg => "HMG (VI + directory)".to_string(),
         };
+        let faults = match &self.faults {
+            None => "none".to_string(),
+            Some(f) => f.to_string(),
+        };
         format!(
             "config {name}\n\
              topology            {topo:?}\n\
@@ -357,7 +370,8 @@ impl SystemConfig {
              PCIe switch         {pcie} GB/s, {plat} cy\n\
              MC latency          {mc} cy, TSU {tsu} entries\n\
              L2 policy           {pol:?}\n\
-             coherence           {coher}",
+             coherence           {coher}\n\
+             faults              {faults}",
             name = self.name,
             topo = self.topology,
             gpus = self.n_gpus,
@@ -380,6 +394,7 @@ impl SystemConfig {
             tsu = self.tsu_entries,
             pol = self.l2_policy,
             coher = coher,
+            faults = faults,
         )
     }
 }
@@ -493,6 +508,19 @@ mod tests {
         assert_eq!(c.shards, 4);
         assert!(c.set("shards", "0").is_err());
         assert!(c.set("shards", "x").is_err());
+    }
+
+    #[test]
+    fn faults_key_parses_clears_and_rejects() {
+        let mut c = SystemConfig::default();
+        assert!(c.faults.is_none());
+        c.set("faults", "seed=7;degrade=0.2;ts_bits=12").unwrap();
+        let f = c.faults.unwrap();
+        assert_eq!((f.seed, f.ts_bits), (7, 12));
+        c.set("faults", "none").unwrap();
+        assert!(c.faults.is_none());
+        assert!(c.set("faults", "degrade=2").is_err());
+        assert!(c.set("faults", "nonsense").is_err());
     }
 
     #[test]

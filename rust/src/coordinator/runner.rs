@@ -199,6 +199,32 @@ pub fn collect_metrics(sys: &System, host_seconds: f64) -> RunMetrics {
     for &l in &sys.mem_links {
         m.mem_bytes += engine.link(l).bytes_sent;
     }
+    if sys.faults.is_some() {
+        // Presence of the section is a pure function of the config (the
+        // schedule may legitimately count zero of everything), so the
+        // canonical artifact shape never depends on outcomes.
+        let mut f = crate::metrics::FaultReport::default();
+        for link in engine.links() {
+            f.link_outage_cycles += link.outage_cycles;
+            f.link_degraded_msgs += link.degraded_msgs;
+        }
+        for &id in &sys.l1s {
+            if let Some(h) = engine.component(id).as_any().downcast_ref::<HalconeL1>() {
+                f.rollover_flushes += h.rollover_flushes;
+            }
+        }
+        for &id in &sys.l2s {
+            if let Some(h) = engine.component(id).as_any().downcast_ref::<HalconeL2>() {
+                f.rollover_flushes += h.rollover_flushes;
+            }
+        }
+        for &id in &sys.mcs {
+            if let Some(tsu) = &engine.downcast::<MemCtrl>(id).tsu {
+                f.tsu_rollovers += tsu.ts_rollovers;
+            }
+        }
+        m.faults = Some(f);
+    }
     m
 }
 
@@ -418,6 +444,41 @@ mod tests {
             sm.metrics.cycles
         );
         assert!(rdma.metrics.pcie_bytes > 0, "fir under RDMA must cross PCIe");
+    }
+
+    #[test]
+    fn perf_faults_preserve_correctness_and_only_slow_the_run() {
+        let clean = run_workload(&small("SM-WT-C-HALCONE"), "fir", None);
+        let mut cfg = small("SM-WT-C-HALCONE");
+        cfg.set("faults", "seed=7;degrade=0.3;outage=0.2;window=2000").unwrap();
+        let hurt = run_workload(&cfg, "fir", None);
+        assert!(clean.all_passed(), "clean run failed");
+        assert!(hurt.all_passed(), "degraded hardware must not corrupt memory");
+        assert!(
+            hurt.metrics.cycles >= clean.metrics.cycles,
+            "faults may only slow the run: {} < {}",
+            hurt.metrics.cycles,
+            clean.metrics.cycles
+        );
+        assert!(clean.metrics.faults.is_none(), "fault-free runs carry no fault section");
+        let f = hurt.metrics.faults.expect("fault section present when faults are armed");
+        assert!(
+            f.link_outage_cycles > 0 || f.link_degraded_msgs > 0,
+            "a 50% fault rate must actually touch traffic: {f:?}"
+        );
+    }
+
+    #[test]
+    fn finite_timestamps_roll_over_and_still_verify() {
+        let mut cfg = small("SM-WT-C-HALCONE");
+        cfg.set("faults", "ts_bits=4").unwrap();
+        let res = run_workload(&cfg, "xtreme1", None);
+        assert!(res.all_passed(), "rollover flushes must never lose data");
+        let f = res.metrics.faults.expect("ts_bits arms the fault section");
+        assert!(
+            f.rollover_flushes + f.tsu_rollovers > 0,
+            "4-bit counters must roll over under xtreme sharing: {f:?}"
+        );
     }
 
     #[test]

@@ -43,6 +43,9 @@ pub struct System {
     /// L2<->MM network link ids.
     pub mem_links: Vec<LinkId>,
     pub coherence: Coherence,
+    /// The fault schedule the system was built under (metrics section
+    /// presence must be a pure function of the configuration).
+    pub faults: Option<crate::faults::FaultSpec>,
 }
 
 /// Compute the RDMA host->GPU copy delay for a workload's initial image:
@@ -153,6 +156,11 @@ fn build_inner(
     let hub = g as u32;
     let lookahead = if rdma { cfg.pcie_lat + 1 } else { cfg.swc_lat + 1 };
     let mut engine = Engine::sharded(g as u32 + 1, lookahead);
+    // Fault injection must be armed before any link registration so the
+    // per-link ordinals — the fault hash key — cover the whole
+    // interconnect in configuration order (docs/ROBUSTNESS.md).
+    engine.set_fault_spec(cfg.faults);
+    let ts_bits = cfg.faults.map_or(0, |f| f.ts_bits);
     // A stack's shard: its owner GPU under RDMA, the hub under SM.
     let stack_shard =
         |s: usize| if rdma { (s / cfg.stacks_per_gpu as usize) as u32 } else { hub };
@@ -277,17 +285,12 @@ fn build_inner(
             let params = CacheParams::new(cfg.l1_bytes, cfg.l1_ways);
             let name = format!("g{gi}.l1_{ci}");
             let id = match cfg.coherence {
-                Coherence::Halcone { carry_warpts, .. } => engine.add_to(
-                    gi as u32,
-                    Box::new(HalconeL1::new(
-                        name,
-                        routes,
-                        params,
-                        cfg.mshr_l1,
-                        cfg.l1_lat,
-                        carry_warpts,
-                    )),
-                ),
+                Coherence::Halcone { carry_warpts, .. } => {
+                    let mut l1 =
+                        HalconeL1::new(name, routes, params, cfg.mshr_l1, cfg.l1_lat, carry_warpts);
+                    l1.set_ts_bits(ts_bits);
+                    engine.add_to(gi as u32, Box::new(l1))
+                }
                 _ => engine.add_to(
                     gi as u32,
                     Box::new(PlainL1::new(name, routes, params, cfg.mshr_l1, cfg.l1_lat)),
@@ -315,17 +318,12 @@ fn build_inner(
             let params = CacheParams::new(cfg.l2_bank_bytes, cfg.l2_ways);
             let name = format!("g{gi}.l2_{bi}");
             let id = match cfg.coherence {
-                Coherence::Halcone { carry_warpts, .. } => engine.add_to(
-                    gi as u32,
-                    Box::new(HalconeL2::new(
-                        name,
-                        routes,
-                        params,
-                        cfg.mshr_l2,
-                        cfg.l2_lat,
-                        carry_warpts,
-                    )),
-                ),
+                Coherence::Halcone { carry_warpts, .. } => {
+                    let mut l2 =
+                        HalconeL2::new(name, routes, params, cfg.mshr_l2, cfg.l2_lat, carry_warpts);
+                    l2.set_ts_bits(ts_bits);
+                    engine.add_to(gi as u32, Box::new(l2))
+                }
                 Coherence::None => engine.add_to(
                     gi as u32,
                     Box::new(PlainL2::new(
@@ -403,7 +401,11 @@ fn build_inner(
             (mc_tx[si], swc)
         };
         let tsu = match cfg.coherence {
-            Coherence::Halcone { leases, .. } => Some(Tsu::new(cfg.tsu_entries, leases)),
+            Coherence::Halcone { leases, .. } => {
+                let mut t = Tsu::new(cfg.tsu_entries, leases);
+                t.set_ts_bits(ts_bits);
+                Some(t)
+            }
             _ => None,
         };
         let id = engine.add_to(
@@ -424,6 +426,7 @@ fn build_inner(
         pcie_links,
         mem_links,
         coherence: cfg.coherence,
+        faults: cfg.faults,
     }
 }
 

@@ -1,0 +1,362 @@
+//! Deterministic fault injection (docs/ROBUSTNESS.md).
+//!
+//! A [`FaultSpec`] describes degraded hardware as a *pure function of
+//! simulated time*: the timeline is divided into fixed-width windows and
+//! each (link, window) pair is hashed — SplitMix64 over the seed, the
+//! link's registration ordinal and the window index — into one of three
+//! states: healthy, degraded (latency × `latmul`, bandwidth ÷ `bwdiv`)
+//! or outage (traffic queues until the window ends; nothing is ever
+//! dropped). Because the state depends only on `(seed, link, window)`
+//! and every effect can only *delay* a delivery, injection preserves
+//! both the sharded engine's conservative-window contract and full
+//! byte-determinism across `--shards`/`--jobs`.
+//!
+//! `ts_bits` additionally enables the finite-width timestamp mode: the
+//! HALCONE cache clocks and the TSU treat logical time as N-bit
+//! counters and conservatively flush on every epoch (2^N) crossing —
+//! see [`epoch_of`] and the rollover counters in
+//! [`crate::metrics::FaultReport`].
+
+use crate::sim::Cycle;
+
+/// SplitMix64: the standard 64-bit finalizer-style mixer. Used as a
+/// stateless hash so fault decisions never depend on call order.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// What a link experiences during one fault window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowState {
+    Healthy,
+    /// Latency multiplied by `latmul`, bandwidth divided by `bwdiv`.
+    Degraded,
+    /// The link accepts nothing; traffic queues and drains on recovery.
+    Outage,
+}
+
+/// Hard cap on consecutive outage windows a deferral scan will skip.
+/// With `outage <= MAX_OUTAGE` the probability of hitting it is ~0;
+/// it guarantees termination regardless of parameters.
+const MAX_OUTAGE_SCAN: u64 = 1024;
+
+/// Upper bound for the `outage` probability: a link must be able to
+/// drain, so a permanently-down link is not expressible.
+pub const MAX_OUTAGE: f64 = 0.9;
+
+/// A seeded, fully deterministic fault schedule (`--faults`, config key
+/// `faults`). Grammar: semicolon-separated `key=value` pairs —
+/// semicolons, because commas separate axis values in campaign specs:
+///
+/// ```text
+/// faults = seed=7;window=20000;degrade=0.2;latmul=4;bwdiv=4;outage=0.05;ts_bits=12
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Root seed: same seed ⇒ byte-identical run at any shard/job count.
+    pub seed: u64,
+    /// Fault-window width in cycles.
+    pub window: Cycle,
+    /// Probability a (link, window) pair is degraded.
+    pub degrade: f64,
+    /// Latency multiplier inside degraded windows (≥ 1).
+    pub latmul: u64,
+    /// Bandwidth divisor inside degraded windows (≥ 1).
+    pub bwdiv: u64,
+    /// Probability a (link, window) pair is a full outage (≤ 0.9).
+    pub outage: f64,
+    /// Finite timestamp width in bits; 0 keeps unbounded `u64` time.
+    pub ts_bits: u32,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 0xFA17,
+            window: 20_000,
+            degrade: 0.0,
+            latmul: 4,
+            bwdiv: 4,
+            outage: 0.0,
+            ts_bits: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse the `key=value;...` grammar. `"none"`/`"off"` parse to
+    /// `None` so specs can switch faults off per axis value.
+    pub fn parse(text: &str) -> Result<Option<FaultSpec>, String> {
+        let text = text.trim();
+        if text.is_empty() || text == "none" || text == "off" {
+            return Ok(None);
+        }
+        let mut f = FaultSpec::default();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("faults: '{part}': expected key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let uerr = |e: &dyn std::fmt::Display| format!("faults: {k}={v}: {e}");
+            match k {
+                "seed" => f.seed = v.parse().map_err(|e| uerr(&e))?,
+                "window" => f.window = v.parse().map_err(|e| uerr(&e))?,
+                "degrade" => f.degrade = v.parse().map_err(|e| uerr(&e))?,
+                "latmul" => f.latmul = v.parse().map_err(|e| uerr(&e))?,
+                "bwdiv" => f.bwdiv = v.parse().map_err(|e| uerr(&e))?,
+                "outage" => f.outage = v.parse().map_err(|e| uerr(&e))?,
+                "ts_bits" => f.ts_bits = v.parse().map_err(|e| uerr(&e))?,
+                other => {
+                    return Err(format!(
+                        "faults: unknown key '{other}' \
+                         (want seed|window|degrade|latmul|bwdiv|outage|ts_bits)"
+                    ))
+                }
+            }
+        }
+        f.validate()?;
+        Ok(Some(f))
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.window == 0 {
+            return Err("faults: window=0: window width must be positive".into());
+        }
+        if self.latmul == 0 || self.bwdiv == 0 {
+            return Err("faults: latmul/bwdiv must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.degrade) {
+            return Err(format!("faults: degrade={} out of [0,1]", self.degrade));
+        }
+        if !(0.0..=MAX_OUTAGE).contains(&self.outage) {
+            return Err(format!(
+                "faults: outage={} out of [0,{MAX_OUTAGE}] (a link must be able to drain)",
+                self.outage
+            ));
+        }
+        if self.degrade + self.outage > 1.0 {
+            return Err(format!(
+                "faults: degrade+outage={} exceeds 1",
+                self.degrade + self.outage
+            ));
+        }
+        if self.ts_bits != 0 && !(4..=62).contains(&self.ts_bits) {
+            return Err(format!("faults: ts_bits={}: want 0 (unbounded) or 4..=62", self.ts_bits));
+        }
+        Ok(())
+    }
+
+    /// True when the spec perturbs link behavior at all (a pure
+    /// `ts_bits` spec leaves every link healthy).
+    pub fn perturbs_links(&self) -> bool {
+        self.degrade > 0.0 || self.outage > 0.0
+    }
+
+    /// The deterministic state of `(link ordinal, window index)`.
+    pub fn window_state(&self, link_ord: u32, window: u64) -> WindowState {
+        // Stateless 53-bit uniform draw; integer thresholds keep the
+        // comparison exact and platform-independent.
+        let h = splitmix64(
+            self.seed
+                ^ (link_ord as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ window.wrapping_mul(0xbf58_476d_1ce4_e5b9),
+        ) >> 11;
+        let unit = (1u64 << 53) as f64;
+        if h < (self.outage * unit) as u64 {
+            WindowState::Outage
+        } else if h < ((self.outage + self.degrade) * unit) as u64 {
+            WindowState::Degraded
+        } else {
+            WindowState::Healthy
+        }
+    }
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, w: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            w,
+            "seed={};window={};degrade={};latmul={};bwdiv={};outage={};ts_bits={}",
+            self.seed, self.window, self.degrade, self.latmul, self.bwdiv, self.outage, self.ts_bits
+        )
+    }
+}
+
+/// Per-link fault view: the spec plus the link's registration ordinal
+/// (LinkIds are assigned in topology-construction order, which is a
+/// pure function of the configuration — never of the host).
+#[derive(Clone, Debug)]
+pub struct LinkFaults {
+    spec: FaultSpec,
+    ord: u32,
+}
+
+impl LinkFaults {
+    pub fn new(spec: FaultSpec, ord: u32) -> Self {
+        LinkFaults { spec, ord }
+    }
+
+    fn state_at(&self, t: Cycle) -> WindowState {
+        self.spec.window_state(self.ord, t / self.spec.window)
+    }
+
+    /// Earliest cycle `>= now` outside an outage window. Caps the scan
+    /// at [`MAX_OUTAGE_SCAN`] consecutive outage windows so the model
+    /// terminates under any parameters.
+    pub fn available_at(&self, now: Cycle) -> Cycle {
+        let mut t = now;
+        for _ in 0..MAX_OUTAGE_SCAN {
+            let w = t / self.spec.window;
+            if self.spec.window_state(self.ord, w) != WindowState::Outage {
+                return t;
+            }
+            t = (w + 1) * self.spec.window;
+        }
+        t
+    }
+
+    /// `(latency multiplier, bandwidth divisor)` for the window holding
+    /// `t`. Both are 1 in healthy windows.
+    pub fn perf_at(&self, t: Cycle) -> (u64, u64) {
+        match self.state_at(t) {
+            WindowState::Degraded => (self.spec.latmul, self.spec.bwdiv),
+            _ => (1, 1),
+        }
+    }
+}
+
+/// Epoch index of a logical timestamp under an N-bit counter: the
+/// number of 2^N rollovers the hardware would have performed. `bits=0`
+/// (unbounded) pins everything to epoch 0.
+pub fn epoch_of(ts: u64, bits: u32) -> u64 {
+    if bits == 0 {
+        0
+    } else {
+        ts >> bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_validates() {
+        let f = FaultSpec::parse("seed=7;degrade=0.25;outage=0.1;ts_bits=12")
+            .unwrap()
+            .unwrap();
+        assert_eq!(f.seed, 7);
+        assert_eq!(f.window, 20_000);
+        assert_eq!(f.degrade, 0.25);
+        assert_eq!(f.outage, 0.1);
+        assert_eq!(f.ts_bits, 12);
+        // Display output re-parses to the same spec.
+        assert_eq!(FaultSpec::parse(&f.to_string()).unwrap().unwrap(), f);
+        assert_eq!(FaultSpec::parse("none").unwrap(), None);
+        assert_eq!(FaultSpec::parse("off").unwrap(), None);
+        assert_eq!(FaultSpec::parse("").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_the_offending_key() {
+        for (spec, needle) in [
+            ("bogus=1", "unknown key 'bogus'"),
+            ("degrade", "expected key=value"),
+            ("degrade=1.5", "degrade=1.5"),
+            ("outage=0.95", "outage=0.95"),
+            ("degrade=0.6;outage=0.6", "exceeds 1"),
+            ("window=0", "window=0"),
+            ("latmul=0", "latmul/bwdiv"),
+            ("ts_bits=2", "ts_bits=2"),
+            ("seed=x", "seed=x"),
+        ] {
+            let err = FaultSpec::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn window_state_is_a_pure_function() {
+        let f = FaultSpec { degrade: 0.3, outage: 0.2, ..FaultSpec::default() };
+        for link in 0..4 {
+            for w in 0..64 {
+                assert_eq!(f.window_state(link, w), f.window_state(link, w));
+            }
+        }
+        // Distinct links see distinct schedules (overwhelmingly likely
+        // for any reasonable hash; this seed is fixed).
+        let a: Vec<_> = (0..64).map(|w| f.window_state(0, w)).collect();
+        let b: Vec<_> = (0..64).map(|w| f.window_state(1, w)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn state_frequencies_track_probabilities() {
+        let f = FaultSpec { degrade: 0.25, outage: 0.1, ..FaultSpec::default() };
+        let n = 20_000u64;
+        let mut deg = 0;
+        let mut out = 0;
+        for w in 0..n {
+            match f.window_state(3, w) {
+                WindowState::Degraded => deg += 1,
+                WindowState::Outage => out += 1,
+                WindowState::Healthy => {}
+            }
+        }
+        let (dp, op) = (deg as f64 / n as f64, out as f64 / n as f64);
+        assert!((dp - 0.25).abs() < 0.02, "degraded fraction {dp}");
+        assert!((op - 0.10).abs() < 0.02, "outage fraction {op}");
+    }
+
+    #[test]
+    fn zero_probability_specs_leave_links_healthy() {
+        let f = FaultSpec { ts_bits: 12, ..FaultSpec::default() };
+        assert!(!f.perturbs_links());
+        for w in 0..256 {
+            assert_eq!(f.window_state(0, w), WindowState::Healthy);
+        }
+        let lf = LinkFaults::new(f, 0);
+        assert_eq!(lf.available_at(12345), 12345);
+        assert_eq!(lf.perf_at(12345), (1, 1));
+    }
+
+    #[test]
+    fn available_at_skips_outage_windows_forward_only() {
+        let f = FaultSpec { outage: 0.5, window: 100, ..FaultSpec::default() };
+        let lf = LinkFaults::new(f, 2);
+        for now in [0u64, 37, 555, 12_345, 999_999] {
+            let t = lf.available_at(now);
+            assert!(t >= now, "deferral may only move forward");
+            assert_ne!(lf.state_at(t), WindowState::Outage);
+            // Every skipped window really was an outage.
+            let mut w = now / f.window;
+            while w < t / f.window {
+                assert_eq!(f.window_state(2, w), WindowState::Outage);
+                w += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn epochs_count_rollovers() {
+        assert_eq!(epoch_of(255, 8), 0);
+        assert_eq!(epoch_of(256, 8), 1);
+        assert_eq!(epoch_of(1 << 13, 12), 2);
+        assert_eq!(epoch_of(u64::MAX, 0), 0);
+    }
+
+    #[test]
+    fn splitmix_matches_reference_vector() {
+        // Reference value for seed 1234567 from the SplitMix64 paper's
+        // public-domain implementation.
+        assert_eq!(splitmix64(0), 0xe220a8397b1dcdaf);
+        assert_ne!(splitmix64(1), splitmix64(2));
+    }
+}

@@ -19,12 +19,16 @@
 //!   ([`trace`], divergence oracle in [`metrics::divergence`]),
 //! - multi-tenant serving: tenant-tagged requests, the `mix:` composer,
 //!   an inter-kernel scheduler and per-tenant fairness metrics
-//!   ([`tenancy`], [`coordinator::scheduler`], [`metrics::tenancy`]).
+//!   ([`tenancy`], [`coordinator::scheduler`], [`metrics::tenancy`]),
+//! - deterministic fault injection: seeded link degradation/outage
+//!   schedules and finite-width timestamp rollover ([`faults`],
+//!   docs/ROBUSTNESS.md).
 
 pub mod coherence;
 pub mod config;
 pub mod coordinator;
 pub mod dram;
+pub mod faults;
 pub mod gpu;
 pub mod interconnect;
 pub mod mem;

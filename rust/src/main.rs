@@ -17,6 +17,12 @@
 //!   list         available workloads, presets, campaigns and artifacts
 //!
 //! Argument parsing is hand-rolled (no clap in the offline registry).
+//!
+//! Exit codes are part of the CLI contract (asserted in
+//! `tests/cli_exit_codes.rs`): 0 success; 1 generic failure (failed
+//! checks, divergence, failed cells); 2 usage, configuration or I/O
+//! error; 3 gate regression; 4 sweep completed partially because some
+//! cells hit the watchdog timeout.
 
 use std::process::ExitCode;
 
@@ -24,11 +30,17 @@ use halcone::config::SystemConfig;
 use halcone::coordinator::runner::{run_built_traced, run_workload, try_run_workload_traced};
 use halcone::metrics::divergence;
 use halcone::runtime::Runtime;
-use halcone::sweep::exec::{self, run_campaign, ExecOptions};
+use halcone::sweep::exec::{self, run_campaign, CellExec, CellOutcome, ExecOptions};
 use halcone::sweep::spec::CampaignSpec;
 use halcone::sweep::{gate, json, report};
 use halcone::trace::{self, SharingPattern, SynthSpec};
 use halcone::workloads::{STANDARD, XTREME};
+
+/// Distinct exit codes (see the module doc / `usage()`).
+const EXIT_FAILURE: u8 = 1;
+const EXIT_CONFIG: u8 = 2;
+const EXIT_GATE: u8 = 3;
+const EXIT_TIMEOUT: u8 = 4;
 
 fn usage() -> ! {
     eprintln!(
@@ -38,6 +50,7 @@ fn usage() -> ! {
            run          --workload NAME [--preset P] [--set k=v ...] [--trace-out FILE]\n\
            compare      --workload NAME [--presets A,B,...] [--set k=v ...]\n\
            sweep        --campaign NAME | --spec FILE  [--jobs N] [--out FILE] [--set k=v ...]\n\
+                        [--faults SPEC] [--timeout SECS] [--retries N] | --resume DIR\n\
            gate         --baseline FILE [--current FILE] [--campaign NAME|--spec FILE]\n\
                         [--tolerance FRAC] [--jobs N] [--out FILE]\n\
            verify       [--workload NAME|all] [--artifacts DIR] [--set k=v ...]\n\
@@ -59,6 +72,9 @@ fn usage() -> ! {
            --preset P        one of {presets:?}\n\
            --config FILE     key=value config file (preset= line allowed)\n\
            --set key=value   override any config key (repeatable)\n\
+           --faults SPEC     deterministic fault schedule, e.g.\n\
+                             'seed=7;degrade=0.2;outage=0.05;ts_bits=12' — sugar for\n\
+                             --set faults=SPEC (docs/ROBUSTNESS.md)\n\
            --shards N        engine worker threads per simulation (parallel\n\
                              sharded engine; any N gives identical results)\n\
            --artifacts DIR   AOT artifact directory (default: artifacts)\n\
@@ -72,6 +88,12 @@ fn usage() -> ! {
            --baseline FILE   committed campaign.json to gate against\n\
            --current FILE    pre-generated campaign.json (skip re-running)\n\
            --tolerance FRAC  allowed relative cycle drift (default: 0.05)\n\
+           --timeout SECS    per-cell wall-clock watchdog; expired cells record\n\
+                             status \"timeout\" and the campaign drains on\n\
+           --retries N       extra attempts for panicked/timed-out cells (default 0)\n\
+           --resume DIR      re-enter an interrupted campaign from its journaled\n\
+                             campaign.json (DIR or the file itself); completed cells\n\
+                             are reloaded, the rest re-run (docs/ROBUSTNESS.md)\n\
          \n\
          trace options:\n\
            --trace FILE      trace to replay (replay)\n\
@@ -89,7 +111,14 @@ fn usage() -> ! {
                              (repeatable, one per tenant)\n\
            --policy P        inter-kernel scheduling policy: fifo (default) or rr\n\
            --width N         CUs per scheduler slot (default: total/tenants)\n\
-           --spacing N       cycles between replica arrivals (all tenants)\n",
+           --spacing N       cycles between replica arrivals (all tenants)\n\
+         \n\
+         exit codes:\n\
+           0  success\n\
+           1  failure (failed checks, divergence, failed cells)\n\
+           2  usage, configuration or I/O error\n\
+           3  gate regression (violations found)\n\
+           4  sweep partial: some cells hit the watchdog timeout\n",
         presets = SystemConfig::PRESETS,
         campaigns = CampaignSpec::BUILTINS,
         patterns = SharingPattern::NAMES,
@@ -109,6 +138,9 @@ struct Args {
     spec_file: Option<String>,
     jobs: Option<usize>,
     shards: Option<usize>,
+    timeout: Option<u64>,
+    retries: Option<u32>,
+    resume: Option<String>,
     out: Option<String>,
     baseline: Option<String>,
     current: Option<String>,
@@ -154,6 +186,9 @@ fn parse_args() -> Args {
         spec_file: None,
         jobs: None,
         shards: None,
+        timeout: None,
+        retries: None,
+        resume: None,
         out: None,
         baseline: None,
         current: None,
@@ -216,6 +251,29 @@ fn parse_args() -> Args {
                         usage()
                     }
                 }
+            }
+            "--timeout" => {
+                let v = val("--timeout");
+                match v.parse::<u64>() {
+                    Ok(n) if n >= 1 => a.timeout = Some(n),
+                    Ok(_) => {
+                        eprintln!("--timeout must be at least 1 second");
+                        usage()
+                    }
+                    Err(e) => {
+                        eprintln!("--timeout {v}: {e}");
+                        usage()
+                    }
+                }
+            }
+            "--retries" => a.retries = Some(parse_num("--retries", &val("--retries"))),
+            "--resume" => a.resume = Some(val("--resume")),
+            // Sugar for --set faults=SPEC: the schedule lands in the
+            // config (and thus the artifact's fixed overrides), so gate
+            // re-runs and resumed campaigns replay identical faults.
+            "--faults" => {
+                let v = val("--faults");
+                a.sets.push(("faults".into(), v));
             }
             "--out" | "-o" => a.out = Some(val("--out")),
             "--trace" => a.trace_file = Some(val("--trace")),
@@ -323,8 +381,10 @@ fn cmd_run(a: &Args) -> ExitCode {
         match try_run_workload_traced(&cfg, workload, rt.as_mut(), capture) {
             Ok(r) => r,
             Err(e) => {
+                // Bad workload name / trace path / mix spec: a run
+                // *configuration* error, distinct from failed checks.
                 eprintln!("run: {e}");
-                return ExitCode::FAILURE;
+                return ExitCode::from(EXIT_CONFIG);
             }
         };
     println!("{}", res.summary());
@@ -627,16 +687,29 @@ fn load_spec(a: &Args, fallback: Option<CampaignSpec>) -> Result<CampaignSpec, S
     Ok(spec)
 }
 
+/// Campaign verdict summarized for exit-code selection.
+struct SweepStatus {
+    all_passed: bool,
+    any_timed_out: bool,
+}
+
 fn sweep_to_json(
     spec: &CampaignSpec,
-    jobs: Option<usize>,
-    shards: Option<usize>,
+    a: &Args,
     out: Option<&str>,
-) -> Result<(String, bool), String> {
+    journal: bool,
+    preloaded: Vec<(usize, CellOutcome, CellExec)>,
+) -> Result<(String, SweepStatus), String> {
     let opts = ExecOptions {
-        jobs: jobs.unwrap_or_else(exec::default_jobs),
+        jobs: a.jobs.unwrap_or_else(exec::default_jobs),
         progress: true,
-        shards,
+        shards: a.shards,
+        timeout: a.timeout,
+        retries: a.retries.unwrap_or(0),
+        // Journal into the output artifact itself (sweep only — a gate
+        // re-run must not clobber a campaign.json it never owned).
+        journal: if journal { out.map(std::path::PathBuf::from) } else { None },
+        preloaded,
     };
     // run_campaign expands + validates the grid itself; the count here
     // is arithmetic so the grid is not built twice.
@@ -649,31 +722,86 @@ fn sweep_to_json(
         std::fs::write(out, &text).map_err(|e| format!("writing {out}: {e}"))?;
         eprintln!("wrote {out}");
     }
-    Ok((text, result.all_passed()))
+    let status = SweepStatus {
+        all_passed: result.all_passed(),
+        any_timed_out: result.any_timed_out(),
+    };
+    Ok((text, status))
+}
+
+/// Load a `--resume` journal: the spec it records plus the outcomes of
+/// every already-terminal cell.
+fn load_resume(
+    dir: &str,
+) -> Result<(CampaignSpec, String, Vec<(usize, CellOutcome, CellExec)>), String> {
+    let p = std::path::Path::new(dir);
+    let path = if p.is_dir() { p.join("campaign.json") } else { p.to_path_buf() };
+    let path = path
+        .to_str()
+        .ok_or_else(|| "--resume path is not valid UTF-8".to_string())?
+        .to_string();
+    let text =
+        std::fs::read_to_string(&path).map_err(|e| format!("reading {path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let spec = CampaignSpec::from_artifact(&doc).map_err(|e| format!("{path}: {e}"))?;
+    let preloaded = report::outcomes_from_artifact(&doc).map_err(|e| format!("{path}: {e}"))?;
+    let total = spec.config_labels().len() * spec.workloads.len();
+    eprintln!(
+        "resuming campaign {} from {path}: {}/{total} cells already terminal",
+        spec.name,
+        preloaded.len(),
+    );
+    Ok((spec, path, preloaded))
 }
 
 fn cmd_sweep(a: &Args) -> ExitCode {
-    let spec = match load_spec(a, None) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("sweep: {e}");
-            return ExitCode::FAILURE;
+    let (spec, out, preloaded) = if let Some(dir) = &a.resume {
+        if a.campaign.is_some() || a.spec_file.is_some() || !a.sets.is_empty() || a.out.is_some()
+        {
+            eprintln!(
+                "sweep: --resume re-runs the journaled campaign in place; it conflicts \
+                 with --campaign/--spec/--set/--faults/--out"
+            );
+            return ExitCode::from(EXIT_CONFIG);
         }
+        match load_resume(dir) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("sweep: {e}");
+                return ExitCode::from(EXIT_CONFIG);
+            }
+        }
+    } else {
+        let spec = match load_spec(a, None) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("sweep: {e}");
+                return ExitCode::from(EXIT_CONFIG);
+            }
+        };
+        // Default artifact path (gate reads it back later).
+        let out = a.out.clone().unwrap_or_else(|| "campaign.json".into());
+        (spec, out, Vec::new())
     };
-    // Default artifact path (gate reads it back later).
-    let out = a.out.clone().unwrap_or_else(|| "campaign.json".into());
-    match sweep_to_json(&spec, a.jobs, a.shards, Some(&out)) {
-        Ok((_, all_passed)) => {
-            if all_passed {
+    match sweep_to_json(&spec, a, Some(&out), true, preloaded) {
+        Ok((_, status)) => {
+            if status.all_passed {
                 ExitCode::SUCCESS
+            } else if status.any_timed_out {
+                eprintln!(
+                    "sweep: partial results — cells hit the {}s watchdog \
+                     (rerun with `sweep --resume {out}`)",
+                    a.timeout.unwrap_or(0),
+                );
+                ExitCode::from(EXIT_TIMEOUT)
             } else {
                 eprintln!("sweep: some cells failed (see table / artifact)");
-                ExitCode::FAILURE
+                ExitCode::from(EXIT_FAILURE)
             }
         }
         Err(e) => {
             eprintln!("sweep: {e}");
-            ExitCode::FAILURE
+            ExitCode::from(EXIT_CONFIG)
         }
     }
 }
@@ -695,7 +823,7 @@ fn cmd_gate(a: &Args) -> ExitCode {
             "gate: --current conflicts with --campaign/--spec/--set/--jobs/--shards/--out \
              (nothing is re-run in --current mode)"
         );
-        return ExitCode::FAILURE;
+        return ExitCode::from(EXIT_CONFIG);
     }
     let baseline_text = read_file_or_die(bpath);
     let tolerance = a.tolerance.unwrap_or(0.05);
@@ -713,7 +841,7 @@ fn cmd_gate(a: &Args) -> ExitCode {
                         "gate: cannot reconstruct the campaign from {bpath} ({e}); \
                          pass --campaign NAME or --spec FILE"
                     );
-                    return ExitCode::FAILURE;
+                    return ExitCode::from(EXIT_CONFIG);
                 }
             }
         } else {
@@ -723,14 +851,14 @@ fn cmd_gate(a: &Args) -> ExitCode {
             Ok(s) => s,
             Err(e) => {
                 eprintln!("gate: {e}");
-                return ExitCode::FAILURE;
+                return ExitCode::from(EXIT_CONFIG);
             }
         };
-        match sweep_to_json(&spec, a.jobs, a.shards, a.out.as_deref()) {
+        match sweep_to_json(&spec, a, a.out.as_deref(), false, Vec::new()) {
             Ok((text, _)) => text,
             Err(e) => {
                 eprintln!("gate: {e}");
-                return ExitCode::FAILURE;
+                return ExitCode::from(EXIT_CONFIG);
             }
         }
     };
@@ -740,12 +868,15 @@ fn cmd_gate(a: &Args) -> ExitCode {
             if rep.passed() {
                 ExitCode::SUCCESS
             } else {
-                ExitCode::FAILURE
+                // The distinct regression code: CI can tell "the gate
+                // judged and failed the run" (3) from "the gate could
+                // not judge at all" (2).
+                ExitCode::from(EXIT_GATE)
             }
         }
         Err(e) => {
             eprintln!("gate: {e}");
-            ExitCode::FAILURE
+            ExitCode::from(EXIT_CONFIG)
         }
     }
 }
@@ -759,7 +890,7 @@ fn cmd_verify(a: &Args) -> ExitCode {
     for name in &names {
         if let Err(e) = halcone::workloads::validate_name(name) {
             eprintln!("verify: {e}");
-            return ExitCode::FAILURE;
+            return ExitCode::from(EXIT_CONFIG);
         }
     }
     let mut rt = open_runtime(a);

@@ -67,6 +67,23 @@ impl CacheCtrlStats {
     }
 }
 
+/// Counters produced by deterministic fault injection
+/// (docs/ROBUSTNESS.md). All pure functions of the fault seed and the
+/// simulated configuration, so the section is byte-stable across
+/// `--shards`/`--jobs` like everything else in the canonical artifact.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Cycles link traffic spent waiting out outage windows.
+    pub link_outage_cycles: u64,
+    /// Messages accepted inside degraded (latency/bandwidth) windows.
+    pub link_degraded_msgs: u64,
+    /// Conservative full-cache flushes forced by HALCONE `cts` epoch
+    /// crossings under the finite-width timestamp mode.
+    pub rollover_flushes: u64,
+    /// Epoch crossings of the TSUs' memts high-water marks.
+    pub tsu_rollovers: u64,
+}
+
 /// Whole-run results assembled by the coordinator.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -109,6 +126,9 @@ pub struct RunMetrics {
     /// Per-tenant section, populated only for multi-tenant (`mix:`) runs
     /// — `None` keeps ordinary runs' canonical artifacts byte-stable.
     pub tenancy: Option<tenancy::TenancyReport>,
+    /// Fault-injection section, populated only when a fault schedule is
+    /// active — `None` keeps fault-free canonical artifacts byte-stable.
+    pub faults: Option<FaultReport>,
 }
 
 impl RunMetrics {

@@ -209,6 +209,10 @@ pub struct Engine {
     /// Worker threads executing the shards (1 = serial).
     threads: usize,
     now: Cycle,
+    /// Fault schedule applied to every non-wire link registered after
+    /// [`Engine::set_fault_spec`], keyed by the link's registration
+    /// ordinal (a pure function of the configuration).
+    fault_spec: Option<crate::faults::FaultSpec>,
 }
 
 impl Default for Engine {
@@ -237,7 +241,15 @@ impl Engine {
             lookahead,
             threads: 1,
             now: 0,
+            fault_spec: None,
         }
+    }
+
+    /// Arm fault injection: every non-wire link registered from now on
+    /// carries the schedule. Call before topology construction so link
+    /// ordinals cover the whole interconnect.
+    pub fn set_fault_spec(&mut self, spec: Option<crate::faults::FaultSpec>) {
+        self.fault_spec = spec.filter(|s| s.perturbs_links());
     }
 
     /// Number of logical shards.
@@ -275,11 +287,14 @@ impl Engine {
     /// Register a link owned by `shard`. A link belongs to the shard of
     /// its *senders* (its state mutates on every `Ctx::send`), which is
     /// asserted on use.
-    pub fn add_link_to(&mut self, shard: u32, l: Link) -> LinkId {
+    pub fn add_link_to(&mut self, shard: u32, mut l: Link) -> LinkId {
+        let id = LinkId(self.tables.link_loc.len() as u32);
+        if let Some(spec) = self.fault_spec {
+            l.set_faults(crate::faults::LinkFaults::new(spec, id.0));
+        }
         let s = &mut self.shards[shard as usize];
         let loc = Loc { shard, idx: s.links.len() as u32 };
         s.links.push(l);
-        let id = LinkId(self.tables.link_loc.len() as u32);
         self.tables.link_loc.push(loc);
         id
     }
@@ -391,6 +406,12 @@ impl Engine {
     pub fn link(&self, id: LinkId) -> &Link {
         let loc = self.tables.link_loc[id.0 as usize];
         &self.shards[loc.shard as usize].links[loc.idx as usize]
+    }
+
+    /// Every registered link, in registration-ordinal order (metrics
+    /// sweeps, e.g. the fault counters).
+    pub fn links(&self) -> impl Iterator<Item = &Link> {
+        (0..self.tables.link_loc.len()).map(|i| self.link(LinkId(i as u32)))
     }
 }
 

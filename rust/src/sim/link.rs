@@ -5,8 +5,22 @@
 //! drained, then takes `latency` cycles of flight time. This reproduces
 //! both the queueing delay the paper models on the L2<->MM network and the
 //! PCIe bottleneck of the RDMA configurations.
+//!
+//! A link may carry a [`LinkFaults`] schedule (docs/ROBUSTNESS.md):
+//! degraded windows multiply latency and divide bandwidth, outage
+//! windows defer serialization until the link recovers. Every fault
+//! effect only *delays* traffic — nothing is dropped and no delivery
+//! moves earlier — so the sharded engine's conservative-window check
+//! and byte-determinism are preserved by construction. On-chip wires
+//! ([`Link::wire`]) are exempt: the fault model targets the
+//! interconnect, not intra-GPU wiring.
 
+use crate::faults::LinkFaults;
 use crate::sim::Cycle;
+
+/// Serialization bandwidth that marks an on-chip wire (see
+/// [`Link::wire`]): effectively infinite, and exempt from faults.
+const WIRE_BW: u64 = u64::MAX / 2;
 
 /// Index of a link registered with the [`crate::sim::Engine`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -30,6 +44,12 @@ pub struct Link {
     pub msgs_sent: u64,
     /// Cumulative queueing delay in cycles (metrics).
     pub queue_cycles: u64,
+    /// Fault schedule, if injection is active for this link.
+    faults: Option<LinkFaults>,
+    /// Cycles spent waiting out link outages (metrics).
+    pub outage_cycles: u64,
+    /// Messages accepted inside degraded windows (metrics).
+    pub degraded_msgs: u64,
 }
 
 impl Link {
@@ -43,23 +63,55 @@ impl Link {
             bytes_sent: 0,
             msgs_sent: 0,
             queue_cycles: 0,
+            faults: None,
+            outage_cycles: 0,
+            degraded_msgs: 0,
         }
     }
 
     /// Accept a message of `bytes` at `now`; returns its delivery time.
+    ///
+    /// Under faults, the effective earliest start, latency and
+    /// bandwidth come from the window holding the (post-outage)
+    /// arrival; all three effects only push the delivery later, never
+    /// earlier, which the conservative-window engine relies on.
     pub fn accept(&mut self, now: Cycle, bytes: u64) -> Cycle {
-        let start = self.next_free.max(now);
+        let (arrive, latency, bpc) = match &self.faults {
+            Some(f) => {
+                let arrive = f.available_at(now);
+                let (latmul, bwdiv) = f.perf_at(arrive);
+                self.outage_cycles += arrive - now;
+                if (latmul, bwdiv) != (1, 1) {
+                    self.degraded_msgs += 1;
+                }
+                (arrive, self.latency * latmul, (self.bytes_per_cycle / bwdiv).max(1))
+            }
+            None => (now, self.latency, self.bytes_per_cycle),
+        };
+        let start = self.next_free.max(arrive);
         self.queue_cycles += start - now;
-        let ser = bytes.div_ceil(self.bytes_per_cycle).max(1);
+        let ser = bytes.div_ceil(bpc).max(1);
         self.next_free = start + ser;
         self.bytes_sent += bytes;
         self.msgs_sent += 1;
-        self.next_free + self.latency
+        self.next_free + latency
     }
 
     /// An infinite-bandwidth, fixed-latency link (on-chip wires).
     pub fn wire(name: impl Into<String>, latency: Cycle) -> Self {
-        Link::new(name, latency, u64::MAX / 2)
+        Link::new(name, latency, WIRE_BW)
+    }
+
+    /// On-chip wires are exempt from fault injection.
+    pub fn is_wire(&self) -> bool {
+        self.bytes_per_cycle == WIRE_BW
+    }
+
+    /// Attach a fault schedule (no-op on wires — see module docs).
+    pub fn set_faults(&mut self, faults: LinkFaults) {
+        if !self.is_wire() {
+            self.faults = Some(faults);
+        }
     }
 
     /// Cycle at which the link becomes idle (testing/metrics).
@@ -105,5 +157,53 @@ mod tests {
     fn min_one_cycle_serialization() {
         let mut l = Link::new("t", 0, 1024);
         assert_eq!(l.accept(0, 4), 1);
+    }
+
+    #[test]
+    fn faults_never_deliver_earlier_than_healthy() {
+        use crate::faults::FaultSpec;
+        let spec = FaultSpec {
+            degrade: 0.4,
+            outage: 0.2,
+            window: 50,
+            ..FaultSpec::default()
+        };
+        for ord in 0..4u32 {
+            let mut healthy = Link::new("h", 10, 32);
+            let mut faulty = Link::new("f", 10, 32);
+            faulty.set_faults(LinkFaults::new(spec, ord));
+            for i in 0..200u64 {
+                let now = i * 13;
+                let h = healthy.accept(now, 64);
+                let f = faulty.accept(now, 64);
+                assert!(f >= h, "ord {ord} msg {i}: faulty {f} < healthy {h}");
+            }
+            assert_eq!(healthy.bytes_sent, faulty.bytes_sent, "nothing may be dropped");
+            assert_eq!(healthy.msgs_sent, faulty.msgs_sent);
+        }
+    }
+
+    #[test]
+    fn fault_injection_is_deterministic_per_link() {
+        use crate::faults::FaultSpec;
+        let spec = FaultSpec { degrade: 0.3, outage: 0.3, window: 64, ..FaultSpec::default() };
+        let run = || {
+            let mut l = Link::new("t", 5, 16);
+            l.set_faults(LinkFaults::new(spec, 7));
+            (0..300u64).map(|i| l.accept(i * 3, 48)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn wires_are_exempt_from_faults() {
+        use crate::faults::FaultSpec;
+        let spec = FaultSpec { outage: 0.9, window: 10, ..FaultSpec::default() };
+        let mut w = Link::wire("w", 3);
+        assert!(w.is_wire());
+        w.set_faults(LinkFaults::new(spec, 0));
+        assert_eq!(w.accept(0, 1 << 20), 4);
+        assert_eq!(w.outage_cycles, 0);
+        assert!(!Link::new("t", 1, 32).is_wire());
     }
 }

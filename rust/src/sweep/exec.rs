@@ -11,10 +11,20 @@
 //! indexed by expansion order, which keeps every artifact byte-stable
 //! regardless of `--jobs` (the determinism contract in
 //! `tests/sweep_campaign.rs`).
+//!
+//! Resilience (docs/ROBUSTNESS.md): an optional per-cell wall-clock
+//! watchdog fails cells that hang instead of wedging the campaign,
+//! failed/timed-out cells can be retried with exponential backoff, and
+//! the full artifact can be journaled (write-temp + atomic rename) after
+//! every completed cell so a killed campaign resumes with
+//! `halcone sweep --resume` — completed cells are reloaded from the
+//! journal, only unfinished ones re-run, and the final canonical
+//! artifact is byte-identical to an uninterrupted run's.
 
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::runner::run_workload;
 use crate::coordinator::verify::CheckOutcome;
@@ -22,38 +32,62 @@ use crate::metrics::RunMetrics;
 use crate::sweep::spec::{CampaignSpec, Cell};
 
 /// What happened to one cell.
+#[derive(Clone)]
 pub enum CellOutcome {
     /// Simulation finished (checks may still have failed).
     Finished { metrics: RunMetrics, checks: Vec<CheckOutcome> },
     /// The simulation panicked (deadlock assert, bad config interaction).
     Failed { error: String },
+    /// The watchdog expired on the final attempt; the simulation thread
+    /// was abandoned and its eventual result discarded.
+    TimedOut { seconds: u64 },
+    /// Not yet run — the journal placeholder an interrupted campaign
+    /// leaves behind for `--resume` to fill in.
+    Pending,
+}
+
+/// Host-side execution record for one cell: wall-clock, retry and
+/// watchdog bookkeeping. Lives only in the *full* artifact (like
+/// `host_seconds`); the canonical form never carries it, so resumed and
+/// uninterrupted campaigns stay byte-identical.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CellExec {
+    /// Wall-clock seconds of the final attempt.
+    pub wall_seconds: f64,
+    /// Extra attempts consumed by retry-on-failure.
+    pub retries: u32,
+    /// At least one attempt hit the watchdog.
+    pub timed_out: bool,
+    /// Outcome was reloaded from a `--resume` journal, not run here.
+    pub resumed: bool,
 }
 
 /// One cell plus its outcome.
 pub struct CellResult {
     pub cell: Cell,
     pub outcome: CellOutcome,
+    pub exec: CellExec,
 }
 
 impl CellResult {
     pub fn metrics(&self) -> Option<&RunMetrics> {
         match &self.outcome {
             CellOutcome::Finished { metrics, .. } => Some(metrics),
-            CellOutcome::Failed { .. } => None,
+            _ => None,
         }
     }
 
     pub fn checks(&self) -> &[CheckOutcome] {
         match &self.outcome {
             CellOutcome::Finished { checks, .. } => checks,
-            CellOutcome::Failed { .. } => &[],
+            _ => &[],
         }
     }
 
     pub fn error(&self) -> Option<&str> {
         match &self.outcome {
             CellOutcome::Failed { error } => Some(error),
-            CellOutcome::Finished { .. } => None,
+            _ => None,
         }
     }
 
@@ -63,10 +97,13 @@ impl CellResult {
                  if checks.iter().all(|c| c.passed))
     }
 
-    /// Artifact status tag: `ok` | `checks_failed` | `error`.
+    /// Artifact status tag:
+    /// `ok` | `checks_failed` | `error` | `timeout` | `pending`.
     pub fn status(&self) -> &'static str {
         match &self.outcome {
             CellOutcome::Failed { .. } => "error",
+            CellOutcome::TimedOut { .. } => "timeout",
+            CellOutcome::Pending => "pending",
             CellOutcome::Finished { checks, .. } => {
                 if checks.iter().all(|c| c.passed) {
                     "ok"
@@ -90,11 +127,35 @@ pub struct ExecOptions {
     /// (`tests/shard_determinism.rs`). `None` keeps the cells' own
     /// settings.
     pub shards: Option<usize>,
+    /// Per-cell wall-clock watchdog in seconds (`--timeout`); `None`
+    /// disables it. A timed-out attempt abandons its simulation thread —
+    /// the cell records `status = "timeout"` and the campaign drains on.
+    pub timeout: Option<u64>,
+    /// Extra attempts for panicked/timed-out cells (`--retries`), with
+    /// exponential backoff between attempts. Simulations are
+    /// deterministic, so this only helps host-level flakiness (memory
+    /// pressure, a watchdog tripped by a loaded machine).
+    pub retries: u32,
+    /// Journal file: the *full* artifact is rewritten here (write-temp +
+    /// atomic rename) after every completed cell, unfinished cells
+    /// marked `pending` — the `--resume` re-entry point.
+    pub journal: Option<std::path::PathBuf>,
+    /// Outcomes reloaded from a `--resume` journal, by cell index; those
+    /// cells are not re-run.
+    pub preloaded: Vec<(usize, CellOutcome, CellExec)>,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { jobs: default_jobs(), progress: true, shards: None }
+        ExecOptions {
+            jobs: default_jobs(),
+            progress: true,
+            shards: None,
+            timeout: None,
+            retries: 0,
+            journal: None,
+            preloaded: Vec::new(),
+        }
     }
 }
 
@@ -123,6 +184,11 @@ impl CampaignResult {
         self.cells.iter().all(|c| c.passed())
     }
 
+    /// Some cell hit the watchdog (the partial-result exit code 4).
+    pub fn any_timed_out(&self) -> bool {
+        self.cells.iter().any(|c| matches!(c.outcome, CellOutcome::TimedOut { .. }))
+    }
+
     /// Panicking metrics lookup for consumers that know the cell exists
     /// (the figure benches address their grids by construction).
     pub fn expect_metrics(&self, config: &str, workload: &str) -> &RunMetrics {
@@ -132,13 +198,33 @@ impl CampaignResult {
     }
 }
 
+type Slot = Mutex<Option<(CellOutcome, CellExec)>>;
+
 /// Expand `spec` and run every cell on up to `opts.jobs` threads.
-/// Errors only on an invalid spec; per-cell failures are recorded in the
+/// Errors only on an invalid spec, a bad `--resume` preload or an
+/// internal executor fault; per-cell failures are recorded in the
 /// result, not propagated.
 pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignResult, String> {
     let cells = spec.cells()?;
     let total = cells.len();
-    let mut jobs = opts.jobs.max(1).min(total.max(1));
+    let slots: Vec<Slot> = (0..total).map(|_| Mutex::new(None)).collect();
+
+    // Preload resumed outcomes; only the remaining cells run.
+    let mut filled = vec![false; total];
+    for (i, outcome, exec) in &opts.preloaded {
+        if *i >= total {
+            return Err(format!(
+                "resume: cell index {i} out of range (the grid has {total} cells)"
+            ));
+        }
+        if std::mem::replace(&mut filled[*i], true) {
+            return Err(format!("resume: cell index {i} appears twice in the journal"));
+        }
+        *lock_slot(&slots[*i], *i)? = Some((outcome.clone(), *exec));
+    }
+    let todo: Vec<usize> = (0..total).filter(|&i| !filled[i]).collect();
+
+    let mut jobs = opts.jobs.max(1).min(todo.len().max(1));
     // When cells run multi-shard, every job spawns that many engine
     // threads: cap jobs x shards at the host parallelism instead of
     // oversubscribing (8 jobs x 4 shards on an 8-core box would
@@ -158,40 +244,151 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
     if shards_per_cell > 1 {
         jobs = jobs.min((cores / shards_per_cell).max(1));
     }
+
+    // Journal the starting state (all unfinished cells pending) before
+    // any worker runs, so even an immediately-killed campaign leaves a
+    // resumable file behind.
+    let journal_lock = Mutex::new(());
+    if let Some(path) = &opts.journal {
+        write_journal(path, spec, jobs, &cells, &slots)?;
+    }
+
     let next = AtomicUsize::new(0);
-    let done = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<CellOutcome>>> = (0..total).map(|_| Mutex::new(None)).collect();
+    let done = AtomicUsize::new(total - todo.len());
 
     std::thread::scope(|s| {
         for _ in 0..jobs {
             s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= total {
+                let t = next.fetch_add(1, Ordering::Relaxed);
+                if t >= todo.len() {
                     break;
                 }
+                let i = todo[t];
                 let cell = &cells[i];
-                let outcome = run_cell(cell, opts.shards, cores);
+                let (outcome, exec) = run_cell_guarded(cell, opts, cores);
                 if opts.progress {
                     let n = done.fetch_add(1, Ordering::Relaxed) + 1;
                     progress_line(n, total, cell, &outcome);
                 }
-                *slots[i].lock().unwrap() = Some(outcome);
+                if let Ok(mut slot) = slots[i].lock() {
+                    *slot = Some((outcome, exec));
+                }
+                if let Some(path) = &opts.journal {
+                    // Serialize writers: the temp file is shared, and
+                    // interleaved write+rename pairs would corrupt it.
+                    let _guard = journal_lock.lock();
+                    if let Err(e) = write_journal(path, spec, jobs, &cells, &slots) {
+                        eprintln!("warning: journal {}: {e}", path.display());
+                    }
+                }
             });
         }
     });
 
-    let results = cells
-        .into_iter()
-        .zip(slots)
-        .map(|(cell, slot)| CellResult {
-            cell,
-            outcome: slot
-                .into_inner()
-                .unwrap()
-                .expect("worker pool exited with an unfilled cell slot"),
-        })
-        .collect();
+    let mut results = Vec::with_capacity(total);
+    for (cell, slot) in cells.into_iter().zip(slots) {
+        let i = cell.index;
+        let (outcome, exec) = slot
+            .into_inner()
+            .map_err(|_| format!("cell {i}: a worker panicked while filling its result slot"))?
+            .ok_or_else(|| format!("cell {i}: worker pool exited with an unfilled slot"))?;
+        results.push(CellResult { cell, outcome, exec });
+    }
     Ok(CampaignResult { spec: spec.clone(), jobs, cells: results })
+}
+
+fn lock_slot<'a>(
+    slot: &'a Slot,
+    i: usize,
+) -> Result<std::sync::MutexGuard<'a, Option<(CellOutcome, CellExec)>>, String> {
+    slot.lock().map_err(|_| format!("cell {i}: result slot mutex poisoned"))
+}
+
+/// Snapshot the campaign-in-progress (unfinished cells `Pending`) and
+/// atomically replace the journal file: write a sibling temp file, then
+/// rename over the target, so a kill at any instant leaves either the
+/// previous journal or the new one — never a torn write.
+fn write_journal(
+    path: &std::path::Path,
+    spec: &CampaignSpec,
+    jobs: usize,
+    cells: &[Cell],
+    slots: &[Slot],
+) -> Result<(), String> {
+    let mut snapshot = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let (outcome, exec) = lock_slot(&slots[cell.index], cell.index)?
+            .clone()
+            .unwrap_or((CellOutcome::Pending, CellExec::default()));
+        snapshot.push(CellResult { cell: cell.clone(), outcome, exec });
+    }
+    let result = CampaignResult { spec: spec.clone(), jobs, cells: snapshot };
+    let text = crate::sweep::report::to_json(&result);
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| format!("journal path '{}' has no file name", path.display()))?;
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    std::fs::write(&tmp, &text).map_err(|e| format!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("renaming {} -> {}: {e}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Run one cell with the watchdog and retry policy applied.
+fn run_cell_guarded(cell: &Cell, opts: &ExecOptions, host_cores: usize) -> (CellOutcome, CellExec) {
+    let mut exec = CellExec::default();
+    loop {
+        let start = Instant::now();
+        let outcome = run_cell_attempt(cell, opts.shards, host_cores, opts.timeout);
+        exec.wall_seconds = start.elapsed().as_secs_f64();
+        if matches!(outcome, CellOutcome::TimedOut { .. }) {
+            exec.timed_out = true;
+        }
+        let failed = matches!(outcome, CellOutcome::Failed { .. } | CellOutcome::TimedOut { .. });
+        if !failed || exec.retries >= opts.retries {
+            return (outcome, exec);
+        }
+        // Exponential backoff, capped: the sim is deterministic, so a
+        // retry only helps when the *host* was the problem — give it a
+        // moment to recover.
+        let backoff = (200u64 << exec.retries.min(5)).min(5_000);
+        std::thread::sleep(Duration::from_millis(backoff));
+        exec.retries += 1;
+    }
+}
+
+/// One attempt, watchdogged when a timeout is set. The cell runs on a
+/// *detached* thread on purpose: a scoped (joined) thread would block
+/// forever on exactly the hang the watchdog exists to catch. On timeout
+/// the thread is abandoned — it keeps running, its result drops with
+/// the dead channel.
+fn run_cell_attempt(
+    cell: &Cell,
+    shards: Option<usize>,
+    host_cores: usize,
+    timeout: Option<u64>,
+) -> CellOutcome {
+    let Some(secs) = timeout else {
+        return run_cell(cell, shards, host_cores);
+    };
+    let (tx, rx) = mpsc::channel();
+    let owned = cell.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("cell-{}", owned.index))
+        .spawn(move || {
+            let _ = tx.send(run_cell(&owned, shards, host_cores));
+        });
+    if let Err(e) = spawned {
+        return CellOutcome::Failed { error: format!("spawning cell worker: {e}") };
+    }
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(outcome) => outcome,
+        Err(mpsc::RecvTimeoutError::Timeout) => CellOutcome::TimedOut { seconds: secs },
+        Err(mpsc::RecvTimeoutError::Disconnected) => CellOutcome::Failed {
+            error: "cell worker exited without reporting a result".into(),
+        },
+    }
 }
 
 fn run_cell(cell: &Cell, shards: Option<usize>, host_cores: usize) -> CellOutcome {
@@ -240,6 +437,11 @@ fn progress_line(n: usize, total: usize, cell: &Cell, outcome: &CellOutcome) {
             "[{n}/{total}] {:<28} {:<8} FAILED: {error}",
             cell.config_label, cell.workload,
         ),
+        CellOutcome::TimedOut { seconds } => eprintln!(
+            "[{n}/{total}] {:<28} {:<8} TIMEOUT after {seconds}s (thread abandoned)",
+            cell.config_label, cell.workload,
+        ),
+        CellOutcome::Pending => {}
     }
 }
 
@@ -275,6 +477,10 @@ mod tests {
             assert_eq!(c.cell.index, i);
             assert_eq!(c.status(), "ok");
             assert!(c.metrics().unwrap().cycles > 0);
+            assert!(c.exec.wall_seconds > 0.0);
+            assert_eq!(c.exec.retries, 0);
+            assert!(!c.exec.timed_out);
+            assert!(!c.exec.resumed);
         }
         assert!(res.get("SM-WT-C-HALCONE", "fir").is_some());
         assert!(res.get("SM-WT-C-HALCONE", "nope").is_none());
@@ -317,5 +523,128 @@ mod tests {
         let res = run_campaign(&spec, &opts).unwrap();
         assert_eq!(res.cells.len(), 1);
         assert!(res.all_passed());
+    }
+
+    #[test]
+    fn a_generous_watchdog_leaves_results_untouched() {
+        // Same cells with and without the watchdog must produce the
+        // same outcomes (the detached-thread path changes nothing but
+        // the failure mode on hangs).
+        let spec = tiny_spec("rl");
+        let plain = run_campaign(
+            &spec,
+            &ExecOptions { jobs: 1, progress: false, ..Default::default() },
+        )
+        .unwrap();
+        let dogged = run_campaign(
+            &spec,
+            &ExecOptions { jobs: 1, progress: false, timeout: Some(600), ..Default::default() },
+        )
+        .unwrap();
+        assert!(dogged.all_passed());
+        assert!(!dogged.any_timed_out());
+        assert_eq!(
+            plain.cells[0].metrics().unwrap().cycles,
+            dogged.cells[0].metrics().unwrap().cycles,
+        );
+    }
+
+    #[test]
+    fn failed_cells_retry_and_record_the_attempt_count() {
+        // The 4 KB cell panics deterministically: each retry fails
+        // again, so the attempt budget is fully consumed and recorded.
+        let spec = CampaignSpec::parse(
+            "name = t\n\
+             presets = SM-WT-C-HALCONE\n\
+             workloads = rl\n\
+             set.gpu_mem_bytes = 4096\n\
+             set.n_gpus = 2\n\
+             set.cus_per_gpu = 2\n\
+             set.wavefronts_per_cu = 2\n\
+             set.l2_banks = 2\n\
+             set.stacks_per_gpu = 2\n\
+             set.scale = 0.05\n",
+        )
+        .unwrap();
+        let opts = ExecOptions { jobs: 1, progress: false, retries: 2, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
+        assert_eq!(res.cells[0].status(), "error");
+        assert_eq!(res.cells[0].exec.retries, 2);
+    }
+
+    #[test]
+    fn preloaded_cells_are_not_rerun_and_keep_their_outcome() {
+        let spec = tiny_spec("rl,fir");
+        let full = run_campaign(
+            &spec,
+            &ExecOptions { jobs: 2, progress: false, ..Default::default() },
+        )
+        .unwrap();
+        // Preload cell 0 with a sentinel error: if the executor re-ran
+        // it, the outcome would be "ok" instead.
+        let opts = ExecOptions {
+            jobs: 2,
+            progress: false,
+            preloaded: vec![(
+                0,
+                CellOutcome::Failed { error: "sentinel".into() },
+                CellExec { resumed: true, ..Default::default() },
+            )],
+            ..Default::default()
+        };
+        let res = run_campaign(&spec, &opts).unwrap();
+        assert_eq!(res.cells[0].status(), "error");
+        assert_eq!(res.cells[0].error(), Some("sentinel"));
+        assert!(res.cells[0].exec.resumed);
+        assert_eq!(res.cells[1].status(), "ok");
+        assert_eq!(
+            res.cells[1].metrics().unwrap().cycles,
+            full.cells[1].metrics().unwrap().cycles,
+        );
+        // Out-of-range and duplicate preloads are spec-level errors.
+        let bad = ExecOptions {
+            progress: false,
+            preloaded: vec![(9, CellOutcome::Pending, CellExec::default())],
+            ..Default::default()
+        };
+        assert!(run_campaign(&spec, &bad).is_err());
+        let dup = ExecOptions {
+            progress: false,
+            preloaded: vec![
+                (0, CellOutcome::Pending, CellExec::default()),
+                (0, CellOutcome::Pending, CellExec::default()),
+            ],
+            ..Default::default()
+        };
+        assert!(run_campaign(&spec, &dup).is_err());
+    }
+
+    #[test]
+    fn journal_is_written_atomically_after_every_cell() {
+        let dir = std::env::temp_dir().join(format!("halcone-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("campaign.json");
+        let spec = tiny_spec("rl,fir");
+        let opts = ExecOptions {
+            jobs: 1,
+            progress: false,
+            journal: Some(path.clone()),
+            ..Default::default()
+        };
+        let res = run_campaign(&spec, &opts).unwrap();
+        // The last journal write is the complete artifact: re-parse it
+        // and check every cell reached a terminal status.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::sweep::json::parse(&text).unwrap();
+        let cells = doc.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in cells {
+            assert_eq!(c.get("status").unwrap().as_str(), Some("ok"));
+            assert!(c.get("exec").is_some(), "journal carries host exec info");
+        }
+        // No temp file left behind.
+        assert!(!dir.join("campaign.json.tmp").exists());
+        assert!(res.all_passed());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -67,10 +67,13 @@ struct CellView {
 
 /// Severity order for status regressions: a cell may not move down
 /// this ladder (ok -> checks_failed -> error) relative to its baseline.
+/// Watchdog timeouts and never-run `pending` cells (an interrupted
+/// journal gated by mistake) rank with `error`.
 fn status_rank(status: &str) -> u8 {
     match status {
         "ok" => 0,
         "checks_failed" => 1,
+        "error" | "timeout" | "pending" => 2,
         _ => 2,
     }
 }

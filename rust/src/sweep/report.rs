@@ -6,9 +6,11 @@
 //! [`to_json_canonical`] drops the `host_seconds` fields and must be
 //! byte-identical across `--jobs` levels (`tests/sweep_campaign.rs`).
 
+use crate::coordinator::verify::CheckOutcome;
 use crate::metrics::bench::Table;
-use crate::metrics::{geomean, CacheCtrlStats, RunMetrics};
-use crate::sweep::exec::{CampaignResult, CellOutcome, CellResult};
+use crate::metrics::tenancy::{TenancyReport, TenantMetrics};
+use crate::metrics::{geomean, CacheCtrlStats, FaultReport, RunMetrics};
+use crate::sweep::exec::{CampaignResult, CellExec, CellOutcome, CellResult};
 use crate::sweep::json::Value;
 
 /// Bumped whenever the artifact layout changes shape.
@@ -136,6 +138,11 @@ fn cell_json(
     ];
     match &cr.outcome {
         CellOutcome::Failed { error } => o.push(("error".into(), Value::str(error))),
+        CellOutcome::TimedOut { seconds } => o.push((
+            "error".into(),
+            Value::str(format!("watchdog timeout after {seconds}s")),
+        )),
+        CellOutcome::Pending => {}
         CellOutcome::Finished { metrics, checks } => {
             let speedup = match speedup_of(result, cr, base_label) {
                 Some(s) => Value::f64(s),
@@ -161,7 +168,22 @@ fn cell_json(
             ));
         }
     }
+    if include_host {
+        // Host-side execution record (wall clock, retries, watchdog) —
+        // full artifact only, like host_seconds: the canonical form must
+        // stay byte-identical between resumed and uninterrupted runs.
+        o.push(("exec".into(), exec_json(&cr.exec)));
+    }
     Value::Obj(o)
+}
+
+fn exec_json(e: &CellExec) -> Value {
+    Value::Obj(vec![
+        ("wall_seconds".into(), Value::f64(e.wall_seconds)),
+        ("retries".into(), Value::u64(e.retries as u64)),
+        ("timed_out".into(), Value::Bool(e.timed_out)),
+        ("resumed".into(), Value::Bool(e.resumed)),
+    ])
 }
 
 fn cache_stats_json(s: &CacheCtrlStats) -> Value {
@@ -217,6 +239,21 @@ fn metrics_json(m: &RunMetrics, include_host: bool) -> Value {
     if let Some(t) = &m.tenancy {
         o.push(("tenancy".into(), tenancy_json(t)));
     }
+    // Fault-injection section, present only when a fault schedule was
+    // configured (docs/ROBUSTNESS.md): every counter is a pure function
+    // of the fault seed and the simulated configuration, so fault cells
+    // stay byte-stable and fault-free cells keep their exact bytes.
+    if let Some(f) = &m.faults {
+        o.push((
+            "faults".into(),
+            Value::Obj(vec![
+                ("link_outage_cycles".into(), Value::u64(f.link_outage_cycles)),
+                ("link_degraded_msgs".into(), Value::u64(f.link_degraded_msgs)),
+                ("rollover_flushes".into(), Value::u64(f.rollover_flushes)),
+                ("tsu_rollovers".into(), Value::u64(f.tsu_rollovers)),
+            ]),
+        ));
+    }
     Value::Obj(o)
 }
 
@@ -251,6 +288,226 @@ fn tenancy_json(t: &crate::metrics::tenancy::TenancyReport) -> Value {
         ("jain_turnaround".into(), Value::f64(t.jain_turnaround())),
         ("tenants".into(), Value::Arr(tenants)),
     ])
+}
+
+/// Rebuild per-cell outcomes from a journaled artifact for
+/// `sweep --resume`: terminal cells (`ok` / `checks_failed` / `error`)
+/// are reloaded verbatim, while `pending` and `timeout` cells are left
+/// out so the executor re-runs them. Every canonical metric is an
+/// integer that round-trips exactly through the f64 JSON layer (the
+/// writer prints integers below 2^53 losslessly), so a resumed
+/// campaign's canonical artifact is byte-identical to an uninterrupted
+/// run's.
+pub fn outcomes_from_artifact(
+    doc: &Value,
+) -> Result<Vec<(usize, CellOutcome, CellExec)>, String> {
+    check_schema(doc, "resume journal")?;
+    let cells = doc
+        .get("cells")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| "resume journal: no 'cells' array".to_string())?;
+    let mut out = Vec::new();
+    for (pos, cell) in cells.iter().enumerate() {
+        let index = cell
+            .get("index")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("resume journal: cell {pos} has no numeric 'index'"))?
+            as usize;
+        let label = format!(
+            "cell {index} ({}/{})",
+            cell.get("config").and_then(Value::as_str).unwrap_or("?"),
+            cell.get("workload").and_then(Value::as_str).unwrap_or("?"),
+        );
+        let status = cell
+            .get("status")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("resume journal: {label} has no 'status'"))?;
+        let outcome = match status {
+            // Unfinished and watchdogged cells re-run on resume.
+            "pending" | "timeout" => continue,
+            "error" => CellOutcome::Failed {
+                error: cell
+                    .get("error")
+                    .and_then(Value::as_str)
+                    .unwrap_or("unknown error")
+                    .to_string(),
+            },
+            "ok" | "checks_failed" => {
+                let m = cell
+                    .get("metrics")
+                    .ok_or_else(|| format!("resume journal: {label} has no 'metrics'"))?;
+                let checks = cell
+                    .get("checks")
+                    .ok_or_else(|| format!("resume journal: {label} has no 'checks'"))?;
+                CellOutcome::Finished {
+                    metrics: metrics_from_json(m, &label)?,
+                    checks: checks_from_json(checks, &label)?,
+                }
+            }
+            other => {
+                return Err(format!("resume journal: {label} has unknown status '{other}'"))
+            }
+        };
+        out.push((index, outcome, exec_from_json(cell)));
+    }
+    Ok(out)
+}
+
+fn req_u64(v: &Value, key: &str, what: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .map(|x| x as u64)
+        .ok_or_else(|| format!("resume journal: {what} is missing numeric '{key}'"))
+}
+
+fn cache_stats_from_json(v: &Value, what: &str) -> Result<CacheCtrlStats, String> {
+    Ok(CacheCtrlStats {
+        reqs_in: req_u64(v, "reqs_in", what)?,
+        rsps_out: req_u64(v, "rsps_out", what)?,
+        reqs_down: req_u64(v, "reqs_down", what)?,
+        rsps_down: req_u64(v, "rsps_down", what)?,
+        hits: req_u64(v, "hits", what)?,
+        misses: req_u64(v, "misses", what)?,
+        coherency_misses: req_u64(v, "coherency_misses", what)?,
+        mshr_merges: req_u64(v, "mshr_merges", what)?,
+        bytes_down: req_u64(v, "bytes_down", what)?,
+        bytes_up: req_u64(v, "bytes_up", what)?,
+        writebacks: req_u64(v, "writebacks", what)?,
+        invalidations: req_u64(v, "invalidations", what)?,
+    })
+}
+
+fn metrics_from_json(m: &Value, what: &str) -> Result<RunMetrics, String> {
+    // Host-perf fields are informational; tolerate their absence (a
+    // canonical document) with zero defaults.
+    let host = |key: &str| m.get(key).and_then(Value::as_f64).unwrap_or(0.0);
+    let mut out = RunMetrics {
+        cycles: req_u64(m, "cycles", what)?,
+        events: req_u64(m, "events", what)?,
+        host_seconds: host("host_seconds"),
+        events_per_sec: host("events_per_sec"),
+        pool_fresh_boxes: host("pool_fresh_boxes") as u64,
+        pool_reused_boxes: host("pool_reused_boxes") as u64,
+        cu_loads: req_u64(m, "cu_loads", what)?,
+        cu_stores: req_u64(m, "cu_stores", what)?,
+        mm_reads: req_u64(m, "mm_reads", what)?,
+        mm_writes: req_u64(m, "mm_writes", what)?,
+        tsu_lookups: req_u64(m, "tsu_lookups", what)?,
+        tsu_evictions: req_u64(m, "tsu_evictions", what)?,
+        pcie_bytes: req_u64(m, "pcie_bytes", what)?,
+        mem_bytes: req_u64(m, "mem_bytes", what)?,
+        l1: cache_stats_from_json(
+            m.get("l1").ok_or_else(|| format!("resume journal: {what} has no 'l1'"))?,
+            what,
+        )?,
+        l2: cache_stats_from_json(
+            m.get("l2").ok_or_else(|| format!("resume journal: {what} has no 'l2'"))?,
+            what,
+        )?,
+        tenancy: None,
+        faults: None,
+    };
+    if let Some(t) = m.get("tenancy") {
+        out.tenancy = Some(tenancy_from_json(t, what)?);
+    }
+    if let Some(f) = m.get("faults") {
+        out.faults = Some(FaultReport {
+            link_outage_cycles: req_u64(f, "link_outage_cycles", what)?,
+            link_degraded_msgs: req_u64(f, "link_degraded_msgs", what)?,
+            rollover_flushes: req_u64(f, "rollover_flushes", what)?,
+            tsu_rollovers: req_u64(f, "tsu_rollovers", what)?,
+        });
+    }
+    Ok(out)
+}
+
+fn tenancy_from_json(t: &Value, what: &str) -> Result<TenancyReport, String> {
+    let scheduler = t
+        .get("scheduler")
+        .and_then(Value::as_str)
+        .ok_or_else(|| format!("resume journal: {what} tenancy has no 'scheduler'"))?
+        .to_string();
+    let mut tenants = Vec::new();
+    for tm in t
+        .get("tenants")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| format!("resume journal: {what} tenancy has no 'tenants'"))?
+    {
+        // Derived fields (means, shares, jain) are recomputed at render
+        // time from these counters, so only the counters are reloaded.
+        tenants.push(TenantMetrics {
+            tenant: req_u64(tm, "tenant", what)? as u32,
+            name: tm
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("resume journal: {what} tenant has no 'name'"))?
+                .to_string(),
+            jobs: req_u64(tm, "jobs", what)?,
+            turnaround_sum: req_u64(tm, "turnaround_sum", what)?,
+            turnaround_p99: req_u64(tm, "turnaround_p99", what)?,
+            loads: req_u64(tm, "loads", what)?,
+            stores: req_u64(tm, "stores", what)?,
+            cu_bytes: req_u64(tm, "cu_bytes", what)?,
+            l1_hits: req_u64(tm, "l1_hits", what)?,
+            l1_misses: req_u64(tm, "l1_misses", what)?,
+            l1_coherency_misses: req_u64(tm, "l1_coherency_misses", what)?,
+        });
+    }
+    Ok(TenancyReport { scheduler, tenants })
+}
+
+fn checks_from_json(checks: &Value, what: &str) -> Result<Vec<CheckOutcome>, String> {
+    let arr = checks
+        .as_arr()
+        .ok_or_else(|| format!("resume journal: {what} 'checks' is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for c in arr {
+        let kind = match c.get("kind").and_then(Value::as_str) {
+            // The in-memory kind is a &'static str: map through the
+            // known vocabulary instead of leaking arbitrary strings.
+            Some("artifact") => "artifact",
+            Some("rust") => "rust",
+            Some("skipped") => "skipped",
+            other => {
+                return Err(format!(
+                    "resume journal: {what} has unknown check kind {other:?}"
+                ))
+            }
+        };
+        out.push(CheckOutcome {
+            desc: c
+                .get("desc")
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("resume journal: {what} check has no 'desc'"))?
+                .to_string(),
+            kind,
+            passed: c
+                .get("passed")
+                .and_then(Value::as_bool)
+                .ok_or_else(|| format!("resume journal: {what} check has no 'passed'"))?,
+            max_err: c
+                .get("max_err")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("resume journal: {what} check has no 'max_err'"))?
+                as f32,
+        });
+    }
+    Ok(out)
+}
+
+fn exec_from_json(cell: &Value) -> CellExec {
+    let e = cell.get("exec");
+    let f = |key: &str| e.and_then(|e| e.get(key)).and_then(Value::as_f64);
+    CellExec {
+        wall_seconds: f("wall_seconds").unwrap_or(0.0),
+        retries: f("retries").unwrap_or(0.0) as u32,
+        timed_out: e
+            .and_then(|e| e.get("timed_out"))
+            .and_then(Value::as_bool)
+            .unwrap_or(false),
+        // This outcome is being reloaded, not re-run.
+        resumed: true,
+    }
 }
 
 /// Print the paper-style table: workloads × config columns, speed-up vs
@@ -396,6 +653,70 @@ mod tests {
         assert_eq!(rebuilt.axes, spec.axes);
         assert_eq!(rebuilt.fixed, spec.fixed);
         assert_eq!(rebuilt.baseline.as_deref(), Some("SM-WT-NC"));
+    }
+
+    #[test]
+    fn resume_reconstruction_roundtrips_canonical_bytes() {
+        // Render -> reload -> re-render must be the identity on the
+        // canonical artifact: the foundation of `sweep --resume`.
+        let spec = CampaignSpec::builtin("smoke").unwrap();
+        let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
+        let doc = json::parse(&to_json(&res)).unwrap();
+        let preloaded = outcomes_from_artifact(&doc).unwrap();
+        assert_eq!(preloaded.len(), 4, "all terminal cells reload");
+        let rebuilt = CampaignSpec::from_artifact(&doc).unwrap();
+        let resumed = run_campaign(
+            &rebuilt,
+            &ExecOptions { jobs: 1, progress: false, preloaded, ..Default::default() },
+        )
+        .unwrap();
+        assert!(resumed.cells.iter().all(|c| c.exec.resumed));
+        assert_eq!(to_json_canonical(&resumed), to_json_canonical(&res));
+    }
+
+    #[test]
+    fn pending_cells_rerun_on_resume_and_bytes_still_match() {
+        // Flip one journaled cell back to pending (as a mid-campaign
+        // kill would leave it): resume re-runs just that cell and the
+        // final canonical artifact is still byte-identical.
+        let spec = CampaignSpec::builtin("smoke").unwrap();
+        let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
+        let journal = to_json(&res).replacen("\"status\": \"ok\"", "\"status\": \"pending\"", 1);
+        let doc = json::parse(&journal).unwrap();
+        let preloaded = outcomes_from_artifact(&doc).unwrap();
+        assert_eq!(preloaded.len(), 3, "the pending cell is left to re-run");
+        let rebuilt = CampaignSpec::from_artifact(&doc).unwrap();
+        let resumed = run_campaign(
+            &rebuilt,
+            &ExecOptions { jobs: 1, progress: false, preloaded, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(to_json_canonical(&resumed), to_json_canonical(&res));
+    }
+
+    #[test]
+    fn tenancy_sections_survive_the_resume_roundtrip() {
+        let spec = CampaignSpec::parse(
+            "name = t\n\
+             presets = SM-WT-NC\n\
+             workloads = mix:private+private\n\
+             set.n_gpus = 2\nset.cus_per_gpu = 2\nset.wavefronts_per_cu = 2\n\
+             set.l2_banks = 2\nset.stacks_per_gpu = 2\n\
+             set.gpu_mem_bytes = 67108864\nset.scale = 0.05\n",
+        )
+        .unwrap();
+        let opts = ExecOptions { jobs: 1, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
+        let doc = json::parse(&to_json(&res)).unwrap();
+        let preloaded = outcomes_from_artifact(&doc).unwrap();
+        let resumed = run_campaign(
+            &CampaignSpec::from_artifact(&doc).unwrap(),
+            &ExecOptions { jobs: 1, progress: false, preloaded, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(to_json_canonical(&resumed), to_json_canonical(&res));
     }
 
     #[test]

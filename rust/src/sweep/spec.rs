@@ -17,6 +17,17 @@
 //! baseline  = SM-WT-C-HALCONE+rd_lease=8 # speedup reference column
 //! ```
 //!
+//! Deterministic fault schedules (docs/ROBUSTNESS.md) ride the same
+//! grammar through the `faults` config key — its sub-keys are
+//! `;`-separated precisely so a schedule can sit inside a `,`-separated
+//! axis value list:
+//!
+//! ```text
+//! set.faults  = seed=7;degrade=0.2;outage=0.05   # every cell
+//! axis.faults = none,seed=7;degrade=0.3          # healthy vs degraded
+//! axis.faults = ts_bits=8,ts_bits=12,ts_bits=16  # rollover sweep
+//! ```
+//!
 //! Built-ins reproduce the paper's grids: `fig7` (Fig. 7), `fig8` /
 //! `fig8cu` (Fig. 8a / 8b-c), `tab4` (§5.4 lease sensitivity) and
 //! `smoke` (a seconds-long CI campaign).

@@ -48,10 +48,15 @@ pub struct Tsu {
     leases: Leases,
     /// Monotonic floor: max memts ever evicted from this TSU.
     floor_ts: u64,
+    /// Finite timestamp width (docs/ROBUSTNESS.md); 0 = unbounded.
+    ts_bits: u32,
     /// Metrics.
     pub lookups: u64,
     pub inserts: u64,
     pub evictions: u64,
+    /// Epoch (2^ts_bits) boundaries crossed by the memts high-water
+    /// mark — the hardware rollovers an N-bit TSU would perform.
+    pub ts_rollovers: u64,
     /// Highest memts handed out (drives fence logical_max).
     pub max_memts: u64,
 }
@@ -69,15 +74,35 @@ impl Tsu {
             slots,
             leases,
             floor_ts: 0,
+            ts_bits: 0,
             lookups: 0,
             inserts: 0,
             evictions: 0,
+            ts_rollovers: 0,
             max_memts: 0,
         }
     }
 
     pub fn leases(&self) -> Leases {
         self.leases
+    }
+
+    /// Enable the finite-width timestamp model: count every epoch
+    /// (2^bits) crossing of the memts high-water mark. Timestamps stay
+    /// monotonic `u64`s in the simulator — the crossing count is the
+    /// number of rollovers N-bit hardware would have absorbed.
+    pub fn set_ts_bits(&mut self, bits: u32) {
+        self.ts_bits = bits;
+    }
+
+    /// Track the high-water mark, counting epoch crossings under the
+    /// finite-width model.
+    fn raise_memts(&mut self, memts: u64) {
+        if memts > self.max_memts {
+            self.ts_rollovers += crate::faults::epoch_of(memts, self.ts_bits)
+                - crate::faults::epoch_of(self.max_memts, self.ts_bits);
+            self.max_memts = memts;
+        }
     }
 
     fn set_range(&self, line_addr: u64) -> std::ops::Range<usize> {
@@ -114,8 +139,9 @@ impl Tsu {
             let e = slot.as_mut().unwrap();
             let old = e.memts;
             e.memts = old + lease;
-            self.max_memts = self.max_memts.max(e.memts);
-            return TsPair { rts: e.memts, wts: old };
+            let new_memts = e.memts;
+            self.raise_memts(new_memts);
+            return TsPair { rts: new_memts, wts: old };
         }
 
         // Miss: allocate, evicting the lowest-memts victim if the set is
@@ -123,7 +149,7 @@ impl Tsu {
         self.inserts += 1;
         let start_ts = self.floor_ts;
         let entry = Entry { tag, memts: start_ts + lease };
-        self.max_memts = self.max_memts.max(entry.memts);
+        self.raise_memts(entry.memts);
 
         if let Some(slot) = self.slots[range.clone()].iter_mut().find(|s| s.is_none()) {
             *slot = Some(entry);
@@ -138,7 +164,7 @@ impl Tsu {
             // Re-anchor: the new entry must start above anything evicted.
             let start_ts = self.floor_ts;
             self.slots[victim_idx] = Some(Entry { tag, memts: start_ts + lease });
-            self.max_memts = self.max_memts.max(start_ts + lease);
+            self.raise_memts(start_ts + lease);
             return TsPair { rts: start_ts + lease, wts: start_ts };
         }
         TsPair { rts: start_ts + lease, wts: start_ts }
@@ -219,5 +245,25 @@ mod tests {
         t.on_write(64);
         t.on_read(0);
         assert_eq!(t.max_memts, 20);
+    }
+
+    #[test]
+    fn finite_width_counts_epoch_rollovers() {
+        let mut t = Tsu::new(1024, Leases::default());
+        t.set_ts_bits(4); // epoch span 16, rd lease 10
+        t.on_read(0); // memts 10, epoch 0
+        assert_eq!(t.ts_rollovers, 0);
+        t.on_read(0); // memts 20, epoch 1
+        assert_eq!(t.ts_rollovers, 1);
+        for _ in 0..8 {
+            t.on_read(0); // memts 100, epoch 6
+        }
+        assert_eq!(t.ts_rollovers, 6);
+        // Unbounded counters never roll over.
+        let mut u = Tsu::new(1024, Leases::default());
+        for _ in 0..100 {
+            u.on_read(0);
+        }
+        assert_eq!(u.ts_rollovers, 0);
     }
 }

@@ -1,0 +1,128 @@
+//! The CLI exit-code contract (see the module doc in `rust/src/main.rs`
+//! and `halcone --help`):
+//!
+//!   0  success
+//!   1  generic failure (failed checks, divergence, failed cells)
+//!   2  usage, configuration or I/O error
+//!   3  gate regression (the gate judged the run and failed it)
+//!   4  sweep partial: some cells hit the watchdog timeout
+//!
+//! CI scripts branch on these, so each code is pinned here against the
+//! real binary.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn halcone(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_halcone")).args(args).output().unwrap()
+}
+
+fn code(out: &Output) -> i32 {
+    out.status.code().unwrap_or(-1)
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("halcone_exit_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A minimal but schema-valid campaign artifact for gate tests.
+fn doc(cycles: u64, status: &str) -> String {
+    format!(
+        r#"{{"schema_version": 1, "campaign": "t", "cells": [
+             {{"config": "A", "workload": "rl", "status": "{status}",
+               "metrics": {{"cycles": {cycles}}}}}
+           ]}}"#
+    )
+}
+
+#[test]
+fn success_paths_exit_zero() {
+    let out = halcone(&["print-config", "--preset", "SM-WT-C-HALCONE"]);
+    assert_eq!(code(&out), 0, "{}", String::from_utf8_lossy(&out.stderr));
+    let out = halcone(&["list"]);
+    assert_eq!(code(&out), 0);
+}
+
+#[test]
+fn usage_errors_exit_two() {
+    assert_eq!(code(&halcone(&[])), 2, "no command");
+    assert_eq!(code(&halcone(&["frobnicate"])), 2, "unknown command");
+    assert_eq!(code(&halcone(&["run", "--no-such-flag"])), 2, "unknown flag");
+    assert_eq!(code(&halcone(&["sweep"])), 2, "sweep without a campaign");
+    assert_eq!(code(&halcone(&["sweep", "--jobs", "0"])), 2, "rejected flag value");
+}
+
+#[test]
+fn run_configuration_errors_exit_two() {
+    let out = halcone(&["run", "--workload", "no-such-workload"]);
+    assert_eq!(code(&out), 2, "{}", String::from_utf8_lossy(&out.stderr));
+    let out = halcone(&["run", "--workload", "fir", "--set", "no_such_key=1"]);
+    assert_eq!(code(&out), 2);
+    let out = halcone(&["run", "--workload", "fir", "--config", "/no/such/file.cfg"]);
+    assert_eq!(code(&out), 2);
+}
+
+#[test]
+fn gate_exit_codes_separate_regression_from_unjudgeable() {
+    let dir = tmpdir("gate");
+    let base = dir.join("baseline.json");
+    let same = dir.join("same.json");
+    let drift = dir.join("drift.json");
+    let worse = dir.join("worse.json");
+    std::fs::write(&base, doc(1000, "ok")).unwrap();
+    std::fs::write(&same, doc(1000, "ok")).unwrap();
+    std::fs::write(&drift, doc(1200, "ok")).unwrap();
+    std::fs::write(&worse, doc(1000, "error")).unwrap();
+    let gate = |current: &PathBuf| {
+        let out = Command::new(env!("CARGO_BIN_EXE_halcone"))
+            .arg("gate")
+            .arg("--baseline")
+            .arg(&base)
+            .arg("--current")
+            .arg(current)
+            .args(["--tolerance", "0.05"])
+            .output()
+            .unwrap();
+        code(&out)
+    };
+    // Identical artifacts pass; drift and status regressions are the
+    // distinct regression code; a missing file means the gate could not
+    // judge at all.
+    assert_eq!(gate(&same), 0);
+    assert_eq!(gate(&drift), 3);
+    assert_eq!(gate(&worse), 3);
+    assert_eq!(gate(&dir.join("missing.json")), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn watchdog_timeout_partial_sweep_exits_four() {
+    let dir = tmpdir("watchdog");
+    let spec = dir.join("slow.spec");
+    // A full-scale cell (no smoke overrides) takes far longer than the
+    // 1-second watchdog, so the sweep must drain as a partial result.
+    std::fs::write(
+        &spec,
+        "name = watchdog\n\
+         presets = SM-WT-C-HALCONE\n\
+         workloads = fir\n\
+         set.scale = 1.0\n",
+    )
+    .unwrap();
+    let journal = dir.join("campaign.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_halcone"))
+        .arg("sweep")
+        .arg("--spec")
+        .arg(&spec)
+        .args(["--timeout", "1", "--jobs", "1", "--out"])
+        .arg(&journal)
+        .output()
+        .unwrap();
+    assert_eq!(code(&out), 4, "{}", String::from_utf8_lossy(&out.stderr));
+    // The journal records the timed-out cell, ready for --resume.
+    let text = std::fs::read_to_string(&journal).unwrap();
+    assert!(text.contains("\"status\": \"timeout\""), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,252 @@
+//! Fault-injection + resilient-executor properties (docs/ROBUSTNESS.md):
+//!
+//! * a fault schedule is part of the configuration, so a faulted
+//!   campaign's canonical `campaign.json` is byte-identical at every
+//!   `--shards` and `--jobs` level;
+//! * perf-only faults (degraded links, outages) slow the run but leave
+//!   the final memory state untouched — every correctness check still
+//!   passes;
+//! * finite-width timestamps (`ts_bits`) roll over via epoch flushes at
+//!   8/12/16 bits under HALCONE and are inert under HMG;
+//! * an interrupted campaign resumed with `sweep --resume` — whether
+//!   interrupted logically (journaled cells still pending) or by a real
+//!   SIGKILL mid-run — converges to the same canonical bytes as an
+//!   uninterrupted run.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::run_workload;
+use halcone::sweep::exec::{run_campaign, ExecOptions};
+use halcone::sweep::spec::CampaignSpec;
+use halcone::sweep::{json, report};
+
+/// An aggressive perf-only schedule: short windows so a smoke run spans
+/// many of them, high degrade/outage rates so the counters must move.
+const SCHEDULE: &str = "seed=7;window=200;degrade=0.5;latmul=3;bwdiv=2;outage=0.4";
+
+fn faulted_campaign() -> String {
+    format!(
+        "name = faults-smoke\n\
+         presets = SM-WT-C-HALCONE,SM-WT-NC\n\
+         workloads = fir,rl\n\
+         set.n_gpus = 2\n\
+         set.cus_per_gpu = 2\n\
+         set.wavefronts_per_cu = 2\n\
+         set.l2_banks = 2\n\
+         set.stacks_per_gpu = 2\n\
+         set.gpu_mem_bytes = 67108864\n\
+         set.scale = 0.05\n\
+         set.faults = {SCHEDULE}\n"
+    )
+}
+
+fn spec() -> CampaignSpec {
+    CampaignSpec::parse(&faulted_campaign()).unwrap()
+}
+
+fn small(preset: &str) -> SystemConfig {
+    let mut cfg = SystemConfig::preset(preset);
+    cfg.n_gpus = 2;
+    cfg.cus_per_gpu = 2;
+    cfg.wavefronts_per_cu = 2;
+    cfg.l2_banks = 2;
+    cfg.stacks_per_gpu = 2;
+    cfg.gpu_mem_bytes = 64 << 20;
+    cfg.scale = 0.05;
+    cfg
+}
+
+/// Per-test temp dir (tests share one process and may run in parallel).
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("halcone_faults_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Canonical bytes of an on-disk artifact: reconstruct every cell and
+/// re-render. Fails if any cell is still pending/timed out.
+fn canonical_of_artifact(text: &str) -> String {
+    let doc = json::parse(text).unwrap();
+    let spec = CampaignSpec::from_artifact(&doc).unwrap();
+    let preloaded = report::outcomes_from_artifact(&doc).unwrap();
+    let total = spec.config_labels().len() * spec.workloads.len();
+    assert_eq!(preloaded.len(), total, "artifact still has non-terminal cells");
+    let res = run_campaign(
+        &spec,
+        &ExecOptions { jobs: 1, progress: false, preloaded, ..Default::default() },
+    )
+    .unwrap();
+    report::to_json_canonical(&res)
+}
+
+#[test]
+fn fault_schedule_is_byte_identical_across_shards_levels() {
+    let run = |shards: usize| {
+        let res = run_campaign(
+            &spec(),
+            &ExecOptions { jobs: 1, progress: false, shards: Some(shards), ..Default::default() },
+        )
+        .unwrap();
+        assert!(res.all_passed(), "faulted campaign failed at shards={shards}");
+        report::to_json_canonical(&res)
+    };
+    assert_eq!(run(1), run(4), "faulted campaign.json differs between --shards 1 and 4");
+}
+
+#[test]
+fn fault_schedule_is_byte_identical_across_jobs_levels() {
+    let run = |jobs: usize| {
+        let res = run_campaign(
+            &spec(),
+            &ExecOptions { jobs, progress: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(res.all_passed(), "faulted campaign failed at jobs={jobs}");
+        report::to_json_canonical(&res)
+    };
+    assert_eq!(run(1), run(8), "faulted campaign.json differs between --jobs 1 and 8");
+}
+
+#[test]
+fn perf_faults_slow_the_run_but_preserve_the_final_state() {
+    let clean = run_workload(&small("SM-WT-C-HALCONE"), "fir", None);
+    assert!(clean.all_passed());
+
+    let mut cfg = small("SM-WT-C-HALCONE");
+    cfg.set("faults", SCHEDULE).unwrap();
+    let faulted = run_workload(&cfg, "fir", None);
+    // The divergence oracle: perf-only faults reorder nothing the
+    // references can see — every correctness check still passes.
+    assert!(faulted.all_passed(), "{:?}", faulted.checks);
+    assert!(
+        faulted.metrics.cycles >= clean.metrics.cycles,
+        "faults may only slow the run ({} -> {})",
+        clean.metrics.cycles,
+        faulted.metrics.cycles,
+    );
+    let f = faulted.metrics.faults.as_ref().expect("faulted run must report fault counters");
+    assert!(
+        f.link_outage_cycles + f.link_degraded_msgs > 0,
+        "an aggressive schedule must actually perturb some link"
+    );
+    assert!(clean.metrics.faults.is_none(), "clean runs carry no fault section");
+}
+
+#[test]
+fn finite_timestamps_roll_over_at_every_width_and_stay_correct() {
+    for bits in [8u32, 12, 16] {
+        for preset in ["SM-WT-C-HALCONE", "RDMA-WB-C-HMG"] {
+            let mut cfg = small(preset);
+            cfg.set("faults", &format!("ts_bits={bits}")).unwrap();
+            let res = run_workload(&cfg, "fir", None);
+            assert!(res.all_passed(), "{preset}/ts_bits={bits}: {:?}", res.checks);
+            let f = res.metrics.faults.as_ref().expect("ts_bits run must report fault counters");
+            if preset.contains("HMG") {
+                // HMG carries no timestamps: the width knob is inert.
+                assert_eq!(f.rollover_flushes, 0, "{preset}/ts_bits={bits}");
+                assert_eq!(f.tsu_rollovers, 0, "{preset}/ts_bits={bits}");
+            } else if bits == 8 {
+                // A smoke run spans far more than 2^8 cycles, so the
+                // narrowest width must actually cross epochs.
+                assert!(
+                    f.rollover_flushes + f.tsu_rollovers > 0,
+                    "ts_bits=8 run never rolled over"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn journaled_pending_cells_resume_to_identical_bytes() {
+    let dir = tmpdir("pending");
+    let reference = run_campaign(
+        &spec(),
+        &ExecOptions { jobs: 2, progress: false, ..Default::default() },
+    )
+    .unwrap();
+    assert!(reference.all_passed());
+    let reference_canonical = report::to_json_canonical(&reference);
+
+    // Reproduce a campaign interrupted after two cells: the journal
+    // holds two terminal cells and two still pending.
+    let interrupted = report::to_json(&reference)
+        .replacen("\"status\": \"ok\"", "\"status\": \"pending\"", 2);
+    let journal = dir.join("campaign.json");
+    std::fs::write(&journal, interrupted).unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_halcone"))
+        .args(["sweep", "--resume"])
+        .arg(&dir)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "resume failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let resumed = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(
+        canonical_of_artifact(&resumed),
+        reference_canonical,
+        "resumed artifact diverges from the uninterrupted run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sigkill_mid_campaign_then_resume_is_byte_identical() {
+    let dir = tmpdir("sigkill");
+    let spec_path = dir.join("faults.spec");
+    std::fs::write(&spec_path, faulted_campaign()).unwrap();
+    let journal = dir.join("campaign.json");
+
+    let reference = run_campaign(
+        &spec(),
+        &ExecOptions { jobs: 1, progress: false, ..Default::default() },
+    )
+    .unwrap();
+    let reference_canonical = report::to_json_canonical(&reference);
+
+    // Start the campaign, wait for the journal to exist (it is written
+    // before any worker starts), then SIGKILL mid-run. Whenever the kill
+    // lands, the atomic-rename journal is a complete, valid artifact.
+    let mut child = Command::new(env!("CARGO_BIN_EXE_halcone"))
+        .arg("sweep")
+        .arg("--spec")
+        .arg(&spec_path)
+        .args(["--jobs", "2", "--out"])
+        .arg(&journal)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut waited = 0u64;
+    while !journal.exists() && waited < 20_000 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        waited += 5;
+    }
+    assert!(journal.exists(), "sweep never journaled its initial state");
+    child.kill().ok(); // SIGKILL on unix; a no-op if it already finished
+    child.wait().unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_halcone"))
+        .args(["sweep", "--resume"])
+        .arg(&journal)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "resume after SIGKILL failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let resumed = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(
+        canonical_of_artifact(&resumed),
+        reference_canonical,
+        "post-SIGKILL resume diverges from the uninterrupted run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

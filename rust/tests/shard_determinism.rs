@@ -19,7 +19,7 @@ use halcone::sweep::report;
 use halcone::sweep::spec::CampaignSpec;
 
 fn canonical_with_shards(spec: &CampaignSpec, shards: usize) -> String {
-    let opts = ExecOptions { jobs: 2, progress: false, shards: Some(shards) };
+    let opts = ExecOptions { jobs: 2, progress: false, shards: Some(shards), ..Default::default() };
     let res = run_campaign(spec, &opts).unwrap();
     assert!(res.all_passed(), "campaign {} failed under shards={shards}", spec.name);
     report::to_json_canonical(&res)

@@ -53,12 +53,12 @@ fn small(preset: &str) -> SystemConfig {
 fn mix_campaign_is_byte_identical_across_shards_levels() {
     let serial = run_campaign(
         &mix_spec(),
-        &ExecOptions { jobs: 1, progress: false, shards: Some(1) },
+        &ExecOptions { jobs: 1, progress: false, shards: Some(1), ..Default::default() },
     )
     .unwrap();
     let sharded = run_campaign(
         &mix_spec(),
-        &ExecOptions { jobs: 1, progress: false, shards: Some(4) },
+        &ExecOptions { jobs: 1, progress: false, shards: Some(4), ..Default::default() },
     )
     .unwrap();
     assert!(serial.all_passed() && sharded.all_passed());
@@ -71,12 +71,16 @@ fn mix_campaign_is_byte_identical_across_shards_levels() {
 
 #[test]
 fn mix_campaign_is_byte_identical_across_jobs_levels() {
-    let serial =
-        run_campaign(&mix_spec(), &ExecOptions { jobs: 1, progress: false, shards: None })
-            .unwrap();
-    let parallel =
-        run_campaign(&mix_spec(), &ExecOptions { jobs: 8, progress: false, shards: None })
-            .unwrap();
+    let serial = run_campaign(
+        &mix_spec(),
+        &ExecOptions { jobs: 1, progress: false, ..Default::default() },
+    )
+    .unwrap();
+    let parallel = run_campaign(
+        &mix_spec(),
+        &ExecOptions { jobs: 8, progress: false, ..Default::default() },
+    )
+    .unwrap();
     assert_eq!(
         report::to_json_canonical(&serial),
         report::to_json_canonical(&parallel),
@@ -86,7 +90,7 @@ fn mix_campaign_is_byte_identical_across_jobs_levels() {
 
 #[test]
 fn mix_gate_round_trip_passes_at_zero_tolerance() {
-    let opts = ExecOptions { jobs: 2, progress: false, shards: None };
+    let opts = ExecOptions { jobs: 2, progress: false, shards: None, ..Default::default() };
     let baseline = report::to_json(&run_campaign(&mix_spec(), &opts).unwrap());
     let current = report::to_json(&run_campaign(&mix_spec(), &opts).unwrap());
     let rep = gate::diff(&baseline, &current, 0.0).unwrap();
@@ -123,7 +127,7 @@ fn tab_tenant_builtin_runs_end_to_end_with_per_tenant_metrics() {
     let spec = CampaignSpec::builtin("tab-tenant").unwrap();
     let res = run_campaign(
         &spec,
-        &ExecOptions { jobs: 4, progress: false, shards: None },
+        &ExecOptions { jobs: 4, progress: false, shards: None, ..Default::default() },
     )
     .unwrap();
     assert!(res.all_passed());

@@ -135,7 +135,8 @@ fn trace_campaign_canonical_json_is_byte_identical_across_jobs_and_shards() {
     ))
     .unwrap();
     let run = |jobs: usize, shards: usize| {
-        let opts = ExecOptions { jobs, progress: false, shards: Some(shards) };
+        let opts =
+            ExecOptions { jobs, progress: false, shards: Some(shards), ..Default::default() };
         let res = run_campaign(&spec, &opts).unwrap();
         assert!(res.all_passed(), "trace campaign failed (jobs={jobs}, shards={shards})");
         let cycles = res
