@@ -45,6 +45,17 @@ fn merge_ts(cts: u64, rsp: TsPair) -> TsMeta {
     TsMeta { wts: cts.max(rsp.wts), rts: (rsp.wts + 1).max(rsp.rts) }
 }
 
+/// Snapshot serializers for the per-line timestamp metadata
+/// (docs/SNAPSHOT.md).
+pub(crate) fn put_ts_meta(m: &TsMeta, out: &mut Vec<u8>) {
+    crate::snapshot::format::put(out, m.wts);
+    crate::snapshot::format::put(out, m.rts);
+}
+
+pub(crate) fn read_ts_meta(cur: &mut crate::snapshot::format::Cur) -> Result<TsMeta, String> {
+    Ok(TsMeta { wts: cur.u64("line wts")?, rts: cur.u64("line rts")? })
+}
+
 /// Per-CU private L1 vector cache controller.
 pub struct HalconeL1 {
     name: String,
@@ -404,6 +415,84 @@ impl Component for HalconeL1 {
             other => panic!("{}: unexpected {:?}", self.name, other),
         }
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        f::put(out, self.cts);
+        f::put(out, self.rollover_flushes);
+        self.cache.save_with(out, put_ts_meta);
+        self.mshr.save_state(out);
+        let mut keys: Vec<u64> = self.coalesce.keys().copied().collect();
+        keys.sort_unstable();
+        f::put(out, keys.len() as u64);
+        for la in keys {
+            f::put(out, la);
+            let buf = &self.coalesce[&la];
+            f::put(out, buf.len() as u64);
+            for (addr, bytes) in buf {
+                f::put(out, *addr);
+                f::put_buf(out, bytes);
+            }
+        }
+        let mut keys: Vec<u64> = self.pending_acks.keys().copied().collect();
+        keys.sort_unstable();
+        f::put(out, keys.len() as u64);
+        for la in keys {
+            f::put(out, la);
+            let acks = &self.pending_acks[&la];
+            f::put(out, acks.len() as u64);
+            for r in acks {
+                f::put_req(out, r);
+            }
+        }
+        self.stats.save_state(out);
+        self.tstats.save_state(out);
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        self.cts = cur.u64("l1 cts")?;
+        self.rollover_flushes = cur.u64("l1 rollover_flushes")?;
+        self.cache.load_with(cur, read_ts_meta)?;
+        self.mshr.load_state(cur)?;
+        let n = cur.u64("l1 coalesce count")? as usize;
+        self.coalesce.clear();
+        for _ in 0..n {
+            let la = cur.u64("l1 coalesce line")?;
+            let m = cur.u64("l1 coalesce run count")? as usize;
+            if m > cur.b.len() {
+                return Err(format!("coalesce run count {m} exceeds the input size"));
+            }
+            let mut buf = Vec::with_capacity(m);
+            for _ in 0..m {
+                let addr = cur.u64("l1 coalesce addr")?;
+                buf.push((addr, f::read_buf(cur, "l1 coalesce bytes")?));
+            }
+            if self.coalesce.insert(la, buf).is_some() {
+                return Err(format!("snapshot repeats coalesce line {la:#x}"));
+            }
+        }
+        let n = cur.u64("l1 pending-ack count")? as usize;
+        self.pending_acks.clear();
+        for _ in 0..n {
+            let la = cur.u64("l1 pending-ack line")?;
+            let m = cur.u64("l1 pending-ack req count")? as usize;
+            if m > cur.b.len() {
+                return Err(format!("pending-ack req count {m} exceeds the input size"));
+            }
+            let mut acks = Vec::with_capacity(m);
+            for _ in 0..m {
+                acks.push(f::read_req(cur, "l1 pending ack")?);
+            }
+            if self.pending_acks.insert(la, acks).is_some() {
+                return Err(format!("snapshot repeats pending-ack line {la:#x}"));
+            }
+        }
+        self.stats.load_state(cur)?;
+        self.tstats.load_state(cur)?;
+        Ok(())
+    }
 }
 
 /// One distributed shared L2 bank controller.
@@ -629,6 +718,24 @@ impl Component for HalconeL2 {
             }
             other => panic!("{}: unexpected {:?}", self.name, other),
         }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        f::put(out, self.cts);
+        f::put(out, self.rollover_flushes);
+        self.cache.save_with(out, put_ts_meta);
+        self.mshr.save_state(out);
+        self.stats.save_state(out);
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        self.cts = cur.u64("l2 cts")?;
+        self.rollover_flushes = cur.u64("l2 rollover_flushes")?;
+        self.cache.load_with(cur, read_ts_meta)?;
+        self.mshr.load_state(cur)?;
+        self.stats.load_state(cur)
     }
 }
 

@@ -534,6 +534,124 @@ impl Component for HmgL2 {
             other => panic!("{}: unexpected {:?}", self.name, other),
         }
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        self.cache.save_with(out, |_, _| {});
+        self.mshr.save_state(out);
+        // Directory: keys sorted for determinism; each sharer Vec kept in
+        // its recorded order verbatim — it fixes the home's Inv send order.
+        let mut keys: Vec<u64> = self.directory.keys().copied().collect();
+        keys.sort_unstable();
+        f::put(out, keys.len() as u64);
+        for la in keys {
+            f::put(out, la);
+            let sharers = &self.directory[&la];
+            f::put(out, sharers.len() as u64);
+            for s in sharers {
+                f::put(out, s.0 as u64);
+            }
+        }
+        let mut keys: Vec<u64> = self.pending_inv.keys().copied().collect();
+        keys.sort_unstable();
+        f::put(out, keys.len() as u64);
+        for la in keys {
+            f::put(out, la);
+            let p = &self.pending_inv[&la];
+            f::put(out, p.remaining as u64);
+            f::put_req(out, &p.req);
+            f::put(out, p.waiters.len() as u64);
+            for w in &p.waiters {
+                f::put_req(out, w);
+            }
+        }
+        let mut ids: Vec<u64> = self.evict_wait.keys().copied().collect();
+        ids.sort_unstable();
+        f::put(out, ids.len() as u64);
+        for id in ids {
+            f::put(out, id);
+            f::put(out, self.evict_wait[&id].line_addr);
+        }
+        let mut ids: Vec<u64> = self.fire_and_forget.iter().copied().collect();
+        ids.sort_unstable();
+        f::put(out, ids.len() as u64);
+        for id in ids {
+            f::put(out, id);
+        }
+        f::put(out, self.next_wb_id);
+        f::put(out, self.fence_pending);
+        f::put_bool(out, self.fence_reply.is_some());
+        if let Some(reply) = self.fence_reply {
+            f::put(out, reply.0 as u64);
+        }
+        self.stats.save_state(out);
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        self.cache.load_with(cur, |_| Ok(()))?;
+        self.mshr.load_state(cur)?;
+        let n = cur.u64("hmg directory count")? as usize;
+        self.directory.clear();
+        for _ in 0..n {
+            let la = cur.u64("hmg directory line")?;
+            let m = cur.u64("hmg sharer count")? as usize;
+            if m > cur.b.len() {
+                return Err(format!("hmg sharer count {m} exceeds the input size"));
+            }
+            let mut sharers = Vec::with_capacity(m);
+            for _ in 0..m {
+                sharers.push(CompId(cur.u32("hmg sharer")?));
+            }
+            if self.directory.insert(la, sharers).is_some() {
+                return Err(format!("snapshot repeats directory line {la:#x}"));
+            }
+        }
+        let n = cur.u64("hmg pending-inv count")? as usize;
+        self.pending_inv.clear();
+        for _ in 0..n {
+            let la = cur.u64("hmg pending-inv line")?;
+            let remaining = cur.u64("hmg pending-inv remaining")? as usize;
+            let req = f::read_req(cur, "hmg pending-inv req")?;
+            let m = cur.u64("hmg pending-inv waiter count")? as usize;
+            if m > cur.b.len() {
+                return Err(format!("pending-inv waiter count {m} exceeds the input size"));
+            }
+            let mut waiters = Vec::with_capacity(m);
+            for _ in 0..m {
+                waiters.push(f::read_req(cur, "hmg pending-inv waiter")?);
+            }
+            if self.pending_inv.insert(la, PendingInv { remaining, req, waiters }).is_some() {
+                return Err(format!("snapshot repeats pending-inv line {la:#x}"));
+            }
+        }
+        let n = cur.u64("hmg evict-wait count")? as usize;
+        self.evict_wait.clear();
+        for _ in 0..n {
+            let id = cur.u64("hmg evict-wait id")?;
+            let line_addr = cur.u64("hmg evict-wait line")?;
+            if self.evict_wait.insert(id, StalledFill { line_addr }).is_some() {
+                return Err(format!("snapshot repeats evict-wait id {id}"));
+            }
+        }
+        let n = cur.u64("hmg fire-and-forget count")? as usize;
+        self.fire_and_forget.clear();
+        for _ in 0..n {
+            let id = cur.u64("hmg fire-and-forget id")?;
+            if !self.fire_and_forget.insert(id) {
+                return Err(format!("snapshot repeats fire-and-forget id {id}"));
+            }
+        }
+        self.next_wb_id = cur.u64("hmg next_wb_id")?;
+        self.fence_pending = cur.u64("hmg fence_pending")?;
+        self.fence_reply = if cur.bool("hmg fence_reply flag")? {
+            Some(CompId(cur.u32("hmg fence_reply")?))
+        } else {
+            None
+        };
+        self.stats.load_state(cur)
+    }
 }
 
 #[cfg(test)]

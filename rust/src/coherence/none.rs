@@ -298,6 +298,80 @@ impl Component for PlainL1 {
             other => panic!("{}: unexpected {:?}", self.name, other),
         }
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        self.cache.save_with(out, |_, _| {});
+        self.mshr.save_state(out);
+        let mut keys: Vec<u64> = self.coalesce.keys().copied().collect();
+        keys.sort_unstable();
+        f::put(out, keys.len() as u64);
+        for la in keys {
+            f::put(out, la);
+            let buf = &self.coalesce[&la];
+            f::put(out, buf.len() as u64);
+            for (addr, bytes) in buf {
+                f::put(out, *addr);
+                f::put_buf(out, bytes);
+            }
+        }
+        let mut keys: Vec<u64> = self.pending_acks.keys().copied().collect();
+        keys.sort_unstable();
+        f::put(out, keys.len() as u64);
+        for la in keys {
+            f::put(out, la);
+            let acks = &self.pending_acks[&la];
+            f::put(out, acks.len() as u64);
+            for r in acks {
+                f::put_req(out, r);
+            }
+        }
+        self.stats.save_state(out);
+        self.tstats.save_state(out);
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        self.cache.load_with(cur, |_| Ok(()))?;
+        self.mshr.load_state(cur)?;
+        let n = cur.u64("l1 coalesce count")? as usize;
+        self.coalesce.clear();
+        for _ in 0..n {
+            let la = cur.u64("l1 coalesce line")?;
+            let m = cur.u64("l1 coalesce run count")? as usize;
+            if m > cur.b.len() {
+                return Err(format!("coalesce run count {m} exceeds the input size"));
+            }
+            let mut buf = Vec::with_capacity(m);
+            for _ in 0..m {
+                let addr = cur.u64("l1 coalesce addr")?;
+                buf.push((addr, f::read_buf(cur, "l1 coalesce bytes")?));
+            }
+            if self.coalesce.insert(la, buf).is_some() {
+                return Err(format!("snapshot repeats coalesce line {la:#x}"));
+            }
+        }
+        let n = cur.u64("l1 pending-ack count")? as usize;
+        self.pending_acks.clear();
+        for _ in 0..n {
+            let la = cur.u64("l1 pending-ack line")?;
+            let m = cur.u64("l1 pending-ack req count")? as usize;
+            if m > cur.b.len() {
+                return Err(format!("pending-ack req count {m} exceeds the input size"));
+            }
+            let mut acks = Vec::with_capacity(m);
+            for _ in 0..m {
+                acks.push(f::read_req(cur, "l1 pending ack")?);
+            }
+            if self.pending_acks.insert(la, acks).is_some() {
+                return Err(format!("snapshot repeats pending-ack line {la:#x}"));
+            }
+        }
+        self.stats.load_state(cur)?;
+        self.tstats.load_state(cur)?;
+        Ok(())
+    }
 }
 
 /// A fill stalled behind its victim's write-back.
@@ -633,6 +707,63 @@ impl Component for PlainL2 {
             Msg::FenceApply { reply_to, .. } => self.on_fence(reply_to, ctx),
             other => panic!("{}: unexpected {:?}", self.name, other),
         }
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        self.cache.save_with(out, |_, _| {});
+        self.mshr.save_state(out);
+        let mut ids: Vec<u64> = self.evict_wait.keys().copied().collect();
+        ids.sort_unstable();
+        f::put(out, ids.len() as u64);
+        for id in ids {
+            f::put(out, id);
+            f::put(out, self.evict_wait[&id].line_addr);
+        }
+        let mut ids: Vec<u64> = self.fire_and_forget.iter().copied().collect();
+        ids.sort_unstable();
+        f::put(out, ids.len() as u64);
+        for id in ids {
+            f::put(out, id);
+        }
+        f::put(out, self.next_wb_id);
+        f::put(out, self.fence_pending);
+        f::put_bool(out, self.fence_reply.is_some());
+        if let Some(reply) = self.fence_reply {
+            f::put(out, reply.0 as u64);
+        }
+        self.stats.save_state(out);
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        self.cache.load_with(cur, |_| Ok(()))?;
+        self.mshr.load_state(cur)?;
+        let n = cur.u64("l2 evict-wait count")? as usize;
+        self.evict_wait.clear();
+        for _ in 0..n {
+            let id = cur.u64("l2 evict-wait id")?;
+            let line_addr = cur.u64("l2 evict-wait line")?;
+            if self.evict_wait.insert(id, StalledFill { line_addr }).is_some() {
+                return Err(format!("snapshot repeats evict-wait id {id}"));
+            }
+        }
+        let n = cur.u64("l2 fire-and-forget count")? as usize;
+        self.fire_and_forget.clear();
+        for _ in 0..n {
+            let id = cur.u64("l2 fire-and-forget id")?;
+            if !self.fire_and_forget.insert(id) {
+                return Err(format!("snapshot repeats fire-and-forget id {id}"));
+            }
+        }
+        self.next_wb_id = cur.u64("l2 next_wb_id")?;
+        self.fence_pending = cur.u64("l2 fence_pending")?;
+        self.fence_reply = if cur.bool("l2 fence_reply flag")? {
+            Some(CompId(cur.u32("l2 fence_reply")?))
+        } else {
+            None
+        };
+        self.stats.load_state(cur)
     }
 }
 

@@ -139,6 +139,59 @@ impl Component for Driver {
             (s, m) => panic!("{}: message {m:?} in state {s:?}", self.name),
         }
     }
+
+    // CU/cache wiring, phase count and the copy delay are rebuilt from
+    // config; only the launch progress is serialized.
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format::{put, put_bool};
+        put(out, self.phase as u64);
+        out.push(match self.state {
+            State::Idle => 0,
+            State::Running => 1,
+            State::FenceQuery => 2,
+            State::FenceApply => 3,
+            State::Finished => 4,
+        });
+        put(out, self.pending as u64);
+        put(out, self.logical_max);
+        put(out, self.phase_end.len() as u64);
+        for &t in &self.phase_end {
+            put(out, t);
+        }
+        put_bool(out, self.done_at.is_some());
+        if let Some(t) = self.done_at {
+            put(out, t);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        self.phase = cur.u64("driver phase")? as u32;
+        self.state = match cur.byte("driver state tag")? {
+            0 => State::Idle,
+            1 => State::Running,
+            2 => State::FenceQuery,
+            3 => State::FenceApply,
+            4 => State::Finished,
+            t => return Err(format!("driver has unknown state tag {t}")),
+        };
+        self.pending = cur.u64("driver pending count")? as usize;
+        self.logical_max = cur.u64("driver logical max")?;
+        let n = cur.u64("driver phase-end count")? as usize;
+        if n > cur.b.len() {
+            return Err(format!("driver phase-end count {n} exceeds snapshot size"));
+        }
+        self.phase_end.clear();
+        for i in 0..n {
+            self.phase_end.push(cur.u64(&format!("driver phase-end {i}"))?);
+        }
+        self.done_at = if cur.bool("driver done flag")? {
+            Some(cur.u64("driver done cycle")?)
+        } else {
+            None
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -10,6 +10,6 @@ pub mod verify;
 
 pub use driver::Driver;
 pub use scheduler::KernelScheduler;
-pub use runner::{run_workload, RunResult};
+pub use runner::{run_workload, RunResult, SnapMode};
 pub use topology::{build, System};
 pub use verify::CheckOutcome;

@@ -20,6 +20,21 @@ use crate::tenancy::{self, MixPlan};
 use crate::trace::{Trace, TraceMeta};
 use crate::workloads::{self, Workload};
 
+/// How a run interacts with engine snapshots (docs/SNAPSHOT.md).
+pub enum SnapMode {
+    /// Ordinary run, no snapshot involvement.
+    None,
+    /// Run cold, pause at the first deterministic barrier at or after
+    /// `at`, serialize the full engine state, then resume to completion.
+    /// The pause is invisible: the run's results are byte-identical to a
+    /// run that never paused ([`Engine::run_until_barrier`]).
+    Save { at: Cycle },
+    /// Restore a snapshot into a freshly built system and continue to
+    /// completion. The bytes are validated (magic, version, checksums,
+    /// config fingerprint) before any state is overlaid.
+    Warm { bytes: std::sync::Arc<Vec<u8>> },
+}
+
 /// Everything one simulation produced.
 pub struct RunResult {
     pub config: String,
@@ -261,14 +276,30 @@ pub fn try_run_workload_traced(
     runtime: Option<&mut Runtime>,
     capture: bool,
 ) -> Result<(RunResult, Option<Trace>), String> {
+    let (res, trace, _) =
+        try_run_workload_snap(cfg, workload_name, runtime, capture, SnapMode::None)?;
+    Ok((res, trace))
+}
+
+/// [`try_run_workload_traced`] with snapshot involvement: under
+/// [`SnapMode::Save`] the third element carries the serialized snapshot
+/// (`None` when the run drained before reaching the requested cycle);
+/// under [`SnapMode::Warm`] the run resumes from the given bytes.
+pub fn try_run_workload_snap(
+    cfg: &SystemConfig,
+    workload_name: &str,
+    runtime: Option<&mut Runtime>,
+    capture: bool,
+    snap: SnapMode,
+) -> Result<(RunResult, Option<Trace>, Option<Vec<u8>>), String> {
     let params = cfg.workload_params();
     if tenancy::is_mix(workload_name) {
         let (wl, plan) = tenancy::compose(workload_name, &params)
             .map_err(|e| format!("workload '{workload_name}': {e}"))?;
-        return Ok(run_with_plan(cfg, wl, Some(plan), runtime, capture));
+        return run_with_plan_snap(cfg, wl, Some(plan), runtime, capture, snap);
     }
     let wl = workloads::try_build(workload_name, &params)?;
-    Ok(run_with_plan(cfg, wl, None, runtime, capture))
+    run_with_plan_snap(cfg, wl, None, runtime, capture, snap)
 }
 
 /// Run an already-built workload (callers that pre-tweak phases/checks).
@@ -295,11 +326,34 @@ pub fn run_built_traced(
 /// [`TenancyReport`]; without one this is the classic barrier-driver run.
 pub fn run_with_plan(
     cfg: &SystemConfig,
-    mut wl: Workload,
+    wl: Workload,
     plan: Option<MixPlan>,
     runtime: Option<&mut Runtime>,
     capture: bool,
 ) -> (RunResult, Option<Trace>) {
+    let name = wl.name.clone();
+    let (res, trace, _) = run_with_plan_snap(cfg, wl, plan, runtime, capture, SnapMode::None)
+        .unwrap_or_else(|e| panic!("workload '{name}': {e}"));
+    (res, trace)
+}
+
+/// [`run_with_plan`] with snapshot involvement (see [`SnapMode`] and
+/// [`try_run_workload_snap`] for the contract of the third element).
+pub fn run_with_plan_snap(
+    cfg: &SystemConfig,
+    mut wl: Workload,
+    plan: Option<MixPlan>,
+    runtime: Option<&mut Runtime>,
+    capture: bool,
+    snap: SnapMode,
+) -> Result<(RunResult, Option<Trace>, Option<Vec<u8>>), String> {
+    if capture && !matches!(snap, SnapMode::None) {
+        return Err(
+            "trace capture cannot be combined with snapshots (the CU trace tap is \
+             not serialized); drop --trace-out"
+                .into(),
+        );
+    }
     let name = wl.name.clone();
     let n_phases = wl.phases.len() as u32;
     let checks = std::mem::take(&mut wl.checks);
@@ -329,18 +383,55 @@ pub fn run_with_plan(
         }
     }
 
-    // Initial memory image + input snapshots for verification.
-    {
-        let mut mem = sys.mem.borrow_mut();
-        for (addr, vals) in &init {
-            mem.write_f32_slice(*addr, vals);
+    // Initial memory image + input snapshots for verification. A warm
+    // start restores both from the snapshot file instead: the live image
+    // is already mid-run, and the verification inputs must be the ones
+    // the cold run captured at t=0.
+    let mut snapshots = Vec::new();
+    if !matches!(snap, SnapMode::Warm { .. }) {
+        {
+            let mut mem = sys.mem.borrow_mut();
+            for (addr, vals) in &init {
+                mem.write_f32_slice(*addr, vals);
+            }
         }
+        snapshots = verify::snapshot_inputs(&checks, &sys.mem);
     }
-    let snapshots = verify::snapshot_inputs(&checks, &sys.mem);
 
     let t0 = Instant::now();
-    sys.engine.post(0, sys.driver, Msg::Tick);
-    sys.engine.run_to_completion();
+    let mut snap_out = None;
+    match snap {
+        SnapMode::None => {
+            sys.engine.post(0, sys.driver, Msg::Tick);
+            sys.engine.run_to_completion();
+        }
+        SnapMode::Save { at } => {
+            sys.engine.post(0, sys.driver, Msg::Tick);
+            let paused = sys.engine.run_until_barrier(at);
+            if paused {
+                let fp = crate::snapshot::config_fingerprint(cfg, &name);
+                snap_out = Some(crate::snapshot::save_bytes(
+                    &mut sys.engine,
+                    &sys.mem,
+                    &snapshots,
+                    fp,
+                    &name,
+                )?);
+            }
+            // Resume: the atomic-window pause guarantees the remainder is
+            // byte-identical to a run that never stopped.
+            sys.engine.run_to_completion();
+        }
+        SnapMode::Warm { bytes } => {
+            let fp = crate::snapshot::config_fingerprint(cfg, &name);
+            let loaded =
+                crate::snapshot::restore_bytes(&bytes, &mut sys.engine, &sys.mem, fp, &name)?;
+            snapshots = loaded.verify_inputs;
+            // No kick-off tick: the restored queues carry the pending
+            // events of the paused run.
+            sys.engine.run_to_completion();
+        }
+    }
     let host = t0.elapsed().as_secs_f64();
 
     assert!(
@@ -374,7 +465,7 @@ pub fn run_with_plan(
         }
     });
     let checks = verify::run_checks(&checks, &snapshots, &sys.mem, runtime);
-    (RunResult { config: cfg.name.clone(), workload: name, metrics, checks }, trace)
+    Ok((RunResult { config: cfg.name.clone(), workload: name, metrics, checks }, trace, snap_out))
 }
 
 #[cfg(test)]

@@ -27,6 +27,15 @@ use crate::tenancy::{JobSpec, MixPlan, Policy};
 pub trait SchedPolicy: Send {
     fn name(&self) -> &'static str;
     fn pick(&mut self, eligible: &[usize], jobs: &[JobSpec]) -> usize;
+
+    /// Mutable policy state as a single word (snapshots). Stateless
+    /// policies keep the defaults.
+    fn state(&self) -> u64 {
+        0
+    }
+
+    /// Restore the word captured by [`SchedPolicy::state`].
+    fn set_state(&mut self, _state: u64) {}
 }
 
 /// Earliest arrival first — the composer's sort order makes this simply
@@ -65,6 +74,14 @@ impl SchedPolicy for RoundRobin {
             }
         }
         eligible[0] // unreachable while tenants cover all jobs
+    }
+
+    fn state(&self) -> u64 {
+        self.next as u64
+    }
+
+    fn set_state(&mut self, state: u64) {
+        self.next = state as u32;
     }
 }
 
@@ -265,6 +282,110 @@ impl Component for KernelScheduler {
             }
             m => panic!("{}: unexpected message {m:?}", self.name),
         }
+    }
+
+    // The job list, slot geometry and CU map are rebuilt from the mix
+    // plan; only scheduling progress is serialized.
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format::{put, put_bool};
+        put(out, self.policy.state());
+        put(out, self.started.len() as u64);
+        for (&s, &f) in self.started.iter().zip(&self.finished) {
+            put_bool(out, s);
+            put_bool(out, f);
+        }
+        put(out, self.free_slots.len() as u64);
+        for &s in &self.free_slots {
+            put(out, s as u64);
+        }
+        put(out, self.running.len() as u64);
+        for r in &self.running {
+            put_bool(out, r.is_some());
+            if let Some(j) = r {
+                put(out, *j as u64);
+            }
+        }
+        for &p in &self.pending {
+            put(out, p as u64);
+        }
+        put(out, self.n_done as u64);
+        put_bool(out, self.ticked);
+        put(out, self.records.len() as u64);
+        for r in &self.records {
+            put(out, r.tenant as u64);
+            put(out, r.arrival);
+            put(out, r.admitted);
+            put(out, r.finished);
+        }
+        put_bool(out, self.done_at.is_some());
+        if let Some(t) = self.done_at {
+            put(out, t);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        self.policy.set_state(cur.u64("scheduler policy state")?);
+        let n_jobs = cur.u64("scheduler job count")? as usize;
+        if n_jobs != self.jobs.len() {
+            return Err(format!(
+                "snapshot schedules {n_jobs} jobs, this mix plan has {} — the workloads differ",
+                self.jobs.len()
+            ));
+        }
+        for j in 0..n_jobs {
+            self.started[j] = cur.bool(&format!("job {j} started flag"))?;
+            self.finished[j] = cur.bool(&format!("job {j} finished flag"))?;
+        }
+        let n_free = cur.u64("scheduler free-slot count")? as usize;
+        if n_free > self.n_slots {
+            return Err(format!(
+                "snapshot frees {n_free} slots, this mix plan has {}",
+                self.n_slots
+            ));
+        }
+        self.free_slots.clear();
+        for i in 0..n_free {
+            self.free_slots.push(cur.u64(&format!("free slot {i}"))? as usize);
+        }
+        let n_slots = cur.u64("scheduler slot count")? as usize;
+        if n_slots != self.n_slots {
+            return Err(format!(
+                "snapshot has {n_slots} CU slots, this mix plan has {} — the geometries differ",
+                self.n_slots
+            ));
+        }
+        for s in 0..n_slots {
+            self.running[s] = if cur.bool(&format!("slot {s} running flag"))? {
+                Some(cur.u64(&format!("slot {s} job"))? as usize)
+            } else {
+                None
+            };
+        }
+        for s in 0..n_slots {
+            self.pending[s] = cur.u64(&format!("slot {s} pending count"))? as usize;
+        }
+        self.n_done = cur.u64("scheduler done count")? as usize;
+        self.ticked = cur.bool("scheduler ticked flag")?;
+        let n_rec = cur.u64("scheduler record count")? as usize;
+        if n_rec != self.records.len() {
+            return Err(format!(
+                "snapshot records {n_rec} jobs, this mix plan has {}",
+                self.records.len()
+            ));
+        }
+        for r in self.records.iter_mut() {
+            r.tenant = cur.u64("record tenant")? as u32;
+            r.arrival = cur.u64("record arrival")?;
+            r.admitted = cur.u64("record admitted")?;
+            r.finished = cur.u64("record finished")?;
+        }
+        self.done_at = if cur.bool("scheduler done flag")? {
+            Some(cur.u64("scheduler done cycle")?)
+        } else {
+            None
+        };
+        Ok(())
     }
 }
 

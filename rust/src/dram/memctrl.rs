@@ -110,6 +110,37 @@ impl Component for MemCtrl {
         let msg = ctx.rsp_msg(rsp);
         ctx.send_delayed(self.latency, link, next, bytes, msg);
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format::{put, put_bool};
+        put(out, self.stats.reads);
+        put(out, self.stats.writes);
+        put(out, self.stats.bytes_in);
+        put(out, self.stats.bytes_out);
+        put_bool(out, self.tsu.is_some());
+        if let Some(tsu) = &self.tsu {
+            tsu.save_state(out);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        self.stats.reads = cur.u64("mc reads")?;
+        self.stats.writes = cur.u64("mc writes")?;
+        self.stats.bytes_in = cur.u64("mc bytes_in")?;
+        self.stats.bytes_out = cur.u64("mc bytes_out")?;
+        let has_tsu = cur.bool("mc tsu flag")?;
+        match (&mut self.tsu, has_tsu) {
+            (Some(tsu), true) => tsu.load_state(cur),
+            (None, false) => Ok(()),
+            (mine, _) => Err(format!(
+                "snapshot memory controller {} a TSU, this configuration {} one — the \
+                 coherence settings differ",
+                if has_tsu { "has" } else { "lacks" },
+                if mine.is_some() { "builds" } else { "omits" },
+            )),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -144,6 +144,47 @@ impl GlobalMemory {
     pub fn resident_lines(&self) -> usize {
         self.lines.len()
     }
+
+    /// Serialize the full store for a snapshot (docs/SNAPSHOT.md).
+    /// Lines are written sorted by address — hash-map iteration order
+    /// is not deterministic, and snapshot bytes must be.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::snapshot::format::put;
+        put(out, self.reads);
+        put(out, self.writes);
+        put(out, self.lines.len() as u64);
+        let mut addrs: Vec<u64> = self.lines.keys().copied().collect();
+        addrs.sort_unstable();
+        for addr in addrs {
+            put(out, addr);
+            out.extend_from_slice(&self.lines[&addr]);
+        }
+    }
+
+    /// Restore the state written by [`GlobalMemory::save_state`],
+    /// replacing any current contents.
+    pub fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        self.reads = cur.u64("memory reads")?;
+        self.writes = cur.u64("memory writes")?;
+        let n = cur.u64("memory line count")? as usize;
+        if n.saturating_mul(LINE as usize) > cur.b.len() {
+            return Err(format!("memory line count {n} exceeds the input size"));
+        }
+        self.lines.clear();
+        for _ in 0..n {
+            let addr = cur.u64("memory line address")?;
+            if addr % LINE != 0 {
+                return Err(format!("memory line address {addr:#x} is not line-aligned"));
+            }
+            let bytes = cur.bytes(LINE as usize, "memory line bytes")?;
+            let mut line = [0u8; LINE as usize];
+            line.copy_from_slice(bytes);
+            if self.lines.insert(addr, line).is_some() {
+                return Err(format!("snapshot memory repeats line address {addr:#x}"));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

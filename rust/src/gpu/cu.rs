@@ -512,6 +512,142 @@ impl Component for Cu {
             other => panic!("{}: unexpected {:?}", self.name, other),
         }
     }
+
+    // The program, phase->tenant map and wiring are rebuilt from config;
+    // only the execution state is serialized.
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format::{put, put_bool, put_f32};
+        if self.trace_buf.is_some() {
+            return Err(format!(
+                "{}: trace capture is enabled — traces cannot be snapshotted \
+                 (run without --trace-out)",
+                self.name
+            ));
+        }
+        put(out, self.wavefronts.len() as u64);
+        for w in &self.wavefronts {
+            put(out, w.pc as u64);
+            for reg in &w.regs {
+                for v in reg {
+                    put_f32(out, *v);
+                }
+            }
+            put_bool(out, w.done);
+            put(out, w.gap);
+        }
+        put(out, self.outstanding.len() as u64);
+        for &(id, wf, dest) in &self.outstanding {
+            put(out, id);
+            put(out, wf as u64);
+            match dest {
+                Dest::Ack => out.push(0),
+                Dest::Scalar(r) => {
+                    out.push(1);
+                    out.push(r);
+                }
+                Dest::Vector(r, n) => {
+                    out.push(2);
+                    out.push(r);
+                    out.push(n);
+                }
+            }
+        }
+        put(out, self.next_id);
+        put(out, self.active as u64);
+        put(out, self.phase as u64);
+        put(out, self.stores_in_flight as u64);
+        put(out, self.store_credits as u64);
+        put(out, self.parked.len() as u64);
+        for &wf in &self.parked {
+            put(out, wf as u64);
+        }
+        put(out, self.stats.loads);
+        put(out, self.stats.stores);
+        put(out, self.stats.alu);
+        put(out, self.stats.delay_cycles);
+        put(out, self.tenant_stats.len() as u64);
+        for t in &self.tenant_stats {
+            put(out, t.loads);
+            put(out, t.stores);
+            put(out, t.bytes);
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        let n_wfs = cur.u64("CU wavefront count")? as usize;
+        if n_wfs > cur.b.len() {
+            return Err(format!("CU wavefront count {n_wfs} exceeds snapshot size"));
+        }
+        self.wavefronts.clear();
+        for i in 0..n_wfs {
+            let pc = cur.u64(&format!("wavefront {i} pc"))? as usize;
+            let mut regs = [[0.0f32; LANES]; NREGS];
+            for reg in &mut regs {
+                for v in reg.iter_mut() {
+                    *v = cur.f32(&format!("wavefront {i} register lane"))?;
+                }
+            }
+            let done = cur.bool(&format!("wavefront {i} done flag"))?;
+            let gap = cur.u64(&format!("wavefront {i} gap"))?;
+            self.wavefronts.push(Wavefront { pc, regs, done, gap });
+        }
+        let n_out = cur.u64("CU outstanding count")? as usize;
+        if n_out > cur.b.len() {
+            return Err(format!("CU outstanding count {n_out} exceeds snapshot size"));
+        }
+        self.outstanding.clear();
+        for i in 0..n_out {
+            let id = cur.u64(&format!("outstanding {i} id"))?;
+            let wf = cur.u64(&format!("outstanding {i} wavefront"))? as usize;
+            if wf >= n_wfs {
+                return Err(format!(
+                    "outstanding request {i} targets wavefront {wf}, only {n_wfs} exist"
+                ));
+            }
+            let dest = match cur.byte(&format!("outstanding {i} dest tag"))? {
+                0 => Dest::Ack,
+                1 => Dest::Scalar(cur.byte(&format!("outstanding {i} register"))?),
+                2 => {
+                    let r = cur.byte(&format!("outstanding {i} register"))?;
+                    let n = cur.byte(&format!("outstanding {i} lane count"))?;
+                    Dest::Vector(r, n)
+                }
+                t => return Err(format!("outstanding request {i} has unknown dest tag {t}")),
+            };
+            self.outstanding.push((id, wf, dest));
+        }
+        self.next_id = cur.u64("CU next_id")?;
+        self.active = cur.u64("CU active count")? as usize;
+        self.phase = cur.u64("CU phase")? as u32;
+        self.stores_in_flight = cur.u64("CU stores in flight")? as u32;
+        self.store_credits = cur.u64("CU store credits")? as u32;
+        let n_parked = cur.u64("CU parked count")? as usize;
+        if n_parked > n_wfs {
+            return Err(format!("CU parks {n_parked} wavefronts, only {n_wfs} exist"));
+        }
+        self.parked.clear();
+        for i in 0..n_parked {
+            self.parked.push(cur.u64(&format!("parked wavefront {i}"))? as usize);
+        }
+        self.stats.loads = cur.u64("CU stat loads")?;
+        self.stats.stores = cur.u64("CU stat stores")?;
+        self.stats.alu = cur.u64("CU stat alu")?;
+        self.stats.delay_cycles = cur.u64("CU stat delay_cycles")?;
+        let n_ten = cur.u64("CU tenant stat count")? as usize;
+        if n_ten > cur.b.len() {
+            return Err(format!("CU tenant stat count {n_ten} exceeds snapshot size"));
+        }
+        self.tenant_stats.clear();
+        for _ in 0..n_ten {
+            self.tenant_stats.push(crate::metrics::tenancy::TenantCuStats {
+                loads: cur.u64("tenant loads")?,
+                stores: cur.u64("tenant stores")?,
+                bytes: cur.u64("tenant bytes")?,
+            });
+        }
+        Ok(())
+    }
 }
 
 /// Convenience: total transactions a CU exchanged with its L1 (for the

@@ -95,6 +95,19 @@ impl Component for Switch {
             other => panic!("{}: cannot route {:?}", self.name, other),
         }
     }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format::put;
+        put(out, self.forwarded);
+        put(out, self.bytes);
+        Ok(())
+    }
+
+    fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        self.forwarded = cur.u64("switch forwarded")?;
+        self.bytes = cur.u64("switch bytes")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

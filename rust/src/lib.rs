@@ -22,7 +22,10 @@
 //!   ([`tenancy`], [`coordinator::scheduler`], [`metrics::tenancy`]),
 //! - deterministic fault injection: seeded link degradation/outage
 //!   schedules and finite-width timestamp rollover ([`faults`],
-//!   docs/ROBUSTNESS.md).
+//!   docs/ROBUSTNESS.md),
+//! - integrity-checked engine snapshots and warm-start forking: freeze a
+//!   paused simulation into a versioned checksummed file and continue it
+//!   byte-identically ([`snapshot`], docs/SNAPSHOT.md).
 
 pub mod coherence;
 pub mod config;
@@ -36,6 +39,7 @@ pub mod metrics;
 pub mod proptools;
 pub mod runtime;
 pub mod sim;
+pub mod snapshot;
 pub mod sweep;
 pub mod tenancy;
 pub mod trace;

@@ -27,7 +27,7 @@
 use std::process::ExitCode;
 
 use halcone::config::SystemConfig;
-use halcone::coordinator::runner::{run_built_traced, run_workload, try_run_workload_traced};
+use halcone::coordinator::runner::{run_built_traced, run_workload, try_run_workload_snap, SnapMode};
 use halcone::metrics::divergence;
 use halcone::runtime::Runtime;
 use halcone::sweep::exec::{self, run_campaign, CellExec, CellOutcome, ExecOptions};
@@ -48,9 +48,11 @@ fn usage() -> ! {
          \n\
          commands:\n\
            run          --workload NAME [--preset P] [--set k=v ...] [--trace-out FILE]\n\
+                        [--snapshot-at CYCLE --snapshot-out FILE | --warm-start FILE]\n\
            compare      --workload NAME [--presets A,B,...] [--set k=v ...]\n\
            sweep        --campaign NAME | --spec FILE  [--jobs N] [--out FILE] [--set k=v ...]\n\
-                        [--faults SPEC] [--timeout SECS] [--retries N] | --resume DIR\n\
+                        [--faults SPEC] [--timeout SECS] [--retries N] [--warmup CYCLES]\n\
+                        | --resume DIR\n\
            gate         --baseline FILE [--current FILE] [--campaign NAME|--spec FILE]\n\
                         [--tolerance FRAC] [--jobs N] [--out FILE]\n\
            verify       [--workload NAME|all] [--artifacts DIR] [--set k=v ...]\n\
@@ -94,6 +96,16 @@ fn usage() -> ! {
            --resume DIR      re-enter an interrupted campaign from its journaled\n\
                              campaign.json (DIR or the file itself); completed cells\n\
                              are reloaded, the rest re-run (docs/ROBUSTNESS.md)\n\
+         \n\
+         snapshot options (docs/SNAPSHOT.md):\n\
+           --snapshot-at N   run: pause at the first deterministic barrier at or\n\
+                             after cycle N and checkpoint the full engine state\n\
+           --snapshot-out F  run: snapshot file to write (with --snapshot-at)\n\
+           --warm-start F    run: restore snapshot F and continue to completion;\n\
+                             results are byte-identical to the cold run\n\
+           --warmup N        sweep: share a warmed-up engine across cells — run the\n\
+                             first N cycles once per distinct configuration, then\n\
+                             fork every matching cell from that snapshot\n\
          \n\
          trace options:\n\
            --trace FILE      trace to replay (replay)\n\
@@ -147,6 +159,10 @@ struct Args {
     tolerance: Option<f64>,
     trace_file: Option<String>,
     trace_out: Option<String>,
+    snapshot_at: Option<u64>,
+    snapshot_out: Option<String>,
+    warm_start: Option<String>,
+    warmup: Option<u64>,
     strict: bool,
     pattern: Option<String>,
     ops: Option<u32>,
@@ -195,6 +211,10 @@ fn parse_args() -> Args {
         tolerance: None,
         trace_file: None,
         trace_out: None,
+        snapshot_at: None,
+        snapshot_out: None,
+        warm_start: None,
+        warmup: None,
         strict: false,
         pattern: None,
         ops: None,
@@ -278,6 +298,12 @@ fn parse_args() -> Args {
             "--out" | "-o" => a.out = Some(val("--out")),
             "--trace" => a.trace_file = Some(val("--trace")),
             "--trace-out" => a.trace_out = Some(val("--trace-out")),
+            "--snapshot-at" => {
+                a.snapshot_at = Some(parse_num("--snapshot-at", &val("--snapshot-at")))
+            }
+            "--snapshot-out" => a.snapshot_out = Some(val("--snapshot-out")),
+            "--warm-start" => a.warm_start = Some(val("--warm-start")),
+            "--warmup" => a.warmup = Some(parse_num("--warmup", &val("--warmup"))),
             "--strict" => a.strict = true,
             "--pattern" => a.pattern = Some(val("--pattern")),
             "--ops" => a.ops = Some(parse_num("--ops", &val("--ops"))),
@@ -340,7 +366,12 @@ fn build_config(a: &Args) -> SystemConfig {
             std::process::exit(2)
         })
     } else if let Some(p) = &a.preset {
-        SystemConfig::preset(p)
+        // try_preset, not preset: a typoed name must be a clean exit-2
+        // with the known presets listed, never a panic.
+        SystemConfig::try_preset(p).unwrap_or_else(|e| {
+            eprintln!("--preset {p}: {e}");
+            std::process::exit(2)
+        })
     } else {
         SystemConfig::default()
     };
@@ -374,19 +405,60 @@ fn cmd_run(a: &Args) -> ExitCode {
     let cfg = build_config(a);
     let mut rt = open_runtime(a);
     let capture = a.trace_out.is_some();
+    if a.snapshot_at.is_some() != a.snapshot_out.is_some() {
+        eprintln!("run: --snapshot-at CYCLE and --snapshot-out FILE go together");
+        return ExitCode::from(EXIT_CONFIG);
+    }
+    if a.warm_start.is_some() && a.snapshot_at.is_some() {
+        eprintln!("run: --warm-start cannot be combined with --snapshot-at/--snapshot-out");
+        return ExitCode::from(EXIT_CONFIG);
+    }
+    let snap = if let Some(path) = &a.warm_start {
+        match halcone::snapshot::read_file(path) {
+            Ok(b) => SnapMode::Warm { bytes: std::sync::Arc::new(b) },
+            Err(e) => {
+                eprintln!("run: {e}");
+                return ExitCode::from(EXIT_CONFIG);
+            }
+        }
+    } else if let Some(at) = a.snapshot_at {
+        SnapMode::Save { at }
+    } else {
+        SnapMode::None
+    };
     // The fallible entry keeps a typoed name or bad trace/mix spec a
     // clean error, not a panic — and routes `mix:` through the
     // inter-kernel scheduler.
-    let (res, captured) =
-        match try_run_workload_traced(&cfg, workload, rt.as_mut(), capture) {
+    let (res, captured, snap_bytes) =
+        match try_run_workload_snap(&cfg, workload, rt.as_mut(), capture, snap) {
             Ok(r) => r,
             Err(e) => {
-                // Bad workload name / trace path / mix spec: a run
-                // *configuration* error, distinct from failed checks.
+                // Bad workload name / trace path / mix spec / rejected
+                // snapshot: a run *configuration* error, distinct from
+                // failed checks.
                 eprintln!("run: {e}");
                 return ExitCode::from(EXIT_CONFIG);
             }
         };
+    if let Some(out) = &a.snapshot_out {
+        match &snap_bytes {
+            Some(bytes) => {
+                if let Err(e) = halcone::snapshot::write_file(out, bytes) {
+                    eprintln!("run: {e}");
+                    return ExitCode::from(EXIT_CONFIG);
+                }
+                eprintln!("wrote snapshot {out} ({} bytes)", bytes.len());
+            }
+            None => {
+                eprintln!(
+                    "run: the simulation finished before cycle {} — nothing left to \
+                     snapshot; pick a smaller --snapshot-at",
+                    a.snapshot_at.unwrap_or(0),
+                );
+                return ExitCode::from(EXIT_CONFIG);
+            }
+        }
+    }
     println!("{}", res.summary());
     println!(
         "  cu loads/stores: {}/{}  mm reads/writes: {}/{}  pcie bytes: {}  mem-net bytes: {}  host: {:.3}s ({:.1}M events/s)",
@@ -756,11 +828,15 @@ fn load_resume(
 
 fn cmd_sweep(a: &Args) -> ExitCode {
     let (spec, out, preloaded) = if let Some(dir) = &a.resume {
-        if a.campaign.is_some() || a.spec_file.is_some() || !a.sets.is_empty() || a.out.is_some()
+        if a.campaign.is_some()
+            || a.spec_file.is_some()
+            || !a.sets.is_empty()
+            || a.out.is_some()
+            || a.warmup.is_some()
         {
             eprintln!(
                 "sweep: --resume re-runs the journaled campaign in place; it conflicts \
-                 with --campaign/--spec/--set/--faults/--out"
+                 with --campaign/--spec/--set/--faults/--out/--warmup"
             );
             return ExitCode::from(EXIT_CONFIG);
         }
@@ -772,13 +848,18 @@ fn cmd_sweep(a: &Args) -> ExitCode {
             }
         }
     } else {
-        let spec = match load_spec(a, None) {
+        let mut spec = match load_spec(a, None) {
             Ok(s) => s,
             Err(e) => {
                 eprintln!("sweep: {e}");
                 return ExitCode::from(EXIT_CONFIG);
             }
         };
+        // --warmup overrides (or supplies) the spec's warm-start fork
+        // prefix; it is journaled with the spec, so --resume keeps it.
+        if let Some(w) = a.warmup {
+            spec.warmup = Some(w);
+        }
         // Default artifact path (gate reads it back later).
         let out = a.out.clone().unwrap_or_else(|| "campaign.json".into());
         (spec, out, Vec::new())

@@ -362,6 +362,75 @@ impl<M> CacheArray<M> {
     pub fn occupancy(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
+
+    /// Serialize the array's mutable state for a snapshot
+    /// (docs/SNAPSHOT.md): LRU clock, hit/miss counters, every slot
+    /// (tag, LRU stamp, dirty bit, protocol metadata via `put_meta`)
+    /// and the flat data backing verbatim. Geometry is not written —
+    /// it is rebuilt from the config and validated on load.
+    pub fn save_with(&self, out: &mut Vec<u8>, put_meta: impl Fn(&M, &mut Vec<u8>)) {
+        use crate::snapshot::format::put;
+        put(out, self.clock);
+        put(out, self.hits);
+        put(out, self.misses);
+        put(out, self.slots.len() as u64);
+        for slot in &self.slots {
+            match slot {
+                None => out.push(0),
+                Some(s) => {
+                    out.push(1);
+                    put(out, s.tag);
+                    put(out, s.lru);
+                    out.push(s.dirty as u8);
+                    put_meta(&s.meta, out);
+                }
+            }
+        }
+        put(out, self.data.len() as u64);
+        out.extend_from_slice(&self.data);
+    }
+
+    /// Restore the state written by [`CacheArray::save_with`] into an
+    /// array of the same geometry.
+    pub fn load_with(
+        &mut self,
+        cur: &mut crate::snapshot::format::Cur,
+        read_meta: impl Fn(&mut crate::snapshot::format::Cur) -> Result<M, String>,
+    ) -> Result<(), String> {
+        self.clock = cur.u64("cache clock")?;
+        self.hits = cur.u64("cache hits")?;
+        self.misses = cur.u64("cache misses")?;
+        let n = cur.u64("cache slot count")? as usize;
+        if n != self.slots.len() {
+            return Err(format!(
+                "snapshot cache has {n} slots, this geometry has {} — the configurations \
+                 differ",
+                self.slots.len()
+            ));
+        }
+        for i in 0..n {
+            self.slots[i] = match cur.byte("cache slot flag")? {
+                0 => None,
+                1 => Some(Slot {
+                    tag: cur.u64("cache slot tag")?,
+                    lru: cur.u64("cache slot lru")?,
+                    dirty: cur.bool("cache slot dirty")?,
+                    meta: read_meta(cur)?,
+                }),
+                f => return Err(format!("cache slot flag must be 0 or 1, got {f}")),
+            };
+        }
+        let len = cur.u64("cache data length")? as usize;
+        if len != self.data.len() {
+            return Err(format!(
+                "snapshot cache backing is {len} bytes, this geometry has {} — the \
+                 configurations differ",
+                self.data.len()
+            ));
+        }
+        self.data.copy_from_slice(cur.bytes(len, "cache data backing")?);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

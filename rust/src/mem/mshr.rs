@@ -97,6 +97,69 @@ impl Mshr {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+
+    /// Serialize the mutable state (docs/SNAPSHOT.md). Entries are
+    /// written sorted by line address — hash-map iteration order is not
+    /// deterministic, and snapshot bytes must be. Capacity comes from
+    /// the config and is not written.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::snapshot::format as f;
+        f::put(out, self.peak as u64);
+        f::put(out, self.merges);
+        f::put(out, self.entries.len() as u64);
+        let mut addrs: Vec<u64> = self.entries.keys().copied().collect();
+        addrs.sort_unstable();
+        for addr in addrs {
+            let e = &self.entries[&addr];
+            f::put(out, addr);
+            out.push(match e.kind {
+                MshrKind::Fill => 0,
+                MshrKind::WriteLock => 1,
+            });
+            f::put_req(out, &e.primary);
+            f::put(out, e.waiters.len() as u64);
+            for w in &e.waiters {
+                f::put_req(out, w);
+            }
+        }
+    }
+
+    /// Restore the state written by [`Mshr::save_state`].
+    pub fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        self.peak = cur.u64("mshr peak")? as usize;
+        self.merges = cur.u64("mshr merges")?;
+        let n = cur.u64("mshr entry count")? as usize;
+        if n > self.capacity {
+            return Err(format!(
+                "snapshot MSHR holds {n} entries, this configuration allows {} — the \
+                 configurations differ",
+                self.capacity
+            ));
+        }
+        self.entries.clear();
+        for _ in 0..n {
+            let addr = cur.u64("mshr line addr")?;
+            let kind = match cur.byte("mshr entry kind")? {
+                0 => MshrKind::Fill,
+                1 => MshrKind::WriteLock,
+                k => return Err(format!("mshr entry kind must be 0 or 1, got {k}")),
+            };
+            let primary = f::read_req(cur, "mshr primary")?;
+            let n_waiters = cur.u64("mshr waiter count")? as usize;
+            if n_waiters > cur.b.len() {
+                return Err(format!("mshr waiter count {n_waiters} exceeds the input size"));
+            }
+            let mut waiters = Vec::with_capacity(n_waiters);
+            for _ in 0..n_waiters {
+                waiters.push(f::read_req(cur, "mshr waiter")?);
+            }
+            if self.entries.insert(addr, MshrEntry { kind, primary, waiters }).is_some() {
+                return Err(format!("snapshot MSHR repeats line address {addr:#x}"));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

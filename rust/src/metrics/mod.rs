@@ -65,6 +65,40 @@ impl CacheCtrlStats {
         self.writebacks += o.writebacks;
         self.invalidations += o.invalidations;
     }
+
+    /// Serialize every counter for a snapshot (docs/SNAPSHOT.md).
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::snapshot::format::put;
+        put(out, self.reqs_in);
+        put(out, self.rsps_out);
+        put(out, self.reqs_down);
+        put(out, self.rsps_down);
+        put(out, self.hits);
+        put(out, self.misses);
+        put(out, self.coherency_misses);
+        put(out, self.mshr_merges);
+        put(out, self.bytes_down);
+        put(out, self.bytes_up);
+        put(out, self.writebacks);
+        put(out, self.invalidations);
+    }
+
+    /// Restore the counters written by [`CacheCtrlStats::save_state`].
+    pub fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        self.reqs_in = cur.u64("stats reqs_in")?;
+        self.rsps_out = cur.u64("stats rsps_out")?;
+        self.reqs_down = cur.u64("stats reqs_down")?;
+        self.rsps_down = cur.u64("stats rsps_down")?;
+        self.hits = cur.u64("stats hits")?;
+        self.misses = cur.u64("stats misses")?;
+        self.coherency_misses = cur.u64("stats coherency_misses")?;
+        self.mshr_merges = cur.u64("stats mshr_merges")?;
+        self.bytes_down = cur.u64("stats bytes_down")?;
+        self.bytes_up = cur.u64("stats bytes_up")?;
+        self.writebacks = cur.u64("stats writebacks")?;
+        self.invalidations = cur.u64("stats invalidations")?;
+        Ok(())
+    }
 }
 
 /// Counters produced by deterministic fault injection

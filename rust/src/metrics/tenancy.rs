@@ -65,6 +65,34 @@ impl TenantTraffic {
             mine.coherency_misses += s.coherency_misses;
         }
     }
+
+    /// Serialize the table for a snapshot (docs/SNAPSHOT.md).
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::snapshot::format::put;
+        put(out, self.slots.len() as u64);
+        for s in &self.slots {
+            put(out, s.hits);
+            put(out, s.misses);
+            put(out, s.coherency_misses);
+        }
+    }
+
+    /// Restore the table written by [`TenantTraffic::save_state`].
+    pub fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        let n = cur.u64("tenant slot count")? as usize;
+        if n > cur.b.len() {
+            return Err(format!("tenant slot count {n} exceeds the input size"));
+        }
+        self.slots.clear();
+        for _ in 0..n {
+            self.slots.push(TenantCacheStats {
+                hits: cur.u64("tenant hits")?,
+                misses: cur.u64("tenant misses")?,
+                coherency_misses: cur.u64("tenant coherency_misses")?,
+            });
+        }
+        Ok(())
+    }
 }
 
 /// One tenant's aggregated view of a finished mix run.

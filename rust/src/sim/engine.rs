@@ -43,6 +43,22 @@ pub trait Component: Send {
     /// Downcast support (setup and metrics extraction).
     fn as_any(&self) -> &dyn std::any::Any;
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+
+    /// Serialize this component's *mutable* state (docs/SNAPSHOT.md).
+    /// Immutable structure (routes, programs, geometry) is rebuilt from
+    /// the configuration on warm start and must not be written here.
+    /// The default refuses, so a component type that never implemented
+    /// snapshotting fails the save with its name instead of silently
+    /// dropping state.
+    fn save_state(&self, _out: &mut Vec<u8>) -> Result<(), String> {
+        Err(format!("component '{}' does not support snapshots", self.name()))
+    }
+
+    /// Restore the state written by [`Component::save_state`] into a
+    /// freshly built component.
+    fn load_state(&mut self, _cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        Err(format!("component '{}' does not support snapshots", self.name()))
+    }
 }
 
 /// Implements the `as_any`/`as_any_mut` boilerplate for a component type.
@@ -322,7 +338,7 @@ impl Engine {
         }
         let shards = std::mem::take(&mut self.shards);
         let (shards, done) =
-            shard::run_windows(shards, &self.tables, self.lookahead, self.threads, limit);
+            shard::run_windows(shards, &self.tables, self.lookahead, self.threads, limit, false);
         self.shards = shards;
         self.now = match done {
             None => limit,
@@ -334,6 +350,49 @@ impl Engine {
     /// Run until the queues are fully drained (no cycle limit).
     pub fn run_to_completion(&mut self) -> Cycle {
         self.run(Cycle::MAX)
+    }
+
+    /// Advance to the first window barrier whose next event lies beyond
+    /// `limit`, without ever truncating a window (atomic-window mode —
+    /// see `sim::shard`). Returns `true` when paused with events still
+    /// queued, `false` when the run drained first.
+    ///
+    /// Unlike [`Engine::run`]`(limit)`, pausing here is byte-transparent
+    /// for multi-shard engines: the window sequence (and with it every
+    /// cross-shard quantization target) is identical to an uninterrupted
+    /// `run_to_completion`, which is what makes a snapshot taken at this
+    /// pause point fork into byte-identical warm-started runs
+    /// (docs/SNAPSHOT.md).
+    pub fn run_until_barrier(&mut self, limit: Cycle) -> bool {
+        if self.shards.len() == 1 {
+            // Single shard: no windows, no quantization — pausing on the
+            // event boundary at `limit` is inherently transparent.
+            self.shards[0].run_window(limit, Cycle::MAX, &self.tables);
+            let s = &self.shards[0];
+            if s.queue.is_empty() {
+                self.now = self.now.max(s.now);
+                return false;
+            }
+            self.now = limit;
+            return true;
+        }
+        let shards = std::mem::take(&mut self.shards);
+        let (shards, done) =
+            shard::run_windows(shards, &self.tables, self.lookahead, self.threads, limit, true);
+        self.shards = shards;
+        match done {
+            None => {
+                // Paused at a barrier; every dispatched event is burnt
+                // into shard state, so the pause time is the max
+                // dispatch time (>= limit would overstate idle shards).
+                self.now = self.now.max(limit);
+                true
+            }
+            Some(t) => {
+                self.now = self.now.max(t);
+                false
+            }
+        }
     }
 
     /// Current simulation time.
@@ -412,6 +471,170 @@ impl Engine {
     /// sweeps, e.g. the fault counters).
     pub fn links(&self) -> impl Iterator<Item = &Link> {
         (0..self.tables.link_loc.len()).map(|i| self.link(LinkId(i as u32)))
+    }
+
+    /// Serialize the engine's mutable state: per-shard scheduler state,
+    /// message pools, pending event queues, link fronts and every
+    /// component's state, in global registration order
+    /// (docs/SNAPSHOT.md). The engine must sit at a deterministic pause
+    /// point ([`Engine::run_until_barrier`]), where every outbox is
+    /// empty. Queues are drained in exact pop order and re-pushed — the
+    /// calendar queue's dequeue order is cursor-invariant, so the
+    /// continued run is unaffected.
+    pub fn save_state(&mut self, out: &mut Vec<u8>) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        f::put(out, self.now);
+        f::put(out, self.shards.len() as u64);
+        for s in &self.shards {
+            if !s.outbox.is_empty() {
+                return Err(format!(
+                    "shard {} outbox holds {} events at the snapshot barrier (engine bug)",
+                    s.id,
+                    s.outbox.len()
+                ));
+            }
+            f::put(out, s.seq);
+            f::put(out, s.now);
+            f::put(out, s.events_processed);
+            f::put(out, s.pool.fresh_reqs);
+            f::put(out, s.pool.fresh_rsps);
+            f::put(out, s.pool.reused_reqs);
+            f::put(out, s.pool.reused_rsps);
+            let (idle_reqs, idle_rsps) = s.pool.idle();
+            f::put(out, idle_reqs as u64);
+            f::put(out, idle_rsps as u64);
+        }
+        for s in &mut self.shards {
+            f::put(out, s.queue.len() as u64);
+            let mut evs = Vec::with_capacity(s.queue.len());
+            while let Some(ev) = s.queue.pop() {
+                f::put_event(out, &ev);
+                evs.push(ev);
+            }
+            for ev in evs {
+                s.queue.push(ev);
+            }
+        }
+        f::put(out, self.tables.link_loc.len() as u64);
+        for i in 0..self.tables.link_loc.len() {
+            let l = self.link(LinkId(i as u32));
+            f::put_str(out, &l.name);
+            l.save_state(out);
+        }
+        f::put(out, self.tables.comp_loc.len() as u64);
+        for i in 0..self.tables.comp_loc.len() {
+            let c = self.component(CompId(i as u32));
+            f::put_str(out, c.name());
+            let mut buf = Vec::new();
+            c.save_state(&mut buf)?;
+            f::put(out, buf.len() as u64);
+            out.extend_from_slice(&buf);
+        }
+        Ok(())
+    }
+
+    /// Restore the state written by [`Engine::save_state`] into a
+    /// freshly built, idle engine of the *same* topology (the
+    /// configuration fingerprint in the snapshot header guards this;
+    /// shard counts, link names and component names are re-validated
+    /// here so even a fingerprint collision cannot silently misload).
+    pub fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        use crate::snapshot::format as f;
+        if !self.is_idle() {
+            return Err("warm start into a non-idle engine (coordinator bug)".into());
+        }
+        self.now = cur.u64("engine now")?;
+        let n = cur.u64("shard count")? as usize;
+        if n != self.shards.len() {
+            return Err(format!(
+                "snapshot has {n} logical shards, this topology builds {} — the \
+                 configurations differ",
+                self.shards.len()
+            ));
+        }
+        for s in &mut self.shards {
+            s.seq = cur.u64("shard seq")?;
+            s.now = cur.u64("shard now")?;
+            s.events_processed = cur.u64("shard events_processed")?;
+            s.pool.fresh_reqs = cur.u64("pool fresh_reqs")?;
+            s.pool.fresh_rsps = cur.u64("pool fresh_rsps")?;
+            s.pool.reused_reqs = cur.u64("pool reused_reqs")?;
+            s.pool.reused_rsps = cur.u64("pool reused_rsps")?;
+            let idle_reqs = cur.u64("pool idle_reqs")? as usize;
+            let idle_rsps = cur.u64("pool idle_rsps")? as usize;
+            // Box contents are irrelevant (overwritten on reuse); only
+            // the idle counts drive behavior (barrier rebalancing).
+            for _ in 0..idle_reqs {
+                s.pool.push_req_box(Box::default());
+            }
+            for _ in 0..idle_rsps {
+                s.pool.push_rsp_box(Box::default());
+            }
+        }
+        for si in 0..n {
+            let count = cur.u64("queue event count")? as usize;
+            if count > cur.b.len() {
+                return Err(format!(
+                    "shard {si} queue event count {count} exceeds the input size"
+                ));
+            }
+            let s = &mut self.shards[si];
+            for i in 0..count {
+                let ev = f::read_event(cur, &format!("shard {si} event {i}"))?;
+                s.queue.push(ev);
+            }
+        }
+        let n_links = cur.u64("link count")? as usize;
+        if n_links != self.tables.link_loc.len() {
+            return Err(format!(
+                "snapshot has {n_links} links, this topology wires {} — the \
+                 configurations differ",
+                self.tables.link_loc.len()
+            ));
+        }
+        for i in 0..n_links {
+            let name = cur.str("link name")?;
+            let loc = self.tables.link_loc[i];
+            let l = &mut self.shards[loc.shard as usize].links[loc.idx as usize];
+            if name != l.name {
+                return Err(format!(
+                    "snapshot link {i} is '{name}', this topology wires '{}' — the \
+                     configurations differ",
+                    l.name
+                ));
+            }
+            l.load_state(cur)?;
+        }
+        let n_comps = cur.u64("component count")? as usize;
+        if n_comps != self.tables.comp_loc.len() {
+            return Err(format!(
+                "snapshot has {n_comps} components, this topology registers {} — the \
+                 configurations differ",
+                self.tables.comp_loc.len()
+            ));
+        }
+        for i in 0..n_comps {
+            let name = cur.str("component name")?;
+            let len = cur.u64("component state length")? as usize;
+            let start = cur.i;
+            let c = self.component_mut(CompId(i as u32));
+            if name != c.name() {
+                return Err(format!(
+                    "snapshot component {i} is '{name}', this topology registers '{}' — \
+                     the configurations differ",
+                    c.name()
+                ));
+            }
+            c.load_state(cur)
+                .map_err(|e| format!("restoring component '{name}': {e}"))?;
+            if cur.i != start + len {
+                return Err(format!(
+                    "component '{name}' consumed {} state bytes, the snapshot recorded {len}",
+                    cur.i - start
+                ));
+            }
+        }
+        Ok(())
     }
 }
 

@@ -118,6 +118,34 @@ impl Link {
     pub fn next_free(&self) -> Cycle {
         self.next_free
     }
+
+    /// Serialize the mutable state (docs/SNAPSHOT.md). The fault
+    /// schedule is *not* written: it is a pure function of
+    /// (seed, link ordinal, window) and is rebuilt from the config on
+    /// warm start.
+    pub(crate) fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::snapshot::format::put;
+        put(out, self.next_free);
+        put(out, self.bytes_sent);
+        put(out, self.msgs_sent);
+        put(out, self.queue_cycles);
+        put(out, self.outage_cycles);
+        put(out, self.degraded_msgs);
+    }
+
+    /// Restore the state written by [`Link::save_state`].
+    pub(crate) fn load_state(
+        &mut self,
+        cur: &mut crate::snapshot::format::Cur,
+    ) -> Result<(), String> {
+        self.next_free = cur.u64("link next_free")?;
+        self.bytes_sent = cur.u64("link bytes_sent")?;
+        self.msgs_sent = cur.u64("link msgs_sent")?;
+        self.queue_cycles = cur.u64("link queue_cycles")?;
+        self.outage_cycles = cur.u64("link outage_cycles")?;
+        self.degraded_msgs = cur.u64("link degraded_msgs")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

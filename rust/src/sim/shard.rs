@@ -46,6 +46,15 @@
 //! control hops relative to an uninterrupted `run_to_completion`. All
 //! campaign/runner paths run to completion in one call; the
 //! single-shard fast path (plain `Engine::new`) is unaffected.
+//!
+//! The snapshot machinery (docs/SNAPSHOT.md) needs a byte-transparent
+//! pause, so [`run_windows`] also has an *atomic-window* mode
+//! (`Engine::run_until_barrier`): windows always run to their natural
+//! `end - 1` bound — never clipped by `limit` — and the pause fires only
+//! at a window barrier whose `t_min` exceeds `limit`. Each window is
+//! planned fresh from the global `t_min`, so the window sequence (and
+//! with it every quantization target) of a paused-then-resumed run is
+//! identical to an uninterrupted one.
 
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -279,7 +288,12 @@ fn rebalance_pools(cells: &[Mutex<Shard>]) {
     debug_assert!(spare_reqs.is_empty() && spare_rsps.is_empty(), "rebalance lost boxes");
 }
 
-fn plan_window(cells: &[Mutex<Shard>], limit: Cycle, lookahead: Cycle) -> Plan {
+/// `atomic`: never truncate a window at `limit` — run it to its natural
+/// `end - 1` and only pause at a barrier whose `t_min` exceeds `limit`.
+/// The window sequence is then a pure function of the event times, so a
+/// paused-then-resumed run replays the exact windows (and quantization
+/// targets) of an uninterrupted one — the snapshot pause contract.
+fn plan_window(cells: &[Mutex<Shard>], limit: Cycle, lookahead: Cycle, atomic: bool) -> Plan {
     // Rebalance only when a box actually changed shards: occupancy is
     // untouched by local traffic (boxes return to their own pool), so
     // skipping quiet barriers loses nothing. The condition is a
@@ -300,9 +314,12 @@ fn plan_window(cells: &[Mutex<Shard>], limit: Cycle, lookahead: Cycle) -> Plan {
         Some(t) => {
             let end = t.saturating_add(lookahead);
             // `.max(t)` guards the saturated edge (an event at
-            // Cycle::MAX would otherwise sit above bound forever);
-            // t <= limit here, so the clamp order keeps bound <= limit.
-            Plan::Window { bound: (end - 1).min(limit).max(t), end }
+            // Cycle::MAX would otherwise sit above bound forever); in
+            // the clipped mode t <= limit here, so the clamp order
+            // keeps bound <= limit.
+            let bound =
+                if atomic { (end - 1).max(t) } else { (end - 1).min(limit).max(t) };
+            Plan::Window { bound, end }
         }
     }
 }
@@ -318,13 +335,15 @@ const ST_DONE: u64 = 2;
 /// `Some(final_time)` (max dispatch time across shards) when drained.
 /// The result is identical for every `threads` value: worker count only
 /// changes which thread executes a shard's window, never the window
-/// sequence or any shard's event order.
+/// sequence or any shard's event order. `atomic` selects the
+/// snapshot-safe pause mode (see [`plan_window`]).
 pub(crate) fn run_windows(
     shards: Vec<Shard>,
     tables: &Tables,
     lookahead: Cycle,
     threads: usize,
     limit: Cycle,
+    atomic: bool,
 ) -> (Vec<Shard>, Option<Cycle>) {
     let n = shards.len();
     let workers = threads.clamp(1, n);
@@ -356,7 +375,7 @@ pub(crate) fn run_windows(
                     if panicked.load(Ordering::SeqCst) {
                         return ST_DONE;
                     }
-                    match plan_window(&cells, limit, lookahead) {
+                    match plan_window(&cells, limit, lookahead, atomic) {
                         Plan::Idle => ST_DONE,
                         Plan::Paused => ST_PAUSED,
                         Plan::Window { bound: b, end: e } => {

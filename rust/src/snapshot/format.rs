@@ -1,0 +1,457 @@
+//! Byte-level primitives of the snapshot format: LEB128 varints, a
+//! bounds-checked read cursor, CRC-32 checksums and serializers for the
+//! engine's message types.
+//!
+//! Same dependency-free idiom as `trace/format.rs`; the helpers are
+//! public because component `save_state`/`load_state` implementations
+//! all over the crate (and the decode-hardening tests) build on them.
+
+use crate::mem::LineBuf;
+use crate::sim::engine::CompId;
+use crate::sim::msg::{Event, MemReq, MemRsp, Msg, ReqKind, TsPair};
+
+/// Append `v` as a LEB128 varint.
+pub fn put(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Append a length-prefixed UTF-8 string.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append a bool as one byte.
+pub fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+/// Append an `f32` bit-exactly (via `to_bits`).
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    put(out, v.to_bits() as u64);
+}
+
+/// Bounds-checked read cursor over a snapshot byte slice. Every read
+/// names what it was reading, so a truncated or corrupt file produces
+/// an actionable error instead of a panic.
+pub struct Cur<'a> {
+    pub b: &'a [u8],
+    pub i: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Cur { b, i: 0 }
+    }
+
+    /// Whether every byte has been consumed.
+    pub fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+
+    pub fn byte(&mut self, what: &str) -> Result<u8, String> {
+        let v = *self
+            .b
+            .get(self.i)
+            .ok_or_else(|| format!("truncated snapshot: EOF reading {what} at byte {}", self.i))?;
+        self.i += 1;
+        Ok(v)
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64, String> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.byte(what)?;
+            if shift >= 64 || (shift == 63 && byte > 1) {
+                return Err(format!("varint overflow reading {what} at byte {}", self.i));
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let v = self.u64(what)?;
+        u32::try_from(v).map_err(|_| format!("{what} value {v} exceeds 32 bits"))
+    }
+
+    pub fn bool(&mut self, what: &str) -> Result<bool, String> {
+        match self.byte(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("{what} flag byte {v} is neither 0 nor 1")),
+        }
+    }
+
+    pub fn f32(&mut self, what: &str) -> Result<f32, String> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    /// Borrow the next `n` raw bytes.
+    pub fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| format!("truncated snapshot: EOF reading {what} at byte {}", self.i))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    pub fn str(&mut self, what: &str) -> Result<String, String> {
+        let n = self.u64(what)? as usize;
+        if n > 4096 {
+            return Err(format!("{what} string length {n} is absurd"));
+        }
+        let raw = self.bytes(n, what)?;
+        Ok(std::str::from_utf8(raw)
+            .map_err(|e| format!("{what} is not UTF-8: {e}"))?
+            .to_string())
+    }
+}
+
+// ---- CRC-32 (IEEE 802.3 polynomial, table-driven).
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) of `bytes` — the per-section integrity check.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---- Message serializers (the engine's queued-event payloads).
+
+fn put_kind(out: &mut Vec<u8>, k: ReqKind) {
+    out.push(match k {
+        ReqKind::Read => 0,
+        ReqKind::Write => 1,
+    });
+}
+
+fn read_kind(c: &mut Cur, what: &str) -> Result<ReqKind, String> {
+    match c.byte(what)? {
+        0 => Ok(ReqKind::Read),
+        1 => Ok(ReqKind::Write),
+        v => Err(format!("{what}: unknown request kind {v}")),
+    }
+}
+
+/// Serialize an inline line buffer (length + payload bytes).
+pub fn put_buf(out: &mut Vec<u8>, b: &LineBuf) {
+    put(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+/// Read a line buffer written by [`put_buf`].
+pub fn read_buf(c: &mut Cur, what: &str) -> Result<LineBuf, String> {
+    let n = c.u64(what)? as usize;
+    if n > LineBuf::CAP {
+        return Err(format!("{what}: payload length {n} exceeds a cache line"));
+    }
+    Ok(LineBuf::from_slice(c.bytes(n, what)?))
+}
+
+fn put_comp(out: &mut Vec<u8>, id: CompId) {
+    put(out, id.0 as u64);
+}
+
+fn read_comp(c: &mut Cur, what: &str) -> Result<CompId, String> {
+    Ok(CompId(c.u32(what)?))
+}
+
+/// Serialize an in-flight memory request.
+pub fn put_req(out: &mut Vec<u8>, r: &MemReq) {
+    put(out, r.id);
+    put_kind(out, r.kind);
+    put(out, r.addr);
+    put(out, r.size as u64);
+    put_comp(out, r.src);
+    put_comp(out, r.dst);
+    put_buf(out, &r.data);
+    match r.warpts {
+        None => out.push(0),
+        Some(v) => {
+            out.push(1);
+            put(out, v);
+        }
+    }
+    put(out, r.tenant as u64);
+}
+
+pub fn read_req(c: &mut Cur, what: &str) -> Result<MemReq, String> {
+    Ok(MemReq {
+        id: c.u64(what)?,
+        kind: read_kind(c, what)?,
+        addr: c.u64(what)?,
+        size: c.u32(what)?,
+        src: read_comp(c, what)?,
+        dst: read_comp(c, what)?,
+        data: read_buf(c, what)?,
+        warpts: if c.bool(what)? { Some(c.u64(what)?) } else { None },
+        tenant: c.u32(what)?,
+    })
+}
+
+/// Serialize an in-flight memory response.
+pub fn put_rsp(out: &mut Vec<u8>, r: &MemRsp) {
+    put(out, r.id);
+    put_kind(out, r.kind);
+    put(out, r.addr);
+    put_comp(out, r.dst);
+    put_buf(out, &r.data);
+    match r.ts {
+        None => out.push(0),
+        Some(ts) => {
+            out.push(1);
+            put(out, ts.rts);
+            put(out, ts.wts);
+        }
+    }
+}
+
+pub fn read_rsp(c: &mut Cur, what: &str) -> Result<MemRsp, String> {
+    Ok(MemRsp {
+        id: c.u64(what)?,
+        kind: read_kind(c, what)?,
+        addr: c.u64(what)?,
+        dst: read_comp(c, what)?,
+        data: read_buf(c, what)?,
+        ts: if c.bool(what)? {
+            Some(TsPair { rts: c.u64(what)?, wts: c.u64(what)? })
+        } else {
+            None
+        },
+    })
+}
+
+/// Serialize any queued message (tag byte + variant payload).
+pub fn put_msg(out: &mut Vec<u8>, m: &Msg) {
+    match m {
+        Msg::Req(r) => {
+            out.push(0);
+            put_req(out, r);
+        }
+        Msg::Rsp(r) => {
+            out.push(1);
+            put_rsp(out, r);
+        }
+        Msg::Inv { addr, dir, dst } => {
+            out.push(2);
+            put(out, *addr);
+            put_comp(out, *dir);
+            put_comp(out, *dst);
+        }
+        Msg::InvAck { addr, from, dst } => {
+            out.push(3);
+            put(out, *addr);
+            put_comp(out, *from);
+            put_comp(out, *dst);
+        }
+        Msg::StartPhase { phase } => {
+            out.push(4);
+            put(out, *phase as u64);
+        }
+        Msg::PhaseDone { cu } => {
+            out.push(5);
+            put_comp(out, *cu);
+        }
+        Msg::FenceQuery { reply_to } => {
+            out.push(6);
+            put_comp(out, *reply_to);
+        }
+        Msg::FenceInfo { from, cts } => {
+            out.push(7);
+            put_comp(out, *from);
+            put(out, *cts);
+        }
+        Msg::FenceApply { reply_to, logical_max } => {
+            out.push(8);
+            put_comp(out, *reply_to);
+            put(out, *logical_max);
+        }
+        Msg::FenceDone { from } => {
+            out.push(9);
+            put_comp(out, *from);
+        }
+        Msg::Tick => out.push(10),
+        Msg::DmaDone { bytes } => {
+            out.push(11);
+            put(out, *bytes);
+        }
+    }
+}
+
+pub fn read_msg(c: &mut Cur, what: &str) -> Result<Msg, String> {
+    Ok(match c.byte(what)? {
+        0 => Msg::Req(Box::new(read_req(c, what)?)),
+        1 => Msg::Rsp(Box::new(read_rsp(c, what)?)),
+        2 => Msg::Inv {
+            addr: c.u64(what)?,
+            dir: read_comp(c, what)?,
+            dst: read_comp(c, what)?,
+        },
+        3 => Msg::InvAck {
+            addr: c.u64(what)?,
+            from: read_comp(c, what)?,
+            dst: read_comp(c, what)?,
+        },
+        4 => Msg::StartPhase { phase: c.u32(what)? },
+        5 => Msg::PhaseDone { cu: read_comp(c, what)? },
+        6 => Msg::FenceQuery { reply_to: read_comp(c, what)? },
+        7 => Msg::FenceInfo { from: read_comp(c, what)?, cts: c.u64(what)? },
+        8 => Msg::FenceApply { reply_to: read_comp(c, what)?, logical_max: c.u64(what)? },
+        9 => Msg::FenceDone { from: read_comp(c, what)? },
+        10 => Msg::Tick,
+        11 => Msg::DmaDone { bytes: c.u64(what)? },
+        t => return Err(format!("{what}: unknown message tag {t}")),
+    })
+}
+
+/// Serialize a queued event (time, seq, target, message).
+pub fn put_event(out: &mut Vec<u8>, ev: &Event) {
+    put(out, ev.time);
+    put(out, ev.seq);
+    put_comp(out, ev.target);
+    put_msg(out, &ev.msg);
+}
+
+pub fn read_event(c: &mut Cur, what: &str) -> Result<Event, String> {
+    Ok(Event {
+        time: c.u64(what)?,
+        seq: c.u64(what)?,
+        target: read_comp(c, what)?,
+        msg: read_msg(c, what)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_boundaries_roundtrip() {
+        let mut out = Vec::new();
+        let vals = [0, 1, 127, 128, 16383, 16384, u64::MAX - 1, u64::MAX];
+        for &v in &vals {
+            put(&mut out, v);
+        }
+        let mut c = Cur::new(&out);
+        for &v in &vals {
+            assert_eq!(c.u64("v").unwrap(), v);
+        }
+        assert!(c.done());
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Any single-bit flip changes the checksum.
+        let a = crc32(b"halcone snapshot");
+        let b = crc32(b"halcone snapshos");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn messages_roundtrip_every_variant() {
+        let req = MemReq {
+            id: 42,
+            kind: ReqKind::Write,
+            addr: 0x1234,
+            size: 16,
+            src: CompId(3),
+            dst: CompId(9),
+            data: LineBuf::from_slice(&[1, 2, 3, 4]),
+            warpts: Some(77),
+            tenant: 2,
+        };
+        let rsp = MemRsp {
+            id: 43,
+            kind: ReqKind::Read,
+            addr: 0x40,
+            dst: CompId(1),
+            data: LineBuf::zeroed(64),
+            ts: Some(TsPair { rts: 100, wts: 95 }),
+        };
+        let msgs = vec![
+            Msg::Req(Box::new(req)),
+            Msg::Rsp(Box::new(rsp)),
+            Msg::Inv { addr: 0x80, dir: CompId(2), dst: CompId(5) },
+            Msg::InvAck { addr: 0x80, from: CompId(5), dst: CompId(2) },
+            Msg::StartPhase { phase: 3 },
+            Msg::PhaseDone { cu: CompId(7) },
+            Msg::FenceQuery { reply_to: CompId(0) },
+            Msg::FenceInfo { from: CompId(4), cts: 999 },
+            Msg::FenceApply { reply_to: CompId(0), logical_max: 1000 },
+            Msg::FenceDone { from: CompId(4) },
+            Msg::Tick,
+            Msg::DmaDone { bytes: 1 << 20 },
+        ];
+        let mut out = Vec::new();
+        for m in &msgs {
+            put_msg(&mut out, m);
+        }
+        let mut c = Cur::new(&out);
+        for m in &msgs {
+            let back = read_msg(&mut c, "msg").unwrap();
+            assert_eq!(format!("{back:?}"), format!("{m:?}"));
+            if let (Msg::Req(a), Msg::Req(b)) = (m, &back) {
+                assert_eq!(&a.data[..], &b.data[..]);
+            }
+        }
+        assert!(c.done());
+    }
+
+    #[test]
+    fn truncated_reads_name_the_field() {
+        let mut out = Vec::new();
+        put(&mut out, 300);
+        let mut c = Cur::new(&out[..1]);
+        let err = c.u64("engine now").unwrap_err();
+        assert!(err.contains("engine now"), "{err}");
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn oversized_linebuf_is_rejected() {
+        let mut out = Vec::new();
+        put(&mut out, 65); // length > CAP
+        out.extend_from_slice(&[0u8; 65]);
+        let mut c = Cur::new(&out);
+        assert!(read_buf(&mut c, "payload").unwrap_err().contains("cache line"));
+    }
+}

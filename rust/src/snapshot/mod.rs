@@ -1,0 +1,403 @@
+//! Integrity-checked engine-state snapshots (docs/SNAPSHOT.md).
+//!
+//! A snapshot freezes a paused simulation — pending events, in-flight
+//! pooled messages, cache arrays, TSU tables, CU wavefront state, link
+//! serialization fronts and the shared global memory — into a versioned,
+//! dependency-free binary file, so that a warm-started run continues
+//! **byte-identically** to the cold run it forked from, at any
+//! `--shards`/`--jobs` level.
+//!
+//! Layout (integers are LEB128 varints; see [`format`]):
+//!
+//! ```text
+//! magic        8 raw bytes  "HALCSNP\0"
+//! version      varint       FORMAT_VERSION (readers reject anything else)
+//! fingerprint  varint       config_fingerprint(cfg, workload)
+//! workload     varint len + UTF-8 bytes
+//! at           varint       engine cycle at the snapshot barrier
+//! sections     3 x { tag byte, payload len, crc32(payload), payload }
+//!              ENGINE (1), MEMORY (2), VERIFY (3)
+//! ```
+//!
+//! Compatibility rules mirror the trace format: the version is bumped on
+//! *any* layout change (no in-band extensions), and readers refuse
+//! unknown versions, fingerprint mismatches, bad checksums, truncation
+//! and trailing garbage with a named error — never a panic, never
+//! silent drift. The *immutable* structure (topology, routes, programs,
+//! fault schedules) is **not** serialized: a warm start rebuilds it from
+//! the configuration, which is why the fingerprint pins every
+//! sim-affecting config field plus the workload name.
+//!
+//! Files are written via write-temp + atomic rename, so a crash mid-write
+//! can never leave a half-written checkpoint under the final name.
+
+pub mod format;
+
+use crate::config::{Coherence, SystemConfig};
+use crate::dram::storage::SharedMemory;
+use crate::sim::{Cycle, Engine};
+
+/// Current (and only) snapshot format version.
+pub const FORMAT_VERSION: u64 = 1;
+
+const MAGIC: &[u8; 8] = b"HALCSNP\0";
+
+const SEC_ENGINE: u8 = 1;
+const SEC_MEMORY: u8 = 2;
+const SEC_VERIFY: u8 = 3;
+
+/// Per-check verification inputs captured at snapshot time (the memory
+/// image is already dirty when the warmup pauses, so warm-started runs
+/// must check against the inputs the cold run saw at t=0).
+pub type VerifyInputs = Vec<Vec<Vec<f32>>>;
+
+/// Everything a warm start recovers from a snapshot besides the engine
+/// and memory state it loads in place.
+pub struct Loaded {
+    /// Engine cycle at which the snapshot was taken.
+    pub at: Cycle,
+    /// Workload the snapshotted run was executing.
+    pub workload: String,
+    /// Captured verification inputs (see [`VerifyInputs`]).
+    pub verify_inputs: VerifyInputs,
+}
+
+// ---- Configuration fingerprint.
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical string of every sim-affecting configuration field.
+///
+/// Excluded on purpose: `name` (a display label) and `shards` (a host
+/// thread-count knob) — both are byte-identity-neutral, so a snapshot
+/// taken at `--shards 1` warm-starts a `--shards 4` run and vice versa.
+fn canonical_config(cfg: &SystemConfig, workload: &str) -> String {
+    let coher = match cfg.coherence {
+        Coherence::None => "none".to_string(),
+        Coherence::Halcone { leases, carry_warpts } => {
+            format!("halcone:rd={},wr={},warpts={}", leases.rd, leases.wr, carry_warpts)
+        }
+        Coherence::Hmg => "hmg".to_string(),
+    };
+    let faults = match &cfg.faults {
+        None => "none".to_string(),
+        Some(f) => f.to_string(),
+    };
+    format!(
+        "topology={:?};n_gpus={};cus_per_gpu={};wavefronts_per_cu={};l2_policy={:?};\
+         coherence={coher};l1_bytes={};l1_ways={};l2_banks={};l2_bank_bytes={};l2_ways={};\
+         stacks_per_gpu={};gpu_mem_bytes={};l1_lat={};l2_lat={};mc_lat={};alu_lat={};\
+         onchip_lat={};swc_lat={};pcie_lat={};gpu_uplink_bw={};hbm_bw={};pcie_bw={};\
+         mshr_l1={};mshr_l2={};tsu_entries={};scale={:#x};faults={faults};workload={workload}",
+        cfg.topology,
+        cfg.n_gpus,
+        cfg.cus_per_gpu,
+        cfg.wavefronts_per_cu,
+        cfg.l2_policy,
+        cfg.l1_bytes,
+        cfg.l1_ways,
+        cfg.l2_banks,
+        cfg.l2_bank_bytes,
+        cfg.l2_ways,
+        cfg.stacks_per_gpu,
+        cfg.gpu_mem_bytes,
+        cfg.l1_lat,
+        cfg.l2_lat,
+        cfg.mc_lat,
+        cfg.alu_lat,
+        cfg.onchip_lat,
+        cfg.swc_lat,
+        cfg.pcie_lat,
+        cfg.gpu_uplink_bw,
+        cfg.hbm_bw,
+        cfg.pcie_bw,
+        cfg.mshr_l1,
+        cfg.mshr_l2,
+        cfg.tsu_entries,
+        cfg.scale.to_bits(),
+        faults = faults,
+        workload = workload,
+    )
+}
+
+/// FNV-1a fingerprint over the canonical configuration + workload name.
+/// Two runs share a fingerprint iff they build the identical simulated
+/// system executing the identical workload.
+pub fn config_fingerprint(cfg: &SystemConfig, workload: &str) -> u64 {
+    fnv1a(canonical_config(cfg, workload).as_bytes())
+}
+
+// ---- Section framing.
+
+fn put_section(out: &mut Vec<u8>, tag: u8, payload: &[u8]) {
+    out.push(tag);
+    format::put(out, payload.len() as u64);
+    format::put(out, format::crc32(payload) as u64);
+    out.extend_from_slice(payload);
+}
+
+fn read_section<'a>(
+    cur: &mut format::Cur<'a>,
+    tag: u8,
+    name: &str,
+) -> Result<&'a [u8], String> {
+    let t = cur.byte(&format!("{name} section tag"))?;
+    if t != tag {
+        return Err(format!("expected the {name} section (tag {tag}), found tag {t}"));
+    }
+    let len = cur.u64(&format!("{name} section length"))? as usize;
+    let stored = cur.u32(&format!("{name} section checksum"))?;
+    let payload = cur.bytes(len, &format!("{name} section payload"))?;
+    let actual = format::crc32(payload);
+    if actual != stored {
+        return Err(format!(
+            "{name} section checksum mismatch (stored {stored:#010x}, computed \
+             {actual:#010x}) — the snapshot file is corrupt; regenerate it with \
+             `run --snapshot-out`"
+        ));
+    }
+    Ok(payload)
+}
+
+// ---- Save / restore.
+
+/// Serialize the full simulation state of a paused engine.
+///
+/// The engine must sit at a deterministic pause point
+/// ([`Engine::run_until_barrier`]); `verify_inputs` are the
+/// verification inputs captured before the run mutated memory.
+pub fn save_bytes(
+    engine: &mut Engine,
+    mem: &SharedMemory,
+    verify_inputs: &VerifyInputs,
+    fingerprint: u64,
+    workload: &str,
+) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(1 << 16);
+    out.extend_from_slice(MAGIC);
+    format::put(&mut out, FORMAT_VERSION);
+    format::put(&mut out, fingerprint);
+    format::put_str(&mut out, workload);
+    format::put(&mut out, engine.now());
+
+    let mut buf = Vec::with_capacity(1 << 16);
+    engine.save_state(&mut buf)?;
+    put_section(&mut out, SEC_ENGINE, &buf);
+
+    buf.clear();
+    mem.borrow_mut().save_state(&mut buf);
+    put_section(&mut out, SEC_MEMORY, &buf);
+
+    buf.clear();
+    format::put(&mut buf, verify_inputs.len() as u64);
+    for check in verify_inputs {
+        format::put(&mut buf, check.len() as u64);
+        for arr in check {
+            format::put(&mut buf, arr.len() as u64);
+            for &v in arr {
+                format::put_f32(&mut buf, v);
+            }
+        }
+    }
+    put_section(&mut out, SEC_VERIFY, &buf);
+    Ok(out)
+}
+
+/// Restore a snapshot into a freshly built (idle) engine + memory.
+///
+/// `expect_fingerprint`/`expect_workload` come from the warm-starting
+/// run's own configuration; any mismatch is refused with an actionable
+/// error naming both sides — warm-starting under a different simulated
+/// configuration would not be a resumed run, it would be silent drift.
+pub fn restore_bytes(
+    bytes: &[u8],
+    engine: &mut Engine,
+    mem: &SharedMemory,
+    expect_fingerprint: u64,
+    expect_workload: &str,
+) -> Result<Loaded, String> {
+    let mut cur = format::Cur::new(bytes);
+    if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+        return Err("not a HALCONE snapshot (bad magic)".into());
+    }
+    cur.i = MAGIC.len();
+    let version = cur.u64("format version")?;
+    if version != FORMAT_VERSION {
+        return Err(format!(
+            "snapshot format version {version} is not the supported {FORMAT_VERSION}; \
+             regenerate the snapshot with this binary (`run --snapshot-out`)"
+        ));
+    }
+    let fingerprint = cur.u64("config fingerprint")?;
+    let workload = cur.str("workload name")?;
+    if workload != expect_workload {
+        return Err(format!(
+            "snapshot was taken while running workload '{workload}', this run executes \
+             '{expect_workload}'; a warm start must continue the same workload"
+        ));
+    }
+    if fingerprint != expect_fingerprint {
+        return Err(format!(
+            "snapshot configuration fingerprint {fingerprint:#018x} does not match this \
+             run's {expect_fingerprint:#018x}; re-create the snapshot under the same \
+             preset/overrides and workload (`run --snapshot-out`)"
+        ));
+    }
+    let at = cur.u64("snapshot cycle")?;
+
+    let engine_bytes = read_section(&mut cur, SEC_ENGINE, "engine")?;
+    let mut ec = format::Cur::new(engine_bytes);
+    engine.load_state(&mut ec)?;
+    if !ec.done() {
+        return Err(format!("trailing garbage in the engine section at byte {}", ec.i));
+    }
+
+    let mem_bytes = read_section(&mut cur, SEC_MEMORY, "memory")?;
+    let mut mc = format::Cur::new(mem_bytes);
+    mem.borrow_mut().load_state(&mut mc)?;
+    if !mc.done() {
+        return Err(format!("trailing garbage in the memory section at byte {}", mc.i));
+    }
+
+    let verify_bytes = read_section(&mut cur, SEC_VERIFY, "verify")?;
+    let mut vc = format::Cur::new(verify_bytes);
+    let n_checks = vc.u64("verify check count")? as usize;
+    if n_checks > 4096 {
+        return Err(format!("verify check count {n_checks} is absurd"));
+    }
+    let mut verify_inputs = Vec::with_capacity(n_checks);
+    for ci in 0..n_checks {
+        let n_arrays = vc.u64(&format!("verify check {ci} array count"))? as usize;
+        if n_arrays > 4096 {
+            return Err(format!("verify check {ci} array count {n_arrays} is absurd"));
+        }
+        let mut arrays = Vec::with_capacity(n_arrays);
+        for ai in 0..n_arrays {
+            let what = format!("verify check {ci} array {ai}");
+            let n = vc.u64(&what)? as usize;
+            if n > bytes.len() {
+                return Err(format!("{what}: element count {n} exceeds the input size"));
+            }
+            let mut arr = Vec::with_capacity(n);
+            for _ in 0..n {
+                arr.push(vc.f32(&what)?);
+            }
+            arrays.push(arr);
+        }
+        verify_inputs.push(arrays);
+    }
+    if !vc.done() {
+        return Err(format!("trailing garbage in the verify section at byte {}", vc.i));
+    }
+
+    if !cur.done() {
+        return Err(format!("trailing garbage after the snapshot at byte {}", cur.i));
+    }
+    Ok(Loaded { at, workload, verify_inputs })
+}
+
+// ---- File IO (write-temp + atomic rename; PR 7 journal idiom).
+
+/// Write snapshot bytes to `path` atomically: a crash mid-write leaves
+/// at most a `.tmp` file, never a corrupt checkpoint under `path`.
+pub fn write_file(path: &str, bytes: &[u8]) -> Result<(), String> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, bytes).map_err(|e| format!("writing snapshot {tmp}: {e}"))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("renaming snapshot {tmp} -> {path}: {e}"))
+}
+
+/// Read a snapshot file's raw bytes (validation happens in
+/// [`restore_bytes`], against the warm-starting run's configuration).
+pub fn read_file(path: &str) -> Result<Vec<u8>, String> {
+    std::fs::read(path).map_err(|e| format!("reading snapshot {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_ignores_name_and_shards_only() {
+        let base = SystemConfig::preset("SM-WT-C-HALCONE");
+        let fp = config_fingerprint(&base, "fir");
+
+        let mut named = base.clone();
+        named.name = "renamed".into();
+        named.shards = 8;
+        assert_eq!(config_fingerprint(&named, "fir"), fp, "name/shards must not matter");
+
+        let mut scaled = base.clone();
+        scaled.scale = 0.5;
+        assert_ne!(config_fingerprint(&scaled, "fir"), fp);
+
+        let mut regeo = base.clone();
+        regeo.n_gpus = 2;
+        assert_ne!(config_fingerprint(&regeo, "fir"), fp);
+
+        assert_ne!(config_fingerprint(&base, "rl"), fp, "workload is part of the identity");
+
+        let mut faulted = base.clone();
+        faulted.set("faults", "seed=7;degrade=0.2").unwrap();
+        assert_ne!(config_fingerprint(&faulted, "fir"), fp);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_lease_settings() {
+        let base = SystemConfig::preset("SM-WT-C-HALCONE");
+        let mut tuned = base.clone();
+        tuned.set("rd_lease", "20").unwrap();
+        assert_ne!(
+            config_fingerprint(&base, "fir"),
+            config_fingerprint(&tuned, "fir"),
+            "lease settings are sim-affecting"
+        );
+    }
+
+    #[test]
+    fn section_framing_detects_corruption() {
+        let mut out = Vec::new();
+        put_section(&mut out, SEC_ENGINE, b"hello engine state");
+        {
+            let mut cur = format::Cur::new(&out);
+            let p = read_section(&mut cur, SEC_ENGINE, "engine").unwrap();
+            assert_eq!(p, b"hello engine state");
+            assert!(cur.done());
+        }
+        // Flip one payload byte: checksum must catch it.
+        let mut bad = out.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        let mut cur = format::Cur::new(&bad);
+        let err = read_section(&mut cur, SEC_ENGINE, "engine").unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // Wrong tag is a named structural error.
+        let mut cur = format::Cur::new(&out);
+        let err = read_section(&mut cur, SEC_MEMORY, "memory").unwrap_err();
+        assert!(err.contains("memory section"), "{err}");
+        // Truncation anywhere inside the section fails cleanly.
+        for cut in 1..out.len() {
+            let mut cur = format::Cur::new(&out[..cut]);
+            assert!(read_section(&mut cur, SEC_ENGINE, "engine").is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_temp_on_success() {
+        let dir = std::env::temp_dir().join(format!("halcsnap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.snap");
+        let path = path.to_str().unwrap();
+        write_file(path, b"payload").unwrap();
+        assert_eq!(std::fs::read(path).unwrap(), b"payload");
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

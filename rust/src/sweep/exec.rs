@@ -21,12 +21,13 @@
 //! journal, only unfinished ones re-run, and the final canonical
 //! artifact is byte-identical to an uninterrupted run's.
 
+use std::collections::HashMap;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::runner::run_workload;
+use crate::coordinator::runner::{run_workload, try_run_workload_snap, SnapMode};
 use crate::coordinator::verify::CheckOutcome;
 use crate::metrics::RunMetrics;
 use crate::sweep::spec::{CampaignSpec, Cell};
@@ -253,6 +254,11 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
         write_journal(path, spec, jobs, &cells, &slots)?;
     }
 
+    // Warm-start forking (docs/SNAPSHOT.md): with a `warmup` prefix
+    // declared, cells fork from per-fingerprint snapshots instead of
+    // replaying the first `warmup` cycles on every run.
+    let fork = spec.warmup.map(|at| ForkCtx::new(at, opts.journal.as_deref()));
+
     let next = AtomicUsize::new(0);
     let done = AtomicUsize::new(total - todo.len());
 
@@ -265,7 +271,7 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
                 }
                 let i = todo[t];
                 let cell = &cells[i];
-                let (outcome, exec) = run_cell_guarded(cell, opts, cores);
+                let (outcome, exec) = run_cell_guarded(cell, opts, cores, fork.as_ref());
                 if opts.progress {
                     let n = done.fetch_add(1, Ordering::Relaxed) + 1;
                     progress_line(n, total, cell, &outcome);
@@ -304,6 +310,76 @@ fn lock_slot<'a>(
     slot.lock().map_err(|_| format!("cell {i}: result slot mutex poisoned"))
 }
 
+/// Warm-start fork state shared by one campaign's workers
+/// (docs/SNAPSHOT.md): snapshots of the warmup prefix keyed by config
+/// fingerprint. The first run of each fingerprint fills its entry (and
+/// mirrors it to disk when a journal directory exists); retries of the
+/// same cell and re-runs of the campaign into the same directory then
+/// fork from the snapshot instead of replaying the prefix.
+struct ForkCtx {
+    /// Snapshot cycle (the spec's `warmup`).
+    at: u64,
+    cache: Mutex<HashMap<u64, Arc<Vec<u8>>>>,
+    /// On-disk mirror (`<journal-dir>/snapshots/`); `None` keeps the
+    /// forks purely in-memory.
+    dir: Option<std::path::PathBuf>,
+}
+
+impl ForkCtx {
+    fn new(at: u64, journal: Option<&std::path::Path>) -> Arc<ForkCtx> {
+        let dir = journal.and_then(|j| {
+            let d = j.parent().unwrap_or_else(|| std::path::Path::new(".")).join("snapshots");
+            match std::fs::create_dir_all(&d) {
+                Ok(()) => Some(d),
+                Err(e) => {
+                    eprintln!("warning: snapshot dir {}: {e}; forks stay in-memory", d.display());
+                    None
+                }
+            }
+        });
+        Arc::new(ForkCtx { at, cache: Mutex::new(HashMap::new()), dir })
+    }
+
+    fn path(&self, fp: u64) -> Option<String> {
+        self.dir.as_ref().map(|d| d.join(format!("{fp:016x}.snap")).display().to_string())
+    }
+
+    /// Snapshot bytes for `fp`: memory cache first, then the on-disk
+    /// mirror (a previous campaign into the same directory). Unreadable
+    /// files are treated as absent — the cell just runs cold.
+    fn lookup(&self, fp: u64) -> Option<Arc<Vec<u8>>> {
+        if let Ok(cache) = self.cache.lock() {
+            if let Some(b) = cache.get(&fp) {
+                return Some(b.clone());
+            }
+        }
+        let path = self.path(fp)?;
+        let bytes = Arc::new(crate::snapshot::read_file(&path).ok()?);
+        if let Ok(mut cache) = self.cache.lock() {
+            cache.entry(fp).or_insert_with(|| bytes.clone());
+        }
+        Some(bytes)
+    }
+
+    /// Record a freshly saved snapshot; the disk mirror goes through
+    /// write-temp + atomic rename, so a kill mid-write never leaves a
+    /// corrupt `.snap` under the final name.
+    fn store(&self, fp: u64, bytes: Vec<u8>, cell: &Cell) {
+        let bytes = Arc::new(bytes);
+        if let Some(path) = self.path(fp) {
+            if let Err(e) = crate::snapshot::write_file(&path, &bytes) {
+                eprintln!(
+                    "warning: cell {}/{}: snapshot {path}: {e}",
+                    cell.config_label, cell.workload
+                );
+            }
+        }
+        if let Ok(mut cache) = self.cache.lock() {
+            cache.insert(fp, bytes);
+        }
+    }
+}
+
 /// Snapshot the campaign-in-progress (unfinished cells `Pending`) and
 /// atomically replace the journal file: write a sibling temp file, then
 /// rename over the target, so a kill at any instant leaves either the
@@ -336,11 +412,16 @@ fn write_journal(
 }
 
 /// Run one cell with the watchdog and retry policy applied.
-fn run_cell_guarded(cell: &Cell, opts: &ExecOptions, host_cores: usize) -> (CellOutcome, CellExec) {
+fn run_cell_guarded(
+    cell: &Cell,
+    opts: &ExecOptions,
+    host_cores: usize,
+    fork: Option<&Arc<ForkCtx>>,
+) -> (CellOutcome, CellExec) {
     let mut exec = CellExec::default();
     loop {
         let start = Instant::now();
-        let outcome = run_cell_attempt(cell, opts.shards, host_cores, opts.timeout);
+        let outcome = run_cell_attempt(cell, opts.shards, host_cores, opts.timeout, fork);
         exec.wall_seconds = start.elapsed().as_secs_f64();
         if matches!(outcome, CellOutcome::TimedOut { .. }) {
             exec.timed_out = true;
@@ -368,16 +449,18 @@ fn run_cell_attempt(
     shards: Option<usize>,
     host_cores: usize,
     timeout: Option<u64>,
+    fork: Option<&Arc<ForkCtx>>,
 ) -> CellOutcome {
     let Some(secs) = timeout else {
-        return run_cell(cell, shards, host_cores);
+        return run_cell(cell, shards, host_cores, fork.map(Arc::as_ref));
     };
     let (tx, rx) = mpsc::channel();
     let owned = cell.clone();
+    let owned_fork = fork.cloned();
     let spawned = std::thread::Builder::new()
         .name(format!("cell-{}", owned.index))
         .spawn(move || {
-            let _ = tx.send(run_cell(&owned, shards, host_cores));
+            let _ = tx.send(run_cell(&owned, shards, host_cores, owned_fork.as_deref()));
         });
     if let Err(e) = spawned {
         return CellOutcome::Failed { error: format!("spawning cell worker: {e}") };
@@ -391,7 +474,12 @@ fn run_cell_attempt(
     }
 }
 
-fn run_cell(cell: &Cell, shards: Option<usize>, host_cores: usize) -> CellOutcome {
+fn run_cell(
+    cell: &Cell,
+    shards: Option<usize>,
+    host_cores: usize,
+    fork: Option<&ForkCtx>,
+) -> CellOutcome {
     let mut cfg = match cell.config() {
         Ok(c) => c,
         Err(e) => return CellOutcome::Failed { error: e },
@@ -407,8 +495,49 @@ fn run_cell(cell: &Cell, shards: Option<usize>, host_cores: usize) -> CellOutcom
     // The default panic hook stays installed, so a failing cell also
     // prints its raw panic line to stderr — swapping the hook is
     // process-global and would race concurrent tests.
-    match panic::catch_unwind(AssertUnwindSafe(|| run_workload(&cfg, &cell.workload, None))) {
-        Ok(res) => CellOutcome::Finished { metrics: res.metrics, checks: res.checks },
+    let Some(fork) = fork else {
+        return match panic::catch_unwind(AssertUnwindSafe(|| {
+            run_workload(&cfg, &cell.workload, None)
+        })) {
+            Ok(res) => CellOutcome::Finished { metrics: res.metrics, checks: res.checks },
+            Err(payload) => CellOutcome::Failed { error: panic_message(payload) },
+        };
+    };
+    // Warm-start path. The fingerprint excludes `shards` by design, so
+    // a snapshot saved at one thread count forks at any other; warm and
+    // cold runs of a cell are byte-identical (`tests/snapshot_warmstart`).
+    let fp = crate::snapshot::config_fingerprint(&cfg, &cell.workload);
+    if let Some(bytes) = fork.lookup(fp) {
+        let snap = SnapMode::Warm { bytes };
+        match panic::catch_unwind(AssertUnwindSafe(|| {
+            try_run_workload_snap(&cfg, &cell.workload, None, false, snap)
+        })) {
+            Ok(Ok((res, _, _))) => {
+                return CellOutcome::Finished { metrics: res.metrics, checks: res.checks }
+            }
+            // A stale or corrupt snapshot is never fatal: warn and fall
+            // through to a cold run (which refreshes the stored bytes).
+            Ok(Err(e)) => eprintln!(
+                "warning: cell {}/{}: warm start failed ({e}); running cold",
+                cell.config_label, cell.workload
+            ),
+            Err(payload) => return CellOutcome::Failed { error: panic_message(payload) },
+        }
+    }
+    // Cold run, snapshotting the warmup prefix for later forks. A run
+    // that drains before the warmup cycle yields no snapshot — fine,
+    // there is nothing left to skip on a re-run either.
+    let snap = SnapMode::Save { at: fork.at };
+    match panic::catch_unwind(AssertUnwindSafe(|| {
+        try_run_workload_snap(&cfg, &cell.workload, None, false, snap)
+    })) {
+        Ok(Ok((res, _, snap_bytes))) => {
+            if let Some(bytes) = snap_bytes {
+                fork.store(fp, bytes, cell);
+            }
+            CellOutcome::Finished { metrics: res.metrics, checks: res.checks }
+        }
+        Ok(Err(e)) => CellOutcome::Failed { error: e },
         Err(payload) => CellOutcome::Failed { error: panic_message(payload) },
     }
 }

@@ -111,6 +111,15 @@ fn render(result: &CampaignResult, include_host: bool) -> String {
         ("fixed".into(), overrides_obj(&spec.fixed)),
         ("baseline".into(), Value::str(&base_label)),
     ]);
+    // Warm-start prefix rides along only when declared, so warmup-free
+    // campaigns keep their exact canonical bytes.
+    let spec_obj = match (spec.warmup, spec_obj) {
+        (Some(w), Value::Obj(mut kvs)) => {
+            kvs.push(("warmup".into(), Value::u64(w)));
+            Value::Obj(kvs)
+        }
+        (_, obj) => obj,
+    };
     let root = Value::Obj(vec![
         ("schema_version".into(), Value::u64(SCHEMA_VERSION)),
         ("campaign".into(), Value::str(&spec.name)),

@@ -75,6 +75,11 @@ pub struct CampaignSpec {
     pub fixed: Vec<(String, String)>,
     /// Config label speedups are computed against (default: first column).
     pub baseline: Option<String>,
+    /// Warm-start fork prefix (docs/SNAPSHOT.md): when set, the first
+    /// run of each distinct (config, workload) fingerprint snapshots at
+    /// this cycle and later runs of the same fingerprint (retries,
+    /// gate re-runs against the journal directory) fork from it.
+    pub warmup: Option<u64>,
 }
 
 impl CampaignSpec {
@@ -186,6 +191,7 @@ impl CampaignSpec {
             axes: Vec::new(),
             fixed: Vec::new(),
             baseline: None,
+            warmup: None,
         };
         let mut includes: Vec<(String, Vec<String>)> = Vec::new();
         let mut excludes: Vec<(String, Vec<String>)> = Vec::new();
@@ -217,6 +223,11 @@ impl CampaignSpec {
                     "presets" | "preset" => spec.presets = list,
                     "workloads" | "workload" => spec.workloads = list,
                     "baseline" => spec.baseline = Some(v.to_string()),
+                    "warmup" => {
+                        spec.warmup = Some(v.parse::<u64>().map_err(|_| {
+                            format!("line {}: warmup wants a cycle count, got '{v}'", lineno + 1)
+                        })?)
+                    }
                     other => return Err(format!("line {}: unknown spec key '{other}'", lineno + 1)),
                 }
             }
@@ -312,6 +323,9 @@ impl CampaignSpec {
             }
         }
         let baseline = spec_obj.get("baseline").and_then(Value::as_str).map(str::to_string);
+        // Optional key: warmup-free artifacts predate (and never carry)
+        // it, so absence simply means no warm-start forking.
+        let warmup = spec_obj.get("warmup").and_then(Value::as_f64).map(|w| w as u64);
         let spec = CampaignSpec {
             name: name.to_string(),
             presets,
@@ -319,6 +333,7 @@ impl CampaignSpec {
             axes,
             fixed,
             baseline,
+            warmup,
         };
         spec.validate()?;
         Ok(spec)

@@ -174,6 +174,57 @@ impl Tsu {
     pub fn occupancy(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
+
+    /// Serialize the mutable state (docs/SNAPSHOT.md): every slot, the
+    /// monotonic eviction floor and the metric counters. Geometry and
+    /// leases come from the config and are validated on load.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::snapshot::format::put;
+        put(out, self.slots.len() as u64);
+        for slot in &self.slots {
+            match slot {
+                None => out.push(0),
+                Some(e) => {
+                    out.push(1);
+                    put(out, e.tag);
+                    put(out, e.memts);
+                }
+            }
+        }
+        put(out, self.floor_ts);
+        put(out, self.lookups);
+        put(out, self.inserts);
+        put(out, self.evictions);
+        put(out, self.ts_rollovers);
+        put(out, self.max_memts);
+    }
+
+    /// Restore the state written by [`Tsu::save_state`] into a TSU of
+    /// the same geometry.
+    pub fn load_state(&mut self, cur: &mut crate::snapshot::format::Cur) -> Result<(), String> {
+        let n = cur.u64("tsu slot count")? as usize;
+        if n != self.slots.len() {
+            return Err(format!(
+                "snapshot TSU has {n} slots, this configuration has {} — the \
+                 configurations differ",
+                self.slots.len()
+            ));
+        }
+        for i in 0..n {
+            self.slots[i] = match cur.byte("tsu slot flag")? {
+                0 => None,
+                1 => Some(Entry { tag: cur.u64("tsu tag")?, memts: cur.u64("tsu memts")? }),
+                f => return Err(format!("tsu slot flag must be 0 or 1, got {f}")),
+            };
+        }
+        self.floor_ts = cur.u64("tsu floor_ts")?;
+        self.lookups = cur.u64("tsu lookups")?;
+        self.inserts = cur.u64("tsu inserts")?;
+        self.evictions = cur.u64("tsu evictions")?;
+        self.ts_rollovers = cur.u64("tsu ts_rollovers")?;
+        self.max_memts = cur.u64("tsu max_memts")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

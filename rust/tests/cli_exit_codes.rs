@@ -97,6 +97,96 @@ fn gate_exit_codes_separate_regression_from_unjudgeable() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The smoke geometry as repeated `--set` flags (seconds-long runs).
+const SMOKE_SETS: [&str; 14] = [
+    "--set", "n_gpus=2",
+    "--set", "cus_per_gpu=2",
+    "--set", "wavefronts_per_cu=2",
+    "--set", "l2_banks=2",
+    "--set", "stacks_per_gpu=2",
+    "--set", "gpu_mem_bytes=67108864",
+    "--set", "scale=0.05",
+];
+
+#[test]
+fn snapshot_refusals_exit_two() {
+    // Half a flag pair is a usage error.
+    let out = halcone(&["run", "--workload", "rl", "--snapshot-at", "100"]);
+    assert_eq!(code(&out), 2, "{}", String::from_utf8_lossy(&out.stderr));
+    let out = halcone(&["run", "--workload", "rl", "--snapshot-out", "x.snap"]);
+    assert_eq!(code(&out), 2);
+    // Saving and warm-starting in one run makes no sense.
+    let out = halcone(&[
+        "run", "--workload", "rl",
+        "--warm-start", "x.snap", "--snapshot-at", "1", "--snapshot-out", "y.snap",
+    ]);
+    assert_eq!(code(&out), 2);
+    // A missing snapshot file is an I/O refusal, not a panic.
+    let out = halcone(&["run", "--workload", "rl", "--warm-start", "/no/such/file.snap"]);
+    assert_eq!(code(&out), 2, "{}", String::from_utf8_lossy(&out.stderr));
+    // An unknown preset routes through try_preset: clean exit 2.
+    let out = halcone(&["run", "--workload", "rl", "--preset", "NO-SUCH-PRESET"]);
+    assert_eq!(code(&out), 2, "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--preset"),
+        "preset refusal names the flag"
+    );
+}
+
+#[test]
+fn snapshot_save_warm_and_mismatch_round_trip_through_the_cli() {
+    let dir = tmpdir("snapshot");
+    let snap = dir.join("warm.snap");
+    let snap_s = snap.to_str().unwrap();
+    let mut save = vec!["run", "--workload", "rl"];
+    save.extend(SMOKE_SETS);
+    save.extend(["--snapshot-at", "500", "--snapshot-out", snap_s]);
+    let out = halcone(&save);
+    assert_eq!(code(&out), 0, "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(snap.exists(), "snapshot file written");
+    assert!(!dir.join("warm.snap.tmp").exists(), "temp renamed away");
+
+    // Warm-starting the identical run succeeds.
+    let mut warm = vec!["run", "--workload", "rl"];
+    warm.extend(SMOKE_SETS);
+    warm.extend(["--warm-start", snap_s]);
+    let out = halcone(&warm);
+    assert_eq!(code(&out), 0, "{}", String::from_utf8_lossy(&out.stderr));
+
+    // A different config (scale changed) is a fingerprint refusal: 2.
+    let mut other = vec!["run", "--workload", "rl"];
+    other.extend(SMOKE_SETS);
+    other.extend(["--set", "scale=0.1", "--warm-start", snap_s]);
+    let out = halcone(&other);
+    assert_eq!(code(&out), 2, "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("fingerprint"),
+        "mismatch names the fingerprint: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // A corrupt file (flipped tail byte) is a checksum refusal: 2.
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    std::fs::write(&snap, &bytes).unwrap();
+    let out = halcone(&warm);
+    assert_eq!(code(&out), 2, "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("checksum"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // A snapshot cycle past the end of the run: nothing to save, exit 2.
+    let mut late = vec!["run", "--workload", "rl"];
+    late.extend(SMOKE_SETS);
+    late.extend(["--snapshot-at", "999999999999", "--snapshot-out", snap_s]);
+    let out = halcone(&late);
+    assert_eq!(code(&out), 2, "{}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn watchdog_timeout_partial_sweep_exits_four() {
     let dir = tmpdir("watchdog");

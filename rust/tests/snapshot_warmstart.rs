@@ -1,0 +1,324 @@
+//! The snapshot / warm-start contract (ISSUE 8, docs/SNAPSHOT.md):
+//!
+//! * **byte-identity oracle** — a warm-started run continues exactly
+//!   where the cold run paused: every deterministic metric and every
+//!   correctness check matches the uninterrupted cold run, at any
+//!   `--shards` level (the snapshot is thread-count-agnostic) and any
+//!   `--jobs` level (campaign forks);
+//! * **graceful refusal** — truncation, flipped bytes, a bumped format
+//!   version, a mismatched config fingerprint and a mismatched workload
+//!   each produce a named `Err`, never a panic and never silent drift;
+//! * **fork campaigns** — a sweep with a `warmup` prefix produces the
+//!   identical canonical `campaign.json` as a cold sweep, both on the
+//!   first (save) pass and on a second (disk-forked) pass.
+
+use std::sync::Arc;
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::{try_run_workload_snap, SnapMode};
+use halcone::metrics::RunMetrics;
+use halcone::snapshot;
+use halcone::sweep::exec::{run_campaign, ExecOptions};
+use halcone::sweep::report;
+use halcone::sweep::spec::CampaignSpec;
+
+fn small(preset: &str) -> SystemConfig {
+    let mut cfg = SystemConfig::preset(preset);
+    cfg.n_gpus = 2;
+    cfg.cus_per_gpu = 2;
+    cfg.wavefronts_per_cu = 2;
+    cfg.l2_banks = 2;
+    cfg.stacks_per_gpu = 2;
+    cfg.gpu_mem_bytes = 64 << 20;
+    cfg.scale = 0.05;
+    cfg
+}
+
+/// Deterministic fields only (host timing excluded), for cold-vs-warm
+/// byte-identity assertions.
+fn canon(m: &RunMetrics) -> String {
+    format!(
+        "cycles={} events={} cu_loads={} cu_stores={} mm_reads={} mm_writes={} \
+         tsu_lookups={} tsu_evictions={} pcie_bytes={} mem_bytes={} l1={:?} l2={:?} \
+         faults={:?}",
+        m.cycles,
+        m.events,
+        m.cu_loads,
+        m.cu_stores,
+        m.mm_reads,
+        m.mm_writes,
+        m.tsu_lookups,
+        m.tsu_evictions,
+        m.pcie_bytes,
+        m.mem_bytes,
+        m.l1,
+        m.l2,
+        m.faults,
+    )
+}
+
+fn run_cold(cfg: &SystemConfig, wl: &str) -> RunMetrics {
+    let (res, _, _) =
+        try_run_workload_snap(cfg, wl, None, false, SnapMode::None).unwrap();
+    assert!(res.all_passed(), "{wl}: cold run failed checks: {:?}", res.checks);
+    res.metrics
+}
+
+/// Cold run that pauses at `at`, snapshots, and resumes. Returns the
+/// snapshot bytes and the (must-be-uninterrupted-identical) metrics.
+fn run_save(cfg: &SystemConfig, wl: &str, at: u64) -> (Vec<u8>, RunMetrics) {
+    let (res, _, bytes) =
+        try_run_workload_snap(cfg, wl, None, false, SnapMode::Save { at }).unwrap();
+    assert!(res.all_passed(), "{wl}: save run failed checks: {:?}", res.checks);
+    (bytes.expect("run drained before the snapshot cycle — lower `at`"), res.metrics)
+}
+
+fn run_warm(cfg: &SystemConfig, wl: &str, bytes: &Arc<Vec<u8>>) -> Result<RunMetrics, String> {
+    let (res, _, _) = try_run_workload_snap(
+        cfg,
+        wl,
+        None,
+        false,
+        SnapMode::Warm { bytes: bytes.clone() },
+    )?;
+    assert!(res.all_passed(), "{wl}: warm run failed checks: {:?}", res.checks);
+    Ok(res.metrics)
+}
+
+#[test]
+fn warm_start_is_byte_identical_to_cold_at_any_shard_count() {
+    let cfg = small("SM-WT-C-HALCONE");
+    let cold = run_cold(&cfg, "fir");
+    let (bytes, saved) = run_save(&cfg, "fir", cold.cycles / 2);
+    // The pause itself is invisible: pausing + resuming == never pausing.
+    assert_eq!(canon(&saved), canon(&cold), "run_until_barrier perturbed the run");
+    let bytes = Arc::new(bytes);
+    // The fingerprint excludes `shards`, so one snapshot serves every
+    // thread count — and every warm run must reproduce the cold bytes.
+    for shards in [1u32, 4] {
+        let mut warm_cfg = cfg.clone();
+        warm_cfg.shards = shards;
+        let warm = run_warm(&warm_cfg, "fir", &bytes).unwrap();
+        assert_eq!(canon(&warm), canon(&cold), "warm(shards={shards}) diverged from cold");
+    }
+}
+
+#[test]
+fn warm_start_holds_under_every_protocol_and_under_faults() {
+    // Each coherence protocol serializes different per-slot metadata;
+    // fault schedules add link/rollover state rebuilt from config.
+    for preset in ["SM-WT-NC", "SM-WB-NC", "RDMA-WB-NC", "SM-WT-C-HALCONE", "RDMA-WB-C-HMG"] {
+        let cfg = small(preset);
+        let cold = run_cold(&cfg, "rl");
+        let (bytes, _) = run_save(&cfg, "rl", cold.cycles / 2);
+        let warm = run_warm(&cfg, "rl", &Arc::new(bytes)).unwrap();
+        assert_eq!(canon(&warm), canon(&cold), "{preset}: warm diverged");
+    }
+    let mut cfg = small("SM-WT-C-HALCONE");
+    cfg.set("faults", "seed=7;window=200;degrade=0.5;outage=0.4").unwrap();
+    let cold = run_cold(&cfg, "fir");
+    let (bytes, _) = run_save(&cfg, "fir", cold.cycles / 2);
+    let warm = run_warm(&cfg, "fir", &Arc::new(bytes)).unwrap();
+    assert_eq!(canon(&warm), canon(&cold), "faulted warm run diverged");
+}
+
+#[test]
+fn a_run_that_drains_before_the_snapshot_cycle_yields_no_snapshot() {
+    let cfg = small("SM-WT-C-HALCONE");
+    let (res, _, bytes) =
+        try_run_workload_snap(&cfg, "rl", None, false, SnapMode::Save { at: u64::MAX })
+            .unwrap();
+    assert!(res.all_passed());
+    assert!(bytes.is_none(), "an already-finished run has nothing to snapshot");
+}
+
+#[test]
+fn truncation_anywhere_is_refused_without_panicking() {
+    let cfg = small("SM-WT-C-HALCONE");
+    let cold = run_cold(&cfg, "rl");
+    let (bytes, _) = run_save(&cfg, "rl", cold.cycles / 2);
+    // Sampled cut points (a full per-byte scan re-builds the topology
+    // tens of thousands of times): every prefix must fail cleanly. The
+    // per-byte exhaustive scan of the section framing lives with the
+    // format unit tests.
+    let step = (bytes.len() / 97).max(1);
+    let mut cuts: Vec<usize> = (0..bytes.len()).step_by(step).collect();
+    cuts.extend([0, 1, 7, 8, 9, bytes.len() - 1]);
+    for cut in cuts {
+        let err = run_warm(&cfg, "rl", &Arc::new(bytes[..cut].to_vec()))
+            .expect_err(&format!("truncation at byte {cut} must be refused"));
+        assert!(!err.is_empty(), "cut {cut}: empty error message");
+    }
+}
+
+#[test]
+fn a_flipped_payload_byte_is_caught_by_the_section_checksum() {
+    let cfg = small("SM-WT-C-HALCONE");
+    let cold = run_cold(&cfg, "rl");
+    let (bytes, _) = run_save(&cfg, "rl", cold.cycles / 2);
+    // The last byte sits inside the final (verify) section payload.
+    let mut flipped = bytes.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x01;
+    let err = run_warm(&cfg, "rl", &Arc::new(flipped)).unwrap_err();
+    assert!(err.contains("checksum mismatch"), "{err}");
+    // A flip in the middle lands in some section's payload: whatever the
+    // byte encoded, the restore must refuse with a named error.
+    let mut flipped = bytes.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    let err = run_warm(&cfg, "rl", &Arc::new(flipped)).unwrap_err();
+    assert!(!err.is_empty());
+    // Bad magic is its own named refusal.
+    let mut nosnap = bytes.clone();
+    nosnap[0] = b'X';
+    let err = run_warm(&cfg, "rl", &Arc::new(nosnap)).unwrap_err();
+    assert!(err.contains("bad magic"), "{err}");
+}
+
+#[test]
+fn a_bumped_format_version_is_refused_by_name() {
+    let cfg = small("SM-WT-C-HALCONE");
+    let cold = run_cold(&cfg, "rl");
+    let (bytes, _) = run_save(&cfg, "rl", cold.cycles / 2);
+    // Byte 8 is the version varint (FORMAT_VERSION = 1 encodes as one
+    // byte); a future version must be refused, not misparsed.
+    assert_eq!(bytes[8] as u64, snapshot::FORMAT_VERSION);
+    let mut bumped = bytes.clone();
+    bumped[8] = (snapshot::FORMAT_VERSION + 1) as u8;
+    let err = run_warm(&cfg, "rl", &Arc::new(bumped)).unwrap_err();
+    assert!(err.contains("format version"), "{err}");
+}
+
+#[test]
+fn fingerprint_and_workload_mismatches_are_refused_by_name() {
+    let cfg = small("SM-WT-C-HALCONE");
+    let cold = run_cold(&cfg, "rl");
+    let (bytes, _) = run_save(&cfg, "rl", cold.cycles / 2);
+    let bytes = Arc::new(bytes);
+    // Same workload, different simulated machine -> fingerprint refusal.
+    let mut other = cfg.clone();
+    other.set("rd_lease", "20").unwrap();
+    let err = run_warm(&other, "rl", &bytes).unwrap_err();
+    assert!(err.contains("fingerprint"), "{err}");
+    // Different workload -> workload refusal (checked before the
+    // fingerprint so the message names the actual conflict).
+    let err = run_warm(&cfg, "fir", &bytes).unwrap_err();
+    assert!(err.contains("workload"), "{err}");
+}
+
+#[test]
+fn trace_capture_and_snapshots_refuse_to_combine() {
+    let cfg = small("SM-WT-C-HALCONE");
+    let err = try_run_workload_snap(&cfg, "rl", None, true, SnapMode::Save { at: 100 })
+        .unwrap_err();
+    assert!(err.contains("trace capture"), "{err}");
+}
+
+// ---- Fork campaigns (`sweep --warmup`).
+
+fn smoke_with_warmup(warmup: Option<u64>) -> CampaignSpec {
+    let mut spec = CampaignSpec::builtin("smoke").unwrap();
+    spec.warmup = warmup;
+    spec
+}
+
+#[test]
+fn warmup_campaign_matches_the_cold_campaign_at_any_jobs_level() {
+    let cold = run_campaign(
+        &smoke_with_warmup(None),
+        &ExecOptions { jobs: 2, progress: false, ..Default::default() },
+    )
+    .unwrap();
+    assert!(cold.all_passed());
+    let cold_canon = report::to_json_canonical(&cold);
+    // The spec header legitimately differs (the warm artifact records
+    // its `warmup` key); every cell byte must match.
+    let cells_of = |s: &str| s[s.find("\"cells\"").unwrap()..].to_string();
+    for jobs in [1usize, 8] {
+        let warm = run_campaign(
+            &smoke_with_warmup(Some(500)),
+            &ExecOptions { jobs, progress: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(warm.all_passed(), "warmup campaign failed at jobs={jobs}");
+        let warm_canon = report::to_json_canonical(&warm);
+        assert_eq!(
+            cells_of(&warm_canon),
+            cells_of(&cold_canon),
+            "warmup sweep diverged from cold at jobs={jobs}"
+        );
+    }
+}
+
+#[test]
+fn a_second_sweep_forks_from_the_journaled_snapshots() {
+    let dir = std::env::temp_dir().join(format!("halcone-warmfork-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("campaign.json");
+    let spec = smoke_with_warmup(Some(500));
+    let opts = || ExecOptions {
+        jobs: 2,
+        progress: false,
+        journal: Some(journal.clone()),
+        ..Default::default()
+    };
+    // Pass 1: every cell runs cold and snapshots its warmup prefix.
+    let first = run_campaign(&spec, &opts()).unwrap();
+    assert!(first.all_passed());
+    let snaps: Vec<_> = std::fs::read_dir(dir.join("snapshots"))
+        .expect("snapshot dir created next to the journal")
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    assert_eq!(snaps.len(), 4, "one snapshot per cell fingerprint: {snaps:?}");
+    assert!(snaps.iter().all(|n| n.ends_with(".snap")), "{snaps:?}");
+    // Pass 2: every cell warm-starts from disk; results are identical.
+    let second = run_campaign(&spec, &opts()).unwrap();
+    assert!(second.all_passed());
+    assert_eq!(
+        report::to_json_canonical(&first),
+        report::to_json_canonical(&second),
+        "disk-forked sweep diverged from its cold pass"
+    );
+    // A corrupt snapshot file downgrades to a cold run, never a failure.
+    let victim = dir.join("snapshots").join(&snaps[0]);
+    std::fs::write(&victim, b"HALCSNP\0garbage").unwrap();
+    let third = run_campaign(&spec, &opts()).unwrap();
+    assert!(third.all_passed(), "corrupt snapshot must fall back to a cold run");
+    assert_eq!(
+        report::to_json_canonical(&first),
+        report::to_json_canonical(&third),
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn warmup_round_trips_through_spec_text_and_artifact() {
+    let spec = CampaignSpec::parse(
+        "name = t\npresets = SM-WT-NC\nworkloads = rl\nwarmup = 2500\n\
+         set.n_gpus = 2\nset.cus_per_gpu = 2\nset.wavefronts_per_cu = 2\n\
+         set.l2_banks = 2\nset.stacks_per_gpu = 2\n\
+         set.gpu_mem_bytes = 67108864\nset.scale = 0.05\n",
+    )
+    .unwrap();
+    assert_eq!(spec.warmup, Some(2500));
+    assert!(CampaignSpec::parse("warmup = soon\n").is_err(), "non-numeric warmup");
+    let res = run_campaign(
+        &spec,
+        &ExecOptions { jobs: 1, progress: false, ..Default::default() },
+    )
+    .unwrap();
+    let doc = halcone::sweep::json::parse(&report::to_json(&res)).unwrap();
+    let rebuilt = CampaignSpec::from_artifact(&doc).unwrap();
+    assert_eq!(rebuilt.warmup, Some(2500), "warmup must survive the artifact round trip");
+    // Warmup-free artifacts carry no key and rebuild to None.
+    let cold = run_campaign(
+        &CampaignSpec::builtin("smoke").unwrap(),
+        &ExecOptions { jobs: 2, progress: false, ..Default::default() },
+    )
+    .unwrap();
+    let text = report::to_json(&cold);
+    assert!(!text.contains("warmup"), "cold artifacts must not grow a warmup key");
+    let doc = halcone::sweep::json::parse(&text).unwrap();
+    assert_eq!(CampaignSpec::from_artifact(&doc).unwrap().warmup, None);
+}
