@@ -6,6 +6,8 @@
 //!     cargo bench --bench perf_engine                       # full suite
 //!     cargo bench --bench perf_engine -- rl fir             # workload subset (CI smoke)
 //!     cargo bench --bench perf_engine -- rl --shards 1,4    # sharded-engine axis
+//!     cargo bench --bench perf_engine -- rl --shards 1,4 --fabric ports,hub \
+//!         --preset SM-WT-C-HALCONE --preset RDMA-WB-NC      # hub-split before/after rows
 
 use halcone::config::SystemConfig;
 use halcone::coordinator::runner::run_workload;
@@ -55,9 +57,37 @@ fn main() {
     // `--bench`, which we ignore.
     let mut selected: Vec<String> = Vec::new();
     let mut shards_axis: Vec<u32> = vec![1];
+    let mut fabric_axis: Vec<String> = vec!["ports".into()];
+    let mut presets: Vec<String> = Vec::new();
     let mut argv = std::env::args().skip(1);
     while let Some(arg) = argv.next() {
-        if arg == "--shards" {
+        if arg == "--fabric" {
+            let list = argv.next().unwrap_or_else(|| {
+                eprintln!("error: --fabric wants a comma-separated list, e.g. ports,hub");
+                std::process::exit(2)
+            });
+            fabric_axis = list
+                .split(',')
+                .map(|s| {
+                    let s = s.trim().to_string();
+                    if s != "ports" && s != "hub" {
+                        eprintln!("error: --fabric {list}: '{s}' is not ports|hub");
+                        std::process::exit(2);
+                    }
+                    s
+                })
+                .collect();
+        } else if arg == "--preset" {
+            let p = argv.next().unwrap_or_else(|| {
+                eprintln!("error: --preset wants a configuration name");
+                std::process::exit(2)
+            });
+            if let Err(e) = SystemConfig::try_preset(&p) {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+            presets.push(p);
+        } else if arg == "--shards" {
             let list = argv.next().unwrap_or_else(|| {
                 eprintln!("error: --shards wants a comma-separated list, e.g. 1,4");
                 std::process::exit(2)
@@ -94,48 +124,65 @@ fn main() {
             .filter(|w| selected.iter().any(|s| s == w))
             .collect()
     };
+    if presets.is_empty() {
+        presets.push("SM-WT-C-HALCONE".into());
+    }
 
     println!("== L3 simulator performance ==\n");
     let ping_pong = engine_throughput(2_000_000);
     println!("raw event loop (ping-pong): {:.1} M events/s\n", ping_pong / 1e6);
 
     let t = Table::new(
-        &["workload", "shards", "events", "sim cycles", "host s", "Mev/s", "sim-ops/s"],
-        &[9, 6, 11, 12, 8, 8, 11],
+        &[
+            "preset", "fabric", "workload", "shards", "events", "sim cycles", "host s", "Mev/s",
+            "sim-ops/s",
+        ],
+        &[16, 6, 9, 6, 11, 12, 8, 8, 11],
     );
     let mut rows: Vec<Value> = Vec::new();
-    for wl in &workloads {
-        for &shards in &shards_axis {
-            let mut cfg = SystemConfig::preset("SM-WT-C-HALCONE");
-            cfg.shards = shards;
-            // Timed externally of run_workload's own clock for a median of 3.
-            let mut last = None;
-            let m = measure(0, 3, || {
-                let res = run_workload(&cfg, wl, None);
-                let r = (res.metrics.events, res.metrics.cycles, res.metrics.l1.reqs_in);
-                last = Some(r);
-                r
-            });
-            let (events, cycles, ops) = last.unwrap();
-            let mev_s = events as f64 / m.median_s / 1e6;
-            t.row(&[
-                (*wl).into(),
-                shards.to_string(),
-                events.to_string(),
-                cycles.to_string(),
-                format!("{:.3}", m.median_s),
-                format!("{:.1}", mev_s),
-                format!("{:.1}M", ops as f64 / m.median_s / 1e6),
-            ]);
-            rows.push(Value::Obj(vec![
-                ("workload".into(), Value::str(*wl)),
-                ("shards".into(), Value::u64(shards as u64)),
-                ("events".into(), Value::u64(events)),
-                ("cycles".into(), Value::u64(cycles)),
-                ("host_seconds".into(), Value::f64(m.median_s)),
-                ("mev_per_s".into(), Value::f64(mev_s)),
-                ("events_per_sec".into(), Value::f64(events as f64 / m.median_s)),
-            ]));
+    for preset in &presets {
+        for wl in &workloads {
+            for fabric in &fabric_axis {
+                for &shards in &shards_axis {
+                    let mut cfg = SystemConfig::preset(preset);
+                    cfg.set("fabric", fabric).unwrap();
+                    cfg.shards = shards;
+                    // Timed externally of run_workload's own clock for a
+                    // median of 3.
+                    let mut last = None;
+                    let m = measure(0, 3, || {
+                        let res = run_workload(&cfg, wl, None);
+                        let r =
+                            (res.metrics.events, res.metrics.cycles, res.metrics.l1.reqs_in);
+                        last = Some(r);
+                        r
+                    });
+                    let (events, cycles, ops) = last.unwrap();
+                    let mev_s = events as f64 / m.median_s / 1e6;
+                    t.row(&[
+                        preset.clone(),
+                        fabric.clone(),
+                        (*wl).into(),
+                        shards.to_string(),
+                        events.to_string(),
+                        cycles.to_string(),
+                        format!("{:.3}", m.median_s),
+                        format!("{:.1}", mev_s),
+                        format!("{:.1}M", ops as f64 / m.median_s / 1e6),
+                    ]);
+                    rows.push(Value::Obj(vec![
+                        ("preset".into(), Value::str(preset)),
+                        ("fabric".into(), Value::str(fabric)),
+                        ("workload".into(), Value::str(*wl)),
+                        ("shards".into(), Value::u64(shards as u64)),
+                        ("events".into(), Value::u64(events)),
+                        ("cycles".into(), Value::u64(cycles)),
+                        ("host_seconds".into(), Value::f64(m.median_s)),
+                        ("mev_per_s".into(), Value::f64(mev_s)),
+                        ("events_per_sec".into(), Value::f64(events as f64 / m.median_s)),
+                    ]));
+                }
+            }
         }
     }
 
@@ -147,6 +194,10 @@ fn main() {
         (
             "shards_axis".into(),
             Value::Arr(shards_axis.iter().map(|&s| Value::u64(s as u64)).collect()),
+        ),
+        (
+            "fabric_axis".into(),
+            Value::Arr(fabric_axis.iter().map(Value::str).collect()),
         ),
         ("workloads".into(), Value::Arr(rows)),
     ]);

@@ -13,6 +13,21 @@ use crate::mem::AddrMap;
 use crate::tsu::Leases;
 use crate::workloads::WorkloadParams;
 
+/// Interconnect fabric partitioning for the sharded engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Fabric {
+    /// Per-GPU fabric ports: each GPU shard owns the MCs/TSUs for its
+    /// HBM stacks plus a local port switch; ports are connected by
+    /// explicit inter-port links and the hub shard holds only the
+    /// driver/kernel-scheduler.
+    #[default]
+    Ports,
+    /// Pre-partition layout: one central switch complex and (on SM) all
+    /// MCs/TSUs on the hub shard. Kept as the before/after comparator
+    /// for the hub-split bench rows.
+    Hub,
+}
+
 /// Coherence protocol selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Coherence {
@@ -73,6 +88,18 @@ pub struct SystemConfig {
     /// byte-identical results — see `sim::shard`.
     pub shards: u32,
 
+    /// Fabric partitioning (`fabric` key): per-GPU ports (default) or
+    /// the legacy central hub. Simulation-affecting — part of the
+    /// canonical configuration and snapshot fingerprint.
+    pub fabric: Fabric,
+
+    /// Profile-guided shard grouping (`shard_groups` key): entry `i`
+    /// maps GPU `i` to a logical shard group. Empty = identity (one
+    /// shard per GPU). Produced by `coordinator::topology::plan_shard_groups`
+    /// from recorded per-shard occupancy. Simulation-affecting: the
+    /// grouping changes the event partition, so it is canonical.
+    pub shard_groups: Vec<u32>,
+
     /// Deterministic fault-injection schedule (`faults` key /
     /// `--faults`; docs/ROBUSTNESS.md). `None` = perfect hardware.
     /// Part of the simulated configuration — recorded in campaign
@@ -112,6 +139,8 @@ impl Default for SystemConfig {
             tsu_entries: 1 << 16,
             scale: 1.0,
             shards: 1,
+            fabric: Fabric::Ports,
+            shard_groups: Vec::new(),
             faults: None,
         }
     }
@@ -272,6 +301,23 @@ impl SystemConfig {
                     return Err("shards=0: need at least one engine worker thread".into());
                 }
                 self.shards = v;
+            }
+            "fabric" => {
+                self.fabric = match value {
+                    "ports" => Fabric::Ports,
+                    "hub" => Fabric::Hub,
+                    v => return Err(format!("fabric={v}: want ports|hub")),
+                }
+            }
+            "shard_groups" => {
+                if matches!(value, "" | "none" | "identity") {
+                    self.shard_groups = Vec::new();
+                } else {
+                    self.shard_groups = value
+                        .split(',')
+                        .map(|t| t.trim().parse::<u32>().map_err(|e| uerr(&e)))
+                        .collect::<Result<_, _>>()?;
+                }
             }
             "faults" => self.faults = FaultSpec::parse(value)?,
             other => return Err(format!("unknown config key '{other}'")),
@@ -508,6 +554,24 @@ mod tests {
         assert_eq!(c.shards, 4);
         assert!(c.set("shards", "0").is_err());
         assert!(c.set("shards", "x").is_err());
+    }
+
+    #[test]
+    fn fabric_and_shard_groups_keys_parse() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.fabric, Fabric::Ports);
+        c.set("fabric", "hub").unwrap();
+        assert_eq!(c.fabric, Fabric::Hub);
+        c.set("fabric", "ports").unwrap();
+        assert_eq!(c.fabric, Fabric::Ports);
+        assert!(c.set("fabric", "mesh").is_err());
+
+        assert!(c.shard_groups.is_empty());
+        c.set("shard_groups", "0, 0, 1, 1").unwrap();
+        assert_eq!(c.shard_groups, vec![0, 0, 1, 1]);
+        c.set("shard_groups", "identity").unwrap();
+        assert!(c.shard_groups.is_empty());
+        assert!(c.set("shard_groups", "0,x").is_err());
     }
 
     #[test]

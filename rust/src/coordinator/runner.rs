@@ -187,6 +187,10 @@ pub fn collect_metrics(sys: &System, host_seconds: f64) -> RunMetrics {
         pool_reused_boxes: pool.reused(),
         ..Default::default()
     };
+    let occ = engine.shard_occupancy();
+    m.shard_events = occ.iter().map(|o| o.events).collect();
+    m.shard_windows = occ.iter().map(|o| o.windows).collect();
+    m.shard_idle_windows = occ.iter().map(|o| o.idle_windows).collect();
     m.finalize_host_perf();
     for &id in &sys.cus {
         let s = engine.downcast::<Cu>(id).stats;

@@ -9,6 +9,18 @@
 //!   switch; inter-GPU traffic (NC remote L1 access, HMG peer/home and
 //!   invalidations) crosses per-GPU PCIe links (32 GB/s) through one PCIe
 //!   switch.
+//!
+//! The *fabric* knob picks the engine partition. `fabric = ports`
+//! (default) splits the central switch into one fabric/PCIe port per
+//! GPU, places each MC/TSU in the shard of the GPU whose address range
+//! owns its HBM stack ([`crate::mem::AddrMap::stack_owner`]), meshes the
+//! ports with explicit inter-port links (declared to the engine so its
+//! per-shard-pair lookahead matrix sizes windows from the links actually
+//! in play), and leaves only the driver/kernel-scheduler on a slim hub
+//! shard. `fabric = hub` keeps the pre-partition layout (one central
+//! switch; under SM every MC on the hub) as the before/after perf
+//! comparator. `shard_groups` folds several GPUs into one shard —
+//! profile-guided static rebalancing via [`plan_shard_groups`].
 
 use std::collections::HashMap;
 
@@ -16,7 +28,7 @@ use crate::coherence::halcone::{HalconeL1, HalconeL2};
 use crate::coherence::hmg::HmgL2;
 use crate::coherence::none::{PlainL1, PlainL2};
 use crate::coherence::{L1Routes, L2Routes};
-use crate::config::{Coherence, SystemConfig};
+use crate::config::{Coherence, Fabric, SystemConfig};
 use crate::coordinator::driver::Driver;
 use crate::coordinator::scheduler::KernelScheduler;
 use crate::dram::{GlobalMemory, MemCtrl, SharedMemory};
@@ -61,6 +73,34 @@ pub fn copy_delay(cfg: &SystemConfig, wl: &Workload) -> Cycle {
         per_gpu[map.home_gpu(*addr) as usize] += vals.len() as u64 * 4;
     }
     per_gpu.iter().map(|b| b.div_ceil(cfg.pcie_bw)).max().unwrap_or(0)
+}
+
+/// Profile-guided static rebalancing: fold `gpu_events.len()` GPUs into
+/// `target_groups` shard groups by greedy LPT (longest processing time)
+/// over recorded per-GPU shard event counts (the host-only
+/// `shard_events` occupancy profile from a prior run). Deterministic:
+/// GPUs are placed in descending-events order (ties by index) onto the
+/// least-loaded group (ties by group id). The result feeds the
+/// `shard_groups` config key.
+pub fn plan_shard_groups(gpu_events: &[u64], target_groups: usize) -> Vec<u32> {
+    assert!(target_groups >= 1, "plan_shard_groups: need at least one group");
+    let n = gpu_events.len();
+    let groups = target_groups.min(n.max(1));
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| gpu_events[b].cmp(&gpu_events[a]).then(a.cmp(&b)));
+    let mut load = vec![0u64; groups];
+    let mut out = vec![0u32; n];
+    for gi in order {
+        let target = (0..groups).min_by_key(|&k| (load[k], k)).unwrap();
+        load[target] += gpu_events[gi];
+        out[gi] = target as u32;
+    }
+    out
+}
+
+/// Render a grouping as the `shard_groups` config value (`0,0,1,...`).
+pub fn shard_groups_value(groups: &[u32]) -> String {
+    groups.iter().map(|g| g.to_string()).collect::<Vec<_>>().join(",")
 }
 
 /// Build the full system and load the workload's programs into the CUs.
@@ -132,38 +172,81 @@ fn build_inner(
         }
     }
     let rdma = cfg.topology == Topology::Rdma;
-    // Switches: SM -> one switch complex; RDMA -> per-GPU local memory
-    // switch + one PCIe switch.
-    let swc = CompId(next); // SM only
+    let ports = cfg.fabric == Fabric::Ports;
+    // Switches. Hub fabric: SM -> one central switch complex, RDMA ->
+    // per-GPU local memory switch + one PCIe switch. Ports fabric: the
+    // central switch is replaced by one fabric (SM) or PCIe (RDMA) port
+    // per GPU, each owned by its GPU's shard.
+    let swc = CompId(next); // SM hub fabric only
+    let port_ids: Vec<CompId> = (0..g).map(|i| CompId(next + i as u32)).collect(); // SM ports
     let lsw_ids: Vec<CompId> = (0..g).map(|i| CompId(next + i as u32)).collect(); // RDMA
-    let psw = CompId(next + g as u32); // RDMA
-    next += if rdma { g as u32 + 1 } else { 1 };
+    let psw = CompId(next + g as u32); // RDMA hub fabric
+    let pport_ids: Vec<CompId> =
+        (0..g).map(|i| CompId(next + (g + i) as u32)).collect(); // RDMA ports
+    next += match (rdma, ports) {
+        (false, false) => 1,
+        (false, true) => g as u32,
+        (true, false) => g as u32 + 1,
+        (true, true) => 2 * g as u32,
+    };
     let mc_ids: Vec<CompId> = (0..stacks).map(|s| CompId(next + s as u32)).collect();
 
     let all_banks: Vec<Vec<CompId>> = l2_ids.clone();
 
-    // ---- Engine: one logical shard per GPU plus a hub shard.
+    // ---- Engine: one logical shard per GPU shard-group plus a hub.
     //
-    // GPU shard `gi` owns that GPU's CUs, L1s and L2 banks (RDMA: plus
-    // its local memory switch and HBM stacks); the hub shard owns the
-    // driver and the central fabric (SM: switch complex + every MC/TSU;
-    // RDMA: the PCIe switch). All cross-shard traffic then funnels over
-    // the inter-GPU links with a fixed minimum latency — the conservative
-    // lookahead — while the driver's linkless kernel-launch/fence hops
-    // quantize to window barriers (see `sim::shard`). The partition
-    // depends only on the configuration, so every `shards` thread count
-    // reproduces the identical event order (campaign byte-identity).
-    let hub = g as u32;
+    // Ports fabric (default): GPU shard `gi` owns that GPU's CUs, L1s,
+    // L2 banks, its fabric/PCIe port (and local memory switch under
+    // RDMA), plus the MCs/TSUs of the HBM stacks its address range owns.
+    // The hub shard holds only the driver/kernel-scheduler, whose
+    // linkless kernel-launch/fence hops quantize to window barriers.
+    // Cross-shard traffic rides the declared inter-port links, so the
+    // engine's per-shard-pair lookahead matrix sizes windows from the
+    // links actually in play (see `sim::shard`). Hub fabric keeps the
+    // pre-partition layout (central switch; under SM every MC/TSU on the
+    // hub) as the before/after perf comparator.
+    //
+    // `shard_groups` folds several GPUs into one shard (profile-guided
+    // rebalancing, [`plan_shard_groups`]). The partition depends only on
+    // the configuration — never the `shards` thread count — so every
+    // thread count reproduces the identical event order (campaign
+    // byte-identity).
+    let group_of: Vec<u32> = if cfg.shard_groups.is_empty() {
+        (0..g as u32).collect()
+    } else {
+        assert_eq!(
+            cfg.shard_groups.len(),
+            g,
+            "shard_groups must name one group per GPU ({} entries for {} GPUs)",
+            cfg.shard_groups.len(),
+            g,
+        );
+        cfg.shard_groups.clone()
+    };
+    let n_groups = group_of.iter().max().map_or(1, |m| m + 1);
+    for gid in 0..n_groups {
+        assert!(
+            group_of.contains(&gid),
+            "shard_groups: group ids must be contiguous (0..{n_groups} is missing {gid})"
+        );
+    }
+    let hub = n_groups;
     let lookahead = if rdma { cfg.pcie_lat + 1 } else { cfg.swc_lat + 1 };
-    let mut engine = Engine::sharded(g as u32 + 1, lookahead);
+    let mut engine = Engine::sharded(n_groups + 1, lookahead);
     // Fault injection must be armed before any link registration so the
     // per-link ordinals — the fault hash key — cover the whole
     // interconnect in configuration order (docs/ROBUSTNESS.md).
     engine.set_fault_spec(cfg.faults);
     let ts_bits = cfg.faults.map_or(0, |f| f.ts_bits);
-    // A stack's shard: its owner GPU under RDMA, the hub under SM.
-    let stack_shard =
-        |s: usize| if rdma { (s / cfg.stacks_per_gpu as usize) as u32 } else { hub };
+    // A stack's shard: its owner GPU's group, except under the legacy SM
+    // hub fabric where every MC parks on the hub.
+    let stack_shard = |s: usize| {
+        if rdma || ports {
+            group_of[map.stack_owner(s as u32) as usize]
+        } else {
+            hub
+        }
+    };
     let mem = GlobalMemory::new_shared();
     let mut pcie_links = Vec::new();
     let mut mem_links = Vec::new();
@@ -186,7 +269,7 @@ fn build_inner(
     // mutates on each send): uplinks with the GPU shard, downlinks with
     // the switch that drives them.
     for gi in 0..g {
-        let gs = gi as u32;
+        let gs = group_of[gi];
         for ci in 0..c {
             l1_tx[gi][ci] =
                 engine.add_link_to(gs, Link::wire(format!("g{gi}.l1_{ci}.tx"), cfg.onchip_lat));
@@ -199,23 +282,71 @@ fn build_inner(
             gs,
             Link::new(format!("g{gi}.mmnet.up"), cfg.swc_lat, cfg.gpu_uplink_bw),
         );
-        // SM: driven by the hub switch complex; RDMA: by the GPU-local
-        // memory switch.
+        // Driven by the switch on its far end: the hub switch complex
+        // under the SM hub fabric, the GPU-local port/memory switch
+        // otherwise.
         gpu_down[gi] = engine.add_link_to(
-            if rdma { gs } else { hub },
+            if rdma || ports { gs } else { hub },
             Link::new(format!("g{gi}.mmnet.down"), cfg.swc_lat, cfg.gpu_uplink_bw),
         );
         mem_links.push(gpu_up[gi]);
         mem_links.push(gpu_down[gi]);
         if rdma {
-            pcie_up[gi] = engine
-                .add_link_to(gs, Link::new(format!("g{gi}.pcie.up"), cfg.pcie_lat, cfg.pcie_bw));
-            pcie_down[gi] = engine.add_link_to(
-                hub,
-                Link::new(format!("g{gi}.pcie.down"), cfg.pcie_lat, cfg.pcie_bw),
-            );
-            pcie_links.push(pcie_up[gi]);
-            pcie_links.push(pcie_down[gi]);
+            if ports {
+                // Up: L1/L2 into the GPU's own PCIe port (same shard —
+                // the PCIe serialization cost still applies); the
+                // cross-GPU hop is the inter-port link below. Down:
+                // port -> local destination delivery wire.
+                pcie_up[gi] = engine.add_link_to(
+                    gs,
+                    Link::new(format!("g{gi}.pcie.up"), cfg.pcie_lat, cfg.pcie_bw),
+                );
+                pcie_down[gi] = engine
+                    .add_link_to(gs, Link::wire(format!("g{gi}.pcie.down"), cfg.onchip_lat));
+                pcie_links.push(pcie_up[gi]);
+            } else {
+                pcie_up[gi] = engine.add_link_to(
+                    gs,
+                    Link::new(format!("g{gi}.pcie.up"), cfg.pcie_lat, cfg.pcie_bw),
+                );
+                pcie_down[gi] = engine.add_link_to(
+                    hub,
+                    Link::new(format!("g{gi}.pcie.down"), cfg.pcie_lat, cfg.pcie_bw),
+                );
+                pcie_links.push(pcie_up[gi]);
+                pcie_links.push(pcie_down[gi]);
+            }
+        }
+    }
+    // Inter-port fabric links (ports fabric): one explicit link per
+    // ordered GPU pair. Cross-shard pairs are *declared* with
+    // `add_link_between`, feeding the engine's lookahead matrix;
+    // same-group pairs (shard_groups rebalancing) are ordinary local
+    // links.
+    let mut xbar = vec![vec![LinkId(u32::MAX); g]; g];
+    if ports {
+        for i in 0..g {
+            for j in 0..g {
+                if i == j {
+                    continue;
+                }
+                let (si, sj) = (group_of[i], group_of[j]);
+                let l = if rdma {
+                    Link::new(format!("g{i}.pcie.to{j}"), cfg.pcie_lat, cfg.pcie_bw)
+                } else {
+                    Link::new(format!("g{i}.fab.to{j}"), cfg.swc_lat, cfg.gpu_uplink_bw)
+                };
+                xbar[i][j] = if si == sj {
+                    engine.add_link_to(si, l)
+                } else {
+                    engine.add_link_between(si, sj, l)
+                };
+                if rdma {
+                    pcie_links.push(xbar[i][j]);
+                } else {
+                    mem_links.push(xbar[i][j]);
+                }
+            }
         }
     }
     for s in 0..stacks {
@@ -266,7 +397,7 @@ fn build_inner(
             if let Some(plan) = mix {
                 cu.set_phase_tenants(plan.phase_tenants.clone());
             }
-            let id = engine.add_to(gi as u32, Box::new(cu));
+            let id = engine.add_to(group_of[gi], Box::new(cu));
             assert_eq!(id, cu_ids[gi][ci]);
         }
         // L1s.
@@ -279,7 +410,7 @@ fn build_inner(
                 // NC-RDMA: L1 reaches remote GPUs' L2 through PCIe (Fig. 1).
                 // HMG: L1 stays local; the L2 handles remote traffic.
                 remote_hop: (rdma && cfg.coherence == Coherence::None)
-                    .then_some((pcie_up[gi], psw)),
+                    .then(|| (pcie_up[gi], if ports { pport_ids[gi] } else { psw })),
                 all_banks: all_banks.clone(),
             };
             let params = CacheParams::new(cfg.l1_bytes, cfg.l1_ways);
@@ -289,10 +420,10 @@ fn build_inner(
                     let mut l1 =
                         HalconeL1::new(name, routes, params, cfg.mshr_l1, cfg.l1_lat, carry_warpts);
                     l1.set_ts_bits(ts_bits);
-                    engine.add_to(gi as u32, Box::new(l1))
+                    engine.add_to(group_of[gi], Box::new(l1))
                 }
                 _ => engine.add_to(
-                    gi as u32,
+                    group_of[gi],
                     Box::new(PlainL1::new(name, routes, params, cfg.mshr_l1, cfg.l1_lat)),
                 ),
             };
@@ -304,15 +435,22 @@ fn build_inner(
             for ci in 0..c {
                 up_routes.insert(l1_ids[gi][ci], l2_up_tx[gi][bi]);
             }
-            let mm_hop = if rdma { (gpu_up[gi], lsw_ids[gi]) } else { (gpu_up[gi], swc) };
+            let mm_hop = if rdma {
+                (gpu_up[gi], lsw_ids[gi])
+            } else if ports {
+                (gpu_up[gi], port_ids[gi])
+            } else {
+                (gpu_up[gi], swc)
+            };
+            let pcie_hop = || (pcie_up[gi], if ports { pport_ids[gi] } else { psw });
             let routes = L2Routes {
                 map: map.clone(),
                 gpu: gi as u32,
                 mm_hop,
                 mcs: mc_ids.clone(),
                 up_routes,
-                up_default: rdma.then_some((pcie_up[gi], psw)),
-                peer_hop: rdma.then_some((pcie_up[gi], psw)),
+                up_default: rdma.then(pcie_hop),
+                peer_hop: rdma.then(pcie_hop),
                 all_banks: all_banks.clone(),
             };
             let params = CacheParams::new(cfg.l2_bank_bytes, cfg.l2_ways);
@@ -322,10 +460,10 @@ fn build_inner(
                     let mut l2 =
                         HalconeL2::new(name, routes, params, cfg.mshr_l2, cfg.l2_lat, carry_warpts);
                     l2.set_ts_bits(ts_bits);
-                    engine.add_to(gi as u32, Box::new(l2))
+                    engine.add_to(group_of[gi], Box::new(l2))
                 }
                 Coherence::None => engine.add_to(
-                    gi as u32,
+                    group_of[gi],
                     Box::new(PlainL2::new(
                         name,
                         routes,
@@ -336,7 +474,7 @@ fn build_inner(
                     )),
                 ),
                 Coherence::Hmg => engine.add_to(
-                    gi as u32,
+                    group_of[gi],
                     Box::new(HmgL2::new(
                         name,
                         routes,
@@ -364,20 +502,74 @@ fn build_inner(
             for bi in 0..b {
                 lsw.add_route(l2_ids[gi][bi], (gpu_down[gi], l2_ids[gi][bi]));
             }
-            let id = engine.add_to(gi as u32, Box::new(lsw));
+            let id = engine.add_to(group_of[gi], Box::new(lsw));
             assert_eq!(id, lsw_ids[gi]);
         }
-        let mut p = Switch::new("pcie_sw");
-        for gi in 0..g {
-            for bi in 0..b {
-                p.add_route(l2_ids[gi][bi], (pcie_down[gi], l2_ids[gi][bi]));
+        if ports {
+            // Per-GPU PCIe ports: local caches over the delivery wire,
+            // every remote cache via the inter-port link to its GPU's
+            // port.
+            for gi in 0..g {
+                let mut p = Switch::new(format!("g{gi}.pcie_port"));
+                for gj in 0..g {
+                    for bi in 0..b {
+                        let hop = if gj == gi {
+                            (pcie_down[gi], l2_ids[gj][bi])
+                        } else {
+                            (xbar[gi][gj], pport_ids[gj])
+                        };
+                        p.add_route(l2_ids[gj][bi], hop);
+                    }
+                    for ci in 0..c {
+                        let hop = if gj == gi {
+                            (pcie_down[gi], l1_ids[gj][ci])
+                        } else {
+                            (xbar[gi][gj], pport_ids[gj])
+                        };
+                        p.add_route(l1_ids[gj][ci], hop);
+                    }
+                }
+                let id = engine.add_to(group_of[gi], Box::new(p));
+                assert_eq!(id, pport_ids[gi]);
             }
-            for ci in 0..c {
-                p.add_route(l1_ids[gi][ci], (pcie_down[gi], l1_ids[gi][ci]));
+        } else {
+            let mut p = Switch::new("pcie_sw");
+            for gi in 0..g {
+                for bi in 0..b {
+                    p.add_route(l2_ids[gi][bi], (pcie_down[gi], l2_ids[gi][bi]));
+                }
+                for ci in 0..c {
+                    p.add_route(l1_ids[gi][ci], (pcie_down[gi], l1_ids[gi][ci]));
+                }
             }
+            let id = engine.add_to(hub, Box::new(p));
+            assert_eq!(id, psw);
         }
-        let id = engine.add_to(hub, Box::new(p));
-        assert_eq!(id, psw);
+    } else if ports {
+        // Per-GPU fabric ports: locally owned stacks and resident L2
+        // banks directly, everything else via the inter-port link toward
+        // its owner GPU's port.
+        for gi in 0..g {
+            let mut p = Switch::new(format!("g{gi}.fab_port"));
+            for (si, &mc) in mc_ids.iter().enumerate() {
+                let owner = map.stack_owner(si as u32) as usize;
+                let hop =
+                    if owner == gi { (mc_rx[si], mc) } else { (xbar[gi][owner], port_ids[owner]) };
+                p.add_route(mc, hop);
+            }
+            for gj in 0..g {
+                for bi in 0..b {
+                    let hop = if gj == gi {
+                        (gpu_down[gi], l2_ids[gj][bi])
+                    } else {
+                        (xbar[gi][gj], port_ids[gj])
+                    };
+                    p.add_route(l2_ids[gj][bi], hop);
+                }
+            }
+            let id = engine.add_to(group_of[gi], Box::new(p));
+            assert_eq!(id, port_ids[gi]);
+        }
     } else {
         let mut s = Switch::new("switch_complex");
         for (si, &mc) in mc_ids.iter().enumerate() {
@@ -397,6 +589,8 @@ fn build_inner(
         let up = if rdma {
             let owner = si / cfg.stacks_per_gpu as usize;
             (mc_tx[si], lsw_ids[owner])
+        } else if ports {
+            (mc_tx[si], port_ids[map.stack_owner(si as u32) as usize])
         } else {
             (mc_tx[si], swc)
         };
@@ -472,6 +666,76 @@ mod tests {
             let sys = build(&cfg, wl(&cfg, "rl"));
             assert_eq!(sys.engine.n_shards(), cfg.n_gpus + 1, "{preset}");
         }
+    }
+
+    #[test]
+    fn ports_fabric_places_mcs_with_their_owner_gpu() {
+        for preset in SystemConfig::PRESETS {
+            let cfg = small_cfg(preset);
+            let map = cfg.addr_map();
+            let sys = build(&cfg, wl(&cfg, "rl"));
+            for (si, &mc) in sys.mcs.iter().enumerate() {
+                assert_eq!(
+                    sys.engine.shard_of(mc),
+                    map.stack_owner(si as u32),
+                    "{preset} mm{si}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hub_fabric_keeps_sm_mcs_on_the_hub() {
+        let mut cfg = small_cfg("SM-WT-C-HALCONE");
+        cfg.fabric = Fabric::Hub;
+        let sys = build(&cfg, wl(&cfg, "rl"));
+        for &mc in &sys.mcs {
+            assert_eq!(sys.engine.shard_of(mc), cfg.n_gpus);
+        }
+        // RDMA stacks sit with their owner GPU under both fabrics.
+        let mut cfg = small_cfg("RDMA-WB-NC");
+        cfg.fabric = Fabric::Hub;
+        let sys = build(&cfg, wl(&cfg, "rl"));
+        assert_eq!(sys.engine.shard_of(sys.mcs[3]), 1);
+    }
+
+    #[test]
+    fn shard_groups_fold_gpus_into_one_shard() {
+        let mut cfg = small_cfg("SM-WT-C-HALCONE");
+        cfg.shard_groups = vec![0, 0];
+        let sys = build(&cfg, wl(&cfg, "rl"));
+        assert_eq!(sys.engine.n_shards(), 2); // one fused group + hub
+        for &mc in &sys.mcs {
+            assert_eq!(sys.engine.shard_of(mc), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one group per GPU")]
+    fn shard_groups_length_mismatch_is_rejected() {
+        let mut cfg = small_cfg("SM-WT-NC");
+        cfg.shard_groups = vec![0];
+        build(&cfg, wl(&cfg, "rl"));
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn shard_groups_with_a_gap_are_rejected() {
+        let mut cfg = small_cfg("SM-WT-NC");
+        cfg.shard_groups = vec![0, 2];
+        build(&cfg, wl(&cfg, "rl"));
+    }
+
+    #[test]
+    fn plan_shard_groups_is_lpt_balanced_and_deterministic() {
+        // Descending-events placement onto the least-loaded group:
+        // 10 -> g0, 9 -> g1, 2 -> g1 (9 < 10), 1 -> g0.
+        assert_eq!(plan_shard_groups(&[10, 1, 9, 2], 2), vec![0, 0, 1, 1]);
+        // Uniform loads with one group per GPU degrade to identity.
+        assert_eq!(plan_shard_groups(&[5, 5, 5, 5], 4), vec![0, 1, 2, 3]);
+        // More groups than GPUs clamps.
+        assert_eq!(plan_shard_groups(&[3], 5), vec![0]);
+        assert_eq!(shard_groups_value(&[0, 0, 1, 1]), "0,0,1,1");
     }
 
     #[test]

@@ -94,6 +94,15 @@ impl AddrMap {
         }
     }
 
+    /// The GPU that physically hosts HBM stack `stack` (stacks are
+    /// numbered `gpu * stacks_per_gpu + local`). This is the ownership
+    /// relation the partitioned fabric uses to place each MC/TSU in its
+    /// owner GPU's engine shard.
+    pub fn stack_owner(&self, stack: u32) -> u32 {
+        debug_assert!(stack < self.total_stacks());
+        stack / self.stacks_per_gpu
+    }
+
     /// L2 bank index within a GPU for `addr` (line-interleaved).
     pub fn l2_bank_of(&self, addr: u64) -> u32 {
         ((addr / self.line) % self.l2_banks as u64) as u32

@@ -139,6 +139,15 @@ pub struct RunMetrics {
     /// other host-perf fields.
     pub pool_fresh_boxes: u64,
     pub pool_reused_boxes: u64,
+    /// Per-shard occupancy profile: events dispatched, windows entered
+    /// and windows entered-but-idle for each logical engine shard
+    /// (index = shard id; the hub is the last entry). Deterministic but
+    /// engine-internal — host-only like the pool counters. Feeds the
+    /// profile-guided `shard_groups` rebalancing
+    /// (`coordinator::topology::plan_shard_groups`).
+    pub shard_events: Vec<u64>,
+    pub shard_windows: Vec<u64>,
+    pub shard_idle_windows: Vec<u64>,
     /// CU-issued loads / stores (per-op throughput denominators for
     /// campaign artifacts).
     pub cu_loads: u64,

@@ -19,6 +19,18 @@ use crate::sim::Cycle;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CompId(pub u32);
 
+/// One shard's occupancy profile ([`Engine::shard_occupancy`]):
+/// host-only perf counters, excluded from canonical artifacts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardOccupancy {
+    /// Events this shard dispatched.
+    pub events: u64,
+    /// Windows this shard executed.
+    pub windows: u64,
+    /// Executed windows that dispatched no event.
+    pub idle_windows: u64,
+}
+
 impl CompId {
     pub const NONE: CompId = CompId(u32::MAX);
 }
@@ -109,49 +121,71 @@ impl Ctx<'_> {
         s
     }
 
-    /// Queue an event locally or park it for the barrier router.
-    /// `via_link` deliveries must clear the conservative window — a
-    /// violation means the partition's lookahead exceeds a cross-shard
-    /// link's minimum delivery delta, which would corrupt event order
-    /// silently, so it is a hard error even in release builds.
-    fn push_at(&mut self, time: Cycle, target: CompId, msg: Msg, via_link: bool) {
+    /// Queue a linkless event locally or park it for the barrier router.
+    fn push_at(&mut self, time: Cycle, target: CompId, msg: Msg) {
         let seq = self.next_seq();
         let loc = self.tables.comp_loc[target.0 as usize];
         if loc.shard == self.shard {
             self.queue.push(Event { time, seq, target, msg });
             return;
         }
-        let time = if via_link {
-            assert!(
-                time >= self.window_end,
-                "cross-shard link delivery at {time} inside the window ending {} \
-                 (lookahead larger than the link's latency + 1 — partition bug)",
+        // Linkless control hop (driver dispatch, fence chatter,
+        // directory acks): deliver at its natural time or the next
+        // window barrier, whichever is later. The receiving shard
+        // has not dispatched anything at or beyond `window_end`, so
+        // this is conservative; the quantization is a deterministic
+        // function of the window sequence (see sim/shard.rs docs). In
+        // solo mode `window_end` is the window start, so the hop keeps
+        // its natural time — every peer shard is drained.
+        let time = time.max(self.window_end);
+        self.outbox.push(shard::OutEvent { dst: loc.shard, ev: Event { time, seq, target, msg } });
+    }
+
+    /// Queue a link delivery. Cross-shard deliveries must clear the
+    /// conservative window — a violation means the pair's effective
+    /// lookahead exceeds this link's minimum delivery delta, which would
+    /// corrupt event order silently, so it is a hard error even in
+    /// release builds (declared links are additionally validated at
+    /// registration — see [`Engine::add_link_between`]).
+    fn push_link(&mut self, time: Cycle, target: CompId, msg: Msg, link: LinkId, idx: usize) {
+        let seq = self.next_seq();
+        let loc = self.tables.comp_loc[target.0 as usize];
+        if loc.shard == self.shard {
+            self.queue.push(Event { time, seq, target, msg });
+            return;
+        }
+        if time < self.window_end {
+            let l = &self.links[idx];
+            panic!(
+                "cross-shard link delivery inside the conservative window: link '{}' \
+                 ({link:?}, latency {}, min delivery delta {}) from shard {} to shard {} \
+                 delivers at cycle {time}, before the window ends at {} — the pair's \
+                 effective lookahead exceeds the link's latency + 1. Declare cross-shard \
+                 links with Engine::add_link_between so the lookahead matrix is derived \
+                 from (and validated against) them at registration.",
+                l.name,
+                l.latency,
+                l.latency.saturating_add(1),
+                self.shard,
+                loc.shard,
                 self.window_end
             );
-            time
-        } else {
-            // Linkless control hop (driver dispatch, fence chatter,
-            // directory acks): deliver at its natural time or the next
-            // window barrier, whichever is later. The receiving shard
-            // has not dispatched anything at or beyond `window_end`, so
-            // this is conservative; the quantization is a deterministic
-            // function of the window sequence (see sim/shard.rs docs).
-            time.max(self.window_end)
-        };
+        }
         self.outbox.push(shard::OutEvent { dst: loc.shard, ev: Event { time, seq, target, msg } });
     }
 
     /// Deliver `msg` to `target` after `delay` cycles (no link modelled).
     pub fn schedule(&mut self, delay: Cycle, target: CompId, msg: Msg) {
-        self.push_at(self.now + delay, target, msg, false);
+        self.push_at(self.now + delay, target, msg);
     }
 
     /// Send `msg` of `bytes` to `target` through `link`; delivery time is
     /// determined by the link's serialization + latency model.
     pub fn send(&mut self, link: LinkId, target: CompId, bytes: u64, msg: Msg) {
         let now = self.now;
-        let deliver = self.link_mut(link).accept(now, bytes);
-        self.push_at(deliver, target, msg, true);
+        let idx = self.local_link(link);
+        let deliver = self.links[idx].accept(now, bytes);
+        self.push_link(deliver, target, msg, link, idx);
     }
 
     /// Like [`Ctx::send`], but the message enters the link only after
@@ -166,8 +200,9 @@ impl Ctx<'_> {
         msg: Msg,
     ) {
         let at = self.now + delay;
-        let deliver = self.link_mut(link).accept(at, bytes);
-        self.push_at(deliver, target, msg, true);
+        let idx = self.local_link(link);
+        let deliver = self.links[idx].accept(at, bytes);
+        self.push_link(deliver, target, msg, link, idx);
     }
 
     /// Box `req` as a [`Msg::Req`], recycling a pooled box when one is
@@ -203,11 +238,6 @@ impl Ctx<'_> {
         loc.idx as usize
     }
 
-    fn link_mut(&mut self, link: LinkId) -> &mut Link {
-        let idx = self.local_link(link);
-        &mut self.links[idx]
-    }
-
     /// Inspect a link (e.g. for backpressure decisions). Only links of
     /// the executing component's shard are visible.
     pub fn link(&self, link: LinkId) -> &Link {
@@ -220,8 +250,14 @@ impl Ctx<'_> {
 pub struct Engine {
     shards: Vec<Shard>,
     tables: Tables,
-    /// Conservative window span; `min cross-shard link latency + 1`.
-    lookahead: Cycle,
+    /// Fallback/ceiling window span: pairs with no declared cross-shard
+    /// link use it, and no window ever exceeds it (legacy fixed-lookahead
+    /// engines declare nothing and reproduce exactly).
+    base_lookahead: Cycle,
+    /// Per-shard-pair lookahead matrix, `matrix[src * n + dst]` =
+    /// smallest `latency + 1` over the declared `src -> dst` cross-shard
+    /// links ([`Engine::add_link_between`]), `Cycle::MAX` when none.
+    matrix: Vec<Cycle>,
     /// Worker threads executing the shards (1 = serial).
     threads: usize,
     now: Cycle,
@@ -244,17 +280,23 @@ impl Engine {
     }
 
     /// An engine partitioned into `n_shards` logical shards advancing in
-    /// conservative windows of `lookahead` cycles. `lookahead` must not
-    /// exceed `min(latency) + 1` over the cross-shard links (each send is
-    /// checked at runtime). The partition defines event order, so it must
-    /// depend only on the simulated configuration — never on the host.
+    /// conservative windows. `lookahead` is the fallback *and* ceiling
+    /// window span: shard pairs connected only by undeclared
+    /// (`add_link_to`) links rely on it, so it must not exceed
+    /// `min(latency) + 1` over such links (each send is checked at
+    /// runtime); pairs declared with [`Engine::add_link_between`] get
+    /// their span from the lookahead matrix, validated at registration.
+    /// The partition defines event order, so it must depend only on the
+    /// simulated configuration — never on the host.
     pub fn sharded(n_shards: u32, lookahead: Cycle) -> Self {
         assert!(n_shards >= 1, "need at least one shard");
         assert!(lookahead >= 1, "lookahead must be at least one cycle");
+        let n = n_shards as usize;
         Engine {
             shards: (0..n_shards).map(Shard::new).collect(),
             tables: Tables::default(),
-            lookahead,
+            base_lookahead: lookahead,
+            matrix: vec![Cycle::MAX; n * n],
             threads: 1,
             now: 0,
             fault_spec: None,
@@ -315,6 +357,64 @@ impl Engine {
         id
     }
 
+    /// Register a *declared* cross-shard link: owned by `src` (its
+    /// senders' shard), carrying traffic into `dst`. Declaring lowers
+    /// the `src -> dst` lookahead-matrix entry to
+    /// `min(entry, latency + 1)`, which sizes the conservative windows
+    /// — so the matrix is validated eagerly, here at registration,
+    /// instead of on the first send:
+    ///
+    /// * the pair must be a real cross-shard pair in range;
+    /// * the engine must not have dispatched events yet (windows already
+    ///   planned against the old matrix could not be revalidated);
+    /// * the entry is monotonically tightened, never widened, so every
+    ///   previously declared link on the pair stays satisfied.
+    pub fn add_link_between(&mut self, src: u32, dst: u32, l: Link) -> LinkId {
+        let n = self.shards.len() as u32;
+        assert!(
+            src < n && dst < n,
+            "add_link_between({src}, {dst}): engine has {n} shards (link '{}')",
+            l.name
+        );
+        assert!(
+            src != dst,
+            "add_link_between: link '{}' declared shard {src} -> itself; use add_link_to \
+             for shard-local links",
+            l.name
+        );
+        assert!(
+            self.now == 0 && self.shards.iter().all(|s| s.events_processed == 0),
+            "add_link_between: link '{}' ({src} -> {dst}) declared after the engine ran; \
+             the lookahead matrix is frozen once windows have been planned",
+            l.name
+        );
+        let delta = l.latency.saturating_add(1);
+        let id = self.add_link_to(src, l);
+        let e = &mut self.matrix[(src as usize) * n as usize + dst as usize];
+        *e = (*e).min(delta);
+        id
+    }
+
+    /// The effective `src -> dst` lookahead: the declared matrix entry,
+    /// or `None` when the pair has no declared link (such pairs fall
+    /// back to the constructor's base lookahead).
+    pub fn pair_lookahead(&self, src: u32, dst: u32) -> Option<Cycle> {
+        let n = self.shards.len();
+        match self.matrix[(src as usize) * n + dst as usize] {
+            Cycle::MAX => None,
+            d => Some(d),
+        }
+    }
+
+    /// Window-planning tables derived from the matrix (row minima).
+    fn lookahead_tables(&self) -> shard::Lookahead {
+        let n = self.shards.len();
+        let row_min = (0..n)
+            .map(|s| self.matrix[s * n..(s + 1) * n].iter().copied().min().unwrap_or(Cycle::MAX))
+            .collect();
+        shard::Lookahead { base: self.base_lookahead, row_min }
+    }
+
     /// Schedule an initial event from outside any component.
     pub fn post(&mut self, time: Cycle, target: CompId, msg: Msg) {
         let loc = self.tables.comp_loc[target.0 as usize];
@@ -331,14 +431,15 @@ impl Engine {
         if self.shards.len() == 1 {
             // Single shard: the historical tight loop — no windows, no
             // barriers, nothing can cross.
-            self.shards[0].run_window(limit, Cycle::MAX, &self.tables);
+            self.shards[0].run_window(limit, Cycle::MAX, &self.tables, false);
             let s = &self.shards[0];
             self.now = if s.queue.is_empty() { self.now.max(s.now) } else { limit };
             return self.now;
         }
+        let look = self.lookahead_tables();
         let shards = std::mem::take(&mut self.shards);
         let (shards, done) =
-            shard::run_windows(shards, &self.tables, self.lookahead, self.threads, limit, false);
+            shard::run_windows(shards, &self.tables, &look, self.threads, limit, false);
         self.shards = shards;
         self.now = match done {
             None => limit,
@@ -367,7 +468,7 @@ impl Engine {
         if self.shards.len() == 1 {
             // Single shard: no windows, no quantization — pausing on the
             // event boundary at `limit` is inherently transparent.
-            self.shards[0].run_window(limit, Cycle::MAX, &self.tables);
+            self.shards[0].run_window(limit, Cycle::MAX, &self.tables, false);
             let s = &self.shards[0];
             if s.queue.is_empty() {
                 self.now = self.now.max(s.now);
@@ -376,9 +477,10 @@ impl Engine {
             self.now = limit;
             return true;
         }
+        let look = self.lookahead_tables();
         let shards = std::mem::take(&mut self.shards);
         let (shards, done) =
-            shard::run_windows(shards, &self.tables, self.lookahead, self.threads, limit, true);
+            shard::run_windows(shards, &self.tables, &look, self.threads, limit, true);
         self.shards = shards;
         match done {
             None => {
@@ -403,6 +505,26 @@ impl Engine {
     /// Total events dispatched across all shards (perf metric).
     pub fn events_processed(&self) -> u64 {
         self.shards.iter().map(|s| s.events_processed).sum()
+    }
+
+    /// Per-shard occupancy profile, indexed by shard id: events
+    /// dispatched, windows executed, and executed windows that
+    /// dispatched nothing (host-only metrics; never canonical).
+    pub fn shard_occupancy(&self) -> Vec<ShardOccupancy> {
+        self.shards
+            .iter()
+            .map(|s| ShardOccupancy {
+                events: s.events_processed,
+                windows: s.windows,
+                idle_windows: s.idle_windows,
+            })
+            .collect()
+    }
+
+    /// The logical shard a component was registered into (ownership
+    /// tests and topology diagnostics).
+    pub fn shard_of(&self, id: CompId) -> u32 {
+        self.tables.comp_loc[id.0 as usize].shard
     }
 
     /// Whether any events remain queued (in any shard or outbox).
@@ -496,6 +618,8 @@ impl Engine {
             f::put(out, s.seq);
             f::put(out, s.now);
             f::put(out, s.events_processed);
+            f::put(out, s.windows);
+            f::put(out, s.idle_windows);
             f::put(out, s.pool.fresh_reqs);
             f::put(out, s.pool.fresh_rsps);
             f::put(out, s.pool.reused_reqs);
@@ -556,6 +680,8 @@ impl Engine {
             s.seq = cur.u64("shard seq")?;
             s.now = cur.u64("shard now")?;
             s.events_processed = cur.u64("shard events_processed")?;
+            s.windows = cur.u64("shard windows")?;
+            s.idle_windows = cur.u64("shard idle_windows")?;
             s.pool.fresh_reqs = cur.u64("pool fresh_reqs")?;
             s.pool.fresh_rsps = cur.u64("pool fresh_rsps")?;
             s.pool.reused_reqs = cur.u64("pool reused_reqs")?;
@@ -794,28 +920,161 @@ mod tests {
             e.add_to(1, Box::new(tb));
             e.set_threads(threads);
             e.post(3, a, Msg::Tick);
+            // Seed shard 1 too: with both shards active the planner
+            // opens a real window (solo mode would otherwise deliver
+            // the hop at its natural time — see the solo test below).
+            e.post(3, b, Msg::Tick);
             e.run_to_completion();
             (e.downcast::<Teleporter>(a).got_at, e.downcast::<Teleporter>(b).got_at)
         };
-        // The window opens at T=3 and spans 8 cycles; the zero-delay
-        // cross-shard hop lands at the barrier, cycle 11.
+        // The window opens at T=3 and spans the base lookahead of 8
+        // cycles (no declared links); the zero-delay cross-shard hop
+        // lands at the barrier, cycle 11.
         for threads in [1, 2] {
             assert_eq!(run(threads), (Some(3), Some(11)), "threads={threads}");
         }
     }
 
     #[test]
+    fn solo_shard_delivers_control_hops_at_natural_time() {
+        /// Schedules a zero-delay hop to a peer in another shard.
+        struct Teleporter {
+            name: String,
+            peer: CompId,
+            fire: bool,
+            pub got_at: Option<Cycle>,
+        }
+        impl Component for Teleporter {
+            crate::impl_component_any!();
+            fn name(&self) -> &str {
+                &self.name
+            }
+            fn handle(&mut self, now: Cycle, _msg: Msg, ctx: &mut Ctx) {
+                self.got_at = Some(now);
+                if self.fire {
+                    self.fire = false;
+                    let peer = self.peer;
+                    ctx.schedule(0, peer, Msg::Tick);
+                }
+            }
+        }
+        let run = |threads: usize| {
+            let mut e = Engine::sharded(2, 8);
+            let a = CompId(0);
+            let b = CompId(1);
+            let ta = Teleporter { name: "a".into(), peer: b, fire: true, got_at: None };
+            let tb = Teleporter { name: "b".into(), peer: a, fire: false, got_at: None };
+            e.add_to(0, Box::new(ta));
+            e.add_to(1, Box::new(tb));
+            e.set_threads(threads);
+            e.post(3, a, Msg::Tick);
+            e.run_to_completion();
+            (e.downcast::<Teleporter>(a).got_at, e.downcast::<Teleporter>(b).got_at)
+        };
+        // Shard 1 is drained, so shard 0 runs solo and its cross-shard
+        // hop closes the window early, keeping its natural time 3 — no
+        // quantization to the cycle-11 barrier.
+        for threads in [1, 2] {
+            assert_eq!(run(threads), (Some(3), Some(3)), "threads={threads}");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "cross-shard link delivery")]
     fn lookahead_wider_than_a_cross_link_is_rejected() {
-        // Link latency 2 (delivery delta 3) under lookahead 10: the
-        // first cross-shard send must trip the conservative-window check.
+        // Undeclared link of latency 2 (delivery delta 3) under base
+        // lookahead 10: the first cross-shard send inside a real window
+        // must trip the conservative-window check. Both shards are
+        // seeded so a window actually opens (a solo shard has no
+        // window to violate).
         let mut e = Engine::sharded(2, 10);
         let l = e.add_link_to(0, Link::new("bad", 2, 64));
         let b = CompId(1);
         e.add_to(0, pinger("a", b, l, 1));
         e.add_to(1, pinger("b", CompId(0), l, 0));
         e.post(0, CompId(0), Msg::Tick);
+        e.post(0, b, Msg::Tick);
         e.run_to_completion();
+    }
+
+    #[test]
+    fn declared_links_shrink_windows_to_the_pair_minimum() {
+        // Base lookahead is a huge ceiling; the declared links (latency
+        // 10, delta 11) alone must size the windows, reproducing the
+        // sequential timing exactly. Both shards are seeded so real
+        // (non-solo) windows are planned from the matrix.
+        let sharded = |threads: usize| {
+            let mut e = Engine::sharded(2, 1_000_000);
+            let l_ab = e.add_link_between(0, 1, Link::new("a->b", 10, 64));
+            let l_ba = e.add_link_between(1, 0, Link::new("b->a", 10, 64));
+            assert_eq!(e.pair_lookahead(0, 1), Some(11));
+            assert_eq!(e.pair_lookahead(1, 0), Some(11));
+            let a_id = CompId(0);
+            let b_id = CompId(1);
+            e.add_to(0, pinger("a", b_id, l_ab, 3));
+            e.add_to(1, pinger("b", a_id, l_ba, 3));
+            e.set_threads(threads);
+            e.post(0, a_id, Msg::Tick);
+            e.post(0, b_id, Msg::Tick);
+            let end = e.run_to_completion();
+            (end, e.events_processed())
+        };
+        let sequential = {
+            let mut e = Engine::new();
+            let l_ab = e.add_link(Link::new("a->b", 10, 64));
+            let l_ba = e.add_link(Link::new("b->a", 10, 64));
+            let a_id = CompId(0);
+            let b_id = CompId(1);
+            e.add(pinger("a", b_id, l_ab, 3));
+            e.add(pinger("b", a_id, l_ba, 3));
+            e.post(0, a_id, Msg::Tick);
+            e.post(0, b_id, Msg::Tick);
+            let end = e.run_to_completion();
+            (end, e.events_processed())
+        };
+        for threads in [1, 2] {
+            assert_eq!(sharded(threads), sequential, "threads={threads}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "use add_link_to for shard-local links")]
+    fn declaring_a_link_to_the_same_shard_is_rejected() {
+        let mut e = Engine::sharded(2, 10);
+        e.add_link_between(0, 0, Link::new("self", 5, 64));
+    }
+
+    #[test]
+    #[should_panic(expected = "declared after the engine ran")]
+    fn declaring_a_link_after_running_is_rejected() {
+        let mut e = Engine::sharded(2, 10);
+        let a = CompId(0);
+        e.add_to(0, pinger("a", CompId(1), LinkId(0), 0));
+        e.add_to(1, pinger("b", a, LinkId(0), 0));
+        e.post(0, a, Msg::Tick);
+        e.run_to_completion();
+        e.add_link_between(0, 1, Link::new("late", 10, 64));
+    }
+
+    #[test]
+    fn occupancy_counters_fold_to_the_engine_totals() {
+        let mut e = Engine::sharded(2, 11);
+        let l_ab = e.add_link_between(0, 1, Link::new("a->b", 10, 64));
+        let l_ba = e.add_link_between(1, 0, Link::new("b->a", 10, 64));
+        let a_id = CompId(0);
+        let b_id = CompId(1);
+        e.add_to(0, pinger("a", b_id, l_ab, 3));
+        e.add_to(1, pinger("b", a_id, l_ba, 3));
+        e.post(0, a_id, Msg::Tick);
+        e.run_to_completion();
+        let occ = e.shard_occupancy();
+        assert_eq!(occ.len(), 2);
+        assert_eq!(occ.iter().map(|o| o.events).sum::<u64>(), e.events_processed());
+        assert!(occ.iter().all(|o| o.windows >= 1), "every shard ran windows: {occ:?}");
+        assert!(
+            occ.iter().all(|o| o.idle_windows <= o.windows),
+            "idle windows are a subset: {occ:?}"
+        );
     }
 
     /// Requester/responder pair exercising the pooled Req/Rsp path.

@@ -5,9 +5,11 @@
 //! controllers, CUs, switches) connected by bandwidth-modelled *links*.
 //!
 //! The component graph is partitioned into *logical shards* ([`shard`];
-//! the coordinator uses one per GPU plus a hub) that advance in
-//! conservative lock-step time windows sized by the minimum cross-shard
-//! link latency, so independent partitions can execute on worker threads
+//! the coordinator uses one per GPU plus a slim hub) that advance in
+//! conservative lock-step time windows sized adaptively from a
+//! per-shard-pair lookahead matrix (derived from the cross-shard links
+//! declared via [`Engine::add_link_between`], with solo-shard early
+//! close), so independent partitions can execute on worker threads
 //! ([`Engine::set_threads`]). A single-shard engine ([`Engine::new`]) is
 //! the classic sequential event loop.
 //!
@@ -30,7 +32,7 @@ pub mod pool;
 pub mod queue;
 pub mod shard;
 
-pub use engine::{CompId, Component, Ctx, Engine};
+pub use engine::{CompId, Component, Ctx, Engine, ShardOccupancy};
 pub use link::{Link, LinkId};
 pub use msg::{MemReq, MemRsp, Msg, ReqId, ReqKind, TsPair};
 pub use pool::{MsgPool, PoolCounters};

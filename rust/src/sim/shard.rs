@@ -4,13 +4,26 @@
 //! coordinator uses one per GPU plus a hub for the switch complex, TSU
 //! stacks and driver — see `coordinator::topology`). Each shard owns its
 //! own [`EventQueue`], [`MsgPool`], link table and sequence counter; the
-//! engine advances all shards in lock-step windows of
-//! `lookahead = min cross-shard link latency + 1` cycles:
+//! engine advances all shards in lock-step conservative windows sized by
+//! a **per-shard-pair lookahead matrix** ([`Lookahead`], derived from the
+//! cross-shard links declared with `Engine::add_link_between`):
 //!
 //! 1. **plan** — route the previous window's cross-shard traffic from
 //!    per-shard outboxes into the destination queues, then position the
-//!    next window at `T = min` next event time across shards,
-//!    `[T, T + lookahead)`;
+//!    next window `[T, E)` adaptively: `E = min(T + base, min over
+//!    non-empty shards i of (t_i + row_min(i)))`, where `t_i` is shard
+//!    `i`'s next event time and `row_min(i)` is the smallest
+//!    `latency + 1` over its declared outgoing cross-shard links
+//!    (unbounded when it has none — such a shard can only emit
+//!    barrier-quantized control hops, which are safe at any window).
+//!    A shard whose next event lies at or beyond `E` contributes no
+//!    events and therefore no constraint, so e.g. an RDMA topology's
+//!    301-cycle PCIe floor only applies while a shard that actually owns
+//!    a PCIe link is active — the window shrinks to the per-pair minimum
+//!    in play. When exactly **one** shard holds events the planner skips
+//!    windows entirely (*solo mode*): that shard runs unbounded until its
+//!    first cross-shard send, closing the window early when no
+//!    cross-shard traffic is pending at all;
 //! 2. **run** — every shard independently dispatches its local events
 //!    inside the window. Cross-shard sends land in the outbox: link
 //!    traffic keeps its exact delivery time (guaranteed `>= T +
@@ -32,11 +45,15 @@
 //! `tests/shard_determinism.rs`.
 //!
 //! The one semantic knob is control-message quantization (step 2): it
-//! shifts driver/fence hops to window boundaries by up to `lookahead`
-//! cycles. The shift is itself deterministic (window positions depend
-//! only on event times), applies identically at every shard/thread
-//! count, and only touches linkless cross-shard hops — never the
-//! link-modelled memory traffic the paper's figures count.
+//! shifts driver/fence hops to window boundaries by up to the window
+//! span. The shift is itself deterministic (window positions depend
+//! only on event times and the configuration-derived matrix), applies
+//! identically at every shard/thread count, and only touches linkless
+//! cross-shard hops — never the link-modelled memory traffic the
+//! paper's figures count. In solo mode those hops deliver at their
+//! natural time instead: every other shard is drained, so nothing can
+//! have raced past the delivery point, and the mode choice itself is a
+//! pure function of the queue states at the barrier.
 //!
 //! # Pause/resume caveat
 //!
@@ -74,6 +91,20 @@ use crate::sim::Cycle;
 /// magnitude beyond the largest paper-grid cell.
 pub const SEQ_SHARD_BITS: u32 = 40;
 
+/// The window-planning view of the per-shard-pair lookahead matrix.
+///
+/// `base` is the fallback/ceiling span (the constructor's lookahead):
+/// windows never exceed it, so engines that declare no cross-shard
+/// links reproduce the fixed-lookahead behavior exactly, and mixed
+/// engines (declared links plus legacy undeclared `add_link_to` links)
+/// never open a window wider than the legacy contract allows.
+/// `row_min[s]` is the smallest `latency + 1` over shard `s`'s declared
+/// outgoing cross-shard links, `Cycle::MAX` when it has none.
+pub(crate) struct Lookahead {
+    pub base: Cycle,
+    pub row_min: Vec<Cycle>,
+}
+
 /// Where a globally-numbered component or link lives.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct Loc {
@@ -106,6 +137,11 @@ pub struct Shard {
     /// Time of the last event this shard dispatched.
     pub(crate) now: Cycle,
     pub(crate) events_processed: u64,
+    /// Windows this shard executed (occupancy profiling, host-only).
+    pub(crate) windows: u64,
+    /// Executed windows that dispatched no event (the shard's next
+    /// event lay beyond the bound — pure barrier overhead).
+    pub(crate) idle_windows: u64,
     pub(crate) outbox: Vec<OutEvent>,
 }
 
@@ -120,6 +156,8 @@ impl Shard {
             seq: (id as u64) << SEQ_SHARD_BITS,
             now: 0,
             events_processed: 0,
+            windows: 0,
+            idle_windows: 0,
             outbox: Vec::new(),
         }
     }
@@ -142,10 +180,25 @@ impl Shard {
     /// [`Ctx::send`]) and cross-shard control messages are quantized up
     /// to it. The single-shard fast path passes `Cycle::MAX` (nothing
     /// can cross).
-    pub(crate) fn run_window(&mut self, bound: Cycle, window_end: Cycle, tables: &Tables) {
+    ///
+    /// `stop_on_cross` is solo mode (see the module docs): the shard is
+    /// the only one holding events, `window_end` is the window *start*
+    /// (cross-shard traffic keeps its natural time — every peer is
+    /// drained, so nothing can have raced past it), and dispatch stops
+    /// after the first event that parked cross-shard traffic in the
+    /// outbox, which re-plans the window at the next barrier.
+    pub(crate) fn run_window(
+        &mut self,
+        bound: Cycle,
+        window_end: Cycle,
+        tables: &Tables,
+        stop_on_cross: bool,
+    ) {
+        self.windows += 1;
+        let entered = self.events_processed;
         while let Some(t) = self.queue.next_time() {
-            if t > bound {
-                return;
+            if t > bound || (stop_on_cross && !self.outbox.is_empty()) {
+                break;
             }
             let ev = self.queue.pop().expect("peeked event vanished");
             debug_assert!(ev.time >= self.now, "time went backwards");
@@ -172,6 +225,9 @@ impl Shard {
             comp.handle(self.now, ev.msg, &mut ctx);
             self.comps[idx] = Some(comp);
         }
+        if self.events_processed == entered {
+            self.idle_windows += 1;
+        }
     }
 }
 
@@ -183,6 +239,9 @@ enum Plan {
     Paused,
     /// Execute `[T, end)` clipped to `bound = min(end - 1, limit)`.
     Window { bound: Cycle, end: Cycle },
+    /// Exactly one shard holds events: run it alone from `start` until
+    /// its first cross-shard send (or `bound`), no window ceiling.
+    Solo { shard: usize, bound: Cycle, start: Cycle },
 }
 
 /// Poison-tolerant lock: a panicking cell is reported through the panic
@@ -293,7 +352,7 @@ fn rebalance_pools(cells: &[Mutex<Shard>]) {
 /// The window sequence is then a pure function of the event times, so a
 /// paused-then-resumed run replays the exact windows (and quantization
 /// targets) of an uninterrupted one — the snapshot pause contract.
-fn plan_window(cells: &[Mutex<Shard>], limit: Cycle, lookahead: Cycle, atomic: bool) -> Plan {
+fn plan_window(cells: &[Mutex<Shard>], limit: Cycle, look: &Lookahead, atomic: bool) -> Plan {
     // Rebalance only when a box actually changed shards: occupancy is
     // untouched by local traffic (boxes return to their own pool), so
     // skipping quiet barriers loses nothing. The condition is a
@@ -303,16 +362,35 @@ fn plan_window(cells: &[Mutex<Shard>], limit: Cycle, lookahead: Cycle, atomic: b
         rebalance_pools(cells);
     }
     let mut t_min: Option<Cycle> = None;
-    for c in cells {
+    // Adaptive ceiling: a shard with events at `t_i` can emit nothing
+    // that lands before `t_i + row_min(i)`, so the window may extend to
+    // the minimum of those horizons (capped by `base`). Shards with an
+    // all-unbounded row (no declared cross links) impose no ceiling —
+    // their cross-shard hops quantize to whatever barrier is chosen.
+    let mut horizon = Cycle::MAX;
+    let mut non_empty = 0usize;
+    let mut last_busy = 0usize;
+    for (i, c) in cells.iter().enumerate() {
         if let Some(t) = lock(c).queue.next_time() {
             t_min = Some(t_min.map_or(t, |m: Cycle| m.min(t)));
+            horizon = horizon.min(t.saturating_add(look.row_min[i]));
+            non_empty += 1;
+            last_busy = i;
         }
     }
     match t_min {
         None => Plan::Idle,
         Some(t) if t > limit => Plan::Paused,
+        Some(t) if non_empty == 1 => Plan::Solo {
+            shard: last_busy,
+            // Clipped mode respects `limit`; atomic mode runs to the
+            // natural stop (first cross-shard send or drain) so the
+            // window sequence stays limit-independent.
+            bound: if atomic { Cycle::MAX } else { limit },
+            start: t,
+        },
         Some(t) => {
-            let end = t.saturating_add(lookahead);
+            let end = horizon.min(t.saturating_add(look.base));
             // `.max(t)` guards the saturated edge (an event at
             // Cycle::MAX would otherwise sit above bound forever); in
             // the clipped mode t <= limit here, so the clamp order
@@ -340,18 +418,22 @@ const ST_DONE: u64 = 2;
 pub(crate) fn run_windows(
     shards: Vec<Shard>,
     tables: &Tables,
-    lookahead: Cycle,
+    look: &Lookahead,
     threads: usize,
     limit: Cycle,
     atomic: bool,
 ) -> (Vec<Shard>, Option<Cycle>) {
     let n = shards.len();
+    debug_assert_eq!(look.row_min.len(), n, "lookahead matrix built for another shard count");
     let workers = threads.clamp(1, n);
     let cells: Vec<Mutex<Shard>> = shards.into_iter().map(Mutex::new).collect();
     let barrier = Barrier::new(workers);
     let state = AtomicU64::new(ST_RUN);
     let bound = AtomicU64::new(0);
     let end = AtomicU64::new(0);
+    // Sentinel in the `solo` atomic: no solo window planned.
+    const NO_SOLO: u64 = u64::MAX;
+    let solo = AtomicU64::new(NO_SOLO);
     let panicked = AtomicBool::new(false);
     let payload: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
 
@@ -375,12 +457,21 @@ pub(crate) fn run_windows(
                     if panicked.load(Ordering::SeqCst) {
                         return ST_DONE;
                     }
-                    match plan_window(&cells, limit, lookahead, atomic) {
+                    match plan_window(&cells, limit, look, atomic) {
                         Plan::Idle => ST_DONE,
                         Plan::Paused => ST_PAUSED,
                         Plan::Window { bound: b, end: e } => {
                             bound.store(b, Ordering::SeqCst);
                             end.store(e, Ordering::SeqCst);
+                            solo.store(NO_SOLO, Ordering::SeqCst);
+                            ST_RUN
+                        }
+                        Plan::Solo { shard, bound: b, start } => {
+                            bound.store(b, Ordering::SeqCst);
+                            // `end` carries the window *start* in solo
+                            // mode: cross traffic keeps natural times.
+                            end.store(start, Ordering::SeqCst);
+                            solo.store(shard as u64, Ordering::SeqCst);
                             ST_RUN
                         }
                     }
@@ -398,10 +489,20 @@ pub(crate) fn run_windows(
                 return;
             }
             let (b, e) = (bound.load(Ordering::SeqCst), end.load(Ordering::SeqCst));
+            let s = solo.load(Ordering::SeqCst);
             record(panic::catch_unwind(AssertUnwindSafe(|| {
+                if s != NO_SOLO {
+                    // Solo window: only the owning worker runs, with
+                    // early close on the first cross-shard send.
+                    let i = s as usize;
+                    if i % workers == w {
+                        lock(&cells[i]).run_window(b, e, tables, true);
+                    }
+                    return;
+                }
                 let mut i = w;
                 while i < n {
-                    lock(&cells[i]).run_window(b, e, tables);
+                    lock(&cells[i]).run_window(b, e, tables, false);
                     i += workers;
                 }
             })));

@@ -37,8 +37,10 @@ use crate::config::{Coherence, SystemConfig};
 use crate::dram::storage::SharedMemory;
 use crate::sim::{Cycle, Engine};
 
-/// Current (and only) snapshot format version.
-pub const FORMAT_VERSION: u64 = 1;
+/// Current snapshot format version. v2: per-shard occupancy counters
+/// (windows/idle_windows) joined the engine section, and the canonical
+/// configuration gained the `fabric`/`shard_groups` partition keys.
+pub const FORMAT_VERSION: u64 = 2;
 
 const MAGIC: &[u8; 8] = b"HALCSNP\0";
 
@@ -95,7 +97,8 @@ fn canonical_config(cfg: &SystemConfig, workload: &str) -> String {
          coherence={coher};l1_bytes={};l1_ways={};l2_banks={};l2_bank_bytes={};l2_ways={};\
          stacks_per_gpu={};gpu_mem_bytes={};l1_lat={};l2_lat={};mc_lat={};alu_lat={};\
          onchip_lat={};swc_lat={};pcie_lat={};gpu_uplink_bw={};hbm_bw={};pcie_bw={};\
-         mshr_l1={};mshr_l2={};tsu_entries={};scale={:#x};faults={faults};workload={workload}",
+         mshr_l1={};mshr_l2={};tsu_entries={};scale={:#x};fabric={fabric:?};\
+         shard_groups={groups};faults={faults};workload={workload}",
         cfg.topology,
         cfg.n_gpus,
         cfg.cus_per_gpu,
@@ -122,6 +125,8 @@ fn canonical_config(cfg: &SystemConfig, workload: &str) -> String {
         cfg.mshr_l2,
         cfg.tsu_entries,
         cfg.scale.to_bits(),
+        fabric = cfg.fabric,
+        groups = crate::coordinator::topology::shard_groups_value(&cfg.shard_groups),
         faults = faults,
         workload = workload,
     )
@@ -347,6 +352,15 @@ mod tests {
         let mut faulted = base.clone();
         faulted.set("faults", "seed=7;degrade=0.2").unwrap();
         assert_ne!(config_fingerprint(&faulted, "fir"), fp);
+
+        // The fabric partition and shard grouping change the event
+        // order, so they are part of the identity — unlike `shards`.
+        let mut hubbed = base.clone();
+        hubbed.set("fabric", "hub").unwrap();
+        assert_ne!(config_fingerprint(&hubbed, "fir"), fp, "fabric is sim-affecting");
+        let mut grouped = base.clone();
+        grouped.set("shard_groups", "0,0,1,1").unwrap();
+        assert_ne!(config_fingerprint(&grouped, "fir"), fp, "shard_groups is sim-affecting");
     }
 
     #[test]

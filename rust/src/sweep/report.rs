@@ -226,6 +226,15 @@ fn metrics_json(m: &RunMetrics, include_host: bool) -> Value {
         o.push(("events_per_sec".into(), Value::f64(m.events_per_sec)));
         o.push(("pool_fresh_boxes".into(), Value::u64(m.pool_fresh_boxes)));
         o.push(("pool_reused_boxes".into(), Value::u64(m.pool_reused_boxes)));
+        // Per-shard occupancy profile (index = engine shard id, hub
+        // last). Deterministic like the pool counters, but it describes
+        // the engine partition rather than the simulated machine, so it
+        // stays with the host section. Input for profile-guided
+        // `shard_groups` rebalancing.
+        let arr = |v: &[u64]| Value::Arr(v.iter().map(|&x| Value::u64(x)).collect());
+        o.push(("shard_events".into(), arr(&m.shard_events)));
+        o.push(("shard_windows".into(), arr(&m.shard_windows)));
+        o.push(("shard_idle_windows".into(), arr(&m.shard_idle_windows)));
     }
     o.extend([
         ("cu_loads".into(), Value::u64(m.cu_loads)),
@@ -390,6 +399,13 @@ fn metrics_from_json(m: &Value, what: &str) -> Result<RunMetrics, String> {
     // Host-perf fields are informational; tolerate their absence (a
     // canonical document) with zero defaults.
     let host = |key: &str| m.get(key).and_then(Value::as_f64).unwrap_or(0.0);
+    // Host-only per-shard arrays: absent in canonical documents.
+    let host_arr = |key: &str| -> Vec<u64> {
+        m.get(key)
+            .and_then(Value::as_arr)
+            .map(|a| a.iter().map(|v| v.as_f64().unwrap_or(0.0) as u64).collect())
+            .unwrap_or_default()
+    };
     let mut out = RunMetrics {
         cycles: req_u64(m, "cycles", what)?,
         events: req_u64(m, "events", what)?,
@@ -397,6 +413,9 @@ fn metrics_from_json(m: &Value, what: &str) -> Result<RunMetrics, String> {
         events_per_sec: host("events_per_sec"),
         pool_fresh_boxes: host("pool_fresh_boxes") as u64,
         pool_reused_boxes: host("pool_reused_boxes") as u64,
+        shard_events: host_arr("shard_events"),
+        shard_windows: host_arr("shard_windows"),
+        shard_idle_windows: host_arr("shard_idle_windows"),
         cu_loads: req_u64(m, "cu_loads", what)?,
         cu_stores: req_u64(m, "cu_stores", what)?,
         mm_reads: req_u64(m, "mm_reads", what)?,
@@ -590,11 +609,20 @@ mod tests {
             assert!(m.get("host_seconds").is_some());
             assert!(m.get("events_per_sec").is_some());
             assert!(m.get("cu_loads").unwrap().as_f64().is_some());
+            // Per-shard occupancy rides in the host section; the shard
+            // events fold back to the engine total.
+            let occ = m.get("shard_events").unwrap().as_arr().unwrap();
+            let total: f64 = occ.iter().map(|v| v.as_f64().unwrap()).sum();
+            assert_eq!(total, m.get("events").unwrap().as_f64().unwrap());
+            assert!(m.get("shard_windows").is_some());
+            assert!(m.get("shard_idle_windows").is_some());
         }
         // Canonical form drops host timing and nothing else.
         let canon = to_json_canonical(&res);
         assert!(!canon.contains("host_seconds"));
         assert!(!canon.contains("events_per_sec"));
+        assert!(!canon.contains("shard_events"));
+        assert!(!canon.contains("shard_windows"));
         json::parse(&canon).unwrap();
     }
 

@@ -99,10 +99,13 @@ impl Component for Node {
 
 fn run_ring(threads: usize) -> (Cycle, u64, Vec<Vec<(Cycle, u64)>>) {
     const N: u32 = 3;
-    // Ring links: latency 9 + 1 serialization cycle = the lookahead 10.
+    // Ring links declared per shard pair: latency 9 + 1 serialization
+    // cycle = the per-pair lookahead 10, which equals the base, so the
+    // adaptive window matrix reproduces the fixed-lookahead schedule.
     let mut e = Engine::sharded(N, 10);
-    let links: Vec<LinkId> =
-        (0..N).map(|i| e.add_link_to(i, Link::new(format!("l{i}"), 9, 64))).collect();
+    let links: Vec<LinkId> = (0..N)
+        .map(|i| e.add_link_between(i, (i + 1) % N, Link::new(format!("l{i}"), 9, 64)))
+        .collect();
     for i in 0..N {
         let next = CompId((i + 1) % N);
         e.add_to(
@@ -133,6 +136,44 @@ fn windowed_merge_is_invariant_to_worker_threads() {
         assert_eq!(got.1, reference.1, "event count differs at threads={threads}");
         assert_eq!(got.2, reference.2, "delivery traces differ at threads={threads}");
     }
+}
+
+#[test]
+fn protocol_smokes_are_byte_identical_at_g_plus_1_shards() {
+    // shards = G+1 = 3 for the smoke geometry (n_gpus = 2): one worker
+    // per logical shard of the partitioned ports fabric. Each protocol
+    // crosses shards differently (HALCONE through per-GPU fabric ports
+    // to remote MCs/TSUs, HMG/NC over per-GPU PCIe ports).
+    for name in ["smoke-halcone", "smoke-hmg", "smoke-none"] {
+        let spec = CampaignSpec::builtin(name).unwrap();
+        let serial = canonical_with_shards(&spec, 1);
+        let parallel = canonical_with_shards(&spec, 3);
+        assert_eq!(serial, parallel, "{name} differs between shards=1 and shards=3");
+    }
+}
+
+#[test]
+fn faulted_run_is_byte_identical_across_shards() {
+    // Fault-link ordinals are assigned in configuration order, which now
+    // includes the inter-port fabric links — the schedule must replay
+    // identically at every worker-thread count.
+    let spec = CampaignSpec::parse(
+        "name = faulted-shards\n\
+         presets = SM-WT-C-HALCONE,RDMA-WB-NC\n\
+         workloads = fir\n\
+         set.n_gpus = 2\n\
+         set.cus_per_gpu = 2\n\
+         set.wavefronts_per_cu = 2\n\
+         set.l2_banks = 2\n\
+         set.stacks_per_gpu = 2\n\
+         set.gpu_mem_bytes = 67108864\n\
+         set.scale = 0.05\n\
+         set.faults = seed=7;window=200;degrade=0.5;latmul=3;bwdiv=2;outage=0.4\n",
+    )
+    .unwrap();
+    let serial = canonical_with_shards(&spec, 1);
+    let parallel = canonical_with_shards(&spec, 3);
+    assert_eq!(serial, parallel, "faulted canonical artifact differs across shards");
 }
 
 #[test]

@@ -181,8 +181,8 @@ fn a_bumped_format_version_is_refused_by_name() {
     let cfg = small("SM-WT-C-HALCONE");
     let cold = run_cold(&cfg, "rl");
     let (bytes, _) = run_save(&cfg, "rl", cold.cycles / 2);
-    // Byte 8 is the version varint (FORMAT_VERSION = 1 encodes as one
-    // byte); a future version must be refused, not misparsed.
+    // Byte 8 is the version varint (small FORMAT_VERSION values encode
+    // as one byte); a future version must be refused, not misparsed.
     assert_eq!(bytes[8] as u64, snapshot::FORMAT_VERSION);
     let mut bumped = bytes.clone();
     bumped[8] = (snapshot::FORMAT_VERSION + 1) as u8;

@@ -1,0 +1,89 @@
+//! Property tests for the partitioned fabric (ISSUE 9): the engine
+//! shard that owns each MC/TSU must match `AddrMap::stack_owner` for
+//! every (n_gpus, stacks_per_gpu) geometry, under both topologies and
+//! under profile-guided shard grouping.
+
+use halcone::config::{Fabric, SystemConfig};
+use halcone::coordinator::topology::{self, plan_shard_groups};
+use halcone::mem::addr::Topology;
+use halcone::workloads;
+
+fn cfg_for(preset: &str, gpus: u32, spg: u32) -> SystemConfig {
+    let mut cfg = SystemConfig::preset(preset);
+    cfg.n_gpus = gpus;
+    cfg.cus_per_gpu = 1;
+    cfg.wavefronts_per_cu = 1;
+    cfg.l2_banks = 2;
+    cfg.stacks_per_gpu = spg;
+    cfg.gpu_mem_bytes = 16 << 20;
+    cfg.scale = 0.02;
+    cfg
+}
+
+fn build(cfg: &SystemConfig) -> topology::System {
+    let p = cfg.workload_params();
+    topology::build(cfg, workloads::build("rl", &p))
+}
+
+#[test]
+fn tsu_ownership_matches_addr_map_for_every_geometry() {
+    // The TSU lives inside its MemCtrl, so the MC's shard is the TSU's.
+    for preset in ["SM-WT-C-HALCONE", "RDMA-WB-NC"] {
+        for gpus in [1u32, 2, 3, 4] {
+            for spg in [1u32, 2, 4] {
+                let cfg = cfg_for(preset, gpus, spg);
+                let map = cfg.addr_map();
+                let sys = build(&cfg);
+                assert_eq!(sys.mcs.len() as u32, map.total_stacks());
+                for (si, &mc) in sys.mcs.iter().enumerate() {
+                    assert_eq!(
+                        sys.engine.shard_of(mc),
+                        map.stack_owner(si as u32),
+                        "{preset} gpus={gpus} spg={spg} mm{si}"
+                    );
+                }
+                // The hub shard holds only the driver: no MC may land on
+                // it under the ports fabric.
+                let hub = sys.engine.n_shards() - 1;
+                assert!(sys.mcs.iter().all(|&mc| sys.engine.shard_of(mc) != hub));
+                assert_eq!(sys.engine.shard_of(sys.driver), hub);
+            }
+        }
+    }
+}
+
+#[test]
+fn hub_fabric_parks_sm_stacks_on_the_hub_only() {
+    for (preset, topo) in [("SM-WT-NC", Topology::SharedMem), ("RDMA-WB-NC", Topology::Rdma)] {
+        let mut cfg = cfg_for(preset, 2, 2);
+        cfg.fabric = Fabric::Hub;
+        let map = cfg.addr_map();
+        let sys = build(&cfg);
+        let hub = sys.engine.n_shards() - 1;
+        for (si, &mc) in sys.mcs.iter().enumerate() {
+            let expect = match topo {
+                Topology::SharedMem => hub,
+                Topology::Rdma => map.stack_owner(si as u32),
+            };
+            assert_eq!(sys.engine.shard_of(mc), expect, "{preset} mm{si}");
+        }
+    }
+}
+
+#[test]
+fn grouped_partition_respects_planned_ownership() {
+    // A profile-guided grouping folds GPUs — stack ownership must follow
+    // the owning GPU into its group.
+    let groups = plan_shard_groups(&[100, 10, 90, 20], 2);
+    assert_eq!(groups.len(), 4);
+    let mut cfg = cfg_for("SM-WT-C-HALCONE", 4, 2);
+    cfg.shard_groups = groups.clone();
+    let map = cfg.addr_map();
+    let sys = build(&cfg);
+    let n_groups = groups.iter().max().unwrap() + 1;
+    assert_eq!(sys.engine.n_shards(), n_groups + 1);
+    for (si, &mc) in sys.mcs.iter().enumerate() {
+        let owner = map.stack_owner(si as u32) as usize;
+        assert_eq!(sys.engine.shard_of(mc), groups[owner], "mm{si}");
+    }
+}
