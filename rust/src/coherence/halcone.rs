@@ -31,6 +31,7 @@
 //! line bytes live in the cache array's flat backing — the memory-
 //! transaction path allocates nothing in steady state (see docs/PERF.md).
 
+use crate::coherence::tsproto::{self, TsPolicy};
 use crate::coherence::{L1Routes, L2Routes, TsMeta};
 use crate::mem::cache::{CacheArray, CacheParams};
 use crate::mem::fxhash::FxHashMap;
@@ -39,11 +40,6 @@ use crate::mem::LineBuf;
 use crate::metrics::CacheCtrlStats;
 use crate::sim::msg::{MemReq, MemRsp, TsPair};
 use crate::sim::{CompId, Component, Ctx, Cycle, Msg, ReqKind};
-
-/// Alg. 1/2/4/5 timestamp merge for a response from the level below.
-fn merge_ts(cts: u64, rsp: TsPair) -> TsMeta {
-    TsMeta { wts: cts.max(rsp.wts), rts: (rsp.wts + 1).max(rsp.rts) }
-}
 
 /// Snapshot serializers for the per-line timestamp metadata
 /// (docs/SNAPSHOT.md).
@@ -84,6 +80,8 @@ pub struct HalconeL1 {
     ts_bits: u32,
     /// Conservative full flushes forced by `cts` epoch crossings.
     pub rollover_flushes: u64,
+    /// Which timestamp protocol this controller speaks (docs/PROTOCOLS.md).
+    policy: TsPolicy,
 }
 
 /// Merge buffered (addr, bytes) writes into maximal contiguous runs.
@@ -134,7 +132,14 @@ impl HalconeL1 {
             line,
             ts_bits: 0,
             rollover_flushes: 0,
+            policy: TsPolicy::Halcone,
         }
+    }
+
+    /// Select the timestamp protocol (builder-style; default HALCONE).
+    pub fn with_policy(mut self, policy: TsPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     /// Enable the finite-width timestamp model (see
@@ -144,20 +149,25 @@ impl HalconeL1 {
     }
 
     /// Advance the cache clock. Under an N-bit counter, crossing a 2^N
-    /// epoch boundary conservatively flushes the whole array — HALCONE
-    /// caches are write-through, so every resident line is clean and
-    /// the flush can never lose data, only force refetches. Timestamps
-    /// stay monotonic `u64`s so cross-epoch comparisons remain
+    /// epoch boundary conservatively flushes the whole array — every
+    /// timestamp protocol here is write-through, so every resident line
+    /// is clean and the flush can never lose data, only force refetches.
+    /// Timestamps stay monotonic `u64`s so cross-epoch comparisons remain
     /// well-defined while the rollover's perf cost is charged.
     fn advance_cts(&mut self, to: u64) {
-        let old = self.cts;
-        self.cts = old.max(to);
-        if self.ts_bits != 0
-            && crate::faults::epoch_of(self.cts, self.ts_bits)
-                != crate::faults::epoch_of(old, self.ts_bits)
-        {
+        if tsproto::clock_advance(&mut self.cts, to, self.ts_bits) {
             self.cache.clear();
             self.rollover_flushes += 1;
+        }
+    }
+
+    /// Tardis/HLC: a read observes the line's version, so the cache clock
+    /// must catch up to its write timestamp before ordering later
+    /// accesses. HALCONE reads leave `cts` untouched (Alg. 1) — its merge
+    /// already lifts `rts` past the clock instead.
+    fn observe_read(&mut self, line_wts: u64) {
+        if self.policy != TsPolicy::Halcone {
+            self.advance_cts(line_wts);
         }
     }
 
@@ -210,6 +220,11 @@ impl HalconeL1 {
     }
 
     fn on_cu_req(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
+        // HLC: the cache clock is floored by coarse physical time, so
+        // leases expire in hybrid time even on an idle clock.
+        if self.policy == TsPolicy::Hlc {
+            self.advance_cts(tsproto::hlc_phys(now));
+        }
         let la = self.line_base(req.addr);
         if let Some(entry) = self.mshr.get(la) {
             // Write arriving while the line is write-locked: coalesce into
@@ -237,8 +252,12 @@ impl HalconeL1 {
                     if cts <= line.meta.rts {
                         // Copy only the requested bytes (hits are the
                         // hottest path; cloning whole lines showed in perf).
-                        hit_data = Some(LineBuf::from_slice(
-                            &line.data[off..off + req.size as usize],
+                        // The wts copy rides along for the Tardis/HLC
+                        // clock catch-up below (the borrow ends here and
+                        // `advance_cts` may flush the array).
+                        hit_data = Some((
+                            LineBuf::from_slice(&line.data[off..off + req.size as usize]),
+                            line.meta.wts,
                         ));
                     } else {
                         // Tag hit, lease expired: coherency miss (Alg. 1).
@@ -249,10 +268,11 @@ impl HalconeL1 {
                     self.stats.misses += 1;
                     self.tstats.slot(req.tenant).misses += 1;
                 }
-                if let Some(data) = hit_data {
+                if let Some((data, line_wts)) = hit_data {
                     self.cache.record(true);
                     self.stats.hits += 1;
                     self.tstats.slot(req.tenant).hits += 1;
+                    self.observe_read(line_wts);
                     self.respond_sliced(&req, data, ctx);
                     return;
                 }
@@ -318,20 +338,20 @@ impl HalconeL1 {
                 self.send_down(down, ctx);
             }
         }
-        let _ = now;
     }
 
     fn on_down_rsp(&mut self, now: Cycle, rsp: MemRsp, ctx: &mut Ctx) {
         self.stats.rsps_down += 1;
         let la = self.line_base(rsp.addr);
         let entry = self.mshr.retire(la);
-        let ts = rsp.ts.expect("HALCONE response must carry timestamps");
-        let meta = merge_ts(self.cts, ts);
+        let ts = rsp.ts.expect("timestamp-protocol response must carry timestamps");
+        let meta = tsproto::merge_ts(self.policy, self.cts, ts);
         match entry.kind {
             MshrKind::Fill => {
                 debug_assert_eq!(rsp.data.len() as u64, self.line);
                 // Clean insert (WT lines are never dirty); evictions drop.
                 self.cache.insert(la, &rsp.data, false, meta);
+                self.observe_read(meta.wts);
                 self.respond_word(&entry.primary, &rsp.data, ctx);
             }
             MshrKind::WriteLock => {
@@ -510,6 +530,8 @@ pub struct HalconeL2 {
     ts_bits: u32,
     /// Conservative full flushes forced by `cts` epoch crossings.
     pub rollover_flushes: u64,
+    /// Which timestamp protocol this controller speaks (docs/PROTOCOLS.md).
+    policy: TsPolicy,
 }
 
 impl HalconeL2 {
@@ -534,7 +556,14 @@ impl HalconeL2 {
             line,
             ts_bits: 0,
             rollover_flushes: 0,
+            policy: TsPolicy::Halcone,
         }
+    }
+
+    /// Select the timestamp protocol (builder-style; default HALCONE).
+    pub fn with_policy(mut self, policy: TsPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     /// Enable the finite-width timestamp model (see
@@ -547,14 +576,17 @@ impl HalconeL2 {
     /// conservatively flushes the (write-through, all-clean) array —
     /// the same model as [`HalconeL1::advance_cts`].
     fn advance_cts(&mut self, to: u64) {
-        let old = self.cts;
-        self.cts = old.max(to);
-        if self.ts_bits != 0
-            && crate::faults::epoch_of(self.cts, self.ts_bits)
-                != crate::faults::epoch_of(old, self.ts_bits)
-        {
+        if tsproto::clock_advance(&mut self.cts, to, self.ts_bits) {
             self.cache.clear();
             self.rollover_flushes += 1;
+        }
+    }
+
+    /// Tardis/HLC read-side clock catch-up; see
+    /// [`HalconeL1::observe_read`].
+    fn observe_read(&mut self, line_wts: u64) {
+        if self.policy != TsPolicy::Halcone {
+            self.advance_cts(line_wts);
         }
     }
 
@@ -589,6 +621,11 @@ impl HalconeL2 {
     }
 
     fn on_l1_req(&mut self, now: Cycle, req: MemReq, ctx: &mut Ctx) {
+        // HLC: floor the bank clock by coarse physical time (see
+        // `HalconeL1::on_cu_req`).
+        if self.policy == TsPolicy::Hlc {
+            self.advance_cts(tsproto::hlc_phys(now));
+        }
         let la = self.line_base(req.addr);
         if self.mshr.get(la).is_some() {
             self.stats.mshr_merges += 1;
@@ -611,6 +648,7 @@ impl HalconeL2 {
                 if let Some((data, meta)) = hit {
                     self.cache.record(true);
                     self.stats.hits += 1;
+                    self.observe_read(meta.wts);
                     self.respond_up(&req, data, meta, ctx);
                     return;
                 }
@@ -660,18 +698,18 @@ impl HalconeL2 {
                 self.send_mm(down, ctx);
             }
         }
-        let _ = now;
     }
 
     fn on_mm_rsp(&mut self, now: Cycle, rsp: MemRsp, ctx: &mut Ctx) {
         self.stats.rsps_down += 1;
         let la = self.line_base(rsp.addr);
         let entry = self.mshr.retire(la);
-        let ts = rsp.ts.expect("HALCONE MM response must carry timestamps");
-        let meta = merge_ts(self.cts, ts);
+        let ts = rsp.ts.expect("timestamp-protocol MM response must carry timestamps");
+        let meta = tsproto::merge_ts(self.policy, self.cts, ts);
         match entry.kind {
             MshrKind::Fill => {
                 self.cache.insert(la, &rsp.data, false, meta);
+                self.observe_read(meta.wts);
                 self.respond_up(&entry.primary, rsp.data, meta, ctx);
             }
             MshrKind::WriteLock => {
@@ -829,6 +867,16 @@ mod tests {
         carry_warpts: bool,
         scripts: Vec<Vec<(Cycle, MemReq)>>,
     ) -> Rig {
+        build_policy(TsPolicy::Halcone, n_gpus, leases, carry_warpts, scripts)
+    }
+
+    fn build_policy(
+        policy: TsPolicy,
+        n_gpus: u32,
+        leases: Leases,
+        carry_warpts: bool,
+        scripts: Vec<Vec<(Cycle, MemReq)>>,
+    ) -> Rig {
         let mut e = Engine::new();
         let mem = GlobalMemory::new_shared();
         let map = AddrMap::new(Topology::SharedMem, n_gpus, 1, 1, 1 << 20);
@@ -879,22 +927,28 @@ mod tests {
                 script: scripts[g].clone(),
                 responses: vec![],
             }));
-            e.add(Box::new(HalconeL1::new(
-                format!("g{g}.l1"),
-                routes1,
-                CacheParams::new(16 << 10, 4),
-                64,
-                1,
-                carry_warpts,
-            )));
-            e.add(Box::new(HalconeL2::new(
-                format!("g{g}.l2"),
-                routes2,
-                CacheParams::new(256 << 10, 16),
-                256,
-                10,
-                carry_warpts,
-            )));
+            e.add(Box::new(
+                HalconeL1::new(
+                    format!("g{g}.l1"),
+                    routes1,
+                    CacheParams::new(16 << 10, 4),
+                    64,
+                    1,
+                    carry_warpts,
+                )
+                .with_policy(policy),
+            ));
+            e.add(Box::new(
+                HalconeL2::new(
+                    format!("g{g}.l2"),
+                    routes2,
+                    CacheParams::new(256 << 10, 16),
+                    256,
+                    10,
+                    carry_warpts,
+                )
+                .with_policy(policy),
+            ));
         }
         let mut mc_links = Vec::new();
         for (s, &mc_id) in mc_ids.iter().enumerate() {
@@ -910,7 +964,7 @@ mod tests {
                 mem.clone(),
                 (mc_links[s], sw_id),
                 100,
-                Some(Tsu::new(1 << 16, leases)),
+                Some(Tsu::new(1 << 16, leases).with_policy(policy)),
             )));
         }
         for &p in &prober_ids {
@@ -1120,6 +1174,55 @@ mod tests {
         // a *second* L2 fill before the write completed.
         let s = l1_stats(&rig, 0);
         assert_eq!(s.mshr_merges, 1);
+    }
+
+    #[test]
+    fn tardis_writes_expire_remote_leases_without_broadcasts() {
+        // Same shape as `repeated_writes_self_invalidate_reads`: under
+        // Tardis each write hit bumps the line's stable wts past the read
+        // frontier and the writer's clock follows, so an earlier read
+        // lease on another line expires and the re-read self-invalidates
+        // — no invalidation message ever crosses the fabric.
+        let script = vec![
+            (0, rd(1, 0x100)),
+            (3000, wr(2, 0x200, 1.0)),
+            (6000, wr(3, 0x200, 2.0)),
+            (9000, wr(4, 0x200, 3.0)),
+            (12000, wr(5, 0x200, 4.0)),
+            (15000, rd(6, 0x100)),
+        ];
+        let mut rig =
+            build_policy(TsPolicy::Tardis, 1, Leases::default(), false, vec![script]);
+        rig.mem.borrow_mut().write_f32(0x100, 9.0);
+        rig.engine.run_to_completion();
+        let s1 = l1_stats(&rig, 0);
+        assert!(s1.coherency_misses >= 1, "expected a coherency miss, got {s1:?}");
+        let rsps = responses(&rig, 0);
+        let last = rsps.iter().find(|(_, r)| r.id == 6).unwrap();
+        assert_eq!(f32_of(&last.1), 9.0);
+    }
+
+    #[test]
+    fn hlc_physical_time_expires_idle_leases() {
+        // Two reads of one block, far apart in simulated time and with no
+        // intervening writes. HALCONE's purely logical clock never moves,
+        // so the second read hits; HLC's hybrid clock is floored by
+        // physical time, so the lease expires and the read re-fetches.
+        let script = || vec![(0, rd(1, 0x100)), (1_000_000, rd(2, 0x100))];
+        let mut h = build(1, Leases::default(), false, vec![script()]);
+        h.mem.borrow_mut().write_f32(0x100, 3.0);
+        h.engine.run_to_completion();
+        assert_eq!(l1_stats(&h, 0).coherency_misses, 0);
+
+        let mut hl =
+            build_policy(TsPolicy::Hlc, 1, Leases::default(), false, vec![script()]);
+        hl.mem.borrow_mut().write_f32(0x100, 3.0);
+        hl.engine.run_to_completion();
+        let s = l1_stats(&hl, 0);
+        assert!(s.coherency_misses >= 1, "hybrid time must expire the lease: {s:?}");
+        let rsps = responses(&hl, 0);
+        let last = rsps.iter().find(|(_, r)| r.id == 2).unwrap();
+        assert_eq!(f32_of(&last.1), 3.0);
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //!   by flush+invalidate fences at kernel boundaries.
 //! * [`hmg`] — the HMG comparator: VI protocol with a home-node directory
 //!   and explicit invalidations over the inter-GPU fabric.
+//! * [`tsproto`] — the timestamp-protocol framework: the shared lease /
+//!   logical-clock / rollover machinery parameterized by
+//!   [`tsproto::TsPolicy`], which the HALCONE controllers and the TSU
+//!   consult to additionally speak `tardis` (stable per-line write
+//!   timestamps, renewable read leases) and `hlc` (hybrid
+//!   physical+logical clocks). See docs/PROTOCOLS.md.
 //!
 //! The G-TSC traffic ablation (E10) is the `carry_warpts` flag on the
 //! HALCONE controllers: it re-adds the CU-level timestamp to every
@@ -19,6 +25,7 @@
 pub mod halcone;
 pub mod hmg;
 pub mod none;
+pub mod tsproto;
 
 use std::collections::HashMap;
 

@@ -1,0 +1,148 @@
+//! Shared timestamp-protocol machinery (docs/PROTOCOLS.md).
+//!
+//! HALCONE, Tardis and HLC follow one skeleton — leases granted by the
+//! memory-side TSU, per-cache logical clocks advanced by responses,
+//! self-invalidation on lease expiry, finite-width `ts_bits` epoch
+//! rollovers — and differ only in how the TSU stamps a line and how a
+//! cache folds a response's timestamp pair into its clock. This module
+//! carries that variation as data ([`TsPolicy`]), so the HALCONE L1/L2
+//! controllers and the TSU serve every timestamp protocol from one
+//! implementation instead of three parallel stacks.
+
+use crate::coherence::TsMeta;
+use crate::sim::msg::TsPair;
+use crate::sim::Cycle;
+
+/// Which timestamp protocol a controller/TSU instance speaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TsPolicy {
+    /// The paper's protocol: the TSU's `memts` advances on every access
+    /// and the cache merge bumps `rts` past the response `wts`, so a
+    /// validity check is a plain `cts <= rts`.
+    #[default]
+    Halcone,
+    /// Tardis-style leases (arXiv 1501.04504): each line keeps a *stable*
+    /// write timestamp; reads extend the read frontier (`rts`) without
+    /// moving `wts`, writes jump `wts` past the frontier. No
+    /// invalidation traffic — an expired lease simply re-fetches, which
+    /// renews it at the owning TSU.
+    Tardis,
+    /// Hybrid logical clocks: the TSU's `memts` and every cache clock are
+    /// floored by coarse physical time (`now >> HLC_SHIFT`), so leases
+    /// are expressed in hybrid time and the logical/physical skew stays
+    /// bounded by one lease plus one physical tick.
+    Hlc,
+}
+
+impl TsPolicy {
+    /// Canonical protocol name (config value, artifact labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TsPolicy::Halcone => "halcone",
+            TsPolicy::Tardis => "tardis",
+            TsPolicy::Hlc => "hlc",
+        }
+    }
+}
+
+/// Every valid `coherence` config value, in presentation order. The
+/// unknown-value error lists these (mirroring the workloads registry);
+/// `gtsc` is HALCONE plus the G-TSC warpts wire ablation.
+pub const PROTOCOL_NAMES: [&str; 6] = ["none", "halcone", "gtsc", "hmg", "tardis", "hlc"];
+
+/// Physical-time granularity of the HLC protocol: one hybrid tick per
+/// `1 << HLC_SHIFT` simulated cycles. Coarse enough that the logical
+/// component does the fine ordering, fine enough to bound skew.
+pub const HLC_SHIFT: u32 = 8;
+
+/// The physical component of a hybrid timestamp at simulated time `now`.
+/// Deterministic by construction: simulated time is identical at every
+/// `--shards`/`--jobs` level.
+pub fn hlc_phys(now: Cycle) -> u64 {
+    now >> HLC_SHIFT
+}
+
+/// Fold a response's TSU timestamp pair into a cache's view of the line.
+pub fn merge_ts(policy: TsPolicy, cts: u64, rsp: TsPair) -> TsMeta {
+    match policy {
+        // Paper Alg. 2: wts catches the cache clock up; rts always lands
+        // strictly past the write, so the filling cache's own check
+        // (`cts <= rts` after advancing to wts) is satisfiable.
+        TsPolicy::Halcone | TsPolicy::Hlc => {
+            TsMeta { wts: cts.max(rsp.wts), rts: (rsp.wts + 1).max(rsp.rts) }
+        }
+        // Tardis keeps the TSU's stamps verbatim: wts is the line's
+        // stable version, rts the granted lease end (>= wts always).
+        TsPolicy::Tardis => TsMeta { wts: rsp.wts, rts: rsp.rts },
+    }
+}
+
+/// Advance a logical clock to `to`, reporting whether the move crossed a
+/// finite-width epoch boundary (`ts_bits` rollover, docs/ROBUSTNESS.md).
+/// On `true` the caller must flush its cache array and count the flush;
+/// `ts_bits == 0` (infinite-width counters) never crosses.
+pub fn clock_advance(cts: &mut u64, to: u64, ts_bits: u32) -> bool {
+    if to <= *cts {
+        return false;
+    }
+    let crossed = ts_bits > 0
+        && crate::faults::epoch_of(to, ts_bits) != crate::faults::epoch_of(*cts, ts_bits);
+    *cts = to;
+    crossed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halcone_merge_bumps_rts_past_the_write() {
+        let m = merge_ts(TsPolicy::Halcone, 5, TsPair { rts: 3, wts: 7 });
+        assert_eq!(m, TsMeta { wts: 7, rts: 8 });
+        // A stale response never drags the clock backwards.
+        let m = merge_ts(TsPolicy::Halcone, 9, TsPair { rts: 3, wts: 2 });
+        assert_eq!(m, TsMeta { wts: 9, rts: 3 });
+    }
+
+    #[test]
+    fn tardis_merge_is_verbatim() {
+        let m = merge_ts(TsPolicy::Tardis, 99, TsPair { rts: 12, wts: 4 });
+        assert_eq!(m, TsMeta { wts: 4, rts: 12 });
+    }
+
+    #[test]
+    fn hlc_merge_matches_halcone_shape() {
+        assert_eq!(
+            merge_ts(TsPolicy::Hlc, 5, TsPair { rts: 3, wts: 7 }),
+            merge_ts(TsPolicy::Halcone, 5, TsPair { rts: 3, wts: 7 }),
+        );
+    }
+
+    #[test]
+    fn hlc_phys_is_coarse_monotonic() {
+        assert_eq!(hlc_phys(0), 0);
+        assert_eq!(hlc_phys((1 << HLC_SHIFT) - 1), 0);
+        assert_eq!(hlc_phys(1 << HLC_SHIFT), 1);
+        assert!(hlc_phys(10_000) <= 10_000 >> HLC_SHIFT);
+    }
+
+    #[test]
+    fn clock_advance_reports_epoch_crossings() {
+        let mut cts = 0;
+        assert!(!clock_advance(&mut cts, 10, 0)); // infinite width
+        assert_eq!(cts, 10);
+        assert!(!clock_advance(&mut cts, 5, 4)); // no retreat
+        assert_eq!(cts, 10);
+        assert!(!clock_advance(&mut cts, 15, 4)); // same 16-cycle epoch
+        assert!(clock_advance(&mut cts, 16, 4)); // epoch 0 -> 1
+        assert_eq!(cts, 16);
+        assert!(clock_advance(&mut cts, 48, 4)); // multi-epoch jump
+    }
+
+    #[test]
+    fn protocol_names_cover_every_policy() {
+        for p in [TsPolicy::Halcone, TsPolicy::Tardis, TsPolicy::Hlc] {
+            assert!(PROTOCOL_NAMES.contains(&p.name()));
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //! `key = value` subset (one per line, `#` comments), which covers
 //! everything the experiments need.
 
+use crate::coherence::tsproto::{TsPolicy, PROTOCOL_NAMES};
 use crate::coherence::WritePolicy;
 use crate::faults::FaultSpec;
 use crate::mem::addr::Topology;
@@ -38,6 +39,45 @@ pub enum Coherence {
     Halcone { leases: Leases, carry_warpts: bool },
     /// HMG-style VI + directory (RDMA topologies only).
     Hmg,
+    /// Tardis-style timestamp rival: stable per-line write timestamps,
+    /// renewable read leases, no invalidation broadcasts
+    /// (docs/PROTOCOLS.md, arXiv 1501.04504).
+    Tardis { leases: Leases },
+    /// Hybrid physical+logical per-cache clocks with leases expressed in
+    /// hybrid time (docs/PROTOCOLS.md).
+    Hlc { leases: Leases },
+}
+
+impl Coherence {
+    /// The timestamp-protocol policy this setting selects (`None` for
+    /// the non-timestamp protocols, which bypass the TSU entirely).
+    pub fn ts_policy(&self) -> Option<TsPolicy> {
+        match self {
+            Coherence::Halcone { .. } => Some(TsPolicy::Halcone),
+            Coherence::Tardis { .. } => Some(TsPolicy::Tardis),
+            Coherence::Hlc { .. } => Some(TsPolicy::Hlc),
+            Coherence::None | Coherence::Hmg => None,
+        }
+    }
+
+    /// Lease table of a timestamp protocol.
+    pub fn leases(&self) -> Option<Leases> {
+        match self {
+            Coherence::Halcone { leases, .. }
+            | Coherence::Tardis { leases }
+            | Coherence::Hlc { leases } => Some(*leases),
+            Coherence::None | Coherence::Hmg => None,
+        }
+    }
+
+    fn leases_mut(&mut self) -> Option<&mut Leases> {
+        match self {
+            Coherence::Halcone { leases, .. }
+            | Coherence::Tardis { leases }
+            | Coherence::Hlc { leases } => Some(leases),
+            Coherence::None | Coherence::Hmg => None,
+        }
+    }
 }
 
 /// Full system configuration (defaults = paper Table 2 + §4.1).
@@ -178,6 +218,16 @@ impl SystemConfig {
                 c.coherence =
                     Coherence::Halcone { leases: Leases::default(), carry_warpts: false };
             }
+            "SM-WT-C-TARDIS" => {
+                c.topology = Topology::SharedMem;
+                c.l2_policy = WritePolicy::WriteThrough;
+                c.coherence = Coherence::Tardis { leases: Leases::default() };
+            }
+            "SM-WT-C-HLC" => {
+                c.topology = Topology::SharedMem;
+                c.l2_policy = WritePolicy::WriteThrough;
+                c.coherence = Coherence::Hlc { leases: Leases::default() };
+            }
             other => panic!("unknown preset '{other}' (see §4.1 names)"),
         }
         c
@@ -193,8 +243,22 @@ impl SystemConfig {
         }
     }
 
-    /// All five §4.1 configuration names, in the paper's order.
-    pub const PRESETS: [&str; 5] = [
+    /// Every named configuration: the paper's five §4.1 systems followed
+    /// by the timestamp-rival protocols (docs/PROTOCOLS.md).
+    pub const PRESETS: [&str; 7] = [
+        "RDMA-WB-NC",
+        "RDMA-WB-C-HMG",
+        "SM-WB-NC",
+        "SM-WT-NC",
+        "SM-WT-C-HALCONE",
+        "SM-WT-C-TARDIS",
+        "SM-WT-C-HLC",
+    ];
+
+    /// The paper's five evaluated configurations only (§4.1, in the
+    /// paper's order) — the figure-reproduction campaigns (fig7/fig8)
+    /// pin to these so their grids match the published plots.
+    pub const PAPER_PRESETS: [&str; 5] = [
         "RDMA-WB-NC",
         "RDMA-WB-C-HMG",
         "SM-WB-NC",
@@ -259,19 +323,30 @@ impl SystemConfig {
                         Coherence::Halcone { leases: Leases::default(), carry_warpts: true }
                     }
                     "hmg" => Coherence::Hmg,
-                    v => return Err(format!("coherence={v}: want none|halcone|gtsc|hmg")),
+                    "tardis" => Coherence::Tardis { leases: Leases::default() },
+                    "hlc" => Coherence::Hlc { leases: Leases::default() },
+                    v => {
+                        return Err(format!(
+                            "unknown coherence protocol '{v}': valid names are \
+                             {PROTOCOL_NAMES:?} (gtsc = halcone + the G-TSC warpts \
+                             wire ablation; see docs/PROTOCOLS.md)"
+                        ))
+                    }
                 }
             }
             "rd_lease" | "wr_lease" => {
                 let v: u64 = value.parse().map_err(|e| uerr(&e))?;
-                if let Coherence::Halcone { leases, .. } = &mut self.coherence {
+                if let Some(leases) = self.coherence.leases_mut() {
                     if key == "rd_lease" {
                         leases.rd = v;
                     } else {
                         leases.wr = v;
                     }
                 } else {
-                    return Err(format!("{key} only applies to coherence=halcone"));
+                    return Err(format!(
+                        "{key} only applies to timestamp protocols \
+                         (coherence=halcone|gtsc|tardis|hlc)"
+                    ));
                 }
             }
             "l1_bytes" => num!(self.l1_bytes, u64),
@@ -355,9 +430,9 @@ impl SystemConfig {
     /// preset columns: each column starts from its own preset, then
     /// takes the file's overrides (a `preset =` line would make every
     /// column identical, so it is ignored here). Lease keys are skipped
-    /// on columns without HALCONE coherence — a file tuned for the
-    /// HALCONE column must not abort the NC/HMG columns, where leases
-    /// are meaningless.
+    /// on columns without a timestamp protocol — a file tuned for a
+    /// lease-bearing column must not abort the NC/HMG columns, where
+    /// leases are meaningless.
     pub fn apply_overrides(&mut self, text: &str) -> Result<(), String> {
         // Lease lines are deferred until every other key has applied, so
         // their applicability depends on the *final* coherence setting —
@@ -381,7 +456,7 @@ impl SystemConfig {
             }
             self.set(k, v).map_err(|e| format!("line {}: {e}", lineno + 1))?;
         }
-        if matches!(self.coherence, Coherence::Halcone { .. }) {
+        if self.coherence.ts_policy().is_some() {
             for (lineno, k, v) in leases {
                 self.set(k, v).map_err(|e| format!("line {}: {e}", lineno + 1))?;
             }
@@ -400,6 +475,15 @@ impl SystemConfig {
                 if carry_warpts { ", +warpts wire ablation" } else { "" }
             ),
             Coherence::Hmg => "HMG (VI + directory)".to_string(),
+            Coherence::Tardis { leases } => {
+                format!("TARDIS (RdLease={}, WrLease={})", leases.rd, leases.wr)
+            }
+            Coherence::Hlc { leases } => format!(
+                "HLC (RdLease={}, WrLease={}, phys=cycle>>{})",
+                leases.rd,
+                leases.wr,
+                crate::coherence::tsproto::HLC_SHIFT
+            ),
         };
         let faults = match &self.faults {
             None => "none".to_string(),
@@ -541,9 +625,42 @@ mod tests {
     }
 
     #[test]
-    fn lease_override_requires_halcone() {
+    fn lease_override_requires_a_timestamp_protocol() {
         let mut c = SystemConfig::preset("SM-WT-NC");
         assert!(c.set("rd_lease", "5").is_err());
+        let mut c = SystemConfig::preset("RDMA-WB-C-HMG");
+        assert!(c.set("wr_lease", "5").is_err());
+    }
+
+    #[test]
+    fn rival_presets_build_timestamp_protocols_with_tunable_leases() {
+        let mut t = SystemConfig::preset("SM-WT-C-TARDIS");
+        assert_eq!(t.topology, Topology::SharedMem);
+        assert_eq!(t.coherence.ts_policy(), Some(TsPolicy::Tardis));
+        t.set("rd_lease", "20").unwrap();
+        assert_eq!(t.coherence.leases().unwrap().rd, 20);
+
+        let mut h = SystemConfig::preset("SM-WT-C-HLC");
+        assert_eq!(h.coherence.ts_policy(), Some(TsPolicy::Hlc));
+        h.set("wr_lease", "7").unwrap();
+        assert_eq!(h.coherence.leases().unwrap().wr, 7);
+
+        // Both rivals ride the all-presets constant; the paper grids
+        // stay pinned to the original five.
+        assert_eq!(SystemConfig::PRESETS.len(), 7);
+        assert_eq!(SystemConfig::PAPER_PRESETS.len(), 5);
+        for p in SystemConfig::PAPER_PRESETS {
+            assert!(SystemConfig::PRESETS.contains(&p));
+        }
+    }
+
+    #[test]
+    fn unknown_protocol_error_lists_every_valid_name() {
+        let mut c = SystemConfig::default();
+        let err = c.set("coherence", "mesi").unwrap_err();
+        for name in PROTOCOL_NAMES {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
     }
 
     #[test]

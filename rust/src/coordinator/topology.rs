@@ -134,11 +134,11 @@ fn build_inner(
     initial_delay: Cycle,
     mix: Option<&MixPlan>,
 ) -> System {
-    if matches!(cfg.coherence, Coherence::Halcone { .. }) {
+    if cfg.coherence.ts_policy().is_some() {
         assert_eq!(
             cfg.topology,
             Topology::SharedMem,
-            "HALCONE is defined for MGPU-SM systems (paper §3)"
+            "timestamp protocols are defined for MGPU-SM systems (paper §3)"
         );
     }
     if cfg.coherence == Coherence::Hmg {
@@ -415,14 +415,17 @@ fn build_inner(
             };
             let params = CacheParams::new(cfg.l1_bytes, cfg.l1_ways);
             let name = format!("g{gi}.l1_{ci}");
-            let id = match cfg.coherence {
-                Coherence::Halcone { carry_warpts, .. } => {
+            let id = match cfg.coherence.ts_policy() {
+                Some(policy) => {
+                    let carry_warpts =
+                        matches!(cfg.coherence, Coherence::Halcone { carry_warpts: true, .. });
                     let mut l1 =
-                        HalconeL1::new(name, routes, params, cfg.mshr_l1, cfg.l1_lat, carry_warpts);
+                        HalconeL1::new(name, routes, params, cfg.mshr_l1, cfg.l1_lat, carry_warpts)
+                            .with_policy(policy);
                     l1.set_ts_bits(ts_bits);
                     engine.add_to(group_of[gi], Box::new(l1))
                 }
-                _ => engine.add_to(
+                None => engine.add_to(
                     group_of[gi],
                     Box::new(PlainL1::new(name, routes, params, cfg.mshr_l1, cfg.l1_lat)),
                 ),
@@ -459,6 +462,14 @@ fn build_inner(
                 Coherence::Halcone { carry_warpts, .. } => {
                     let mut l2 =
                         HalconeL2::new(name, routes, params, cfg.mshr_l2, cfg.l2_lat, carry_warpts);
+                    l2.set_ts_bits(ts_bits);
+                    engine.add_to(group_of[gi], Box::new(l2))
+                }
+                Coherence::Tardis { .. } | Coherence::Hlc { .. } => {
+                    let policy = cfg.coherence.ts_policy().expect("timestamp coherence variant");
+                    let mut l2 =
+                        HalconeL2::new(name, routes, params, cfg.mshr_l2, cfg.l2_lat, false)
+                            .with_policy(policy);
                     l2.set_ts_bits(ts_bits);
                     engine.add_to(group_of[gi], Box::new(l2))
                 }
@@ -584,7 +595,7 @@ fn build_inner(
         assert_eq!(id, swc);
     }
 
-    // Memory controllers (+ TSUs when HALCONE).
+    // Memory controllers (+ TSUs for the timestamp protocols).
     for (si, &mc) in mc_ids.iter().enumerate() {
         let up = if rdma {
             let owner = si / cfg.stacks_per_gpu as usize;
@@ -594,14 +605,12 @@ fn build_inner(
         } else {
             (mc_tx[si], swc)
         };
-        let tsu = match cfg.coherence {
-            Coherence::Halcone { leases, .. } => {
-                let mut t = Tsu::new(cfg.tsu_entries, leases);
-                t.set_ts_bits(ts_bits);
-                Some(t)
-            }
-            _ => None,
-        };
+        let tsu = cfg.coherence.ts_policy().map(|policy| {
+            let leases = cfg.coherence.leases().expect("timestamp protocols carry leases");
+            let mut t = Tsu::new(cfg.tsu_entries, leases).with_policy(policy);
+            t.set_ts_bits(ts_bits);
+            t
+        });
         let id = engine.add_to(
             stack_shard(si),
             Box::new(MemCtrl::new(format!("mm{si}"), mem.clone(), up, cfg.mc_lat, tsu)),

@@ -56,10 +56,10 @@ impl MemCtrl {
         }
     }
 
-    fn ts_for(&mut self, kind: ReqKind, line_addr: u64) -> Option<TsPair> {
+    fn ts_for(&mut self, now: Cycle, kind: ReqKind, line_addr: u64) -> Option<TsPair> {
         self.tsu.as_mut().map(|tsu| match kind {
-            ReqKind::Read => tsu.on_read(line_addr),
-            ReqKind::Write => tsu.on_write(line_addr),
+            ReqKind::Read => tsu.on_read(line_addr, now),
+            ReqKind::Write => tsu.on_write(line_addr, now),
         })
     }
 }
@@ -70,7 +70,7 @@ impl Component for MemCtrl {
         &self.name
     }
 
-    fn handle(&mut self, _now: Cycle, msg: Msg, ctx: &mut Ctx) {
+    fn handle(&mut self, now: Cycle, msg: Msg, ctx: &mut Ctx) {
         let req = match msg {
             Msg::Req(r) => ctx.reclaim_req(r),
             other => panic!("{}: unexpected {:?}", self.name, other),
@@ -78,8 +78,9 @@ impl Component for MemCtrl {
         let line_addr = req.addr & !(self.line - 1);
         self.stats.bytes_in += req.wire_bytes();
 
-        // TSU lookup runs in parallel with the DRAM access (free in time).
-        let ts = self.ts_for(req.kind, line_addr);
+        // TSU lookup runs in parallel with the DRAM access (free in
+        // time); `now` feeds the HLC policy's physical clock component.
+        let ts = self.ts_for(now, req.kind, line_addr);
 
         // Both paths copy the line into an inline buffer — no heap.
         let data = match req.kind {

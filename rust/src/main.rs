@@ -95,7 +95,9 @@ fn usage() -> ! {
            --retries N       extra attempts for panicked/timed-out cells (default 0)\n\
            --resume DIR      re-enter an interrupted campaign from its journaled\n\
                              campaign.json (DIR or the file itself); completed cells\n\
-                             are reloaded, the rest re-run (docs/ROBUSTNESS.md)\n\
+                             are reloaded, the rest re-run (docs/ROBUSTNESS.md);\n\
+                             campaigns with an `oracle =` line cannot resume —\n\
+                             access-stream traces are not journaled (docs/PROTOCOLS.md)\n\
          \n\
          snapshot options (docs/SNAPSHOT.md):\n\
            --snapshot-at N   run: pause at the first deterministic barrier at or\n\
@@ -763,6 +765,7 @@ fn load_spec(a: &Args, fallback: Option<CampaignSpec>) -> Result<CampaignSpec, S
 struct SweepStatus {
     all_passed: bool,
     any_timed_out: bool,
+    oracle_ok: bool,
 }
 
 fn sweep_to_json(
@@ -789,6 +792,7 @@ fn sweep_to_json(
     eprintln!("campaign {}: {total} cells on {} threads", spec.name, opts.jobs);
     let result = run_campaign(spec, &opts)?;
     report::print_speedup_table(&result);
+    report::print_oracle_report(&result);
     let text = report::to_json(&result);
     if let Some(out) = out {
         std::fs::write(out, &text).map_err(|e| format!("writing {out}: {e}"))?;
@@ -797,6 +801,7 @@ fn sweep_to_json(
     let status = SweepStatus {
         all_passed: result.all_passed(),
         any_timed_out: result.any_timed_out(),
+        oracle_ok: result.oracle_ok(),
     };
     Ok((text, status))
 }
@@ -841,7 +846,20 @@ fn cmd_sweep(a: &Args) -> ExitCode {
             return ExitCode::from(EXIT_CONFIG);
         }
         match load_resume(dir) {
-            Ok(x) => x,
+            Ok(x) => {
+                // Oracle campaigns compare captured access streams, and
+                // traces are never journaled — a resumed grid would mix
+                // traced and trace-less cells. run_campaign refuses too;
+                // catching it here gives the usage exit code.
+                if x.0.oracle.is_some() {
+                    eprintln!(
+                        "sweep: cannot --resume an oracle campaign: access-stream \
+                         traces are not journaled; rerun the campaign from scratch"
+                    );
+                    return ExitCode::from(EXIT_CONFIG);
+                }
+                x
+            }
             Err(e) => {
                 eprintln!("sweep: {e}");
                 return ExitCode::from(EXIT_CONFIG);
@@ -866,7 +884,7 @@ fn cmd_sweep(a: &Args) -> ExitCode {
     };
     match sweep_to_json(&spec, a, Some(&out), true, preloaded) {
         Ok((_, status)) => {
-            if status.all_passed {
+            if status.all_passed && status.oracle_ok {
                 ExitCode::SUCCESS
             } else if status.any_timed_out {
                 eprintln!(
@@ -875,6 +893,9 @@ fn cmd_sweep(a: &Args) -> ExitCode {
                     a.timeout.unwrap_or(0),
                 );
                 ExitCode::from(EXIT_TIMEOUT)
+            } else if !status.oracle_ok {
+                eprintln!("sweep: access-stream oracle found divergence (see table / artifact)");
+                ExitCode::from(EXIT_FAILURE)
             } else {
                 eprintln!("sweep: some cells failed (see table / artifact)");
                 ExitCode::from(EXIT_FAILURE)

@@ -86,6 +86,8 @@ fn canonical_config(cfg: &SystemConfig, workload: &str) -> String {
         Coherence::Halcone { leases, carry_warpts } => {
             format!("halcone:rd={},wr={},warpts={}", leases.rd, leases.wr, carry_warpts)
         }
+        Coherence::Tardis { leases } => format!("tardis:rd={},wr={}", leases.rd, leases.wr),
+        Coherence::Hlc { leases } => format!("hlc:rd={},wr={}", leases.rd, leases.wr),
         Coherence::Hmg => "hmg".to_string(),
     };
     let faults = match &cfg.faults {

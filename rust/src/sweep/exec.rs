@@ -27,10 +27,13 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::runner::{run_workload, try_run_workload_snap, SnapMode};
+use crate::coordinator::runner::{
+    run_workload, run_workload_traced, try_run_workload_snap, SnapMode,
+};
 use crate::coordinator::verify::CheckOutcome;
 use crate::metrics::RunMetrics;
 use crate::sweep::spec::{CampaignSpec, Cell};
+use crate::trace::Trace;
 
 /// What happened to one cell.
 #[derive(Clone)]
@@ -165,11 +168,30 @@ pub fn default_jobs() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// One access-stream oracle comparison: a cell's captured trace against
+/// the baseline cell's trace for the same workload. The comparison is
+/// *structural* only — per-wavefront access kind/address/size/ordering
+/// must match, while cycle timing is expected to differ across
+/// protocols (that difference is the sweep's whole point).
+#[derive(Clone)]
+pub struct OracleCheck {
+    pub workload: String,
+    pub config: String,
+    pub baseline: String,
+    pub matched: bool,
+    /// Human-readable evidence: record count when matched, the first
+    /// diverging record (or the missing-trace reason) when not.
+    pub detail: String,
+}
+
 /// A finished campaign: the spec plus one result per cell, in spec order.
 pub struct CampaignResult {
     pub spec: CampaignSpec,
     pub jobs: usize,
     pub cells: Vec<CellResult>,
+    /// Access-stream oracle comparisons (`oracle = access-stream`
+    /// specs); empty when the spec declares no oracle.
+    pub oracle: Vec<OracleCheck>,
 }
 
 impl CampaignResult {
@@ -188,6 +210,13 @@ impl CampaignResult {
     /// Some cell hit the watchdog (the partial-result exit code 4).
     pub fn any_timed_out(&self) -> bool {
         self.cells.iter().any(|c| matches!(c.outcome, CellOutcome::TimedOut { .. }))
+    }
+
+    /// Every oracle comparison matched (vacuously true without an
+    /// oracle). A mismatch is its own failure class: the cells may all
+    /// pass their checks while two protocols disagree on the stream.
+    pub fn oracle_ok(&self) -> bool {
+        self.oracle.iter().all(|o| o.matched)
     }
 
     /// Panicking metrics lookup for consumers that know the cell exists
@@ -209,6 +238,18 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
     let cells = spec.cells()?;
     let total = cells.len();
     let slots: Vec<Slot> = (0..total).map(|_| Mutex::new(None)).collect();
+
+    // Divergence oracle (docs/PROTOCOLS.md): capture every cell's access
+    // stream for the post-pool comparison. Traces are never journaled,
+    // so resumed campaigns cannot honor the oracle — refuse up front
+    // (the CLI rejects `--resume` for oracle specs with the same words).
+    let capture = spec.oracle.is_some();
+    if capture && !opts.preloaded.is_empty() {
+        return Err(
+            "oracle campaigns cannot resume: access-stream traces are not journaled".into(),
+        );
+    }
+    let trace_slots: Vec<Mutex<Option<Trace>>> = (0..total).map(|_| Mutex::new(None)).collect();
 
     // Preload resumed outcomes; only the remaining cells run.
     let mut filled = vec![false; total];
@@ -271,10 +312,14 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
                 }
                 let i = todo[t];
                 let cell = &cells[i];
-                let (outcome, exec) = run_cell_guarded(cell, opts, cores, fork.as_ref());
+                let (outcome, exec, trace) =
+                    run_cell_guarded(cell, opts, cores, fork.as_ref(), capture);
                 if opts.progress {
                     let n = done.fetch_add(1, Ordering::Relaxed) + 1;
                     progress_line(n, total, cell, &outcome);
+                }
+                if let Ok(mut slot) = trace_slots[i].lock() {
+                    *slot = trace;
                 }
                 if let Ok(mut slot) = slots[i].lock() {
                     *slot = Some((outcome, exec));
@@ -291,6 +336,21 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
         }
     });
 
+    // Oracle comparison happens after the pool drains (it needs the
+    // baseline cell's trace, which may finish last) but before `cells`
+    // is consumed into results.
+    let oracle = if capture {
+        let mut traces: Vec<Option<Trace>> = Vec::with_capacity(total);
+        for (i, slot) in trace_slots.into_iter().enumerate() {
+            traces.push(slot.into_inner().map_err(|_| {
+                format!("cell {i}: a worker panicked while filling its trace slot")
+            })?);
+        }
+        oracle_checks(spec, &cells, &traces)
+    } else {
+        Vec::new()
+    };
+
     let mut results = Vec::with_capacity(total);
     for (cell, slot) in cells.into_iter().zip(slots) {
         let i = cell.index;
@@ -300,7 +360,62 @@ pub fn run_campaign(spec: &CampaignSpec, opts: &ExecOptions) -> Result<CampaignR
             .ok_or_else(|| format!("cell {i}: worker pool exited with an unfilled slot"))?;
         results.push(CellResult { cell, outcome, exec });
     }
-    Ok(CampaignResult { spec: spec.clone(), jobs, cells: results })
+    Ok(CampaignResult { spec: spec.clone(), jobs, cells: results, oracle })
+}
+
+/// Compare every non-baseline cell's access stream against the baseline
+/// config's cell for the same workload. Cells without a trace (failed,
+/// timed out) count as mismatches — an oracle that silently skipped
+/// broken cells would report a clean table over an unchecked grid.
+fn oracle_checks(
+    spec: &CampaignSpec,
+    cells: &[Cell],
+    traces: &[Option<Trace>],
+) -> Vec<OracleCheck> {
+    let baseline = spec
+        .baseline
+        .clone()
+        .or_else(|| cells.first().map(|c| c.config_label.clone()))
+        .unwrap_or_default();
+    let mut checks = Vec::new();
+    for cell in cells {
+        if cell.config_label == baseline {
+            continue;
+        }
+        let base_trace = cells
+            .iter()
+            .find(|c| c.config_label == baseline && c.workload == cell.workload)
+            .and_then(|b| traces[b.index].as_ref());
+        let (matched, detail) = match (base_trace, traces[cell.index].as_ref()) {
+            (Some(b), Some(t)) => {
+                let rep = crate::metrics::divergence::diff_traces(b, t);
+                if rep.structural_identical() {
+                    (true, format!("{} records identical", rep.compared))
+                } else if let Some(shape) = rep.shape_mismatch {
+                    (false, shape)
+                } else {
+                    let first = rep.first_structural.unwrap_or_default();
+                    (false, format!(
+                        "{} of {} records diverge; first: {first}",
+                        rep.structural_mismatches, rep.compared
+                    ))
+                }
+            }
+            (None, _) => (
+                false,
+                format!("baseline cell {baseline}/{} produced no trace", cell.workload),
+            ),
+            (_, None) => (false, "cell produced no trace (failed or timed out)".into()),
+        };
+        checks.push(OracleCheck {
+            workload: cell.workload.clone(),
+            config: cell.config_label.clone(),
+            baseline: baseline.clone(),
+            matched,
+            detail,
+        });
+    }
+    checks
 }
 
 fn lock_slot<'a>(
@@ -398,7 +513,7 @@ fn write_journal(
             .unwrap_or((CellOutcome::Pending, CellExec::default()));
         snapshot.push(CellResult { cell: cell.clone(), outcome, exec });
     }
-    let result = CampaignResult { spec: spec.clone(), jobs, cells: snapshot };
+    let result = CampaignResult { spec: spec.clone(), jobs, cells: snapshot, oracle: Vec::new() };
     let text = crate::sweep::report::to_json(&result);
     let name = path
         .file_name()
@@ -417,18 +532,20 @@ fn run_cell_guarded(
     opts: &ExecOptions,
     host_cores: usize,
     fork: Option<&Arc<ForkCtx>>,
-) -> (CellOutcome, CellExec) {
+    capture: bool,
+) -> (CellOutcome, CellExec, Option<Trace>) {
     let mut exec = CellExec::default();
     loop {
         let start = Instant::now();
-        let outcome = run_cell_attempt(cell, opts.shards, host_cores, opts.timeout, fork);
+        let (outcome, trace) =
+            run_cell_attempt(cell, opts.shards, host_cores, opts.timeout, fork, capture);
         exec.wall_seconds = start.elapsed().as_secs_f64();
         if matches!(outcome, CellOutcome::TimedOut { .. }) {
             exec.timed_out = true;
         }
         let failed = matches!(outcome, CellOutcome::Failed { .. } | CellOutcome::TimedOut { .. });
         if !failed || exec.retries >= opts.retries {
-            return (outcome, exec);
+            return (outcome, exec, trace);
         }
         // Exponential backoff, capped: the sim is deterministic, so a
         // retry only helps when the *host* was the problem — give it a
@@ -450,9 +567,10 @@ fn run_cell_attempt(
     host_cores: usize,
     timeout: Option<u64>,
     fork: Option<&Arc<ForkCtx>>,
-) -> CellOutcome {
+    capture: bool,
+) -> (CellOutcome, Option<Trace>) {
     let Some(secs) = timeout else {
-        return run_cell(cell, shards, host_cores, fork.map(Arc::as_ref));
+        return run_cell(cell, shards, host_cores, fork.map(Arc::as_ref), capture);
     };
     let (tx, rx) = mpsc::channel();
     let owned = cell.clone();
@@ -460,17 +578,18 @@ fn run_cell_attempt(
     let spawned = std::thread::Builder::new()
         .name(format!("cell-{}", owned.index))
         .spawn(move || {
-            let _ = tx.send(run_cell(&owned, shards, host_cores, owned_fork.as_deref()));
+            let _ = tx.send(run_cell(&owned, shards, host_cores, owned_fork.as_deref(), capture));
         });
     if let Err(e) = spawned {
-        return CellOutcome::Failed { error: format!("spawning cell worker: {e}") };
+        return (CellOutcome::Failed { error: format!("spawning cell worker: {e}") }, None);
     }
     match rx.recv_timeout(Duration::from_secs(secs)) {
-        Ok(outcome) => outcome,
-        Err(mpsc::RecvTimeoutError::Timeout) => CellOutcome::TimedOut { seconds: secs },
-        Err(mpsc::RecvTimeoutError::Disconnected) => CellOutcome::Failed {
-            error: "cell worker exited without reporting a result".into(),
-        },
+        Ok(pair) => pair,
+        Err(mpsc::RecvTimeoutError::Timeout) => (CellOutcome::TimedOut { seconds: secs }, None),
+        Err(mpsc::RecvTimeoutError::Disconnected) => (
+            CellOutcome::Failed { error: "cell worker exited without reporting a result".into() },
+            None,
+        ),
     }
 }
 
@@ -479,10 +598,11 @@ fn run_cell(
     shards: Option<usize>,
     host_cores: usize,
     fork: Option<&ForkCtx>,
-) -> CellOutcome {
+    capture: bool,
+) -> (CellOutcome, Option<Trace>) {
     let mut cfg = match cell.config() {
         Ok(c) => c,
-        Err(e) => return CellOutcome::Failed { error: e },
+        Err(e) => return (CellOutcome::Failed { error: e }, None),
     };
     // Executor-level thread clamp: apply the --shards override and cap
     // at the host cores. Never recorded in the spec/artifact — thread
@@ -495,13 +615,29 @@ fn run_cell(
     // The default panic hook stays installed, so a failing cell also
     // prints its raw panic line to stderr — swapping the hook is
     // process-global and would race concurrent tests.
-    let Some(fork) = fork else {
+    if capture {
+        // Oracle path. Trace capture cannot combine with snapshots, and
+        // spec validation rejects `oracle` + `warmup`, so `fork` is
+        // always None here — the traced cold run covers every oracle
+        // cell. Captured traces are shard-invariant, so the --shards
+        // clamp above never perturbs the comparison.
         return match panic::catch_unwind(AssertUnwindSafe(|| {
+            run_workload_traced(&cfg, &cell.workload, None, true)
+        })) {
+            Ok((res, trace)) => {
+                (CellOutcome::Finished { metrics: res.metrics, checks: res.checks }, trace)
+            }
+            Err(payload) => (CellOutcome::Failed { error: panic_message(payload) }, None),
+        };
+    }
+    let Some(fork) = fork else {
+        let outcome = match panic::catch_unwind(AssertUnwindSafe(|| {
             run_workload(&cfg, &cell.workload, None)
         })) {
             Ok(res) => CellOutcome::Finished { metrics: res.metrics, checks: res.checks },
             Err(payload) => CellOutcome::Failed { error: panic_message(payload) },
         };
+        return (outcome, None);
     };
     // Warm-start path. The fingerprint excludes `shards` by design, so
     // a snapshot saved at one thread count forks at any other; warm and
@@ -513,7 +649,10 @@ fn run_cell(
             try_run_workload_snap(&cfg, &cell.workload, None, false, snap)
         })) {
             Ok(Ok((res, _, _))) => {
-                return CellOutcome::Finished { metrics: res.metrics, checks: res.checks }
+                return (
+                    CellOutcome::Finished { metrics: res.metrics, checks: res.checks },
+                    None,
+                )
             }
             // A stale or corrupt snapshot is never fatal: warn and fall
             // through to a cold run (which refreshes the stored bytes).
@@ -521,14 +660,16 @@ fn run_cell(
                 "warning: cell {}/{}: warm start failed ({e}); running cold",
                 cell.config_label, cell.workload
             ),
-            Err(payload) => return CellOutcome::Failed { error: panic_message(payload) },
+            Err(payload) => {
+                return (CellOutcome::Failed { error: panic_message(payload) }, None)
+            }
         }
     }
     // Cold run, snapshotting the warmup prefix for later forks. A run
     // that drains before the warmup cycle yields no snapshot — fine,
     // there is nothing left to skip on a re-run either.
     let snap = SnapMode::Save { at: fork.at };
-    match panic::catch_unwind(AssertUnwindSafe(|| {
+    let outcome = match panic::catch_unwind(AssertUnwindSafe(|| {
         try_run_workload_snap(&cfg, &cell.workload, None, false, snap)
     })) {
         Ok(Ok((res, _, snap_bytes))) => {
@@ -539,7 +680,8 @@ fn run_cell(
         }
         Ok(Err(e)) => CellOutcome::Failed { error: e },
         Err(payload) => CellOutcome::Failed { error: panic_message(payload) },
-    }
+    };
+    (outcome, None)
 }
 
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
@@ -643,6 +785,72 @@ mod tests {
         let healthy = res.get("SM-WT-C-HALCONE+gpu_mem_bytes=67108864", "rl").unwrap();
         assert_eq!(healthy.status(), "ok");
         assert!(!res.all_passed());
+    }
+
+    #[test]
+    fn access_stream_oracle_matches_across_protocols() {
+        // Every timestamp protocol must observe the identical access
+        // stream: the coherence policy changes timing and hit rates,
+        // never which accesses the wavefronts issue.
+        let spec = CampaignSpec::parse(
+            "name = t\n\
+             presets = SM-WT-C-HALCONE,SM-WT-C-TARDIS,SM-WT-C-HLC\n\
+             workloads = rl\n\
+             baseline = SM-WT-C-HALCONE\n\
+             oracle = access-stream\n\
+             set.n_gpus = 2\n\
+             set.cus_per_gpu = 2\n\
+             set.wavefronts_per_cu = 2\n\
+             set.l2_banks = 2\n\
+             set.stacks_per_gpu = 2\n\
+             set.gpu_mem_bytes = 67108864\n\
+             set.scale = 0.05\n",
+        )
+        .unwrap();
+        let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
+        assert!(res.all_passed());
+        assert_eq!(res.oracle.len(), 2, "one comparison per non-baseline config");
+        for o in &res.oracle {
+            assert_eq!(o.baseline, "SM-WT-C-HALCONE");
+            assert!(o.matched, "{}/{} diverged: {}", o.config, o.workload, o.detail);
+            assert!(o.detail.contains("identical"));
+        }
+        assert!(res.oracle_ok());
+        // Traces are never journaled, so resume + oracle is refused.
+        let resumed = ExecOptions {
+            progress: false,
+            preloaded: vec![(0, CellOutcome::Pending, CellExec::default())],
+            ..Default::default()
+        };
+        assert!(run_campaign(&spec, &resumed).is_err());
+    }
+
+    #[test]
+    fn a_traceless_cell_is_an_oracle_mismatch() {
+        // The 4 KB cell panics before producing a trace; the oracle must
+        // flag it rather than silently shrink the comparison set.
+        let spec = CampaignSpec::parse(
+            "name = t\n\
+             presets = SM-WT-C-HALCONE\n\
+             workloads = rl\n\
+             axis.gpu_mem_bytes = 4096,67108864\n\
+             baseline = SM-WT-C-HALCONE+gpu_mem_bytes=67108864\n\
+             oracle = access-stream\n\
+             set.n_gpus = 2\n\
+             set.cus_per_gpu = 2\n\
+             set.wavefronts_per_cu = 2\n\
+             set.l2_banks = 2\n\
+             set.stacks_per_gpu = 2\n\
+             set.scale = 0.05\n",
+        )
+        .unwrap();
+        let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
+        assert_eq!(res.oracle.len(), 1);
+        assert!(!res.oracle[0].matched);
+        assert!(res.oracle[0].detail.contains("no trace"));
+        assert!(!res.oracle_ok());
     }
 
     #[test]

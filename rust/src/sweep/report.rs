@@ -85,7 +85,7 @@ fn render(result: &CampaignResult, include_host: bool) -> String {
         .iter()
         .map(|cr| cell_json(result, cr, &base_label, include_host))
         .collect();
-    let spec_obj = Value::Obj(vec![
+    let mut spec_kvs: Vec<(String, Value)> = vec![
         (
             "presets".into(),
             Value::Arr(spec.presets.iter().map(Value::str).collect()),
@@ -110,22 +110,47 @@ fn render(result: &CampaignResult, include_host: bool) -> String {
         ),
         ("fixed".into(), overrides_obj(&spec.fixed)),
         ("baseline".into(), Value::str(&base_label)),
-    ]);
-    // Warm-start prefix rides along only when declared, so warmup-free
-    // campaigns keep their exact canonical bytes.
-    let spec_obj = match (spec.warmup, spec_obj) {
-        (Some(w), Value::Obj(mut kvs)) => {
-            kvs.push(("warmup".into(), Value::u64(w)));
-            Value::Obj(kvs)
-        }
-        (_, obj) => obj,
-    };
-    let root = Value::Obj(vec![
+    ];
+    // Warm-start prefix and oracle ride along only when declared, so
+    // campaigns without them keep their exact canonical bytes.
+    if let Some(w) = spec.warmup {
+        spec_kvs.push(("warmup".into(), Value::u64(w)));
+    }
+    if let Some(o) = &spec.oracle {
+        spec_kvs.push(("oracle".into(), Value::str(o)));
+    }
+    let spec_obj = Value::Obj(spec_kvs);
+    let mut root_kvs: Vec<(String, Value)> = vec![
         ("schema_version".into(), Value::u64(SCHEMA_VERSION)),
         ("campaign".into(), Value::str(&spec.name)),
         ("spec".into(), spec_obj),
         ("cells".into(), Value::Arr(cells)),
-    ]);
+    ];
+    // Oracle verdicts, present only when comparisons ran. Traces are
+    // deterministic, so this section is canonical like the cells.
+    if !result.oracle.is_empty() {
+        let checks: Vec<Value> = result
+            .oracle
+            .iter()
+            .map(|o| {
+                Value::Obj(vec![
+                    ("workload".into(), Value::str(&o.workload)),
+                    ("config".into(), Value::str(&o.config)),
+                    ("baseline".into(), Value::str(&o.baseline)),
+                    ("matched".into(), Value::Bool(o.matched)),
+                    ("detail".into(), Value::str(&o.detail)),
+                ])
+            })
+            .collect();
+        root_kvs.push((
+            "oracle".into(),
+            Value::Obj(vec![
+                ("ok".into(), Value::Bool(result.oracle_ok())),
+                ("checks".into(), Value::Arr(checks)),
+            ]),
+        ));
+    }
+    let root = Value::Obj(root_kvs);
     let mut out = root.to_pretty();
     out.push('\n');
     out
@@ -581,6 +606,30 @@ pub fn print_speedup_table(result: &CampaignResult) {
     t.row(&row);
 }
 
+/// Print the access-stream oracle verdicts: one line per comparison in
+/// spec order, then the overall verdict. Mismatch lines carry the first
+/// diverging record so CI logs are actionable without the artifact.
+pub fn print_oracle_report(result: &CampaignResult) {
+    if result.oracle.is_empty() {
+        return;
+    }
+    let base = &result.oracle[0].baseline;
+    println!(
+        "\n== access-stream oracle: {} comparisons vs {base} ==",
+        result.oracle.len()
+    );
+    for o in &result.oracle {
+        let verdict = if o.matched { "   ok" } else { " FAIL" };
+        println!("{verdict}  {:<34} {:<8} {}", o.config, o.workload, o.detail);
+    }
+    let mismatches = result.oracle.iter().filter(|o| !o.matched).count();
+    if mismatches == 0 {
+        println!("oracle verdict: OK ({}/{} matched)", result.oracle.len(), result.oracle.len());
+    } else {
+        println!("oracle verdict: DIVERGED ({mismatches} mismatches)");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -690,6 +739,41 @@ mod tests {
         assert_eq!(rebuilt.axes, spec.axes);
         assert_eq!(rebuilt.fixed, spec.fixed);
         assert_eq!(rebuilt.baseline.as_deref(), Some("SM-WT-NC"));
+    }
+
+    #[test]
+    fn oracle_campaigns_render_verdicts_and_roundtrip_the_spec_key() {
+        let spec = CampaignSpec::parse(
+            "name = t\n\
+             presets = SM-WT-C-HALCONE,SM-WT-C-TARDIS\n\
+             workloads = rl\n\
+             baseline = SM-WT-C-HALCONE\n\
+             oracle = access-stream\n\
+             set.n_gpus = 2\nset.cus_per_gpu = 2\nset.wavefronts_per_cu = 2\n\
+             set.l2_banks = 2\nset.stacks_per_gpu = 2\n\
+             set.gpu_mem_bytes = 67108864\nset.scale = 0.05\n",
+        )
+        .unwrap();
+        let opts = ExecOptions { jobs: 2, progress: false, ..Default::default() };
+        let res = run_campaign(&spec, &opts).unwrap();
+        let doc = json::parse(&to_json_canonical(&res)).unwrap();
+        // The spec key survives for gate re-runs...
+        let rebuilt = CampaignSpec::from_artifact(&doc).unwrap();
+        assert_eq!(rebuilt.oracle.as_deref(), Some("access-stream"));
+        // ...and the verdict section is canonical.
+        let oracle = doc.get("oracle").unwrap();
+        assert_eq!(oracle.get("ok").unwrap().as_bool(), Some(true));
+        let checks = oracle.get("checks").unwrap().as_arr().unwrap();
+        assert_eq!(checks.len(), 1);
+        assert_eq!(checks[0].get("config").unwrap().as_str(), Some("SM-WT-C-TARDIS"));
+        assert_eq!(checks[0].get("matched").unwrap().as_bool(), Some(true));
+        // Oracle-free campaigns keep their exact bytes: no oracle key.
+        let smoke = run_campaign(
+            &CampaignSpec::builtin("smoke").unwrap(),
+            &ExecOptions { jobs: 1, progress: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(!to_json_canonical(&smoke).contains("oracle"));
     }
 
     #[test]

@@ -30,7 +30,11 @@
 //!
 //! Built-ins reproduce the paper's grids: `fig7` (Fig. 7), `fig8` /
 //! `fig8cu` (Fig. 8a / 8b-c), `tab4` (§5.4 lease sensitivity) and
-//! `smoke` (a seconds-long CI campaign).
+//! `smoke` (a seconds-long CI campaign). `frontier` extends `tab4`
+//! across every coherence protocol with the `oracle = access-stream`
+//! divergence check: each cell's run is traced and every non-baseline
+//! protocol's access stream is asserted byte-identical to the
+//! baseline's for the same workload (docs/PROTOCOLS.md).
 
 use crate::config::SystemConfig;
 use crate::sweep::json::Value;
@@ -55,6 +59,16 @@ impl Cell {
     pub fn config(&self) -> Result<SystemConfig, String> {
         let mut cfg = SystemConfig::try_preset(&self.preset)?;
         for (k, v) in &self.overrides {
+            // Cross-protocol sweeps (`frontier`) put lease axes over
+            // protocols that have no leases; such a cell is the same
+            // config at every lease point — a flat reference line in the
+            // table — not an error. The knob still errors on explicit
+            // non-sweep use (`SystemConfig::set` stays strict).
+            if matches!(k.as_str(), "rd_lease" | "wr_lease")
+                && cfg.coherence.leases().is_none()
+            {
+                continue;
+            }
             cfg.set(k, v)?;
         }
         Ok(cfg)
@@ -80,22 +94,30 @@ pub struct CampaignSpec {
     /// this cycle and later runs of the same fingerprint (retries,
     /// gate re-runs against the journal directory) fork from it.
     pub warmup: Option<u64>,
+    /// Cross-protocol divergence oracle (`oracle = access-stream`): every
+    /// cell is run traced and, per workload, each config's access stream
+    /// is asserted structurally identical to the baseline config's. Any
+    /// mismatch fails the campaign (docs/PROTOCOLS.md).
+    pub oracle: Option<String>,
 }
 
 impl CampaignSpec {
     /// Built-in campaign names. The `smoke-*` variants isolate one
     /// coherence protocol each at the smoke geometry — the CI protocol
     /// matrix runs its zero-tolerance gate round-trip per variant.
-    pub const BUILTINS: [&str; 9] = [
+    pub const BUILTINS: [&str; 12] = [
         "smoke",
         "smoke-halcone",
         "smoke-hmg",
         "smoke-none",
+        "smoke-tardis",
+        "smoke-hlc",
         "fig7",
         "fig8",
         "fig8cu",
         "tab4",
         "tab-tenant",
+        "frontier",
     ];
 
     /// The smoke geometry: tiny enough that a whole campaign runs in
@@ -111,7 +133,9 @@ impl CampaignSpec {
     /// Look up a built-in campaign.
     pub fn builtin(name: &str) -> Result<CampaignSpec, String> {
         let standard = workloads::STANDARD.join(",");
-        let presets = SystemConfig::PRESETS.join(",");
+        // Fig. 7 reproduces the paper's five-way comparison; the extra
+        // rival presets (Tardis/HLC) live in `frontier` instead.
+        let presets = SystemConfig::PAPER_PRESETS.join(",");
         let text = match name {
             "smoke" => format!(
                 "name = smoke\n\
@@ -138,8 +162,36 @@ impl CampaignSpec {
                  workloads = rl,fir\n{}",
                 Self::SMOKE_GEOMETRY
             ),
+            "smoke-tardis" => format!(
+                "name = smoke-tardis\n\
+                 presets = SM-WT-C-TARDIS\n\
+                 workloads = rl,fir\n{}",
+                Self::SMOKE_GEOMETRY
+            ),
+            "smoke-hlc" => format!(
+                "name = smoke-hlc\n\
+                 presets = SM-WT-C-HLC\n\
+                 workloads = rl,fir\n{}",
+                Self::SMOKE_GEOMETRY
+            ),
             "fig7" => format!(
                 "name = fig7\npresets = {presets}\nworkloads = {standard}\nbaseline = RDMA-WB-NC\n"
+            ),
+            // Lease-length frontier across every protocol (tab4 widened
+            // from the paper's HALCONE-only grid): the timestamp
+            // protocols sweep the read lease; NC and HMG have no leases,
+            // so their cells repeat one config per lease point as flat
+            // reference lines. The oracle asserts every protocol observes
+            // the identical access stream — coherence must change
+            // timing, never the memory traffic itself.
+            "frontier" => format!(
+                "name = frontier\n\
+                 presets = SM-WT-C-HALCONE,SM-WT-C-TARDIS,SM-WT-C-HLC,RDMA-WB-C-HMG,SM-WT-NC\n\
+                 workloads = rl,fir\n\
+                 axis.rd_lease = 5,10,20\n\
+                 baseline = SM-WT-C-HALCONE+rd_lease=10\n\
+                 oracle = access-stream\n{}",
+                Self::SMOKE_GEOMETRY
             ),
             "fig8" => format!(
                 "name = fig8\n\
@@ -192,6 +244,7 @@ impl CampaignSpec {
             fixed: Vec::new(),
             baseline: None,
             warmup: None,
+            oracle: None,
         };
         let mut includes: Vec<(String, Vec<String>)> = Vec::new();
         let mut excludes: Vec<(String, Vec<String>)> = Vec::new();
@@ -223,6 +276,7 @@ impl CampaignSpec {
                     "presets" | "preset" => spec.presets = list,
                     "workloads" | "workload" => spec.workloads = list,
                     "baseline" => spec.baseline = Some(v.to_string()),
+                    "oracle" => spec.oracle = Some(v.to_string()),
                     "warmup" => {
                         spec.warmup = Some(v.parse::<u64>().map_err(|_| {
                             format!("line {}: warmup wants a cycle count, got '{v}'", lineno + 1)
@@ -233,7 +287,9 @@ impl CampaignSpec {
             }
         }
         if spec.presets.is_empty() {
-            spec.presets = SystemConfig::PRESETS.iter().map(|s| s.to_string()).collect();
+            // Default stays the paper's five-way comparison; the rival
+            // Tardis/HLC presets are opt-in by name.
+            spec.presets = SystemConfig::PAPER_PRESETS.iter().map(|s| s.to_string()).collect();
         }
         if spec.workloads.is_empty() {
             spec.workloads = workloads::STANDARD.iter().map(|s| s.to_string()).collect();
@@ -323,9 +379,10 @@ impl CampaignSpec {
             }
         }
         let baseline = spec_obj.get("baseline").and_then(Value::as_str).map(str::to_string);
-        // Optional key: warmup-free artifacts predate (and never carry)
-        // it, so absence simply means no warm-start forking.
+        // Optional keys: older artifacts predate (and never carry) them,
+        // so absence simply means the feature was off.
         let warmup = spec_obj.get("warmup").and_then(Value::as_f64).map(|w| w as u64);
+        let oracle = spec_obj.get("oracle").and_then(Value::as_str).map(str::to_string);
         let spec = CampaignSpec {
             name: name.to_string(),
             presets,
@@ -334,6 +391,7 @@ impl CampaignSpec {
             fixed,
             baseline,
             warmup,
+            oracle,
         };
         spec.validate()?;
         Ok(spec)
@@ -399,6 +457,19 @@ impl CampaignSpec {
                     "baseline '{b}' is not one of the campaign's config labels {:?}",
                     self.config_labels()
                 ));
+            }
+        }
+        if let Some(o) = &self.oracle {
+            if o != "access-stream" {
+                return Err(format!("unknown oracle '{o}' (supported: access-stream)"));
+            }
+            if self.warmup.is_some() {
+                // Trace capture and snapshotting cannot combine (the
+                // capture would miss the warmed-up prefix), so an oracle
+                // campaign always runs its cells cold.
+                return Err("oracle campaigns cannot use warmup (trace capture needs the \
+                            full access stream, not a warm-started suffix)"
+                    .to_string());
             }
         }
         Ok(())
@@ -547,9 +618,33 @@ mod tests {
         assert!(CampaignSpec::parse("workloads = fir,fir\n").is_err());
         assert!(CampaignSpec::parse("presets = SM-WT-NC,SM-WT-NC\n").is_err());
         assert!(CampaignSpec::parse("axis.n_gpus = 2,2\n").is_err());
-        // Axis values are validated against real configs at expansion:
-        // rd_lease is rejected under the default (non-HALCONE) presets.
-        assert!(CampaignSpec::parse("axis.rd_lease = 5\n").unwrap().cells().is_err());
+        // Axis values are validated against real configs at expansion.
+        assert!(CampaignSpec::parse("axis.bogus_knob = 5\n").unwrap().cells().is_err());
+        // Oracle: only access-stream exists, and it cannot combine with
+        // warmup (trace capture refuses snapshot runs).
+        assert!(CampaignSpec::parse("workloads = rl\noracle = nope\n").is_err());
+        assert!(
+            CampaignSpec::parse("workloads = rl\noracle = access-stream\nwarmup = 100\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn lease_axes_skip_protocols_without_leases() {
+        // Cross-protocol lease sweeps expand: lease knobs apply to the
+        // timestamp protocols and no-op on the rest (flat reference
+        // lines), instead of failing the whole grid.
+        let spec = CampaignSpec::parse(
+            "presets = SM-WT-NC,SM-WT-C-TARDIS\nworkloads = rl\naxis.rd_lease = 5,20\n",
+        )
+        .unwrap();
+        let cells = spec.cells().unwrap();
+        assert_eq!(cells.len(), 4);
+        let nc = cells.iter().find(|c| c.config_label == "SM-WT-NC+rd_lease=20").unwrap();
+        assert_eq!(nc.config().unwrap().describe(), SystemConfig::preset("SM-WT-NC").describe());
+        let tardis =
+            cells.iter().find(|c| c.config_label == "SM-WT-C-TARDIS+rd_lease=20").unwrap();
+        assert_eq!(tardis.config().unwrap().coherence.leases().unwrap().rd, 20);
     }
 
     #[test]
@@ -566,6 +661,16 @@ mod tests {
     }
 
     #[test]
+    fn frontier_crosses_every_protocol_with_the_divergence_oracle() {
+        let spec = CampaignSpec::builtin("frontier").unwrap();
+        assert_eq!(spec.presets.len(), 5, "{:?}", spec.presets);
+        assert_eq!(spec.oracle.as_deref(), Some("access-stream"));
+        assert_eq!(spec.baseline.as_deref(), Some("SM-WT-C-HALCONE+rd_lease=10"));
+        // 5 protocols x 2 workloads x 3 lease points.
+        assert_eq!(spec.cells().unwrap().len(), 30);
+    }
+
+    #[test]
     fn protocol_smoke_variants_cover_one_protocol_each() {
         let hc = CampaignSpec::builtin("smoke-halcone").unwrap();
         assert_eq!(hc.presets, ["SM-WT-C-HALCONE"]);
@@ -575,6 +680,12 @@ mod tests {
         assert_eq!(hmg.cells().unwrap().len(), 2);
         let none = CampaignSpec::builtin("smoke-none").unwrap();
         assert_eq!(none.cells().unwrap().len(), 6);
+        let tardis = CampaignSpec::builtin("smoke-tardis").unwrap();
+        assert_eq!(tardis.presets, ["SM-WT-C-TARDIS"]);
+        assert_eq!(tardis.cells().unwrap().len(), 2);
+        let hlc = CampaignSpec::builtin("smoke-hlc").unwrap();
+        assert_eq!(hlc.presets, ["SM-WT-C-HLC"]);
+        assert_eq!(hlc.cells().unwrap().len(), 2);
     }
 
     #[test]

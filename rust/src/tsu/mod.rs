@@ -18,7 +18,9 @@
 //! re-created entry can never hand out a lease that overlaps a stale
 //! copy's still-valid window.
 
+use crate::coherence::tsproto::{self, TsPolicy};
 use crate::sim::msg::TsPair;
+use crate::sim::Cycle;
 
 /// Lease lengths in logical time units (paper §5.4 default: Rd=10, Wr=5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,7 +38,13 @@ impl Default for Leases {
 #[derive(Clone, Copy, Debug)]
 struct Entry {
     tag: u64,
+    /// Read frontier: end of the furthest lease handed out (HALCONE's
+    /// `memts`; Tardis' `rts`).
     memts: u64,
+    /// Tardis only: the line's stable write timestamp (its version).
+    /// Unused — and not serialized — under the other policies, so the
+    /// HALCONE snapshot layout is byte-unchanged.
+    wts: u64,
 }
 
 /// Per-HBM-stack timestamp store.
@@ -46,6 +54,8 @@ pub struct Tsu {
     ways: u32,
     slots: Vec<Option<Entry>>,
     leases: Leases,
+    /// Timestamp protocol this TSU serves (docs/PROTOCOLS.md).
+    policy: TsPolicy,
     /// Monotonic floor: max memts ever evicted from this TSU.
     floor_ts: u64,
     /// Finite timestamp width (docs/ROBUSTNESS.md); 0 = unbounded.
@@ -73,6 +83,7 @@ impl Tsu {
             ways,
             slots,
             leases,
+            policy: TsPolicy::Halcone,
             floor_ts: 0,
             ts_bits: 0,
             lookups: 0,
@@ -85,6 +96,12 @@ impl Tsu {
 
     pub fn leases(&self) -> Leases {
         self.leases
+    }
+
+    /// Select the timestamp protocol this TSU speaks (default HALCONE).
+    pub fn with_policy(mut self, policy: TsPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     /// Enable the finite-width timestamp model: count every epoch
@@ -115,21 +132,38 @@ impl Tsu {
         line_addr / crate::mem::LINE
     }
 
-    /// Serve a read request for `line_addr`: advance the block's memts by
-    /// RdLease and return the (Mrts, Mwts) pair (paper Alg. 3).
-    pub fn on_read(&mut self, line_addr: u64) -> TsPair {
-        self.advance(line_addr, self.leases.rd)
+    /// Serve a read request for `line_addr` at simulated time `now`:
+    /// advance the block's read frontier by RdLease and return the
+    /// (Mrts, Mwts) pair (paper Alg. 3; per-policy variations in
+    /// [`Tsu::advance`]).
+    pub fn on_read(&mut self, line_addr: u64, now: Cycle) -> TsPair {
+        self.advance(line_addr, self.leases.rd, false, now)
     }
 
     /// Serve a write request: advance by WrLease.
-    pub fn on_write(&mut self, line_addr: u64) -> TsPair {
-        self.advance(line_addr, self.leases.wr)
+    pub fn on_write(&mut self, line_addr: u64, now: Cycle) -> TsPair {
+        self.advance(line_addr, self.leases.wr, true, now)
     }
 
-    fn advance(&mut self, line_addr: u64, lease: u64) -> TsPair {
+    /// The shared lease-grant path, specialized by [`TsPolicy`]:
+    ///
+    /// * HALCONE — every access moves `memts` forward by the lease and
+    ///   reports the previous `memts` as the write timestamp.
+    /// * Tardis — reads extend the read frontier without touching the
+    ///   line's stable `wts`; writes bump `wts` one past the frontier so
+    ///   no outstanding read lease can cover the new version.
+    /// * HLC — like HALCONE, but the grant base is floored by coarse
+    ///   physical time (`now >> HLC_SHIFT`), keeping hybrid clocks
+    ///   within one lease + one tick of wall-clock. `now` is simulated
+    ///   time, so the floor is deterministic at any `--shards` level.
+    fn advance(&mut self, line_addr: u64, lease: u64, write: bool, now: Cycle) -> TsPair {
         self.lookups += 1;
         let tag = Self::tag(line_addr);
         let range = self.set_range(line_addr);
+        let phys = match self.policy {
+            TsPolicy::Hlc => tsproto::hlc_phys(now),
+            TsPolicy::Halcone | TsPolicy::Tardis => 0,
+        };
 
         // Hit: extend the existing entry.
         if let Some(slot) = self.slots[range.clone()]
@@ -137,36 +171,50 @@ impl Tsu {
             .find(|s| s.as_ref().is_some_and(|e| e.tag == tag))
         {
             let e = slot.as_mut().unwrap();
-            let old = e.memts;
-            e.memts = old + lease;
-            let new_memts = e.memts;
-            self.raise_memts(new_memts);
-            return TsPair { rts: new_memts, wts: old };
+            let pair = match self.policy {
+                TsPolicy::Halcone | TsPolicy::Hlc => {
+                    let old = e.memts.max(phys);
+                    e.memts = old + lease;
+                    TsPair { rts: e.memts, wts: old }
+                }
+                TsPolicy::Tardis if write => {
+                    let wts = e.memts + 1;
+                    e.wts = wts;
+                    e.memts = wts + lease;
+                    TsPair { rts: e.memts, wts }
+                }
+                TsPolicy::Tardis => {
+                    e.memts = e.memts.max(e.wts) + lease;
+                    TsPair { rts: e.memts, wts: e.wts }
+                }
+            };
+            self.raise_memts(pair.rts);
+            return pair;
         }
 
         // Miss: allocate, evicting the lowest-memts victim if the set is
-        // full. New entries start at the monotonic floor.
+        // full. New entries start at the monotonic floor (HLC: floored
+        // by coarse physical time too).
         self.inserts += 1;
-        let start_ts = self.floor_ts;
-        let entry = Entry { tag, memts: start_ts + lease };
-        self.raise_memts(entry.memts);
-
-        if let Some(slot) = self.slots[range.clone()].iter_mut().find(|s| s.is_none()) {
-            *slot = Some(entry);
-        } else {
-            let victim_idx = range
-                .clone()
-                .min_by_key(|&i| self.slots[i].as_ref().unwrap().memts)
-                .unwrap();
-            let victim = self.slots[victim_idx].take().unwrap();
-            self.floor_ts = self.floor_ts.max(victim.memts);
-            self.evictions += 1;
-            // Re-anchor: the new entry must start above anything evicted.
-            let start_ts = self.floor_ts;
-            self.slots[victim_idx] = Some(Entry { tag, memts: start_ts + lease });
-            self.raise_memts(start_ts + lease);
-            return TsPair { rts: start_ts + lease, wts: start_ts };
-        }
+        let idx = match range.clone().find(|&i| self.slots[i].is_none()) {
+            Some(i) => i,
+            None => {
+                let victim_idx = range
+                    .clone()
+                    .min_by_key(|&i| self.slots[i].as_ref().unwrap().memts)
+                    .unwrap();
+                let victim = self.slots[victim_idx].take().unwrap();
+                // Re-anchor: the new entry must start above anything
+                // evicted, so no re-created lease overlaps a stale copy's
+                // still-valid window.
+                self.floor_ts = self.floor_ts.max(victim.memts);
+                self.evictions += 1;
+                victim_idx
+            }
+        };
+        let start_ts = self.floor_ts.max(phys);
+        self.slots[idx] = Some(Entry { tag, memts: start_ts + lease, wts: start_ts });
+        self.raise_memts(start_ts + lease);
         TsPair { rts: start_ts + lease, wts: start_ts }
     }
 
@@ -176,8 +224,11 @@ impl Tsu {
     }
 
     /// Serialize the mutable state (docs/SNAPSHOT.md): every slot, the
-    /// monotonic eviction floor and the metric counters. Geometry and
-    /// leases come from the config and are validated on load.
+    /// monotonic eviction floor and the metric counters. Geometry,
+    /// leases and the policy come from the config (which the snapshot
+    /// fingerprint pins) and are validated on load. Per-entry `wts` is
+    /// written only under Tardis — the other policies never read it, so
+    /// their layouts are byte-unchanged from format v2.
     pub fn save_state(&self, out: &mut Vec<u8>) {
         use crate::snapshot::format::put;
         put(out, self.slots.len() as u64);
@@ -188,6 +239,9 @@ impl Tsu {
                     out.push(1);
                     put(out, e.tag);
                     put(out, e.memts);
+                    if self.policy == TsPolicy::Tardis {
+                        put(out, e.wts);
+                    }
                 }
             }
         }
@@ -213,7 +267,16 @@ impl Tsu {
         for i in 0..n {
             self.slots[i] = match cur.byte("tsu slot flag")? {
                 0 => None,
-                1 => Some(Entry { tag: cur.u64("tsu tag")?, memts: cur.u64("tsu memts")? }),
+                1 => {
+                    let tag = cur.u64("tsu tag")?;
+                    let memts = cur.u64("tsu memts")?;
+                    let wts = if self.policy == TsPolicy::Tardis {
+                        cur.u64("tsu wts")?
+                    } else {
+                        0
+                    };
+                    Some(Entry { tag, memts, wts })
+                }
                 f => return Err(format!("tsu slot flag must be 0 or 1, got {f}")),
             };
         }
@@ -234,7 +297,7 @@ mod tests {
     #[test]
     fn first_read_gets_fresh_lease() {
         let mut t = Tsu::new(1024, Leases::default());
-        let ts = t.on_read(0x40);
+        let ts = t.on_read(0x40, 0);
         // memts starts at 0: Mrts = 0 + RdLease, Mwts = Mrts - RdLease.
         assert_eq!(ts, TsPair { rts: 10, wts: 0 });
     }
@@ -242,9 +305,9 @@ mod tests {
     #[test]
     fn repeated_reads_extend_lease_monotonically() {
         let mut t = Tsu::new(1024, Leases::default());
-        let a = t.on_read(0x40);
-        let b = t.on_read(0x40);
-        let c = t.on_read(0x40);
+        let a = t.on_read(0x40, 0);
+        let b = t.on_read(0x40, 0);
+        let c = t.on_read(0x40, 0);
         assert_eq!((a.rts, b.rts, c.rts), (10, 20, 30));
         // Each wts is the previous memts.
         assert_eq!((b.wts, c.wts), (10, 20));
@@ -253,8 +316,8 @@ mod tests {
     #[test]
     fn writes_use_wr_lease() {
         let mut t = Tsu::new(1024, Leases { rd: 10, wr: 5 });
-        let r = t.on_read(0x80); // memts: 0 -> 10
-        let w = t.on_write(0x80); // memts: 10 -> 15
+        let r = t.on_read(0x80, 0); // memts: 0 -> 10
+        let w = t.on_write(0x80, 0); // memts: 10 -> 15
         assert_eq!(r, TsPair { rts: 10, wts: 0 });
         assert_eq!(w, TsPair { rts: 15, wts: 10 });
         // A write's visibility time (wts) is after the earlier read lease
@@ -265,9 +328,9 @@ mod tests {
     #[test]
     fn distinct_blocks_are_independent() {
         let mut t = Tsu::new(1024, Leases::default());
-        t.on_read(0x40);
-        t.on_read(0x40);
-        let fresh = t.on_read(0x4000);
+        t.on_read(0x40, 0);
+        t.on_read(0x40, 0);
+        let fresh = t.on_read(0x4000, 0);
         assert_eq!(fresh, TsPair { rts: 10, wts: 0 });
     }
 
@@ -278,23 +341,23 @@ mod tests {
         // sets = 1 so every line lands in the same set.
         let mut last = TsPair::default();
         for i in 0..9u64 {
-            last = t.on_read(i * 64);
+            last = t.on_read(i * 64, 0);
         }
         assert_eq!(t.evictions, 1);
         // 9th allocation evicted the lowest-memts entry (memts=10); the new
         // entry starts at floor >= 10, not 0.
         assert!(last.wts >= 10, "fresh entry must start above evicted memts, got {last:?}");
         // Re-reading the evicted block also starts above the floor.
-        let again = t.on_read(0);
+        let again = t.on_read(0, 0);
         assert!(again.wts >= 10);
     }
 
     #[test]
     fn max_memts_tracks_high_water_mark() {
         let mut t = Tsu::new(1024, Leases::default());
-        t.on_read(0);
-        t.on_write(64);
-        t.on_read(0);
+        t.on_read(0, 0);
+        t.on_write(64, 0);
+        t.on_read(0, 0);
         assert_eq!(t.max_memts, 20);
     }
 
@@ -302,19 +365,72 @@ mod tests {
     fn finite_width_counts_epoch_rollovers() {
         let mut t = Tsu::new(1024, Leases::default());
         t.set_ts_bits(4); // epoch span 16, rd lease 10
-        t.on_read(0); // memts 10, epoch 0
+        t.on_read(0, 0); // memts 10, epoch 0
         assert_eq!(t.ts_rollovers, 0);
-        t.on_read(0); // memts 20, epoch 1
+        t.on_read(0, 0); // memts 20, epoch 1
         assert_eq!(t.ts_rollovers, 1);
         for _ in 0..8 {
-            t.on_read(0); // memts 100, epoch 6
+            t.on_read(0, 0); // memts 100, epoch 6
         }
         assert_eq!(t.ts_rollovers, 6);
         // Unbounded counters never roll over.
         let mut u = Tsu::new(1024, Leases::default());
         for _ in 0..100 {
-            u.on_read(0);
+            u.on_read(0, 0);
         }
         assert_eq!(u.ts_rollovers, 0);
+    }
+
+    #[test]
+    fn tardis_reads_renew_the_lease_without_moving_wts() {
+        let mut t = Tsu::new(1024, Leases::default()).with_policy(TsPolicy::Tardis);
+        let a = t.on_read(0x40, 0);
+        let b = t.on_read(0x40, 0);
+        let c = t.on_read(0x40, 0);
+        // The read frontier extends; the version timestamp is stable.
+        assert_eq!((a.rts, b.rts, c.rts), (10, 20, 30));
+        assert_eq!((a.wts, b.wts, c.wts), (0, 0, 0));
+    }
+
+    #[test]
+    fn tardis_write_bumps_wts_past_the_read_frontier() {
+        let mut t = Tsu::new(1024, Leases { rd: 10, wr: 5 }).with_policy(TsPolicy::Tardis);
+        t.on_read(0x40, 0); // frontier 10
+        let w = t.on_write(0x40, 0);
+        // No outstanding lease (rts <= 10) can cover the new version.
+        assert_eq!(w, TsPair { rts: 16, wts: 11 });
+        let r = t.on_read(0x40, 0);
+        assert_eq!(r, TsPair { rts: 26, wts: 11 });
+    }
+
+    #[test]
+    fn hlc_floors_grants_by_coarse_physical_time() {
+        let mut t = Tsu::new(1024, Leases::default()).with_policy(TsPolicy::Hlc);
+        let early = t.on_read(0x40, 0);
+        assert_eq!(early, TsPair { rts: 10, wts: 0 });
+        // At cycle 4096 (phys 16 with HLC_SHIFT=8) the hybrid clock has
+        // overtaken the lease chain: the grant base jumps to phys.
+        let late = t.on_read(0x40, 4096);
+        assert_eq!(late.wts, 4096 >> tsproto::HLC_SHIFT);
+        assert_eq!(late.rts, late.wts + 10);
+        // Misses are floored too.
+        let miss = t.on_read(0x8000, 4096);
+        assert_eq!(miss.wts, 4096 >> tsproto::HLC_SHIFT);
+    }
+
+    #[test]
+    fn tardis_state_roundtrips_with_per_entry_wts() {
+        let mut t = Tsu::new(1024, Leases::default()).with_policy(TsPolicy::Tardis);
+        t.on_read(0x40, 0);
+        t.on_write(0x40, 0);
+        t.on_read(0x80, 0);
+        let mut bytes = Vec::new();
+        t.save_state(&mut bytes);
+        let mut fresh = Tsu::new(1024, Leases::default()).with_policy(TsPolicy::Tardis);
+        let mut cur = crate::snapshot::format::Cur::new(&bytes);
+        fresh.load_state(&mut cur).unwrap();
+        // The restored TSU answers exactly like the original would.
+        assert_eq!(fresh.on_read(0x40, 0), t.on_read(0x40, 0));
+        assert_eq!(fresh.on_write(0x80, 0), t.on_write(0x80, 0));
     }
 }

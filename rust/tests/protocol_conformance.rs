@@ -1,0 +1,171 @@
+//! Cross-protocol conformance suite (docs/PROTOCOLS.md): every
+//! timestamp protocol the framework speaks — halcone, tardis, hlc —
+//! plus the hmg and no-coherence references must honor the same
+//! engine-level contracts: byte-determinism across `--shards` and
+//! `--jobs`, per-shard event folds that conserve the engine total,
+//! snapshot warm-starts that reproduce the cold run exactly, and
+//! (for the timestamp protocols) finite-width `ts_bits` epochs that
+//! roll over without breaking correctness.
+
+use std::sync::Arc;
+
+use halcone::config::SystemConfig;
+use halcone::coordinator::runner::{run_workload, try_run_workload_snap, SnapMode};
+use halcone::sweep::exec::{run_campaign, ExecOptions};
+use halcone::sweep::report;
+use halcone::sweep::spec::CampaignSpec;
+
+/// One preset per protocol arm of the frontier sweep.
+const PROTOCOL_PRESETS: [&str; 5] = [
+    "SM-WT-C-HALCONE",
+    "SM-WT-C-TARDIS",
+    "SM-WT-C-HLC",
+    "RDMA-WB-C-HMG",
+    "SM-WT-NC",
+];
+
+fn small(preset: &str) -> SystemConfig {
+    let mut cfg = SystemConfig::preset(preset);
+    cfg.n_gpus = 2;
+    cfg.cus_per_gpu = 2;
+    cfg.wavefronts_per_cu = 2;
+    cfg.l2_banks = 2;
+    cfg.stacks_per_gpu = 2;
+    cfg.gpu_mem_bytes = 64 << 20;
+    cfg.scale = 0.05;
+    cfg
+}
+
+fn conformance_spec() -> CampaignSpec {
+    CampaignSpec::parse(&format!(
+        "name = conformance\n\
+         presets = {}\n\
+         workloads = rl,fir\n\
+         set.n_gpus = 2\n\
+         set.cus_per_gpu = 2\n\
+         set.wavefronts_per_cu = 2\n\
+         set.l2_banks = 2\n\
+         set.stacks_per_gpu = 2\n\
+         set.gpu_mem_bytes = 67108864\n\
+         set.scale = 0.05\n",
+        PROTOCOL_PRESETS.join(","),
+    ))
+    .unwrap()
+}
+
+fn canonical(spec: &CampaignSpec, jobs: usize, shards: usize) -> String {
+    let opts =
+        ExecOptions { jobs, progress: false, shards: Some(shards), ..Default::default() };
+    let res = run_campaign(spec, &opts).unwrap();
+    assert!(res.all_passed(), "conformance grid failed at jobs={jobs} shards={shards}");
+    report::to_json_canonical(&res)
+}
+
+#[test]
+fn every_protocol_is_byte_identical_across_shards_and_jobs() {
+    let spec = conformance_spec();
+    let reference = canonical(&spec, 1, 1);
+    assert_eq!(
+        reference,
+        canonical(&spec, 1, 4),
+        "canonical artifact differs between shards=1 and shards=4"
+    );
+    assert_eq!(
+        reference,
+        canonical(&spec, 8, 1),
+        "canonical artifact differs between jobs=1 and jobs=8"
+    );
+}
+
+#[test]
+fn per_shard_event_folds_conserve_the_engine_total() {
+    // The host-side per-shard occupancy profile must fold back to the
+    // engine's event count under every protocol — a protocol that lost
+    // or double-counted events across the shard boundary would break
+    // the conservation here before anything else notices.
+    for preset in PROTOCOL_PRESETS {
+        let mut cfg = small(preset);
+        cfg.shards = 3; // one worker per logical shard (2 GPUs + hub)
+        let res = run_workload(&cfg, "fir", None);
+        assert!(res.all_passed(), "{preset}: {:?}", res.checks);
+        let m = &res.metrics;
+        assert!(!m.shard_events.is_empty(), "{preset}: no shard profile");
+        let folded: u64 = m.shard_events.iter().sum();
+        assert_eq!(folded, m.events, "{preset}: shard events fold != engine total");
+        let has_tsu = cfg.coherence.ts_policy().is_some();
+        assert_eq!(
+            m.tsu_lookups > 0,
+            has_tsu,
+            "{preset}: TSU traffic must exist iff the protocol carries timestamps"
+        );
+    }
+}
+
+#[test]
+fn snapshot_warm_start_round_trips_for_every_protocol() {
+    for preset in PROTOCOL_PRESETS {
+        let cfg = small(preset);
+        let key = |r: &halcone::coordinator::runner::RunResult| {
+            (
+                r.metrics.cycles,
+                r.metrics.events,
+                r.metrics.l1.hits,
+                r.metrics.l1.misses,
+                r.metrics.l1.coherency_misses,
+                r.metrics.l2.hits,
+                r.metrics.l2.misses,
+                r.metrics.tsu_lookups,
+                r.metrics.mem_bytes,
+            )
+        };
+        let cold = run_workload(&cfg, "fir", None);
+        assert!(cold.all_passed(), "{preset}: {:?}", cold.checks);
+        let (saving, _, bytes) =
+            try_run_workload_snap(&cfg, "fir", None, false, SnapMode::Save { at: 500 })
+                .unwrap_or_else(|e| panic!("{preset}: save run failed: {e}"));
+        let bytes = bytes.unwrap_or_else(|| panic!("{preset}: run never reached cycle 500"));
+        assert_eq!(key(&saving), key(&cold), "{preset}: saving a snapshot changed the run");
+        let warm_mode = SnapMode::Warm { bytes: Arc::new(bytes) };
+        let (warm, _, _) = try_run_workload_snap(&cfg, "fir", None, false, warm_mode)
+            .unwrap_or_else(|e| panic!("{preset}: warm start refused: {e}"));
+        assert!(warm.all_passed(), "{preset}: {:?}", warm.checks);
+        assert_eq!(key(&warm), key(&cold), "{preset}: warm start diverged from cold run");
+    }
+}
+
+#[test]
+fn new_protocols_roll_over_finite_timestamps_and_stay_correct() {
+    // Finite ts_bits epochs under the two new protocols: the epoch
+    // flush must preserve correctness at every width, actually fire at
+    // the narrowest width (timestamps grow with lease grants, so a
+    // smoke run crosses 2^8 many times), and stay deterministic.
+    for preset in ["SM-WT-C-TARDIS", "SM-WT-C-HLC"] {
+        for bits in [8u32, 12, 16] {
+            let run = || {
+                let mut cfg = small(preset);
+                cfg.set("faults", &format!("ts_bits={bits}")).unwrap();
+                run_workload(&cfg, "fir", None)
+            };
+            let res = run();
+            assert!(res.all_passed(), "{preset}/ts_bits={bits}: {:?}", res.checks);
+            let f = res.metrics.faults.as_ref().expect("ts_bits run must report fault counters");
+            if bits == 8 {
+                assert!(
+                    f.rollover_flushes + f.tsu_rollovers > 0,
+                    "{preset}: ts_bits=8 run never rolled over"
+                );
+            }
+            let again = run();
+            assert_eq!(
+                (res.metrics.cycles, res.metrics.events, f.rollover_flushes, f.tsu_rollovers),
+                (
+                    again.metrics.cycles,
+                    again.metrics.events,
+                    again.metrics.faults.as_ref().unwrap().rollover_flushes,
+                    again.metrics.faults.as_ref().unwrap().tsu_rollovers,
+                ),
+                "{preset}/ts_bits={bits}: rollover behavior is not deterministic"
+            );
+        }
+    }
+}

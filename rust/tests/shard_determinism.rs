@@ -144,7 +144,7 @@ fn protocol_smokes_are_byte_identical_at_g_plus_1_shards() {
     // per logical shard of the partitioned ports fabric. Each protocol
     // crosses shards differently (HALCONE through per-GPU fabric ports
     // to remote MCs/TSUs, HMG/NC over per-GPU PCIe ports).
-    for name in ["smoke-halcone", "smoke-hmg", "smoke-none"] {
+    for name in ["smoke-halcone", "smoke-hmg", "smoke-none", "smoke-tardis", "smoke-hlc"] {
         let spec = CampaignSpec::builtin(name).unwrap();
         let serial = canonical_with_shards(&spec, 1);
         let parallel = canonical_with_shards(&spec, 3);
